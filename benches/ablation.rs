@@ -1,0 +1,125 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//!  A. aggregation cost — Fig. 1 with exact units vs a monolithic
+//!     Wallace multiplier (what does the aggregation architecture cost
+//!     before any approximation?);
+//!  B. prediction unit — MUL8x8_1 vs MUL8x8_2 error/cost trade
+//!     (the paper's "small area overhead for MED halving" claim);
+//!  C. M2 removal under operand profiles — MUL8x8_3 vs MUL8x8_2 as the
+//!     operand distribution narrows toward the co-optimized band;
+//!  D. synthesis-pass ablation — netlist size with/without factoring and
+//!     the NAND/NOR polarity rewrite.
+
+use axmul::logic::{opt::nand_rewrite, optimize, synthesize_truth_table};
+use axmul::logic::{multiplier_truth_table, Expr, Netlist};
+use axmul::metrics::{exhaustive_metrics, weighted_metrics};
+use axmul::mult::by_name;
+use axmul::synth::{sta, tech_map, synthesize};
+use axmul::util::Table;
+
+fn main() {
+    // --- A: aggregation overhead -----------------------------------------
+    let mut t = Table::new(
+        "A. aggregation architecture cost (exact everywhere)",
+        &["design", "cells", "area", "delay", "depth"],
+    );
+    for name in ["exact8x8", "agg_exact", "agg_exact_sop"] {
+        let r = synthesize(by_name(name).unwrap().as_ref(), 800, 1).unwrap();
+        t.row(vec![
+            name.into(),
+            r.cells.to_string(),
+            format!("{:.1}", r.area),
+            format!("{:.1}", r.delay),
+            r.depth.to_string(),
+        ]);
+    }
+    t.print();
+    println!(
+        "-> the Fig.1 architecture itself costs area vs a monolithic Wallace;\n\
+         the approximate 3x3 units must (and do) claw that back."
+    );
+
+    // --- B: prediction unit ----------------------------------------------
+    let mut t = Table::new(
+        "B. prediction-unit ablation (MUL8x8_1 vs MUL8x8_2)",
+        &["design", "ER(%)", "MED", "bias", "area", "power"],
+    );
+    for name in ["mul8x8_1", "mul8x8_2"] {
+        let m = by_name(name).unwrap();
+        let e = exhaustive_metrics(m.as_ref());
+        let r = synthesize(m.as_ref(), 800, 1).unwrap();
+        t.row(vec![
+            name.into(),
+            format!("{:.2}", e.er * 100.0),
+            format!("{:.2}", e.med),
+            format!("{:+.1}", e.bias),
+            format!("{:.1}", r.area),
+            format!("{:.1}", r.power),
+        ]);
+    }
+    t.print();
+
+    // --- C: M2 removal vs operand band ------------------------------------
+    let mut t = Table::new(
+        "C. M2-removal sensitivity to the activation band (MUL8x8_3 vs _2)",
+        &["A-band", "ER_2(%)", "ER_3(%)", "MED_2", "MED_3"],
+    );
+    let m2 = by_name("mul8x8_2").unwrap();
+    let m3 = by_name("mul8x8_3").unwrap();
+    for hi in [255usize, 127, 63, 31] {
+        let mut wa = vec![0.0f64; 256];
+        for (x, v) in wa.iter_mut().enumerate().take(hi + 1).skip(1) {
+            let _ = x;
+            *v = 1.0;
+        }
+        let wb = vec![1.0f64; 256];
+        let e2 = weighted_metrics(m2.as_ref(), &wa, &wb);
+        let e3 = weighted_metrics(m3.as_ref(), &wa, &wb);
+        t.row(vec![
+            format!("(0,{hi}]"),
+            format!("{:.2}", e2.er * 100.0),
+            format!("{:.2}", e3.er * 100.0),
+            format!("{:.2}", e2.med),
+            format!("{:.2}", e3.med),
+        ]);
+    }
+    t.print();
+    println!("-> below A<64 the two designs coincide: the co-opt contract.");
+
+    // --- D: synthesis-pass ablation ---------------------------------------
+    let mut t = Table::new(
+        "D. synthesis passes (exact 3x3 truth table)",
+        &["pipeline", "gates", "mapped area", "critical path"],
+    );
+    let tt = multiplier_truth_table(3, 3);
+    // two-level SOP only
+    let sop = {
+        let mut nl = Netlist::new("sop", 6);
+        let ins = nl.inputs();
+        let mut outs = Vec::new();
+        for o in 0..6 {
+            let cover = axmul::logic::minimize_output(&tt, o);
+            let e = Expr::from_cover(&cover, 6);
+            outs.push(e.lower(&mut nl, &ins));
+        }
+        nl.set_outputs(outs);
+        nl
+    };
+    let factored = synthesize_truth_table("factored", &tt);
+    for (name, nl) in [
+        ("QMC SOP (2-level)", sop.clone()),
+        ("+ strash/constfold", optimize(&sop)),
+        ("+ algebraic factoring", optimize(&factored)),
+        ("+ NAND/NOR rewrite", optimize(&nand_rewrite(&optimize(&factored)))),
+    ] {
+        let mapped = tech_map(&nl);
+        let timing = sta(&mapped);
+        t.row(vec![
+            name.into(),
+            nl.num_gates().to_string(),
+            format!("{:.1}", mapped.area()),
+            format!("{:.1}", timing.critical_path),
+        ]);
+    }
+    t.print();
+}

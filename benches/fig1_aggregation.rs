@@ -1,0 +1,35 @@
+//! Bench for Fig. 1 (the aggregation architecture): behavioural multiply
+//! throughput of aggregated vs monolithic designs, plus bit-parallel
+//! netlist simulation throughput (the engine behind every sweep).
+
+use axmul::logic::optimize;
+use axmul::mult::{by_name, Multiplier};
+use axmul::util::Bencher;
+
+fn main() {
+    let mut b = Bencher::new();
+
+    // Behavioural multiply throughput (the DNN-eval inner loop before LUT
+    // tabulation made it irrelevant — kept as the ablation baseline).
+    for name in ["exact8x8", "mul8x8_2", "mul8x8_3", "pkm", "mitchell"] {
+        let m = by_name(name).unwrap();
+        let mut acc = 0u64;
+        let mut i = 0u32;
+        b.bench_elems(&format!("behavioural_mul/{name}"), Some(1), || {
+            i = i.wrapping_add(2654435761);
+            let a = (i >> 8) & 0xFF;
+            let c = (i >> 16) & 0xFF;
+            acc = acc.wrapping_add(m.mul(a, c) as u64);
+        });
+        std::hint::black_box(acc);
+    }
+
+    // Netlist simulation: 64-lane packed sweeps of the Fig. 1 netlist.
+    let agg = by_name("mul8x8_2").unwrap();
+    let nl = optimize(&agg.netlist().unwrap());
+    b.bench_elems("netlist_eval_exhaustive/mul8x8_2 (65536 rows)", Some(65536), || {
+        std::hint::black_box(nl.eval_exhaustive());
+    });
+
+    b.report("Fig. 1 aggregation engine");
+}

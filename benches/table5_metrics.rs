@@ -1,0 +1,29 @@
+//! Bench + regeneration harness for Table V (arithmetic accuracy).
+//!
+//! `cargo bench --bench table5_metrics` prints the measured table next
+//! to the paper's reference values and times the exhaustive sweeps.
+
+use axmul::coordinator::table5;
+use axmul::metrics::exhaustive_metrics;
+use axmul::mult::by_name;
+use axmul::util::Bencher;
+
+fn main() {
+    // Regenerate the table (the paper artifact).
+    table5(&[
+        "exact8x8", "mul8x8_1", "mul8x8_2", "mul8x8_3", "siei", "pkm", "etm", "sv",
+        "roba", "mitchell",
+    ])
+    .unwrap()
+    .print();
+
+    // Micro-bench: exhaustive 65536-pair metric sweeps per design.
+    let mut b = Bencher::new();
+    for name in ["mul8x8_1", "mul8x8_2", "mul8x8_3", "pkm", "siei"] {
+        let m = by_name(name).unwrap();
+        b.bench_elems(&format!("exhaustive_metrics/{name}"), Some(65536), || {
+            std::hint::black_box(exhaustive_metrics(m.as_ref()));
+        });
+    }
+    b.report("Table V sweep throughput (65536 products per iteration)");
+}

@@ -1,0 +1,19 @@
+//! Bench + regeneration harness for Table VI (3×3 synthesis cost).
+
+use axmul::coordinator::table6;
+use axmul::mult::by_name;
+use axmul::synth::synthesize;
+use axmul::util::Bencher;
+
+fn main() {
+    table6(4000).unwrap().print();
+
+    let mut b = Bencher::new();
+    for name in ["exact3x3_sop", "mul3x3_1", "mul3x3_2"] {
+        let m = by_name(name).unwrap();
+        b.bench(&format!("synthesize/{name}"), || {
+            std::hint::black_box(synthesize(m.as_ref(), 500, 1));
+        });
+    }
+    b.report("Table VI synthesis-flow latency (QMC + factor + map + STA + power)");
+}

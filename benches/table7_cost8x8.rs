@@ -1,0 +1,19 @@
+//! Bench + regeneration harness for Table VII (8×8 synthesis cost).
+
+use axmul::coordinator::table7;
+use axmul::mult::by_name;
+use axmul::synth::synthesize;
+use axmul::util::Bencher;
+
+fn main() {
+    table7(2000).unwrap().print();
+
+    let mut b = Bencher::new();
+    for name in ["agg_exact_sop", "mul8x8_2", "pkm", "siei"] {
+        let m = by_name(name).unwrap();
+        b.bench(&format!("synthesize/{name}"), || {
+            std::hint::black_box(synthesize(m.as_ref(), 300, 1));
+        });
+    }
+    b.report("Table VII synthesis-flow latency");
+}

@@ -1,0 +1,87 @@
+//! Bench harness for Table VIII: the LUT-GEMM hot path and one reduced
+//! end-to-end DAL measurement (the full sweep is `axmul table8` /
+//! `examples/dnn_pipeline`; a bench run must stay minutes-scale).
+//!
+//! Needs `make artifacts` for the end-to-end part; the hot-path section
+//! runs standalone.
+
+use axmul::coordinator::{Evaluator, Trainer};
+use axmul::data::Dataset;
+use axmul::dnn::{lut_gemm, QNet};
+use axmul::metrics::Lut;
+use axmul::mult::{by_name, ExactMul};
+use axmul::runtime::Engine;
+use axmul::util::{Bencher, Pcg32};
+use std::path::Path;
+
+fn main() {
+    let mut b = Bencher::new();
+
+    // --- the hot path: LUT-GEMM at Table VIII's real shapes -------------
+    let lut = Lut::build(&ExactMul::new(8, 8));
+    let mut rng = Pcg32::new(1);
+    for (m, k, n, tag) in [
+        (576usize, 150usize, 6usize, "lenet conv1 (im2col)"),
+        (64, 2400, 16, "lenet conv2 (im2col)"),
+        (1, 400, 120, "lenet fc1"),
+        (256, 432, 48, "vgg_s conv (im2col)"),
+    ] {
+        let a: Vec<u8> = (0..m * k).map(|_| rng.gen_range(256) as u8).collect();
+        let w: Vec<u8> = (0..k * n).map(|_| rng.gen_range(256) as u8).collect();
+        let mut acc = vec![0i32; m * n];
+        b.bench_elems(
+            &format!("lut_gemm/{tag} [{m}x{k}x{n}]"),
+            Some((m * k * n) as u64),
+            || {
+                lut_gemm(&a, &w, &mut acc, m, k, n, &lut);
+                std::hint::black_box(&acc);
+            },
+        );
+    }
+
+    // --- quantized single-image inference latency ------------------------
+    // (native engine; trained weights unnecessary for timing purposes)
+    let data = Dataset::synth_mnist(64, 3);
+    let engine = Engine::cpu(Path::new("artifacts")).ok();
+    let have_artifacts = engine
+        .as_ref()
+        .map(|e| e.has_artifact("lenet_mnist_train"))
+        .unwrap_or(false);
+    if have_artifacts {
+        let engine = engine.unwrap();
+        let mut trainer = Trainer::new(&engine, "lenet_mnist").unwrap();
+        trainer.train(&data, 10, 0.05, 0.0, 3, false).unwrap();
+        let fnet = trainer.to_float_net();
+        let qnet = QNet::quantize(&fnet, &data.images, 16, 8.0);
+        let lut2 = Lut::build(by_name("mul8x8_2").unwrap().as_ref());
+        b.bench("qnet_forward/lenet_mnist (1 image)", || {
+            std::hint::black_box(qnet.forward_one(data.image(0), &lut2));
+        });
+        // PJRT train-step latency — the L2 side of the pipeline.
+        let mut bt = Bencher::new();
+        let (xs, ys) = {
+            let mut batcher = axmul::data::Batcher::new(&data, trainer.train_batch, 1);
+            batcher.next_batch()
+        };
+        bt.bench("pjrt_train_step/lenet_mnist (batch 32)", || {
+            std::hint::black_box(trainer.step(&xs, &ys, 0.01, 0.0).unwrap());
+        });
+        bt.report("Table VIII end-to-end components (PJRT)");
+
+        // One reduced DAL measurement so the bench regenerates the table's
+        // shape (exact vs mul8x8_2 vs pkm on 64 held-out images).
+        let eval = Evaluator::default();
+        let hold = Dataset::synth_mnist(64, 77);
+        let rep = eval
+            .run(&fnet, &hold, 64, &["exact8x8", "mul8x8_2", "pkm"])
+            .unwrap();
+        println!("\nreduced Table VIII shape (64 eval images, 10 train steps):");
+        for (k, v) in &rep.accuracy {
+            println!("  {k:<10} {:.1}%", v * 100.0);
+        }
+    } else {
+        println!("[table8 bench] artifacts/ missing — hot-path benches only");
+    }
+
+    b.report("Table VIII hot path (native LUT engine)");
+}

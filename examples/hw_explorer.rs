@@ -1,0 +1,84 @@
+//! Hardware design-space explorer: sweep every registered multiplier
+//! through the full flow — error metrics × synthesis cost × operand-
+//! profile sensitivity — the paper's §II/§III methodology as a tool.
+//!
+//! Run: `cargo run --release --example hw_explorer [--vectors N]`
+
+use axmul::metrics::{exhaustive_metrics, weighted_metrics};
+use axmul::mult::{all_names, by_name};
+use axmul::synth::synthesize;
+use axmul::util::{Args, Table};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let vectors = args.opt_usize("vectors", 1500);
+
+    let mut t = Table::new(
+        "Design-space sweep: accuracy vs cost",
+        &["design", "ER(%)", "NMED(%)", "MRED(%)", "cells", "area", "power", "delay"],
+    );
+    for name in all_names() {
+        let m = by_name(name).unwrap();
+        if m.a_bits() != 8 {
+            continue;
+        }
+        let e = exhaustive_metrics(m.as_ref());
+        let synth = synthesize(m.as_ref(), vectors, 1);
+        let (cells, area, power, delay) = synth
+            .map(|r| {
+                (
+                    r.cells.to_string(),
+                    format!("{:.1}", r.area),
+                    format!("{:.1}", r.power),
+                    format!("{:.1}", r.delay),
+                )
+            })
+            .unwrap_or(("-".into(), "-".into(), "-".into(), "-".into()));
+        t.row(vec![
+            name.to_string(),
+            format!("{:.2}", e.er * 100.0),
+            format!("{:.3}", e.nmed * 100.0),
+            format!("{:.2}", e.mred * 100.0),
+            cells,
+            area,
+            power,
+            delay,
+        ]);
+    }
+    t.print();
+
+    // Operand-profile sensitivity: the §II-B insight quantified.  Uniform
+    // operands vs the co-optimized profile (activations < 32, weights
+    // concentrated around the zero point 96..159).
+    let mut wa = vec![0.0f64; 256];
+    let mut wb = vec![0.0f64; 256];
+    for x in 1..32 {
+        wa[x] = 1.0;
+    }
+    for (x, v) in wb.iter_mut().enumerate().take(160).skip(96) {
+        *v = 1.0 - ((x as f64 - 127.5) / 32.0).powi(2) * 0.5;
+    }
+    let mut t2 = Table::new(
+        "Operand-profile sensitivity (uniform vs co-optimized band)",
+        &["design", "ER uniform(%)", "ER band(%)", "MED uniform", "MED band"],
+    );
+    for name in ["mul8x8_1", "mul8x8_2", "mul8x8_3", "siei", "pkm"] {
+        let m = by_name(name).unwrap();
+        let u = exhaustive_metrics(m.as_ref());
+        let wgt = weighted_metrics(m.as_ref(), &wa, &wb);
+        t2.row(vec![
+            name.to_string(),
+            format!("{:.2}", u.er * 100.0),
+            format!("{:.2}", wgt.er * 100.0),
+            format!("{:.2}", u.med),
+            format!("{:.2}", wgt.med),
+        ]);
+    }
+    t2.print();
+    println!(
+        "\nNote how MUL8x8_3's uniform-operand ER collapses inside the \
+         co-optimized band — the paper's hardware-driven co-optimization \
+         in one table."
+    );
+    Ok(())
+}

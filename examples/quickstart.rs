@@ -1,0 +1,62 @@
+//! Quickstart: build the paper's multipliers, inspect their truth-table
+//! edits, error metrics and synthesized cost — no artifacts required.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use axmul::metrics::{exhaustive_metrics, Lut};
+use axmul::mult::{by_name, Mul3x3V1, Mul3x3V2, Multiplier};
+use axmul::synth::synthesize;
+
+fn main() -> anyhow::Result<()> {
+    // 1. The 3×3 designs: the six K-map-edited rows of Tables II/III.
+    println!("== MUL3x3_1 / MUL3x3_2 — the modified truth-table rows ==");
+    println!("{:>5} {:>5} {:>7} {:>8} {:>8}", "a", "b", "exact", "v1", "v2");
+    for (a, b) in [(5u32, 7u32), (6, 6), (6, 7), (7, 5), (7, 6), (7, 7)] {
+        println!(
+            "{a:>5} {b:>5} {:>7} {:>8} {:>8}",
+            a * b,
+            Mul3x3V1.mul(a, b),
+            Mul3x3V2.mul(a, b)
+        );
+    }
+
+    // 2. Error metrics (paper §II-A: ER 9.375%, MED 1.125 vs 0.5).
+    let m1 = exhaustive_metrics(&Mul3x3V1);
+    let m2 = exhaustive_metrics(&Mul3x3V2);
+    println!("\nMUL3x3_1: ER {:.3}%  MED {:.3}", m1.er * 100.0, m1.med);
+    println!("MUL3x3_2: ER {:.3}%  MED {:.3}", m2.er * 100.0, m2.med);
+
+    // 3. Aggregate into the 8×8 designs (Fig. 1 / Table IV) and measure.
+    println!("\n== 8x8 designs ==");
+    for name in ["exact8x8", "mul8x8_1", "mul8x8_2", "mul8x8_3"] {
+        let m = by_name(name).unwrap();
+        let e = exhaustive_metrics(m.as_ref());
+        println!(
+            "{name:<10} ER {:>6.2}%  MED {:>7.2}  NMED {:.3}%  bias {:+.1}",
+            e.er * 100.0,
+            e.med,
+            e.nmed * 100.0,
+            e.bias
+        );
+    }
+
+    // 4. Synthesize through the ASAP7-style flow.
+    println!("\n== synthesis (relative units) ==");
+    for name in ["exact3x3_sop", "mul3x3_1", "mul3x3_2"] {
+        let m = by_name(name).unwrap();
+        let r = synthesize(m.as_ref(), 2000, 1).unwrap();
+        println!(
+            "{name:<14} cells {:>3}  area {:>7.2}  power {:>7.2}  delay {:>6.2}",
+            r.cells, r.area, r.power, r.delay
+        );
+    }
+
+    // 5. The runtime artifact every engine consumes: the product LUT.
+    let lut = Lut::build(by_name("mul8x8_2").unwrap().as_ref());
+    println!(
+        "\nLUT[100][200] = {} (exact 20000); LUT is the 'silicon' handed to \
+         both the rust LUT-GEMM and the Pallas kernel.",
+        lut.mul(100, 200)
+    );
+    Ok(())
+}

@@ -1,0 +1,108 @@
+//! Batched inference service demo: load (or quickly train) a LeNet,
+//! pick a multiplier design, and serve a synthetic request trace through
+//! the dynamic-batching server, reporting latency percentiles and
+//! throughput — the deployment story for the paper's silicon.
+//!
+//! Run: `cargo run --release --example serve -- [--design mul8x8_2]
+//!       [--requests 2000] [--workers 4] [--max-batch 16]`
+
+use axmul::coordinator::server::{BatchPolicy, InferServer};
+use axmul::coordinator::{Evaluator, Trainer};
+use axmul::data::Dataset;
+use axmul::metrics::Lut;
+use axmul::mult::by_name;
+use axmul::runtime::Engine;
+use axmul::util::{Args, Pcg32};
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let design = args.opt_or("design", "mul8x8_2");
+    let n_requests = args.opt_usize("requests", 2000);
+    let workers = args.opt_usize("workers", 4);
+    let policy = BatchPolicy {
+        max_batch: args.opt_usize("max-batch", 16),
+        max_wait: Duration::from_millis(args.opt_usize("max-wait-ms", 2) as u64),
+    };
+
+    // Model: train briefly if artifacts exist, otherwise bail with advice.
+    let engine = Engine::cpu(Path::new(args.opt_or("artifacts", "artifacts")))?;
+    anyhow::ensure!(
+        engine.has_artifact("lenet_mnist_train"),
+        "run `make artifacts` first"
+    );
+    let data = Dataset::synth_mnist(1024, 42);
+    let mut trainer = Trainer::new(&engine, "lenet_mnist")?;
+    println!("warming the model: 80 PJRT train steps…");
+    trainer.train(&data, 80, 0.05, 0.0, 7, false)?;
+    let fnet = trainer.to_float_net();
+    let qnet = Arc::new(Evaluator::default().quantize(&fnet, &data));
+    let lut = Arc::new(Lut::build(
+        by_name(design)
+            .ok_or_else(|| anyhow::anyhow!("unknown design {design}"))?
+            .as_ref(),
+    ));
+
+    println!(
+        "serving synth-MNIST through {design} | workers={workers} \
+         max_batch={} max_wait={:?}",
+        policy.max_batch, policy.max_wait
+    );
+    let server = InferServer::start(qnet, lut, policy, workers);
+
+    // Synthetic open-loop trace: Poisson-ish arrivals from 4 client threads.
+    let trace = Dataset::synth_mnist(256, 99);
+    let t0 = Instant::now();
+    let mut latencies: Vec<Duration> = Vec::with_capacity(n_requests);
+    let mut correct = 0usize;
+    std::thread::scope(|s| {
+        let (tx, rx) = std::sync::mpsc::channel();
+        for c in 0..4 {
+            let tx = tx.clone();
+            let server = &server;
+            let trace = &trace;
+            s.spawn(move || {
+                let mut rng = Pcg32::substream(1, c as u64);
+                for i in 0..n_requests / 4 {
+                    let idx = (i * 4 + c) % trace.n;
+                    let resp = server.infer(trace.image(idx).to_vec());
+                    let ok = resp.pred == trace.labels[idx] as usize;
+                    tx.send((resp.latency, ok)).unwrap();
+                    // jittered pacing ~open-loop arrivals
+                    std::thread::sleep(Duration::from_micros(
+                        50 + rng.gen_range(300) as u64,
+                    ));
+                }
+            });
+        }
+        drop(tx);
+        while let Ok((lat, ok)) = rx.recv() {
+            latencies.push(lat);
+            correct += usize::from(ok);
+        }
+    });
+    let wall = t0.elapsed();
+    latencies.sort();
+    let pct = |p: f64| latencies[((latencies.len() - 1) as f64 * p) as usize];
+    let served = latencies.len();
+    println!("\n== service report ==");
+    println!("requests        {served}");
+    println!("throughput      {:.0} req/s", served as f64 / wall.as_secs_f64());
+    println!("accuracy        {:.2}%", correct as f64 / served as f64 * 100.0);
+    println!("latency p50     {:?}", pct(0.50));
+    println!("latency p95     {:?}", pct(0.95));
+    println!("latency p99     {:?}", pct(0.99));
+    let batches = server.stats.batches.load(std::sync::atomic::Ordering::Relaxed);
+    let breqs = server
+        .stats
+        .batched_requests
+        .load(std::sync::atomic::Ordering::Relaxed);
+    println!(
+        "mean batch size {:.2} ({batches} batches)",
+        breqs as f64 / batches.max(1) as f64
+    );
+    server.shutdown();
+    Ok(())
+}

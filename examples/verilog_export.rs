@@ -1,0 +1,50 @@
+//! Export every synthesizable design as structural Verilog + a
+//! self-checking exhaustive testbench — the bridge back to the paper's
+//! own flow (Verilog → Synopsys DC → ASAP7) for anyone with the tools.
+//!
+//! Run: `cargo run --release --example verilog_export -- [--out rtl/]`
+
+use axmul::logic::{multiplier_testbench, optimize, to_verilog};
+use axmul::mult::{all_names, by_name};
+use axmul::util::Args;
+use std::path::PathBuf;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let out = PathBuf::from(args.opt_or("out", "rtl"));
+    std::fs::create_dir_all(&out)?;
+
+    let mut exported = 0;
+    for name in all_names() {
+        let m = by_name(name).unwrap();
+        let Some(nl) = m.netlist() else { continue };
+        let nl = optimize(&nl);
+        let v = to_verilog(&nl, name, Some(m.a_bits()));
+        std::fs::write(out.join(format!("{name}.v")), &v)?;
+
+        // Exhaustive self-checking testbench for the small designs
+        // (an 8x8 testbench embeds 65536 expectations — still fine, but
+        // keep file sizes sane by limiting to <= 12 input bits).
+        if m.a_bits() + m.b_bits() <= 12 {
+            let lut: Vec<u32> = (0..(1u32 << (m.a_bits() + m.b_bits())))
+                .map(|row| {
+                    let a = row & ((1 << m.a_bits()) - 1);
+                    let b = row >> m.a_bits();
+                    m.mul(a, b)
+                })
+                .collect();
+            let tb = multiplier_testbench(name, m.a_bits(), m.b_bits(), &lut);
+            std::fs::write(out.join(format!("{name}_tb.v")), tb)?;
+        }
+        println!(
+            "wrote {}  ({} gates, {} outputs)",
+            out.join(format!("{name}.v")).display(),
+            nl.num_gates(),
+            nl.outputs.len()
+        );
+        exported += 1;
+    }
+    println!("\n{exported} modules exported to {}/", out.display());
+    println!("simulate: iverilog -o tb {0}/mul3x3_1.v {0}/mul3x3_1_tb.v && ./tb", out.display());
+    Ok(())
+}

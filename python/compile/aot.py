@@ -1,0 +1,195 @@
+"""AOT compilation: lower every L2 graph to HLO *text* artifacts.
+
+Python runs exactly once (``make artifacts``); the rust coordinator
+loads the text with ``HloModuleProto::from_text_file`` and executes via
+PJRT.  HLO text — NOT ``.serialize()`` — is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids that the crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+Artifacts (per network x dataset):
+  {net}_{ds}_train.hlo.txt   (params..., vels..., x, y, lr, reg) ->
+                             (new_params..., new_vels..., loss)
+  {net}_{ds}_infer.hlo.txt   (params..., x) -> logits
+  {net}_{ds}_qinfer.hlo.txt  (wq/bias..., wscale/wzp..., act_scales...,
+                             lut, x_q) -> logits     [lenet family only]
+  params/{net}_{ds}_p{i}.npy seeded initial parameters
+  manifest.json              shapes + argument orders for the rust side
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model, quant
+
+DATASETS = {
+    "mnist": (1, 28, 28),  # synth-MNIST
+    "cifar": (3, 32, 32),  # synth-CIFAR
+}
+
+# (net, dataset) combos evaluated in Table VIII.
+COMBOS = [
+    ("lenet", "mnist"),
+    ("lenet_plus", "mnist"),
+    ("lenet", "cifar"),
+    ("lenet_plus", "cifar"),
+    ("vgg_s", "cifar"),
+    ("alexnet_s", "cifar"),
+    ("resnet19_s", "cifar"),
+]
+
+QINFER_NETS = ("lenet", "lenet_plus")
+
+TRAIN_BATCH = 32
+INFER_BATCH = 64
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_train(net, shape, params):
+    n = len(params)
+
+    def step(*args):
+        ps = list(args[:n])
+        vs = list(args[n : 2 * n])
+        x, y, lr, reg = args[2 * n :]
+        new_p, new_v, loss = model.train_step(net, shape, ps, vs, x, y, lr, reg)
+        return tuple(new_p) + tuple(new_v) + (loss,)
+
+    specs = [jax.ShapeDtypeStruct(p.shape, jnp.float32) for p in params]
+    x = jax.ShapeDtypeStruct((TRAIN_BATCH,) + shape, jnp.float32)
+    y = jax.ShapeDtypeStruct((TRAIN_BATCH,), jnp.int32)
+    s = jax.ShapeDtypeStruct((), jnp.float32)
+    return jax.jit(step).lower(*(specs + specs + [x, y, s, s]))
+
+
+def lower_infer(net, shape, params):
+    def infer(*args):
+        ps = list(args[:-1])
+        return (model.forward(net, shape, ps, args[-1]),)
+
+    specs = [jax.ShapeDtypeStruct(p.shape, jnp.float32) for p in params]
+    x = jax.ShapeDtypeStruct((INFER_BATCH,) + shape, jnp.float32)
+    return jax.jit(infer).lower(*(specs + [x]))
+
+
+def qinfer_arg_specs(net, shape, params):
+    """Build ShapeDtypeStructs for the quantized-inference artifact and
+    the metadata describing them."""
+    spec = model.SPECS[net](shape[0])
+    wspecs, names = [], []
+    pi = 0
+    for li, op in enumerate(spec):
+        if op[0] == "conv":
+            w = params[pi]
+            cout = w.shape[0]
+            ck2 = int(np.prod(w.shape[1:]))
+            wspecs.append(jax.ShapeDtypeStruct((ck2, cout), jnp.int32))
+            wspecs.append(jax.ShapeDtypeStruct((cout,), jnp.float32))
+            names.append(f"l{li}_conv")
+            pi += 2
+        elif op[0] == "fc":
+            w = params[pi]
+            wspecs.append(jax.ShapeDtypeStruct(w.shape, jnp.int32))
+            wspecs.append(jax.ShapeDtypeStruct((w.shape[1],), jnp.float32))
+            names.append(f"l{li}_fc")
+            pi += 2
+    nlayers = len(names)
+    scale_specs = [jax.ShapeDtypeStruct((), jnp.float32)] * (2 * nlayers)
+    # nlayers act scales: [0] = input, [i] = post-ReLU of layer i.  The
+    # final fc has no ReLU, so an (nlayers+1)-th scale would be dead and
+    # XLA would DCE the parameter, breaking the rust-side arg count.
+    act_specs = [jax.ShapeDtypeStruct((), jnp.float32)] * nlayers
+    lut = jax.ShapeDtypeStruct((256, 256), jnp.int32)
+    xq = jax.ShapeDtypeStruct((INFER_BATCH,) + shape, jnp.int32)
+    return wspecs, scale_specs, act_specs, lut, xq, names
+
+
+def lower_qinfer(net, shape, params):
+    wspecs, sspecs, aspecs, lut, xq, _ = qinfer_arg_specs(net, shape, params)
+    nw, ns, na = len(wspecs), len(sspecs), len(aspecs)
+
+    def qinfer(*args):
+        qweights = list(args[:nw])
+        qscales = list(args[nw : nw + ns])
+        act_scales = list(args[nw + ns : nw + ns + na])
+        lut_a, xq_a = args[nw + ns + na :]
+        return (
+            model.qforward_lenet(
+                net, shape, qweights, qscales, act_scales, lut_a, xq_a
+            ),
+        )
+
+    return jax.jit(qinfer).lower(*(wspecs + sspecs + aspecs + [lut, xq]))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--only", default=None, help="comma-separated net_ds filters"
+    )
+    args = ap.parse_args()
+    out = args.out_dir
+    os.makedirs(out, exist_ok=True)
+    os.makedirs(os.path.join(out, "params"), exist_ok=True)
+
+    manifest = {
+        "train_batch": TRAIN_BATCH,
+        "infer_batch": INFER_BATCH,
+        "networks": {},
+    }
+
+    for net, ds in COMBOS:
+        tag = f"{net}_{ds}"
+        if args.only and tag not in args.only.split(","):
+            continue
+        shape = DATASETS[ds]
+        params, names = model.init_params(net, shape, args.seed)
+        print(f"[aot] {tag}: {len(params)} params", flush=True)
+
+        for i, p in enumerate(params):
+            np.save(os.path.join(out, "params", f"{tag}_p{i}.npy"), p)
+
+        t = to_hlo_text(lower_train(net, shape, params))
+        with open(os.path.join(out, f"{tag}_train.hlo.txt"), "w") as f:
+            f.write(t)
+        t = to_hlo_text(lower_infer(net, shape, params))
+        with open(os.path.join(out, f"{tag}_infer.hlo.txt"), "w") as f:
+            f.write(t)
+
+        entry = {
+            "dataset": ds,
+            "image_shape": list(shape),
+            "param_names": names,
+            "param_shapes": [list(p.shape) for p in params],
+            "has_qinfer": net in QINFER_NETS,
+        }
+        if net in QINFER_NETS:
+            t = to_hlo_text(lower_qinfer(net, shape, params))
+            with open(os.path.join(out, f"{tag}_qinfer.hlo.txt"), "w") as f:
+                f.write(t)
+            _, _, _, _, _, lnames = qinfer_arg_specs(net, shape, params)
+            entry["qinfer_layers"] = lnames
+        manifest["networks"][tag] = entry
+
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {out}/manifest.json", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,125 @@
+"""L1 — Pallas LUT-GEMM kernel: quantized matmul through approximate
+silicon.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper replaces
+the multiplier *cell* inside a MAC array.  The TPU analogue is replacing
+the MXU matmul with a VMEM-resident product-LUT gather + VPU reduction:
+
+  * the 256x256 i32 LUT (256 KiB) plays the role of the silicon — it is
+    pinned in VMEM for the whole grid (``BlockSpec`` maps every grid
+    point to the same LUT block);
+  * operand tiles stream HBM -> VMEM block by block, exactly like the
+    paper's operand registers feed the MAC array;
+  * accumulation happens in i32, matching the exact adder tree the paper
+    keeps (only the multiplier is approximated).
+
+The kernel MUST run with ``interpret=True``: real TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute; interpret mode
+lowers to plain HLO so the same artifact runs everywhere (and is what
+the rust runtime loads).
+
+Tiling: grid over (M/bm, N/bn); K is kept whole inside a block (the DNN
+workloads here have K <= 1024, so an (bm,K) + (K,bn) + LUT working set
+stays far below the ~16 MiB VMEM budget; see ``vmem_footprint_bytes``).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes: multiples of the 128-lane VPU/MXU geometry where
+# possible, scaled down for the small DNNs in the paper.
+DEFAULT_BM = 64
+DEFAULT_BN = 64
+
+
+def _kernel(a_ref, b_ref, lut_ref, o_ref):
+    """One (bm, bn) output tile: gather-and-reduce over the whole K."""
+    a = a_ref[...].astype(jnp.int32)  # [bm, K]
+    b = b_ref[...].astype(jnp.int32)  # [K, bn]
+    lut = lut_ref[...].reshape(-1)  # [65536] — resident across the grid
+    # One gather per K-slice, accumulated; expressing the reduction as a
+    # fori_loop keeps the VMEM live set at [bm, bn] instead of
+    # materializing the full [bm, K, bn] product cube.
+    k_dim = a.shape[1]
+
+    def body(k, acc):
+        idx = a[:, k][:, None] * 256 + b[k, :][None, :]  # [bm, bn]
+        return acc + jnp.take(lut, idx, axis=0)
+
+    acc = jax.lax.fori_loop(
+        0, k_dim, body, jnp.zeros(o_ref.shape, jnp.int32)
+    )
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def approx_matmul(a_q, b_q, lut, bm=DEFAULT_BM, bn=DEFAULT_BN):
+    """Approximate quantized matmul: sum_k lut[a_q[m,k], b_q[k,n]].
+
+    Args:
+      a_q: [M, K] uint8/int32 quantized LHS (values in [0, 255]).
+      b_q: [K, N] uint8/int32 quantized RHS.
+      lut: [256, 256] int32 product table (the multiplier design).
+      bm, bn: output tile sizes.
+
+    Returns: [M, N] int32 accumulator.
+    """
+    m, k = a_q.shape
+    k2, n = b_q.shape
+    assert k == k2, f"K mismatch: {k} vs {k2}"
+    assert lut.shape == (256, 256)
+
+    bm = min(bm, m)
+    bn = min(bn, n)
+    # Pad M, N up to tile multiples (K stays whole).
+    pm = (m + bm - 1) // bm * bm
+    pn = (n + bn - 1) // bn * bn
+    a_p = jnp.pad(a_q, ((0, pm - m), (0, 0)))
+    b_p = jnp.pad(b_q, ((0, 0), (0, pn - n)))
+
+    grid = (pm // bm, pn // bn)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            # The LUT is the silicon: same full block at every grid point,
+            # so it stays VMEM-resident for the whole sweep.
+            pl.BlockSpec((256, 256), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((pm, pn), jnp.int32),
+        interpret=True,  # CPU-PJRT cannot execute Mosaic custom-calls
+    )(a_p, b_p, lut)
+    return out[:m, :n]
+
+
+def vmem_footprint_bytes(bm, bn, k):
+    """Estimated VMEM working set of one grid step (bytes).
+
+    LUT (i32 256x256) + A tile + B tile + i32 accumulator.  Operands are
+    modelled at i32 width (interpret mode concretizes them as i32; real
+    Mosaic would keep u8 operand tiles, 4x smaller).
+    """
+    lut = 256 * 256 * 4
+    a = bm * k * 4
+    b = k * bn * 4
+    acc = bm * bn * 4
+    return lut + a + b + acc
+
+
+def mxu_utilization_estimate(bm, bn, k):
+    """Crude MXU-equivalent utilization for DESIGN.md's perf model.
+
+    The LUT-gather path does not use the MXU at all — it is a VPU
+    gather+add stream.  We report the ratio of useful MACs to VPU lanes
+    * cycles, assuming 8 lanes-ops per gather-accumulate step: one
+    address form, one gather, one add per lane per (m,n,k).
+    """
+    useful = bm * bn * k
+    vpu_ops = 3 * bm * bn * k
+    return useful / vpu_ops

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the approximate LUT-GEMM kernel.
+
+The "silicon" of the paper -- an approximate 8x8 multiplier -- is
+represented at runtime as a dense 256x256 i32 product LUT.  The oracle
+computes a quantized matmul by gathering every (a, b) product from the
+LUT and reducing over K.  It is deliberately simple (O(M*K*N) gathers,
+materialized) and serves as the correctness reference the Pallas kernel
+(L1) is tested against at build time.
+"""
+
+import jax.numpy as jnp
+
+
+def lut_matmul_ref(a_q, b_q, lut):
+    """Approximate matmul via product LUT.
+
+    Args:
+      a_q: [M, K] uint8 (or int32 in [0,255]) quantized LHS.
+      b_q: [K, N] uint8 quantized RHS.
+      lut: [256, 256] int32 product table, lut[a, b] ~= a*b.
+
+    Returns:
+      [M, N] int32 accumulator: sum_k lut[a_q[m,k], b_q[k,n]].
+    """
+    a = a_q.astype(jnp.int32)
+    b = b_q.astype(jnp.int32)
+    flat = lut.reshape(-1)
+    idx = a[:, :, None] * 256 + b[None, :, :]  # [M, K, N]
+    prods = jnp.take(flat, idx, axis=0)
+    return prods.sum(axis=1, dtype=jnp.int32)
+
+
+def exact_lut():
+    """The exact multiplier's LUT (for tests and the exact baseline)."""
+    a = jnp.arange(256, dtype=jnp.int32)
+    return a[:, None] * a[None, :]

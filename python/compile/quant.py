@@ -1,0 +1,57 @@
+"""Affine uint8 quantization (Jacob et al. [15], as the paper adopts).
+
+Weights: per-tensor affine over [min, max] -> codes in [0, 255] with a
+zero point; after co-optimizing retraining the codes concentrate around
+the zero point (the paper's observed (96, 159) band).
+
+Activations: ReLU outputs, quantized with zero point 0 and a calibrated
+scale.  The paper's platform leaves generous headroom so activation
+codes stay in (0, 31) — that is precisely what licenses the M2 removal
+in MUL8x8_3 (A[7:6] = 0).  ``headroom`` reproduces that choice.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def weight_qparams(w, eps=1e-8):
+    """Per-tensor affine params for a weight tensor.
+
+    Returns (scale, zero_point) with zero_point an integer code such
+    that real = scale * (code - zero_point).
+    """
+    lo = float(np.minimum(w.min(), 0.0))
+    hi = float(np.maximum(w.max(), 0.0))
+    scale = max((hi - lo) / 255.0, eps)
+    zp = int(np.clip(round(-lo / scale), 0, 255))
+    return scale, zp
+
+
+def quantize_weight(w, scale, zp):
+    """Real -> uint8 codes."""
+    q = np.round(np.asarray(w) / scale) + zp
+    return np.clip(q, 0, 255).astype(np.uint8)
+
+
+def dequantize(q, scale, zp):
+    return (np.asarray(q).astype(np.float32) - zp) * scale
+
+
+def act_scale(max_abs, headroom=1.0, eps=1e-8):
+    """Activation scale: codes = clip(round(x / s), 0, 255).
+
+    ``headroom`` > 1 reserves dynamic range: with headroom h the largest
+    calibrated activation maps to code 255/h.  The paper's platform runs
+    with codes in (0, 31) ⇒ h = 8.
+    """
+    return max(max_abs * headroom / 255.0, eps)
+
+
+def quantize_act(x, scale):
+    q = jnp.round(x / scale)
+    return jnp.clip(q, 0, 255).astype(jnp.int32)
+
+
+def quantize_act_np(x, scale):
+    q = np.round(np.asarray(x) / scale)
+    return np.clip(q, 0, 255).astype(np.uint8)

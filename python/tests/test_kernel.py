@@ -1,0 +1,118 @@
+"""L1 correctness: Pallas LUT-GEMM kernel vs the pure-jnp oracle.
+
+This is the CORE build-time correctness signal: the kernel must agree
+bit-exactly with ref.py for every LUT, shape and dtype combination —
+including non-tile-aligned shapes (padding path) and approximate LUTs.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.approx_matmul import (
+    approx_matmul,
+    mxu_utilization_estimate,
+    vmem_footprint_bytes,
+)
+from compile.kernels.ref import exact_lut, lut_matmul_ref
+
+
+def _rand(shape, rng, dtype=np.uint8):
+    return rng.integers(0, 256, shape).astype(dtype)
+
+
+def _approx_lut_mul8x8_2_like(rng):
+    """A structurally approximate LUT (not the real design — rust owns
+    that); here: exact except a band of entries perturbed, mimicking the
+    K-map edit."""
+    lut = np.arange(256)[:, None] * np.arange(256)[None, :]
+    mask = (np.arange(256)[:, None] % 8 >= 5) & (np.arange(256)[None, :] % 8 >= 5)
+    lut = np.where(mask, lut - (lut // 16), lut)
+    return lut.astype(np.int32)
+
+
+@pytest.mark.parametrize("m,k,n", [(1, 1, 1), (4, 8, 4), (37, 50, 23),
+                                   (64, 64, 64), (65, 3, 129)])
+def test_kernel_matches_ref_exact_lut(m, k, n):
+    rng = np.random.default_rng(m * 10007 + k * 101 + n)
+    a, b = _rand((m, k), rng), _rand((k, n), rng)
+    lut = np.asarray(exact_lut())
+    got = np.asarray(approx_matmul(jnp.asarray(a), jnp.asarray(b), jnp.asarray(lut)))
+    want = np.asarray(lut_matmul_ref(jnp.asarray(a), jnp.asarray(b), jnp.asarray(lut)))
+    np.testing.assert_array_equal(got, want)
+    # and the exact LUT must reproduce integer matmul
+    np.testing.assert_array_equal(want, a.astype(np.int64) @ b.astype(np.int64))
+
+
+def test_kernel_matches_ref_approx_lut():
+    rng = np.random.default_rng(7)
+    lut = _approx_lut_mul8x8_2_like(rng)
+    a, b = _rand((33, 17), rng), _rand((17, 40), rng)
+    got = np.asarray(approx_matmul(jnp.asarray(a), jnp.asarray(b), jnp.asarray(lut)))
+    want = np.asarray(lut_matmul_ref(jnp.asarray(a), jnp.asarray(b), jnp.asarray(lut)))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_custom_tile_sizes():
+    rng = np.random.default_rng(3)
+    a, b = _rand((50, 20), rng), _rand((20, 30), rng)
+    lut = np.asarray(exact_lut())
+    base = np.asarray(approx_matmul(jnp.asarray(a), jnp.asarray(b), jnp.asarray(lut)))
+    for bm, bn in [(8, 8), (16, 32), (128, 128)]:
+        got = np.asarray(
+            approx_matmul(jnp.asarray(a), jnp.asarray(b), jnp.asarray(lut), bm=bm, bn=bn)
+        )
+        np.testing.assert_array_equal(got, base)
+
+
+def test_zero_lut_gives_zero():
+    rng = np.random.default_rng(5)
+    a, b = _rand((9, 9), rng), _rand((9, 9), rng)
+    lut = np.zeros((256, 256), np.int32)
+    got = np.asarray(approx_matmul(jnp.asarray(a), jnp.asarray(b), jnp.asarray(lut)))
+    assert (got == 0).all()
+
+
+def test_uint8_and_int32_operands_agree():
+    rng = np.random.default_rng(11)
+    a8, b8 = _rand((12, 13), rng), _rand((13, 14), rng)
+    lut = np.asarray(exact_lut())
+    g8 = np.asarray(approx_matmul(jnp.asarray(a8), jnp.asarray(b8), jnp.asarray(lut)))
+    g32 = np.asarray(
+        approx_matmul(
+            jnp.asarray(a8.astype(np.int32)),
+            jnp.asarray(b8.astype(np.int32)),
+            jnp.asarray(lut),
+        )
+    )
+    np.testing.assert_array_equal(g8, g32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 70),
+    n=st.integers(1, 70),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_hypothesis(m, k, n, seed):
+    """Property: kernel == oracle for arbitrary shapes and random LUTs."""
+    rng = np.random.default_rng(seed)
+    a, b = _rand((m, k), rng), _rand((k, n), rng)
+    lut = rng.integers(-(2**15), 2**15, (256, 256)).astype(np.int32)
+    got = np.asarray(approx_matmul(jnp.asarray(a), jnp.asarray(b), jnp.asarray(lut)))
+    want = np.asarray(lut_matmul_ref(jnp.asarray(a), jnp.asarray(b), jnp.asarray(lut)))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_vmem_footprint_within_budget():
+    """The default tiling keeps one grid step under a 16 MiB VMEM budget
+    for every K this library uses (max im2col K here is 1152)."""
+    for k in [25, 150, 400, 576, 1152]:
+        assert vmem_footprint_bytes(64, 64, k) < 16 * 2**20
+
+
+def test_mxu_estimate_bounded():
+    u = mxu_utilization_estimate(64, 64, 400)
+    assert 0.0 < u <= 1.0

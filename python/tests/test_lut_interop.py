@@ -1,0 +1,59 @@
+"""Cross-layer interop: LUTs exported by the rust coordinator
+(`axmul export-luts`) must be loadable by numpy and behave per the
+paper's definitions.  Skipped when the export has not been run."""
+
+import os
+
+import numpy as np
+import pytest
+
+LUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "luts")
+
+
+def _load(name):
+    path = os.path.join(LUT_DIR, f"{name}.npy")
+    if not os.path.exists(path):
+        pytest.skip(f"{path} missing — run `axmul export-luts`")
+    return np.load(path)
+
+
+def test_exact_lut_is_outer_product():
+    lut = _load("exact8x8")
+    a = np.arange(256, dtype=np.int64)
+    np.testing.assert_array_equal(lut, np.outer(a, a))
+
+
+def test_mul8x8_2_matches_paper_structure():
+    lut = _load("mul8x8_2")
+    assert lut.shape == (256, 256) and lut.dtype == np.int32
+    exact = np.outer(np.arange(256, dtype=np.int64), np.arange(256, dtype=np.int64))
+    diff = lut - exact
+    # exact below the trigger chunks: every operand pair < 5 is exact
+    assert (diff[:5, :] == 0).all()
+    # ER over the full table matches the analytic 27.197%
+    er = (diff != 0).mean()
+    assert abs(er - 0.27197) < 0.001, er
+    # underestimation bias (Table V `bias` column)
+    assert diff.sum() < 0
+
+
+def test_mul8x8_3_reduces_to_2_below_a64():
+    l2, l3 = _load("mul8x8_2"), _load("mul8x8_3")
+    np.testing.assert_array_equal(l3[:64, :], l2[:64, :])
+    assert (l3[64:, :] != l2[64:, :]).any()
+
+
+def test_pallas_kernel_runs_on_exported_lut():
+    """Full-circle: rust-built silicon through the L1 Pallas kernel."""
+    import jax.numpy as jnp
+
+    from compile.kernels.approx_matmul import approx_matmul
+    from compile.kernels.ref import lut_matmul_ref
+
+    lut = _load("mul8x8_2").astype(np.int32)
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, 256, (17, 31), dtype=np.uint8)
+    b = rng.integers(0, 256, (31, 9), dtype=np.uint8)
+    got = np.asarray(approx_matmul(jnp.asarray(a), jnp.asarray(b), jnp.asarray(lut)))
+    want = np.asarray(lut_matmul_ref(jnp.asarray(a), jnp.asarray(b), jnp.asarray(lut)))
+    np.testing.assert_array_equal(got, want)

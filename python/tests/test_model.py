@@ -1,0 +1,152 @@
+"""L2 graph tests: shapes, trainability, and the quantized path."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model, quant
+from compile.kernels.ref import exact_lut
+
+VALID = [
+    ("lenet", (1, 28, 28)),
+    ("lenet", (3, 32, 32)),
+    ("lenet_plus", (1, 28, 28)),
+    ("lenet_plus", (3, 32, 32)),
+    ("vgg_s", (3, 32, 32)),
+    ("alexnet_s", (3, 32, 32)),
+    ("resnet19_s", (3, 32, 32)),
+]
+
+
+@pytest.mark.parametrize("net,shape", VALID)
+def test_forward_shapes(net, shape):
+    params, names = model.init_params(net, shape, 0)
+    assert len(params) == len(names)
+    x = jnp.ones((2,) + shape, jnp.float32)
+    logits = model.forward(net, shape, params, x)
+    assert logits.shape == (2, 10)
+    assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize("net,shape", VALID)
+def test_train_step_reduces_loss(net, shape):
+    rng = np.random.default_rng(42)
+    params, _ = model.init_params(net, shape, 0)
+    vels = [np.zeros_like(p) for p in params]
+    x = jnp.asarray(rng.standard_normal((4,) + shape), jnp.float32)
+    y = jnp.asarray(rng.integers(0, 10, 4), jnp.int32)
+    l0 = float(model.loss_fn(net, shape, params, x, y, 0.0))
+    p, v = params, vels
+    for _ in range(8):
+        p, v, loss = model.train_step(net, shape, p, v, x, y, 0.01, 0.0)
+    assert float(loss) < l0
+    assert np.isfinite(float(loss))
+
+
+def test_regularizer_shrinks_weights():
+    net, shape = "lenet", (1, 28, 28)
+    rng = np.random.default_rng(1)
+    params, _ = model.init_params(net, shape, 0)
+    x = jnp.asarray(rng.standard_normal((4,) + shape), jnp.float32)
+    y = jnp.asarray(rng.integers(0, 10, 4), jnp.int32)
+
+    def run(lam):
+        p = [q.copy() for q in params]
+        v = [np.zeros_like(q) for q in params]
+        for _ in range(10):
+            p, v, _ = model.train_step(net, shape, p, v, x, y, 0.05, lam)
+        return sum(float(jnp.sum(q * q)) for q in p)
+
+    assert run(1e-2) < run(0.0)
+
+
+def test_deterministic_init():
+    a, _ = model.init_params("lenet", (1, 28, 28), 5)
+    b, _ = model.init_params("lenet", (1, 28, 28), 5)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+    c, _ = model.init_params("lenet", (1, 28, 28), 6)
+    assert any(not np.array_equal(x, y) for x, y in zip(a, c))
+
+
+def _quantize_net(net, shape, params, x, headroom=8.0):
+    """Helper replicating the rust coordinator's quantization protocol."""
+    spec = model.SPECS[net](shape[0])
+    qweights, qscales = [], []
+    pi = 0
+    for op in spec:
+        if op[0] == "conv":
+            w, b = params[pi], params[pi + 1]
+            pi += 2
+            s, z = quant.weight_qparams(w)
+            wq = quant.quantize_weight(w, s, z).reshape(w.shape[0], -1).T
+            qweights += [jnp.asarray(wq.astype(np.int32)), jnp.asarray(b)]
+            qscales += [jnp.float32(s), jnp.float32(z)]
+        elif op[0] == "fc":
+            w, b = params[pi], params[pi + 1]
+            pi += 2
+            s, z = quant.weight_qparams(w)
+            qweights += [
+                jnp.asarray(quant.quantize_weight(w, s, z).astype(np.int32)),
+                jnp.asarray(b),
+            ]
+            qscales += [jnp.float32(s), jnp.float32(z)]
+    # calibrate activation scales from a float probe
+    nlayers = model.num_weighted_layers(net, shape[0])
+    act = [quant.act_scale(float(np.abs(x).max()), headroom)]
+    # crude per-layer calibration: run float forward and take maxima
+    import jax
+
+    cur = jnp.asarray(x)
+    pi = 0
+    maxima = []
+    for op in spec:
+        k = op[0]
+        if k == "conv":
+            cur = model._conv2d(cur, params[pi], params[pi + 1], op[4])
+            pi += 2
+        elif k == "fc":
+            cur = cur @ params[pi] + params[pi + 1]
+            pi += 2
+        elif k == "relu":
+            cur = jax.nn.relu(cur)
+            maxima.append(float(cur.max()))
+        elif k == "maxpool":
+            cur = model._maxpool(cur, op[1])
+        elif k == "flatten":
+            cur = cur.reshape(cur.shape[0], -1)
+    for i in range(nlayers):
+        m = maxima[i] if i < len(maxima) else (maxima[-1] if maxima else 1.0)
+        act.append(quant.act_scale(m, headroom))
+    return qweights, qscales, act
+
+
+@pytest.mark.parametrize("net", ["lenet", "lenet_plus"])
+def test_qforward_tracks_float(net):
+    shape = (1, 28, 28)
+    rng = np.random.default_rng(3)
+    params, _ = model.init_params(net, shape, 0)
+    x = np.abs(rng.standard_normal((4,) + shape)).astype(np.float32)
+    qweights, qscales, act = _quantize_net(net, shape, params, x)
+    lut = jnp.asarray(np.asarray(exact_lut()))
+    xq = quant.quantize_act(jnp.asarray(x), act[0])
+    ql = model.qforward_lenet(net, shape, qweights, qscales, act, lut, xq)
+    fl = model.forward(net, shape, params, jnp.asarray(x))
+    corr = np.corrcoef(np.asarray(fl).ravel(), np.asarray(ql).ravel())[0, 1]
+    assert corr > 0.98, corr
+
+
+def test_qforward_approx_lut_changes_logits():
+    """An approximate LUT must actually flow through the graph."""
+    net, shape = "lenet", (1, 28, 28)
+    rng = np.random.default_rng(4)
+    params, _ = model.init_params(net, shape, 0)
+    x = np.abs(rng.standard_normal((2,) + shape)).astype(np.float32)
+    qweights, qscales, act = _quantize_net(net, shape, params, x)
+    exact = np.asarray(exact_lut())
+    approx = exact.copy()
+    approx[5:, 5:] -= approx[5:, 5:] // 8  # heavy perturbation
+    xq = quant.quantize_act(jnp.asarray(x), act[0])
+    le = model.qforward_lenet(net, shape, qweights, qscales, act, jnp.asarray(exact), xq)
+    la = model.qforward_lenet(net, shape, qweights, qscales, act, jnp.asarray(approx), xq)
+    assert not np.allclose(np.asarray(le), np.asarray(la))

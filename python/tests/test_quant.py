@@ -1,0 +1,59 @@
+"""Quantization scheme tests (Jacob-style affine uint8)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import quant
+
+
+def test_weight_roundtrip_error_bounded():
+    rng = np.random.default_rng(0)
+    w = rng.standard_normal((64, 32)).astype(np.float32)
+    s, z = quant.weight_qparams(w)
+    q = quant.quantize_weight(w, s, z)
+    back = quant.dequantize(q, s, z)
+    assert np.abs(back - w).max() <= s * 0.5001 + 1e-7
+
+
+def test_zero_maps_to_zero_point():
+    w = np.array([-1.0, 0.0, 1.0], np.float32)
+    s, z = quant.weight_qparams(w)
+    q = quant.quantize_weight(w, s, z)
+    assert q[1] == z
+
+
+def test_all_positive_weights_zero_point_zero():
+    w = np.array([0.5, 1.0, 2.0], np.float32)
+    s, z = quant.weight_qparams(w)
+    assert z == 0
+
+
+def test_codes_in_range():
+    rng = np.random.default_rng(1)
+    w = (rng.standard_normal(1000) * 10).astype(np.float32)
+    s, z = quant.weight_qparams(w)
+    q = quant.quantize_weight(w, s, z)
+    assert q.min() >= 0 and q.max() <= 255
+
+
+def test_headroom_compresses_codes():
+    """The paper's co-design lever: headroom h=8 keeps activation codes
+    below 32 (A[7:6] = A[5] = 0), licensing MUL8x8_3's M2 removal."""
+    x = np.linspace(0, 4.0, 100).astype(np.float32)
+    s1 = quant.act_scale(4.0, headroom=1.0)
+    s8 = quant.act_scale(4.0, headroom=8.0)
+    q1 = quant.quantize_act_np(x, s1)
+    q8 = quant.quantize_act_np(x, s8)
+    assert q1.max() == 255
+    assert q8.max() <= 32
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.floats(-100, 100, width=32), min_size=2, max_size=200))
+def test_quantize_monotone(ws):
+    """Property: quantization preserves ordering."""
+    w = np.asarray(ws, np.float32)
+    s, z = quant.weight_qparams(w)
+    q = quant.quantize_weight(w, s, z).astype(np.int32)
+    order = np.argsort(w, kind="stable")
+    assert (np.diff(q[order]) >= 0).all()

@@ -1,0 +1,88 @@
+"""Property tests of the oracle itself (ref.py) against plain numpy —
+the oracle must be unimpeachable since the Pallas kernel is judged
+against it."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import exact_lut, lut_matmul_ref
+
+
+def test_exact_lut_values():
+    lut = np.asarray(exact_lut())
+    assert lut.shape == (256, 256)
+    assert lut.dtype == np.int32
+    assert lut[0].sum() == 0 and lut[:, 0].sum() == 0
+    assert lut[255, 255] == 65025
+    # symmetric: a*b == b*a
+    assert (lut == lut.T).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    m=st.integers(1, 24),
+    k=st.integers(1, 24),
+    n=st.integers(1, 24),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ref_with_exact_lut_is_integer_matmul(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, 256, (m, k), dtype=np.uint8)
+    b = rng.integers(0, 256, (k, n), dtype=np.uint8)
+    got = np.asarray(
+        lut_matmul_ref(jnp.asarray(a), jnp.asarray(b), exact_lut())
+    )
+    want = a.astype(np.int64) @ b.astype(np.int64)
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_ref_is_linear_in_the_lut(seed):
+    """lut_matmul(a,b,L1+L2) == lut_matmul(a,b,L1) + lut_matmul(a,b,L2):
+    the gather-sum is linear in the table, a structural invariant any
+    implementation (kernel included) must satisfy."""
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, 256, (5, 7), dtype=np.uint8)
+    b = rng.integers(0, 256, (7, 3), dtype=np.uint8)
+    l1 = rng.integers(-1000, 1000, (256, 256)).astype(np.int32)
+    l2 = rng.integers(-1000, 1000, (256, 256)).astype(np.int32)
+    r1 = np.asarray(lut_matmul_ref(jnp.asarray(a), jnp.asarray(b), jnp.asarray(l1)))
+    r2 = np.asarray(lut_matmul_ref(jnp.asarray(a), jnp.asarray(b), jnp.asarray(l2)))
+    r12 = np.asarray(
+        lut_matmul_ref(jnp.asarray(a), jnp.asarray(b), jnp.asarray(l1 + l2))
+    )
+    np.testing.assert_array_equal(r12, r1 + r2)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_ref_row_permutation_equivariance(seed):
+    """Permuting A's rows permutes the output rows identically."""
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, 256, (6, 5), dtype=np.uint8)
+    b = rng.integers(0, 256, (5, 4), dtype=np.uint8)
+    lut = rng.integers(0, 1 << 15, (256, 256)).astype(np.int32)
+    perm = rng.permutation(6)
+    r = np.asarray(lut_matmul_ref(jnp.asarray(a), jnp.asarray(b), jnp.asarray(lut)))
+    rp = np.asarray(
+        lut_matmul_ref(jnp.asarray(a[perm]), jnp.asarray(b), jnp.asarray(lut))
+    )
+    np.testing.assert_array_equal(rp, r[perm])
+
+
+def test_ref_k_additivity():
+    """Splitting K and summing partial results equals the full matmul —
+    the invariant that justifies the kernel's K-loop accumulation."""
+    rng = np.random.default_rng(3)
+    a = rng.integers(0, 256, (4, 10), dtype=np.uint8)
+    b = rng.integers(0, 256, (10, 4), dtype=np.uint8)
+    lut = rng.integers(0, 1 << 14, (256, 256)).astype(np.int32)
+    full = np.asarray(lut_matmul_ref(jnp.asarray(a), jnp.asarray(b), jnp.asarray(lut)))
+    part = np.asarray(
+        lut_matmul_ref(jnp.asarray(a[:, :6]), jnp.asarray(b[:6]), jnp.asarray(lut))
+    ) + np.asarray(
+        lut_matmul_ref(jnp.asarray(a[:, 6:]), jnp.asarray(b[6:]), jnp.asarray(lut))
+    )
+    np.testing.assert_array_equal(full, part)

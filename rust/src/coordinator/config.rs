@@ -1,0 +1,127 @@
+//! Experiment configuration: TOML files + CLI overrides.
+
+use super::coopt::CooptConfig;
+use super::experiments::Table8Config;
+use crate::util::{Args, TomlDoc};
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Load a Table VIII configuration from a TOML file, e.g.:
+///
+/// ```toml
+/// [table8]
+/// nets = ["lenet_mnist", "lenet_plus_mnist"]
+/// dataset_size = 2048
+/// designs = ["exact8x8", "mul8x8_1", "mul8x8_2", "mul8x8_3", "siei", "pkm"]
+///
+/// [coopt]
+/// base_steps = 300
+/// retrain_steps = 120
+/// lr = 0.05
+/// retrain_lr = 0.02
+/// reg_lambda = 0.001
+/// n_eval = 512
+/// ```
+pub fn table8_from_toml(doc: &TomlDoc) -> Table8Config {
+    let mut cfg = Table8Config::default();
+    if let Some(nets) = doc.get("table8.nets").and_then(|v| v.as_arr()) {
+        cfg.nets = nets
+            .iter()
+            .filter_map(|v| v.as_str().map(String::from))
+            .collect();
+    }
+    cfg.dataset_size = doc.i64_or("table8.dataset_size", cfg.dataset_size as i64) as usize;
+    if let Some(designs) = doc.get("table8.designs").and_then(|v| v.as_arr()) {
+        cfg.designs = designs
+            .iter()
+            .filter_map(|v| v.as_str().map(String::from))
+            .collect();
+    }
+    cfg.coopt = coopt_from_toml(doc, cfg.coopt);
+    cfg
+}
+
+pub fn coopt_from_toml(doc: &TomlDoc, mut c: CooptConfig) -> CooptConfig {
+    c.base_steps = doc.i64_or("coopt.base_steps", c.base_steps as i64) as usize;
+    c.retrain_steps = doc.i64_or("coopt.retrain_steps", c.retrain_steps as i64) as usize;
+    c.lr = doc.f64_or("coopt.lr", c.lr as f64) as f32;
+    c.retrain_lr = doc.f64_or("coopt.retrain_lr", c.retrain_lr as f64) as f32;
+    c.reg_lambda = doc.f64_or("coopt.reg_lambda", c.reg_lambda as f64) as f32;
+    c.n_eval = doc.i64_or("coopt.n_eval", c.n_eval as i64) as usize;
+    c.seed = doc.i64_or("coopt.seed", c.seed as i64) as u64;
+    c
+}
+
+/// Resolve the Table VIII config: optional --config file, then CLI
+/// overrides (--nets a,b --steps N --eval N --quick).
+pub fn resolve_table8(args: &Args) -> Result<Table8Config> {
+    let mut cfg = if let Some(path) = args.opt("config") {
+        let text = std::fs::read_to_string(Path::new(path))
+            .with_context(|| format!("read config {path}"))?;
+        let doc = TomlDoc::parse(&text).context("parse config")?;
+        table8_from_toml(&doc)
+    } else {
+        Table8Config::default()
+    };
+    if let Some(nets) = args.opt("nets") {
+        cfg.nets = nets.split(',').map(String::from).collect();
+    }
+    if let Some(designs) = args.opt("designs") {
+        cfg.designs = designs.split(',').map(String::from).collect();
+    }
+    cfg.coopt.base_steps = args.opt_usize("steps", cfg.coopt.base_steps);
+    cfg.coopt.retrain_steps = args.opt_usize("retrain-steps", cfg.coopt.retrain_steps);
+    cfg.coopt.n_eval = args.opt_usize("eval", cfg.coopt.n_eval);
+    cfg.dataset_size = args.opt_usize("data", cfg.dataset_size);
+    cfg.coopt.verbose = args.flag("verbose");
+    if args.flag("quick") {
+        cfg.coopt.base_steps = cfg.coopt.base_steps.min(60);
+        cfg.coopt.retrain_steps = cfg.coopt.retrain_steps.min(30);
+        cfg.coopt.n_eval = cfg.coopt.n_eval.min(128);
+        cfg.dataset_size = cfg.dataset_size.min(512);
+    }
+    Ok(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn toml_roundtrip() {
+        let doc = TomlDoc::parse(
+            r#"
+[table8]
+nets = ["lenet_mnist", "vgg_s_cifar"]
+dataset_size = 1024
+designs = ["exact8x8", "mul8x8_2"]
+
+[coopt]
+base_steps = 50
+reg_lambda = 0.01
+"#,
+        )
+        .unwrap();
+        let cfg = table8_from_toml(&doc);
+        assert_eq!(cfg.nets, vec!["lenet_mnist", "vgg_s_cifar"]);
+        assert_eq!(cfg.dataset_size, 1024);
+        assert_eq!(cfg.designs, vec!["exact8x8", "mul8x8_2"]);
+        assert_eq!(cfg.coopt.base_steps, 50);
+        assert!((cfg.coopt.reg_lambda - 0.01).abs() < 1e-9);
+        // untouched defaults survive
+        assert_eq!(cfg.coopt.n_eval, 512);
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let args = Args::parse(
+            "table8 --nets lenet_mnist --steps 10 --quick"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let cfg = resolve_table8(&args).unwrap();
+        assert_eq!(cfg.nets, vec!["lenet_mnist"]);
+        assert_eq!(cfg.coopt.base_steps, 10);
+        assert!(cfg.coopt.n_eval <= 128);
+    }
+}

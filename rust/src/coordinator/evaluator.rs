@@ -1,0 +1,94 @@
+//! Batched DAL evaluation across multiplier designs.
+//!
+//! Given a trained float network, quantize once, build each design's
+//! LUT once, and sweep the evaluation set — the core measurement of
+//! Table VIII.  A small worker pool (via `util::threadpool`) parallelizes
+//! over images inside `QNet::accuracy`; designs are swept sequentially so
+//! LUT builds are amortized and results are deterministic.
+
+use crate::data::Dataset;
+use crate::dnn::{FloatNet, QNet};
+use crate::metrics::Lut;
+use crate::mult::by_name;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+pub struct EvalReport {
+    /// design name -> accuracy in [0,1]
+    pub accuracy: BTreeMap<String, f64>,
+    /// float (non-quantized) reference accuracy
+    pub float_accuracy: f64,
+    pub n_eval: usize,
+}
+
+impl EvalReport {
+    /// DNN accuracy loss vs the exact design (paper's DAL).
+    pub fn dal(&self, design: &str) -> Option<f64> {
+        let exact = self.accuracy.get("exact8x8")?;
+        let d = self.accuracy.get(design)?;
+        Some(exact - d)
+    }
+}
+
+pub struct Evaluator {
+    pub headroom: f32,
+    pub n_calib: usize,
+}
+
+impl Default for Evaluator {
+    fn default() -> Self {
+        Self {
+            headroom: 8.0,
+            n_calib: 64,
+        }
+    }
+}
+
+impl Evaluator {
+    /// Evaluate `designs` on `n_eval` samples of `data`.
+    pub fn run(
+        &self,
+        fnet: &FloatNet,
+        data: &Dataset,
+        n_eval: usize,
+        designs: &[&str],
+    ) -> Result<EvalReport> {
+        let n_eval = n_eval.min(data.n);
+        let stride = data.stride();
+        let n_calib = self.n_calib.min(data.n);
+        let calib = &data.images[..n_calib * stride];
+        let qnet = QNet::quantize(fnet, calib, n_calib, self.headroom);
+
+        let xs = &data.images[..n_eval * stride];
+        let ys = &data.labels[..n_eval];
+
+        // float reference
+        let float_preds = fnet.forward_batch(xs, n_eval);
+        let float_correct = float_preds
+            .iter()
+            .zip(ys)
+            .filter(|(logits, &y)| crate::dnn::argmax(logits) == y as usize)
+            .count();
+
+        let mut accuracy = BTreeMap::new();
+        for &name in designs {
+            let m = by_name(name).with_context(|| format!("unknown design {name}"))?;
+            let lut = Lut::build(m.as_ref());
+            let acc = qnet.accuracy(xs, ys, &lut);
+            accuracy.insert(name.to_string(), acc);
+        }
+        Ok(EvalReport {
+            accuracy,
+            float_accuracy: float_correct as f64 / n_eval as f64,
+            n_eval,
+        })
+    }
+
+    /// Quantize and return the QNet (for histogram / inspection flows).
+    pub fn quantize(&self, fnet: &FloatNet, data: &Dataset) -> QNet {
+        let n_calib = self.n_calib.min(data.n);
+        let calib = &data.images[..n_calib * data.stride()];
+        QNet::quantize(fnet, calib, n_calib, self.headroom)
+    }
+}

@@ -1,0 +1,270 @@
+//! Experiment registry: one runner per paper table/figure, each
+//! producing a rendered `util::Table` plus machine-readable rows.
+
+use super::coopt::{co_optimize, CooptConfig};
+use super::trainer::Trainer;
+use crate::data::Dataset;
+use crate::metrics::exhaustive_metrics;
+use crate::mult::by_name;
+use crate::runtime::Engine;
+use crate::synth::{synthesize, Calibration};
+use crate::util::{fmt_improvement, Table};
+use anyhow::{Context, Result};
+
+/// Paper reference values for side-by-side reporting.
+pub mod paper {
+    /// Table V rows: (name, ER %, MED, NMED %, MRED %).
+    pub const TABLE5: [(&str, f64, f64, f64, f64); 5] = [
+        ("mul8x8_1", 22.8, 137.04, 0.21, 1.50),
+        ("mul8x8_2", 20.49, 114.83, 0.18, 1.42),
+        ("mul8x8_3", 31.41, 648.20, 1.00, 2.53),
+        ("pkm", 49.86, 938.32, 1.44, 3.89),
+        ("etm", 98.88, f64::NAN, 2.85, 25.21),
+    ];
+    /// Table VI: (name, area um2, power mW, delay ns).
+    pub const TABLE6: [(&str, f64, f64, f64); 3] = [
+        ("exact3x3", 67.68, 3.73, 0.45),
+        ("mul3x3_1", 43.20, 2.40, 0.26),
+        ("mul3x3_2", 46.44, 2.36, 0.26),
+    ];
+    /// Table VII: (name, area um2, power mW, delay ns).
+    pub const TABLE7: [(&str, f64, f64, f64); 6] = [
+        ("exact8x8", 744.59, 58.12, 1.58),
+        ("mul8x8_1", 596.16, 45.66, 1.29),
+        ("mul8x8_2", 646.92, 50.84, 1.41),
+        ("mul8x8_3", 571.32, 42.28, 1.29),
+        ("siei", 579.51, 39.57, 1.37),
+        ("pkm", 564.76, 37.87, 1.28),
+    ];
+}
+
+/// Table V — arithmetic accuracy of the approximate multipliers.
+pub fn table5(designs: &[&str]) -> Result<Table> {
+    let mut t = Table::new(
+        "Table V — arithmetic accuracy (measured | paper)",
+        &["name", "ER(%)", "MED", "NMED(%)", "MRED(%)", "bias", "paper ER(%)"],
+    );
+    for &name in designs {
+        let m = by_name(name).with_context(|| format!("unknown design {name}"))?;
+        let e = exhaustive_metrics(m.as_ref());
+        let paper_er = paper::TABLE5
+            .iter()
+            .find(|(n, ..)| *n == name)
+            .map(|(_, er, ..)| format!("{er:.2}"))
+            .unwrap_or_else(|| "-".into());
+        t.row(vec![
+            name.to_string(),
+            format!("{:.2}", e.er * 100.0),
+            format!("{:.2}", e.med),
+            format!("{:.3}", e.nmed * 100.0),
+            format!("{:.2}", e.mred * 100.0),
+            format!("{:+.1}", e.bias),
+            paper_er,
+        ]);
+    }
+    Ok(t)
+}
+
+/// Table VI — 3×3 designs: area / power / delay via the synthesis flow,
+/// calibrated so the same-flow exact baseline matches the paper's
+/// baseline row (relative improvements are the measurement).
+pub fn table6(vectors: usize) -> Result<Table> {
+    let base = synthesize(by_name("exact3x3_sop").unwrap().as_ref(), vectors, 1)
+        .context("exact3x3_sop synthesis")?;
+    let cal = Calibration::from_baseline(&base);
+    let mut t = Table::new(
+        "Table VI — 3x3 cost (same-flow exact baseline; paper: 67.68um2/3.73mW/0.45ns)",
+        &["type", "area um2 (impr)", "power mW (impr)", "delay ns (impr)", "cells"],
+    );
+    let (ba, bp, bd) = cal.apply(&base);
+    t.row(vec![
+        "exact (baseline)".into(),
+        format!("{ba:.2}"),
+        format!("{bp:.2}"),
+        format!("{bd:.2}"),
+        base.cells.to_string(),
+    ]);
+    for name in ["mul3x3_1", "mul3x3_2"] {
+        let r = synthesize(by_name(name).unwrap().as_ref(), vectors, 1).unwrap();
+        let (a, p, d) = cal.apply(&r);
+        t.row(vec![
+            name.into(),
+            fmt_improvement(a, ba, 2),
+            fmt_improvement(p, bp, 2),
+            fmt_improvement(d, bd, 2),
+            r.cells.to_string(),
+        ]);
+    }
+    Ok(t)
+}
+
+/// Table VII — 8×8 designs, same-flow aggregated-exact baseline.
+pub fn table7(vectors: usize) -> Result<Table> {
+    let base = synthesize(by_name("agg_exact_sop").unwrap().as_ref(), vectors, 1)
+        .context("agg_exact_sop synthesis")?;
+    // scale to the paper's exact-8x8 baseline row
+    let scale_a = 744.59 / base.area;
+    let scale_p = 58.12 / base.power;
+    let scale_d = 1.58 / base.delay;
+    let mut t = Table::new(
+        "Table VII — 8x8 cost (same-flow aggregated-exact baseline)",
+        &["type", "area um2 (impr)", "power mW (impr)", "delay ns (impr)", "cells"],
+    );
+    t.row(vec![
+        "exact (baseline)".into(),
+        format!("{:.2}", base.area * scale_a),
+        format!("{:.2}", base.power * scale_p),
+        format!("{:.2}", base.delay * scale_d),
+        base.cells.to_string(),
+    ]);
+    for name in ["mul8x8_1", "mul8x8_2", "mul8x8_3", "siei", "pkm", "etm"] {
+        let r = synthesize(by_name(name).unwrap().as_ref(), vectors, 1).unwrap();
+        t.row(vec![
+            name.into(),
+            fmt_improvement(r.area * scale_a, base.area * scale_a, 2),
+            fmt_improvement(r.power * scale_p, base.power * scale_p, 2),
+            fmt_improvement(r.delay * scale_d, base.delay * scale_d, 2),
+            r.cells.to_string(),
+        ]);
+    }
+    Ok(t)
+}
+
+/// Configuration for a Table VIII column (one net × dataset × regime).
+#[derive(Clone, Debug)]
+pub struct Table8Config {
+    pub nets: Vec<String>,
+    pub dataset_size: usize,
+    pub coopt: CooptConfig,
+    pub designs: Vec<String>,
+}
+
+impl Default for Table8Config {
+    fn default() -> Self {
+        Self {
+            nets: vec!["lenet_mnist".into()],
+            dataset_size: 2048,
+            coopt: CooptConfig::default(),
+            designs: crate::mult::DNN_DESIGNS.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+/// Table VIII — DNN accuracy per multiplier, before/after co-opt
+/// retraining.  Heavy; callers control scope via the config.
+pub fn table8(engine: &Engine, cfg: &Table8Config) -> Result<Table> {
+    let mut t = Table::new(
+        "Table VIII — DNN accuracy (baseline | +co-opt retraining)",
+        &["net", "design", "acc", "acc+retrain", "DAL", "DAL+retrain"],
+    );
+    for tag in &cfg.nets {
+        let ds_name = tag.rsplit_once('_').map(|(_, d)| d).unwrap_or("mnist");
+        let data = Dataset::by_name(ds_name, cfg.dataset_size, 42)
+            .with_context(|| format!("dataset {ds_name}"))?;
+        let mut trainer = Trainer::new(engine, tag)?;
+        let designs: Vec<&str> = cfg.designs.iter().map(|s| s.as_str()).collect();
+        // Per-network stable schedules (no batch-norm anywhere, so the
+        // deeper nets need gentler steps; values from the lr probe logged
+        // in EXPERIMENTS.md §Table VIII).
+        let mut coopt = cfg.coopt.clone();
+        let lr_cap = match tag.as_str() {
+            t if t.starts_with("lenet_plus_cifar") => 0.01,
+            t if t.starts_with("alexnet") => 0.02,
+            t if t.starts_with("vgg_s") || t.starts_with("resnet19_s") => 0.005,
+            _ => f32::MAX,
+        };
+        coopt.lr = coopt.lr.min(lr_cap);
+        coopt.retrain_lr = coopt.retrain_lr.min(lr_cap * 0.5);
+        let out = co_optimize(&mut trainer, &data, &designs, &coopt)?;
+        println!(
+            "[table8] {tag}: float acc {:.3}, weight band {:.2} -> {:.2}",
+            out.baseline.float_accuracy, out.band_before, out.band_after
+        );
+        for d in &designs {
+            let a0 = out.baseline.accuracy[*d];
+            let a1 = out.retrained.accuracy[*d];
+            t.row(vec![
+                tag.clone(),
+                d.to_string(),
+                format!("{:.2}%", a0 * 100.0),
+                format!("{:.2}%", a1 * 100.0),
+                format!("{:.2}%", out.baseline.dal(d).unwrap_or(0.0) * 100.0),
+                format!("{:.2}%", out.retrained.dal(d).unwrap_or(0.0) * 100.0),
+            ]);
+        }
+    }
+    Ok(t)
+}
+
+/// §II-B weight/activation distribution "figure": histogram bands of the
+/// quantized codes before/after co-optimization.
+pub fn weights_hist(engine: &Engine, tag: &str, steps: usize, n_data: usize) -> Result<Table> {
+    let ds_name = tag.rsplit_once('_').map(|(_, d)| d).unwrap_or("mnist");
+    let data = Dataset::by_name(ds_name, n_data, 42).context("dataset")?;
+    let mut trainer = Trainer::new(engine, tag)?;
+    let evaluator = super::evaluator::Evaluator::default();
+
+    trainer.train(&data, steps, 0.05, 0.0, 7, false)?;
+    let q0 = evaluator.quantize(&trainer.to_float_net(), &data);
+    trainer.train(&data, steps / 2, 0.02, 1e-3, 8, false)?;
+    let q1 = evaluator.quantize(&trainer.to_float_net(), &data);
+
+    let bands: [(u8, u8); 5] = [(0, 31), (32, 95), (96, 159), (160, 223), (224, 255)];
+    let mut t = Table::new(
+        "Weight-code distribution (paper §II-B: weights concentrate in (96,159))",
+        &["band", "before co-opt", "after co-opt"],
+    );
+    for (lo, hi) in bands {
+        t.row(vec![
+            format!("[{lo},{hi}]"),
+            format!("{:.1}%", q0.weight_band_fraction(lo, hi) * 100.0),
+            format!("{:.1}%", q1.weight_band_fraction(lo, hi) * 100.0),
+        ]);
+    }
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table5_renders() {
+        let t = table5(&["exact8x8", "mul8x8_1", "mul8x8_2"]).unwrap();
+        let s = t.render();
+        assert!(s.contains("mul8x8_1"));
+        assert!(s.contains("0.00"), "exact ER must be zero: {s}");
+    }
+
+    #[test]
+    fn table6_improvements_positive() {
+        let t = table6(400).unwrap();
+        let s = t.render();
+        // both approximate designs must show a positive area improvement
+        for row in &t.rows[1..] {
+            let area_cell = &row[1];
+            let imp: f64 = area_cell
+                .split('(')
+                .nth(1)
+                .unwrap()
+                .trim_end_matches("%)")
+                .parse()
+                .unwrap();
+            assert!(imp > 0.0, "{s}");
+        }
+    }
+
+    #[test]
+    fn table7_m3_smallest() {
+        let t = table7(300).unwrap();
+        let area_of = |name: &str| -> f64 {
+            t.rows
+                .iter()
+                .find(|r| r[0] == name)
+                .map(|r| r[1].split(' ').next().unwrap().parse().unwrap())
+                .unwrap()
+        };
+        assert!(area_of("mul8x8_3") < area_of("mul8x8_2"));
+        assert!(area_of("mul8x8_1") < area_of("mul8x8_2"));
+    }
+}

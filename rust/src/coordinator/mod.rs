@@ -1,0 +1,17 @@
+//! The co-design platform coordinator (the paper's "extended DNN
+//! platform" [17]): configuration, the PJRT training driver, batched
+//! DAL evaluation, the hardware-driven co-optimization loop, and the
+//! per-table experiment registry.
+
+pub mod config;
+pub mod server;
+pub mod coopt;
+pub mod evaluator;
+pub mod experiments;
+pub mod trainer;
+
+pub use config::resolve_table8;
+pub use coopt::{co_optimize, CooptConfig, CooptOutcome};
+pub use evaluator::{EvalReport, Evaluator};
+pub use experiments::{table5, table6, table7, table8, weights_hist, Table8Config};
+pub use trainer::Trainer;

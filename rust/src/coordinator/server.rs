@@ -1,0 +1,278 @@
+//! Batched inference service: the deployment-shaped face of the
+//! platform.
+//!
+//! Clients submit single images; a dispatcher coalesces them into
+//! batches (size- or deadline-triggered, the classic dynamic-batching
+//! policy), a worker pool runs the quantized LUT engine, and responses
+//! flow back through per-request channels.  This is the L3 coordination
+//! layer a production deployment of the paper's multiplier would sit
+//! behind — and the harness `examples/serve.rs` uses to report
+//! latency/throughput.
+
+use crate::dnn::QNet;
+use crate::metrics::Lut;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+pub struct InferRequest {
+    pub image: Vec<f32>,
+    pub submitted: Instant,
+    respond: mpsc::Sender<InferResponse>,
+}
+
+#[derive(Clone, Debug)]
+pub struct InferResponse {
+    pub logits: Vec<f32>,
+    pub pred: usize,
+    /// Total time from submit to completion.
+    pub latency: Duration,
+    /// How many requests shared the batch.
+    pub batch_size: usize,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Dispatch as soon as this many requests are queued…
+    pub max_batch: usize,
+    /// …or when the oldest queued request has waited this long.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self {
+            max_batch: 16,
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+#[derive(Default, Debug)]
+pub struct ServerStats {
+    pub served: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_requests: AtomicU64,
+}
+
+/// A running service instance.  `shutdown()` (or drop) stops the workers.
+pub struct InferServer {
+    queue_tx: mpsc::Sender<InferRequest>,
+    pub stats: Arc<ServerStats>,
+    stop: Arc<AtomicBool>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl InferServer {
+    /// Start a server over a quantized network + multiplier LUT.
+    pub fn start(qnet: Arc<QNet>, lut: Arc<Lut>, policy: BatchPolicy, workers: usize) -> Self {
+        let (tx, rx) = mpsc::channel::<InferRequest>();
+        let rx = Arc::new(Mutex::new(rx));
+        let stats = Arc::new(ServerStats::default());
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut handles = Vec::new();
+        for _ in 0..workers.max(1) {
+            let rx = rx.clone();
+            let qnet = qnet.clone();
+            let lut = lut.clone();
+            let stats = stats.clone();
+            let stop = stop.clone();
+            handles.push(std::thread::spawn(move || {
+                worker_loop(&rx, &qnet, &lut, policy, &stats, &stop);
+            }));
+        }
+        InferServer {
+            queue_tx: tx,
+            stats,
+            stop,
+            workers: handles,
+        }
+    }
+
+    /// Submit one image; returns a receiver for the response.
+    pub fn submit(&self, image: Vec<f32>) -> mpsc::Receiver<InferResponse> {
+        let (tx, rx) = mpsc::channel();
+        let _ = self.queue_tx.send(InferRequest {
+            image,
+            submitted: Instant::now(),
+            respond: tx,
+        });
+        rx
+    }
+
+    /// Blocking convenience wrapper.
+    pub fn infer(&self, image: Vec<f32>) -> InferResponse {
+        self.submit(image).recv().expect("server alive")
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for InferServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+    }
+}
+
+fn worker_loop(
+    rx: &Mutex<mpsc::Receiver<InferRequest>>,
+    qnet: &QNet,
+    lut: &Lut,
+    policy: BatchPolicy,
+    stats: &ServerStats,
+    stop: &AtomicBool,
+) {
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return;
+        }
+        // Collect a batch under the dynamic-batching policy.
+        let mut batch: Vec<InferRequest> = Vec::with_capacity(policy.max_batch);
+        {
+            let guard = rx.lock().unwrap();
+            match guard.recv_timeout(Duration::from_millis(20)) {
+                Ok(first) => batch.push(first),
+                Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                Err(mpsc::RecvTimeoutError::Disconnected) => return,
+            }
+            let deadline = batch[0].submitted + policy.max_wait;
+            while batch.len() < policy.max_batch {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match guard.recv_timeout(deadline - now) {
+                    Ok(req) => batch.push(req),
+                    Err(_) => break,
+                }
+            }
+        } // release the queue lock before compute
+
+        let bsize = batch.len();
+        stats.batches.fetch_add(1, Ordering::Relaxed);
+        stats.batched_requests.fetch_add(bsize as u64, Ordering::Relaxed);
+        for req in batch {
+            let logits = qnet.forward_one(&req.image, lut);
+            let pred = crate::dnn::argmax(&logits);
+            let resp = InferResponse {
+                latency: req.submitted.elapsed(),
+                pred,
+                logits,
+                batch_size: bsize,
+            };
+            stats.served.fetch_add(1, Ordering::Relaxed);
+            let _ = req.respond.send(resp);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Dataset;
+    use crate::dnn::{FloatNet, Tensor};
+    use crate::mult::ExactMul;
+    use crate::util::rng::Pcg32;
+
+    fn tiny_qnet() -> (Arc<QNet>, Arc<Lut>) {
+        // a small random lenet over synth-mnist
+        let mut rng = Pcg32::new(1);
+        let shape = (1, 28, 28);
+        let mut params = Vec::new();
+        let spec = crate::dnn::spec("lenet", 1).unwrap();
+        let (mut c, mut h, mut w) = shape;
+        for op in spec {
+            use crate::dnn::Op;
+            match op {
+                Op::Conv(cin, cout, k, stride) => {
+                    let n = cout * cin * k * k;
+                    params.push(Tensor::new(
+                        vec![cout, cin, k, k],
+                        (0..n).map(|_| (rng.next_f32() - 0.5) * 0.2).collect(),
+                    ));
+                    params.push(Tensor::zeros(vec![cout]));
+                    c = cout;
+                    h = (h - k) / stride + 1;
+                    w = (w - k) / stride + 1;
+                }
+                Op::MaxPool(k) => {
+                    h /= k;
+                    w /= k;
+                }
+                Op::Flatten => {
+                    c *= h * w;
+                    h = 1;
+                    w = 1;
+                }
+                Op::Fc(_, cout) => {
+                    params.push(Tensor::new(
+                        vec![c, cout],
+                        (0..c * cout).map(|_| (rng.next_f32() - 0.5) * 0.1).collect(),
+                    ));
+                    params.push(Tensor::zeros(vec![cout]));
+                    c = cout;
+                }
+                _ => {}
+            }
+        }
+        let fnet = FloatNet::new("lenet", shape, params);
+        let data = Dataset::synth_mnist(8, 2);
+        let qnet = QNet::quantize(&fnet, &data.images, 8, 8.0);
+        (Arc::new(qnet), Arc::new(Lut::build(&ExactMul::new(8, 8))))
+    }
+
+    #[test]
+    fn serves_requests_correctly() {
+        let (qnet, lut) = tiny_qnet();
+        let data = Dataset::synth_mnist(12, 3);
+        // direct engine answers for comparison
+        let direct: Vec<usize> = (0..12)
+            .map(|i| crate::dnn::argmax(&qnet.forward_one(data.image(i), &lut)))
+            .collect();
+        let server = InferServer::start(qnet, lut, BatchPolicy::default(), 2);
+        let rxs: Vec<_> = (0..12).map(|i| server.submit(data.image(i).to_vec())).collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.pred, direct[i], "request {i}");
+            assert_eq!(resp.logits.len(), 10);
+        }
+        assert_eq!(server.stats.served.load(Ordering::Relaxed), 12);
+        server.shutdown();
+    }
+
+    #[test]
+    fn batching_coalesces_under_load() {
+        let (qnet, lut) = tiny_qnet();
+        let data = Dataset::synth_mnist(32, 4);
+        let server = InferServer::start(
+            qnet,
+            lut,
+            BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_millis(20),
+            },
+            1, // single worker so the queue backs up
+        );
+        let rxs: Vec<_> = (0..32).map(|i| server.submit(data.image(i).to_vec())).collect();
+        let mut max_batch = 0;
+        for rx in rxs {
+            max_batch = max_batch.max(rx.recv().unwrap().batch_size);
+        }
+        assert!(max_batch > 1, "no coalescing observed");
+        let batches = server.stats.batches.load(Ordering::Relaxed);
+        assert!(batches < 32, "every request got its own batch");
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_joins_workers() {
+        let (qnet, lut) = tiny_qnet();
+        let server = InferServer::start(qnet, lut, BatchPolicy::default(), 3);
+        server.shutdown(); // must not hang
+    }
+}

@@ -1,0 +1,184 @@
+//! Training-loop driver: owns parameter state and advances it by
+//! executing the AOT train-step artifact on the PJRT engine.
+//!
+//! This is where the "python never runs at runtime" property pays off:
+//! the loop below is pure rust — batching, literal marshalling, state
+//! carry, loss logging — with XLA executing the compiled fwd/bwd.
+
+use crate::data::{npy::read_npy, Batcher, Dataset};
+use crate::dnn::{FloatNet, Tensor};
+use crate::runtime::{f32_literal, i32_literal, scalar_f32, to_f32_vec, to_scalar_f32, Engine};
+use crate::runtime::NetworkEntry;
+use anyhow::{bail, Context, Result};
+use xla::Literal;
+
+pub struct Trainer<'e> {
+    pub engine: &'e Engine,
+    pub tag: String,
+    pub entry: NetworkEntry,
+    pub train_batch: usize,
+    /// Host-side parameter state (authoritative between steps).
+    pub params: Vec<Vec<f32>>,
+    pub vels: Vec<Vec<f32>>,
+    pub steps_done: usize,
+    pub loss_log: Vec<(usize, f32)>,
+}
+
+impl<'e> Trainer<'e> {
+    /// Load initial parameters + manifest entry for `tag`
+    /// (e.g. "lenet_mnist").
+    pub fn new(engine: &'e Engine, tag: &str) -> Result<Trainer<'e>> {
+        let manifest = engine.manifest()?;
+        let entry = manifest
+            .networks
+            .get(tag)
+            .with_context(|| format!("{tag} not in manifest"))?
+            .clone();
+        let mut params = Vec::with_capacity(entry.param_shapes.len());
+        for i in 0..entry.param_shapes.len() {
+            let arr = read_npy(
+                &engine
+                    .artifacts_dir()
+                    .join("params")
+                    .join(format!("{tag}_p{i}.npy")),
+            )?;
+            if arr.shape != entry.param_shapes[i] {
+                bail!(
+                    "param {i} shape mismatch: npy {:?} vs manifest {:?}",
+                    arr.shape,
+                    entry.param_shapes[i]
+                );
+            }
+            params.push(arr.to_f32_vec());
+        }
+        let vels = params.iter().map(|p| vec![0f32; p.len()]).collect();
+        Ok(Trainer {
+            engine,
+            tag: tag.to_string(),
+            entry,
+            train_batch: manifest.train_batch,
+            params,
+            vels,
+            steps_done: 0,
+            loss_log: Vec::new(),
+        })
+    }
+
+    fn artifact(&self) -> String {
+        format!("{}_train", self.tag)
+    }
+
+    /// One SGD step on a batch; returns the loss.
+    pub fn step(&mut self, xs: &[f32], ys: &[i32], lr: f32, reg_lambda: f32) -> Result<f32> {
+        let n = self.params.len();
+        let (c, h, w) = self.entry.image_shape;
+        let mut args: Vec<Literal> = Vec::with_capacity(2 * n + 4);
+        for (i, p) in self.params.iter().enumerate() {
+            args.push(f32_literal(p, &self.entry.param_shapes[i])?);
+        }
+        for (i, v) in self.vels.iter().enumerate() {
+            args.push(f32_literal(v, &self.entry.param_shapes[i])?);
+        }
+        args.push(f32_literal(xs, &[self.train_batch, c, h, w])?);
+        args.push(i32_literal(ys, &[self.train_batch])?);
+        args.push(scalar_f32(lr));
+        args.push(scalar_f32(reg_lambda));
+
+        let outs = self.engine.run(&self.artifact(), &args)?;
+        if outs.len() != 2 * n + 1 {
+            bail!("train artifact returned {} values, want {}", outs.len(), 2 * n + 1);
+        }
+        for i in 0..n {
+            self.params[i] = to_f32_vec(&outs[i])?;
+        }
+        for i in 0..n {
+            self.vels[i] = to_f32_vec(&outs[n + i])?;
+        }
+        let loss = to_scalar_f32(&outs[2 * n])?;
+        self.steps_done += 1;
+        self.loss_log.push((self.steps_done, loss));
+        Ok(loss)
+    }
+
+    /// Train for `steps` mini-batches drawn from `data`.
+    pub fn train(
+        &mut self,
+        data: &Dataset,
+        steps: usize,
+        lr: f32,
+        reg_lambda: f32,
+        seed: u64,
+        verbose: bool,
+    ) -> Result<Vec<f32>> {
+        let mut batcher = Batcher::new(data, self.train_batch, seed);
+        let mut losses = Vec::with_capacity(steps);
+        for s in 0..steps {
+            let (xs, ys) = batcher.next_batch();
+            let loss = self.step(&xs, &ys, lr, reg_lambda)?;
+            losses.push(loss);
+            if verbose && (s % 25 == 0 || s + 1 == steps) {
+                println!(
+                    "[train {}] step {:>4}/{steps} loss {loss:.4}",
+                    self.tag,
+                    s + 1
+                );
+            }
+            if !loss.is_finite() {
+                bail!("loss diverged at step {s}");
+            }
+        }
+        Ok(losses)
+    }
+
+    /// Materialize the current parameters as a native FloatNet.
+    pub fn to_float_net(&self) -> FloatNet {
+        let net = self
+            .tag
+            .rsplit_once('_')
+            .map(|(n, _)| n)
+            .unwrap_or(&self.tag);
+        let tensors: Vec<Tensor> = self
+            .params
+            .iter()
+            .zip(self.entry.param_shapes.iter())
+            .map(|(p, s)| Tensor::new(s.clone(), p.clone()))
+            .collect();
+        FloatNet::new(net, self.entry.image_shape, tensors)
+    }
+
+    /// Float accuracy via the PJRT infer artifact (batched).
+    pub fn infer_accuracy(&self, data: &Dataset, n_eval: usize, infer_batch: usize) -> Result<f64> {
+        let (c, h, w) = self.entry.image_shape;
+        let stride = c * h * w;
+        let mut correct = 0usize;
+        let mut seen = 0usize;
+        let artifact = format!("{}_infer", self.tag);
+        while seen < n_eval.min(data.n) {
+            let take = infer_batch.min(data.n - seen);
+            // pad the last batch by repeating sample 0
+            let mut xs = Vec::with_capacity(infer_batch * stride);
+            let mut ys = Vec::with_capacity(infer_batch);
+            for i in 0..infer_batch {
+                let idx = if i < take { seen + i } else { 0 };
+                xs.extend_from_slice(data.image(idx));
+                ys.push(data.labels[idx]);
+            }
+            let mut args: Vec<Literal> = Vec::new();
+            for (i, p) in self.params.iter().enumerate() {
+                args.push(f32_literal(p, &self.entry.param_shapes[i])?);
+            }
+            args.push(f32_literal(&xs, &[infer_batch, c, h, w])?);
+            let outs = self.engine.run(&artifact, &args)?;
+            let logits = to_f32_vec(&outs[0])?;
+            for i in 0..take {
+                let row = &logits[i * 10..(i + 1) * 10];
+                let pred = crate::dnn::argmax(row);
+                if pred == ys[i] as usize {
+                    correct += 1;
+                }
+            }
+            seen += take;
+        }
+        Ok(correct as f64 / seen.max(1) as f64)
+    }
+}

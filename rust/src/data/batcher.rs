@@ -1,0 +1,83 @@
+//! Shuffling mini-batch iterator over a dataset.
+
+use super::Dataset;
+use crate::util::rng::Pcg32;
+
+pub struct Batcher<'a> {
+    data: &'a Dataset,
+    batch: usize,
+    order: Vec<usize>,
+    cursor: usize,
+    rng: Pcg32,
+}
+
+impl<'a> Batcher<'a> {
+    pub fn new(data: &'a Dataset, batch: usize, seed: u64) -> Self {
+        let mut rng = Pcg32::new(seed);
+        let mut order: Vec<usize> = (0..data.n).collect();
+        rng.shuffle(&mut order);
+        Self {
+            data,
+            batch,
+            order,
+            cursor: 0,
+            rng,
+        }
+    }
+
+    /// Next batch: (images [batch * stride], labels [batch]).  Wraps and
+    /// reshuffles at epoch end; always returns a full batch.
+    pub fn next_batch(&mut self) -> (Vec<f32>, Vec<i32>) {
+        let stride = self.data.stride();
+        let mut xs = Vec::with_capacity(self.batch * stride);
+        let mut ys = Vec::with_capacity(self.batch);
+        for _ in 0..self.batch {
+            if self.cursor >= self.order.len() {
+                self.rng.shuffle(&mut self.order);
+                self.cursor = 0;
+            }
+            let i = self.order[self.cursor];
+            self.cursor += 1;
+            xs.extend_from_slice(self.data.image(i));
+            ys.push(self.data.labels[i]);
+        }
+        (xs, ys)
+    }
+
+    pub fn epoch_len(&self) -> usize {
+        self.data.n / self.batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_batches_and_wrap() {
+        let d = Dataset::synth_mnist(10, 0);
+        let mut b = Batcher::new(&d, 4, 1);
+        for _ in 0..5 {
+            let (xs, ys) = b.next_batch();
+            assert_eq!(xs.len(), 4 * 784);
+            assert_eq!(ys.len(), 4);
+        }
+    }
+
+    #[test]
+    fn covers_all_samples_in_epoch() {
+        let d = Dataset::synth_mnist(8, 0);
+        let mut b = Batcher::new(&d, 4, 1);
+        let (x1, _) = b.next_batch();
+        let (x2, _) = b.next_batch();
+        // Two batches of 4 over 8 samples = every sample exactly once.
+        let mut firsts: Vec<u32> = x1
+            .chunks(784)
+            .chain(x2.chunks(784))
+            .map(|img| img.iter().map(|&p| p.to_bits()).fold(0u32, |a, b| a ^ b))
+            .collect();
+        firsts.sort();
+        firsts.dedup();
+        assert_eq!(firsts.len(), 8, "batches must not repeat samples");
+    }
+}

@@ -1,0 +1,83 @@
+//! Dataset substrate: procedurally generated stand-ins for MNIST and
+//! CIFAR-10 (offline environment — see DESIGN.md §2), a shuffling
+//! batcher, and `.npy` interop with the python build path.
+
+pub mod batcher;
+pub mod npy;
+pub mod synth_cifar;
+pub mod synth_mnist;
+
+pub use batcher::Batcher;
+pub use npy::{read_npy, write_npy, NpyArray, NpyData};
+pub use synth_cifar::SynthCifar;
+pub use synth_mnist::SynthMnist;
+
+/// A dataset the coordinator can train/evaluate on.
+pub struct Dataset {
+    pub name: String,
+    /// [n, c, h, w] flattened.
+    pub images: Vec<f32>,
+    pub labels: Vec<i32>,
+    pub n: usize,
+    pub image_shape: (usize, usize, usize),
+}
+
+impl Dataset {
+    pub fn synth_mnist(n: usize, seed: u64) -> Dataset {
+        let d = SynthMnist::generate(n, seed);
+        Dataset {
+            name: "synth-mnist".into(),
+            images: d.images,
+            labels: d.labels,
+            n,
+            image_shape: (1, synth_mnist::H, synth_mnist::W),
+        }
+    }
+
+    pub fn synth_cifar(n: usize, seed: u64) -> Dataset {
+        let d = SynthCifar::generate(n, seed);
+        Dataset {
+            name: "synth-cifar".into(),
+            images: d.images,
+            labels: d.labels,
+            n,
+            image_shape: (3, synth_cifar::H, synth_cifar::W),
+        }
+    }
+
+    pub fn by_name(name: &str, n: usize, seed: u64) -> Option<Dataset> {
+        match name {
+            "mnist" | "synth-mnist" => Some(Self::synth_mnist(n, seed)),
+            "cifar" | "synth-cifar" => Some(Self::synth_cifar(n, seed)),
+            _ => None,
+        }
+    }
+
+    pub fn stride(&self) -> usize {
+        let (c, h, w) = self.image_shape;
+        c * h * w
+    }
+
+    pub fn image(&self, i: usize) -> &[f32] {
+        &self.images[i * self.stride()..(i + 1) * self.stride()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn by_name_resolves() {
+        assert!(Dataset::by_name("mnist", 10, 0).is_some());
+        assert!(Dataset::by_name("cifar", 10, 0).is_some());
+        assert!(Dataset::by_name("imagenet", 10, 0).is_none());
+    }
+
+    #[test]
+    fn strides() {
+        let d = Dataset::synth_mnist(4, 0);
+        assert_eq!(d.stride(), 784);
+        assert_eq!(d.image(3).len(), 784);
+    }
+}

@@ -1,0 +1,266 @@
+//! Minimal `.npy` v1.0 reader/writer (C-order, little-endian) for
+//! exchanging parameter tensors and LUTs with the python build path.
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum NpyData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U8(Vec<u8>),
+    I64(Vec<i64>),
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct NpyArray {
+    pub shape: Vec<usize>,
+    pub data: NpyData,
+}
+
+impl NpyArray {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match &self.data {
+            NpyData::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+    pub fn as_i32(&self) -> Option<&[i32]> {
+        match &self.data {
+            NpyData::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+    /// Convert any numeric payload to f32.
+    pub fn to_f32_vec(&self) -> Vec<f32> {
+        match &self.data {
+            NpyData::F32(v) => v.clone(),
+            NpyData::I32(v) => v.iter().map(|&x| x as f32).collect(),
+            NpyData::U8(v) => v.iter().map(|&x| x as f32).collect(),
+            NpyData::I64(v) => v.iter().map(|&x| x as f32).collect(),
+        }
+    }
+}
+
+fn descr_of(data: &NpyData) -> &'static str {
+    match data {
+        NpyData::F32(_) => "<f4",
+        NpyData::I32(_) => "<i4",
+        NpyData::U8(_) => "|u1",
+        NpyData::I64(_) => "<i8",
+    }
+}
+
+/// Write a `.npy` file.
+pub fn write_npy(path: &Path, arr: &NpyArray) -> Result<()> {
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    let shape_str = match arr.shape.len() {
+        0 => "()".to_string(),
+        1 => format!("({},)", arr.shape[0]),
+        _ => format!(
+            "({})",
+            arr.shape
+                .iter()
+                .map(|d| d.to_string())
+                .collect::<Vec<_>>()
+                .join(", ")
+        ),
+    };
+    let header = format!(
+        "{{'descr': '{}', 'fortran_order': False, 'shape': {}, }}",
+        descr_of(&arr.data),
+        shape_str
+    );
+    // Pad so that magic(6) + version(2) + hlen(2) + header is 64-aligned.
+    let unpadded = 10 + header.len() + 1;
+    let pad = (64 - unpadded % 64) % 64;
+    let padded_header = format!("{}{}\n", header, " ".repeat(pad));
+    f.write_all(b"\x93NUMPY\x01\x00")?;
+    f.write_all(&(padded_header.len() as u16).to_le_bytes())?;
+    f.write_all(padded_header.as_bytes())?;
+    match &arr.data {
+        NpyData::F32(v) => {
+            for x in v {
+                f.write_all(&x.to_le_bytes())?;
+            }
+        }
+        NpyData::I32(v) => {
+            for x in v {
+                f.write_all(&x.to_le_bytes())?;
+            }
+        }
+        NpyData::U8(v) => f.write_all(v)?,
+        NpyData::I64(v) => {
+            for x in v {
+                f.write_all(&x.to_le_bytes())?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Read a `.npy` file (v1/v2, C-order, little-endian numeric dtypes).
+pub fn read_npy(path: &Path) -> Result<NpyArray> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic[..6] != b"\x93NUMPY" {
+        bail!("{}: not a npy file", path.display());
+    }
+    let major = magic[6];
+    let hlen = if major >= 2 {
+        let mut b = [0u8; 4];
+        f.read_exact(&mut b)?;
+        u32::from_le_bytes(b) as usize
+    } else {
+        let mut b = [0u8; 2];
+        f.read_exact(&mut b)?;
+        u16::from_le_bytes(b) as usize
+    };
+    let mut header = vec![0u8; hlen];
+    f.read_exact(&mut header)?;
+    let header = String::from_utf8_lossy(&header).to_string();
+
+    let descr = extract_quoted(&header, "descr").context("descr")?;
+    let fortran = header.contains("'fortran_order': True");
+    if fortran {
+        bail!("fortran order not supported");
+    }
+    let shape = extract_shape(&header).context("shape")?;
+    let count: usize = shape.iter().product();
+
+    let mut body = Vec::new();
+    f.read_to_end(&mut body)?;
+
+    let data = match descr.as_str() {
+        "<f4" => {
+            let mut v = Vec::with_capacity(count);
+            for c in body.chunks_exact(4).take(count) {
+                v.push(f32::from_le_bytes(c.try_into().unwrap()));
+            }
+            NpyData::F32(v)
+        }
+        "<i4" => {
+            let mut v = Vec::with_capacity(count);
+            for c in body.chunks_exact(4).take(count) {
+                v.push(i32::from_le_bytes(c.try_into().unwrap()));
+            }
+            NpyData::I32(v)
+        }
+        "|u1" => NpyData::U8(body[..count].to_vec()),
+        "<i8" => {
+            let mut v = Vec::with_capacity(count);
+            for c in body.chunks_exact(8).take(count) {
+                v.push(i64::from_le_bytes(c.try_into().unwrap()));
+            }
+            NpyData::I64(v)
+        }
+        other => bail!("unsupported dtype {other}"),
+    };
+    let arr = NpyArray { shape, data };
+    if arr.len() != count {
+        bail!("shape/data mismatch");
+    }
+    Ok(arr)
+}
+
+fn extract_quoted(header: &str, key: &str) -> Option<String> {
+    let idx = header.find(&format!("'{key}'"))?;
+    let rest = &header[idx..];
+    let colon = rest.find(':')?;
+    let rest = rest[colon + 1..].trim_start();
+    let rest = rest.strip_prefix('\'')?;
+    let end = rest.find('\'')?;
+    Some(rest[..end].to_string())
+}
+
+fn extract_shape(header: &str) -> Option<Vec<usize>> {
+    let idx = header.find("'shape'")?;
+    let rest = &header[idx..];
+    let open = rest.find('(')?;
+    let close = rest.find(')')?;
+    let body = &rest[open + 1..close];
+    let mut out = Vec::new();
+    for part in body.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        out.push(part.parse().ok()?);
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("axmul_npy_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_f32() {
+        let arr = NpyArray {
+            shape: vec![2, 3],
+            data: NpyData::F32(vec![1.0, -2.5, 3.0, 0.0, 5.5, -6.0]),
+        };
+        let p = tmpfile("a.npy");
+        write_npy(&p, &arr).unwrap();
+        assert_eq!(read_npy(&p).unwrap(), arr);
+    }
+
+    #[test]
+    fn roundtrip_i32_1d() {
+        let arr = NpyArray {
+            shape: vec![4],
+            data: NpyData::I32(vec![1, -2, 3, i32::MAX]),
+        };
+        let p = tmpfile("b.npy");
+        write_npy(&p, &arr).unwrap();
+        assert_eq!(read_npy(&p).unwrap(), arr);
+    }
+
+    #[test]
+    fn roundtrip_u8_scalarish() {
+        let arr = NpyArray {
+            shape: vec![1],
+            data: NpyData::U8(vec![255]),
+        };
+        let p = tmpfile("c.npy");
+        write_npy(&p, &arr).unwrap();
+        assert_eq!(read_npy(&p).unwrap(), arr);
+    }
+
+    #[test]
+    fn python_interop() {
+        // Read a file produced by numpy itself (written by `make artifacts`
+        // in CI; here we synthesize the exact byte layout numpy emits).
+        let p = tmpfile("np.npy");
+        let arr = NpyArray {
+            shape: vec![3],
+            data: NpyData::F32(vec![0.5, 1.5, -2.0]),
+        };
+        write_npy(&p, &arr).unwrap();
+        let loaded = read_npy(&p).unwrap();
+        assert_eq!(loaded.to_f32_vec(), vec![0.5, 1.5, -2.0]);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let p = tmpfile("bad.npy");
+        std::fs::write(&p, b"not numpy at all").unwrap();
+        assert!(read_npy(&p).is_err());
+    }
+}

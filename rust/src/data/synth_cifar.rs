@@ -1,0 +1,151 @@
+//! synth-CIFAR: a procedurally generated 32×32 RGB stand-in for CIFAR-10
+//! [19].  Ten parametric classes combining shape (disc / ring / bar /
+//! cross / checker), colour palette and texture frequency, with jitter
+//! and noise.  Harder than synth-MNIST (colour + texture + occlusion
+//! noise) so the larger Table VIII networks have something to separate.
+
+use crate::util::rng::Pcg32;
+
+pub const H: usize = 32;
+pub const W: usize = 32;
+pub const C: usize = 3;
+pub const CLASSES: usize = 10;
+
+/// Per-class generators: (shape id, base RGB, texture frequency).
+const CLASS_DEF: [(u8, [f32; 3], f32); 10] = [
+    (0, [0.9, 0.2, 0.2], 0.0),  // red disc
+    (1, [0.2, 0.9, 0.2], 0.0),  // green ring
+    (2, [0.2, 0.3, 0.9], 0.0),  // blue horizontal bar
+    (3, [0.9, 0.8, 0.2], 0.0),  // yellow cross
+    (4, [0.8, 0.3, 0.8], 4.0),  // magenta checker
+    (0, [0.2, 0.8, 0.8], 6.0),  // cyan textured disc
+    (1, [0.9, 0.5, 0.1], 5.0),  // orange textured ring
+    (2, [0.6, 0.6, 0.6], 0.0),  // grey vertical bar (rotated below)
+    (3, [0.3, 0.7, 0.3], 7.0),  // green textured cross
+    (4, [0.9, 0.9, 0.9], 2.0),  // light coarse checker
+];
+
+pub fn render_sample(label: usize, rng: &mut Pcg32) -> Vec<f32> {
+    let (shape, rgb, tex_freq) = CLASS_DEF[label];
+    let mut img = vec![0f32; C * H * W];
+    let cx = 16.0 + (rng.next_f32() - 0.5) * 8.0;
+    let cy = 16.0 + (rng.next_f32() - 0.5) * 8.0;
+    let r = 7.0 + rng.next_f32() * 5.0;
+    let rot = if label == 7 { 1 } else { 0 }; // class 7: vertical bar
+    let phase = rng.next_f32() * std::f32::consts::TAU;
+    let bg = 0.15 + rng.next_f32() * 0.2;
+
+    for y in 0..H {
+        for x in 0..W {
+            let (fx, fy) = if rot == 1 {
+                (y as f32 - cy, x as f32 - cx)
+            } else {
+                (x as f32 - cx, y as f32 - cy)
+            };
+            let d = (fx * fx + fy * fy).sqrt();
+            let inside = match shape {
+                0 => d < r,                                   // disc
+                1 => d < r && d > r * 0.55,                   // ring
+                2 => fy.abs() < r * 0.35 && fx.abs() < r * 1.4, // bar
+                3 => fy.abs() < r * 0.3 || fx.abs() < r * 0.3, // cross
+                _ => {
+                    // checker
+                    let q = 4.0;
+                    (((fx / q).floor() as i32 + (fy / q).floor() as i32) % 2 == 0)
+                        && d < r * 1.3
+                }
+            };
+            let tex = if tex_freq > 0.0 {
+                0.75 + 0.25 * ((fx + fy) * tex_freq / 10.0 + phase).sin()
+            } else {
+                1.0
+            };
+            for ch in 0..C {
+                let base = if inside { rgb[ch] * tex } else { bg };
+                let noise = (rng.next_f32() - 0.5) * 0.12;
+                img[ch * H * W + y * W + x] = (base + noise).clamp(0.0, 1.0);
+            }
+        }
+    }
+    img
+}
+
+pub struct SynthCifar {
+    pub images: Vec<f32>, // [n, 3, H, W]
+    pub labels: Vec<i32>,
+    pub n: usize,
+}
+
+impl SynthCifar {
+    pub fn generate(n: usize, seed: u64) -> Self {
+        let mut rng = Pcg32::new(seed ^ 0xC1FA_0000);
+        let mut images = Vec::with_capacity(n * C * H * W);
+        let mut labels = Vec::with_capacity(n);
+        for i in 0..n {
+            let label = i % CLASSES;
+            images.extend(render_sample(label, &mut rng));
+            labels.push(label as i32);
+        }
+        let stride = C * H * W;
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        let mut im2 = vec![0f32; n * stride];
+        let mut lb2 = vec![0i32; n];
+        for (dst, &src) in order.iter().enumerate() {
+            im2[dst * stride..(dst + 1) * stride]
+                .copy_from_slice(&images[src * stride..(src + 1) * stride]);
+            lb2[dst] = labels[src];
+        }
+        Self {
+            images: im2,
+            labels: lb2,
+            n,
+        }
+    }
+
+    pub fn image(&self, i: usize) -> &[f32] {
+        let stride = C * H * W;
+        &self.images[i * stride..(i + 1) * stride]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = SynthCifar::generate(30, 5);
+        let b = SynthCifar::generate(30, 5);
+        assert_eq!(a.images, b.images);
+    }
+
+    #[test]
+    fn shapes_and_ranges() {
+        let d = SynthCifar::generate(20, 1);
+        assert_eq!(d.images.len(), 20 * 3 * 32 * 32);
+        assert!(d.images.iter().all(|&p| (0.0..=1.0).contains(&p)));
+    }
+
+    #[test]
+    fn balanced() {
+        let d = SynthCifar::generate(50, 2);
+        let mut counts = [0; 10];
+        for &l in &d.labels {
+            counts[l as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 5));
+    }
+
+    #[test]
+    fn color_classes_differ_per_channel() {
+        let mut rng = Pcg32::new(4);
+        let red = render_sample(0, &mut rng); // red disc
+        let blue = render_sample(2, &mut rng); // blue bar
+        let mean = |img: &[f32], ch: usize| -> f32 {
+            img[ch * H * W..(ch + 1) * H * W].iter().sum::<f32>() / (H * W) as f32
+        };
+        assert!(mean(&red, 0) > mean(&red, 2), "red class is red-dominant");
+        assert!(mean(&blue, 2) > mean(&blue, 0), "blue class is blue-dominant");
+    }
+}

@@ -1,0 +1,339 @@
+//! Float-precision native forward pass — the rust mirror of the L2 jax
+//! `forward` (cross-checked against PJRT execution in integration
+//! tests).  Used for activation calibration and as the accuracy
+//! reference ("Exact(baseline)" rows of Table VIII run through the
+//! quantized engine with the exact LUT; this float path sanity-checks
+//! both).
+
+use super::gemm::gemm_f32;
+use super::im2col::im2col_f32;
+use super::spec::{spec, Op};
+use super::tensor::Tensor;
+use crate::util::parallel_map;
+
+pub struct FloatNet {
+    pub net: String,
+    pub image_shape: (usize, usize, usize),
+    pub params: Vec<Tensor>,
+    pub ops: Vec<Op>,
+}
+
+impl FloatNet {
+    pub fn new(net: &str, image_shape: (usize, usize, usize), params: Vec<Tensor>) -> FloatNet {
+        let ops = spec(net, image_shape.0).expect("known network");
+        FloatNet {
+            net: net.to_string(),
+            image_shape,
+            params,
+            ops,
+        }
+    }
+
+    /// Forward one image; optionally record each post-ReLU max into
+    /// `relu_maxima` (calibration).
+    pub fn forward_one(&self, x: &[f32], relu_maxima: Option<&mut Vec<f32>>) -> Vec<f32> {
+        let (c0, h0, w0) = self.image_shape;
+        assert_eq!(x.len(), c0 * h0 * w0);
+        let mut cur = x.to_vec();
+        let (mut c, mut h, mut w) = (c0, h0, w0);
+        let mut pi = 0;
+        let mut maxima = relu_maxima;
+        for op in &self.ops {
+            match *op {
+                Op::Conv(_, cout, k, stride) => {
+                    let (out, oh, ow) =
+                        conv_f32(&cur, c, h, w, &self.params[pi], &self.params[pi + 1], k, stride, 0);
+                    pi += 2;
+                    cur = out;
+                    c = cout;
+                    h = oh;
+                    w = ow;
+                }
+                Op::ResBlock(cin, cout, k, stride) => {
+                    let identity = cur.clone();
+                    let (ic, ih, iw) = (c, h, w);
+                    // conv1 (SAME, stride) + relu
+                    let (out, oh, ow) = conv_f32(
+                        &cur, c, h, w, &self.params[pi], &self.params[pi + 1], k, stride, 1,
+                    );
+                    let mut out: Vec<f32> = out.iter().map(|&v| v.max(0.0)).collect();
+                    // conv2 (SAME, 1)
+                    let (out2, oh2, ow2) = conv_f32(
+                        &out, cout, oh, ow, &self.params[pi + 2], &self.params[pi + 3], k, 1, 1,
+                    );
+                    pi += 4;
+                    out = out2;
+                    // shortcut
+                    let shortcut = if stride != 1 || cin != cout {
+                        let (s, _, _) = conv_f32(
+                            &identity, ic, ih, iw, &self.params[pi], &self.params[pi + 1], 1,
+                            stride, 0,
+                        );
+                        pi += 2;
+                        s
+                    } else {
+                        identity
+                    };
+                    for (o, s) in out.iter_mut().zip(shortcut.iter()) {
+                        *o = (*o + s).max(0.0);
+                    }
+                    cur = out;
+                    c = cout;
+                    h = oh2;
+                    w = ow2;
+                }
+                Op::Relu => {
+                    for v in cur.iter_mut() {
+                        *v = v.max(0.0);
+                    }
+                    if let Some(m) = maxima.as_deref_mut() {
+                        m.push(cur.iter().fold(0f32, |a, &b| a.max(b)));
+                    }
+                }
+                Op::MaxPool(k) => {
+                    let (out, oh, ow) = maxpool(&cur, c, h, w, k);
+                    cur = out;
+                    h = oh;
+                    w = ow;
+                }
+                Op::AvgPoolAll => {
+                    let mut out = vec![0f32; c];
+                    for ch in 0..c {
+                        out[ch] =
+                            cur[ch * h * w..(ch + 1) * h * w].iter().sum::<f32>() / (h * w) as f32;
+                    }
+                    cur = out;
+                    h = 1;
+                    w = 1;
+                }
+                Op::Flatten => {
+                    c *= h * w;
+                    h = 1;
+                    w = 1;
+                }
+                Op::Fc(_, cout) => {
+                    let wt = &self.params[pi];
+                    let b = &self.params[pi + 1];
+                    pi += 2;
+                    let cin = wt.shape[0];
+                    assert_eq!(cur.len(), cin, "fc input mismatch in {}", self.net);
+                    let mut out = vec![0f32; cout];
+                    gemm_f32(&cur, &wt.data, &mut out, 1, cin, cout);
+                    for (o, &bv) in out.iter_mut().zip(b.data.iter()) {
+                        *o += bv;
+                    }
+                    cur = out;
+                    c = cout;
+                }
+            }
+        }
+        cur
+    }
+
+    /// Batched forward (parallel over images): returns logits [n, 10].
+    pub fn forward_batch(&self, xs: &[f32], n: usize) -> Vec<Vec<f32>> {
+        let stride = {
+            let (c, h, w) = self.image_shape;
+            c * h * w
+        };
+        parallel_map(n, |i| {
+            self.forward_one(&xs[i * stride..(i + 1) * stride], None)
+        })
+    }
+
+    /// Calibrate post-ReLU activation maxima over `xs` (n images):
+    /// element-wise max across the batch.
+    pub fn calibrate(&self, xs: &[f32], n: usize) -> Vec<f32> {
+        let stride = {
+            let (c, h, w) = self.image_shape;
+            c * h * w
+        };
+        let per_image = parallel_map(n, |i| {
+            let mut m = Vec::new();
+            self.forward_one(&xs[i * stride..(i + 1) * stride], Some(&mut m));
+            m
+        });
+        let mut out = per_image[0].clone();
+        for m in &per_image[1..] {
+            for (o, &v) in out.iter_mut().zip(m.iter()) {
+                *o = o.max(v);
+            }
+        }
+        out
+    }
+}
+
+/// conv as im2col + gemm; weights [Cout, Cin, k, k] row-major.
+fn conv_f32(
+    x: &[f32],
+    c: usize,
+    h: usize,
+    w: usize,
+    weight: &Tensor,
+    bias: &Tensor,
+    k: usize,
+    stride: usize,
+    pad: usize,
+) -> (Vec<f32>, usize, usize) {
+    let cout = weight.shape[0];
+    let ck2 = c * k * k;
+    debug_assert_eq!(weight.numel(), cout * ck2);
+    let (patches, oh, ow) = im2col_f32(x, c, h, w, k, stride, pad);
+    // out[p, o] = patches[p, :] . weight[o, :]  -> need weight^T [ck2, cout]
+    let mut wt = vec![0f32; ck2 * cout];
+    for o in 0..cout {
+        for j in 0..ck2 {
+            wt[j * cout + o] = weight.data[o * ck2 + j];
+        }
+    }
+    let m = oh * ow;
+    let mut out_pm = vec![0f32; m * cout];
+    gemm_f32(&patches, &wt, &mut out_pm, m, ck2, cout);
+    // [m, cout] -> [cout, oh, ow] + bias
+    let mut out = vec![0f32; cout * m];
+    for p in 0..m {
+        for o in 0..cout {
+            out[o * m + p] = out_pm[p * cout + o] + bias.data[o];
+        }
+    }
+    (out, oh, ow)
+}
+
+fn maxpool(x: &[f32], c: usize, h: usize, w: usize, k: usize) -> (Vec<f32>, usize, usize) {
+    let oh = h / k;
+    let ow = w / k;
+    let mut out = vec![f32::NEG_INFINITY; c * oh * ow];
+    for ch in 0..c {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut m = f32::NEG_INFINITY;
+                for ky in 0..k {
+                    for kx in 0..k {
+                        m = m.max(x[ch * h * w + (oy * k + ky) * w + (ox * k + kx)]);
+                    }
+                }
+                out[ch * oh * ow + oy * ow + ox] = m;
+            }
+        }
+    }
+    (out, oh, ow)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn rand_params(net: &str, shape: (usize, usize, usize), seed: u64) -> Vec<Tensor> {
+        // He-like init mirroring python's layout (values differ — layout
+        // compatibility is what we test here; value compatibility is
+        // covered by the npy-loading integration tests).
+        let mut rng = Pcg32::new(seed);
+        let mut params = Vec::new();
+        let (c0, mut h, mut w) = shape;
+        let mut c = c0;
+        for op in spec(net, c0).unwrap() {
+            match op {
+                Op::Conv(cin, cout, k, stride) => {
+                    let fan = cin * k * k;
+                    params.push(rand_tensor(vec![cout, cin, k, k], fan, &mut rng));
+                    params.push(Tensor::zeros(vec![cout]));
+                    c = cout;
+                    h = (h - k) / stride + 1;
+                    w = (w - k) / stride + 1;
+                }
+                Op::ResBlock(cin, cout, k, stride) => {
+                    params.push(rand_tensor(vec![cout, cin, k, k], cin * k * k, &mut rng));
+                    params.push(Tensor::zeros(vec![cout]));
+                    params.push(rand_tensor(vec![cout, cout, k, k], cout * k * k, &mut rng));
+                    params.push(Tensor::zeros(vec![cout]));
+                    if stride != 1 || cin != cout {
+                        params.push(rand_tensor(vec![cout, cin, 1, 1], cin, &mut rng));
+                        params.push(Tensor::zeros(vec![cout]));
+                    }
+                    c = cout;
+                    h = (h - 1) / stride + 1;
+                    w = (w - 1) / stride + 1;
+                }
+                Op::MaxPool(k) => {
+                    h /= k;
+                    w /= k;
+                }
+                Op::AvgPoolAll => {
+                    h = 1;
+                    w = 1;
+                }
+                Op::Flatten => {
+                    c *= h * w;
+                    h = 1;
+                    w = 1;
+                }
+                Op::Fc(_, cout) => {
+                    params.push(rand_tensor(vec![c, cout], c, &mut rng));
+                    params.push(Tensor::zeros(vec![cout]));
+                    c = cout;
+                }
+                Op::Relu => {}
+            }
+        }
+        params
+    }
+
+    fn rand_tensor(shape: Vec<usize>, fan_in: usize, rng: &mut Pcg32) -> Tensor {
+        let n: usize = shape.iter().product();
+        let scale = (2.0 / fan_in as f64).sqrt();
+        Tensor::new(
+            shape,
+            (0..n)
+                .map(|_| (rng.next_gaussian() * scale) as f32)
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn all_nets_forward_on_cifar_shape() {
+        for net in super::super::spec::NETWORKS {
+            let shape = (3, 32, 32);
+            let params = rand_params(net, shape, 7);
+            let fnet = FloatNet::new(net, shape, params);
+            let x = vec![0.5f32; 3 * 32 * 32];
+            let logits = fnet.forward_one(&x, None);
+            assert_eq!(logits.len(), 10, "{net}");
+            assert!(logits.iter().all(|v| v.is_finite()), "{net}");
+        }
+    }
+
+    #[test]
+    fn lenet_on_mnist_shape() {
+        let shape = (1, 28, 28);
+        let params = rand_params("lenet", shape, 3);
+        let fnet = FloatNet::new("lenet", shape, params);
+        let logits = fnet.forward_one(&vec![0.2; 784], None);
+        assert_eq!(logits.len(), 10);
+    }
+
+    #[test]
+    fn calibration_collects_relu_maxima() {
+        let shape = (1, 28, 28);
+        let params = rand_params("lenet", shape, 3);
+        let fnet = FloatNet::new("lenet", shape, params);
+        let xs = vec![0.3f32; 2 * 784];
+        let maxima = fnet.calibrate(&xs, 2);
+        assert_eq!(maxima.len(), 4); // lenet has 4 ReLUs
+        assert!(maxima.iter().all(|&m| m >= 0.0));
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let shape = (1, 28, 28);
+        let params = rand_params("lenet", shape, 5);
+        let fnet = FloatNet::new("lenet", shape, params);
+        let mut rng = Pcg32::new(8);
+        let xs: Vec<f32> = (0..3 * 784).map(|_| rng.next_f32()).collect();
+        let batch = fnet.forward_batch(&xs, 3);
+        for i in 0..3 {
+            let single = fnet.forward_one(&xs[i * 784..(i + 1) * 784], None);
+            assert_eq!(batch[i], single);
+        }
+    }
+}

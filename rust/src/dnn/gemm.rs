@@ -1,0 +1,174 @@
+//! GEMM kernels: f32 reference and the LUT-GEMM hot path.
+//!
+//! `lut_gemm` is the native mirror of the L1 Pallas kernel: every scalar
+//! product is a 64K-entry table lookup (the approximate silicon), with
+//! i32 accumulation.  This is the throughput-critical path of the whole
+//! Table VIII evaluation, so it is blocked for cache locality and
+//! parallelized over output rows.
+
+use crate::metrics::Lut;
+use crate::util::parallel_chunks;
+
+/// Row-major f32 GEMM: c[M,N] = a[M,K] * b[K,N].
+pub fn gemm_f32(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    c.fill(0.0);
+    parallel_chunks(m, |_, rows| {
+        // SAFETY-free: disjoint row ranges; we re-slice c per row.
+        for i in rows {
+            let crow = unsafe {
+                std::slice::from_raw_parts_mut(c.as_ptr().add(i * n) as *mut f32, n)
+            };
+            for kk in 0..k {
+                let av = a[i * k + kk];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[kk * n..(kk + 1) * n];
+                for (cv, &bv) in crow.iter_mut().zip(brow) {
+                    *cv += av * bv;
+                }
+            }
+        }
+    });
+}
+
+/// LUT-GEMM: acc[M,N] = Σ_k lut[a[m,k], b[k,n]] with i32 accumulation.
+/// `a` and `b` hold u8 codes.
+pub fn lut_gemm(a: &[u8], b: &[u8], acc: &mut [i32], m: usize, k: usize, n: usize, lut: &Lut) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(acc.len(), m * n);
+    let table = &lut.table;
+    let skip_zero = lut.zero_row_zero;
+    acc.fill(0);
+    parallel_chunks(m, |_, rows| {
+        for i in rows {
+            let arow = &a[i * k..(i + 1) * k];
+            let crow = unsafe {
+                std::slice::from_raw_parts_mut(acc.as_ptr().add(i * n) as *mut i32, n)
+            };
+            // Pairwise over k: two LUT rows in flight overlap the
+            // dependent gather latency (§Perf iteration 2; a 4-wide
+            // variant was measured slower — see EXPERIMENTS.md §Perf
+            // iteration 3 — and reverted).
+            let mut kk = 0;
+            while kk + 1 < k {
+                let av0 = arow[kk];
+                let av1 = arow[kk + 1];
+                let z0 = skip_zero && av0 == 0;
+                let z1 = skip_zero && av1 == 0;
+                if z0 && z1 {
+                    kk += 2;
+                    continue;
+                }
+                if z0 || z1 {
+                    let (av, ko) = if z0 { (av1, kk + 1) } else { (av0, kk) };
+                    let lrow = &table[(av as usize) << 8..((av as usize) << 8) + 256];
+                    let brow = &b[ko * n..(ko + 1) * n];
+                    for (cv, &bv) in crow.iter_mut().zip(brow) {
+                        *cv += lrow[bv as usize];
+                    }
+                } else {
+                    let l0 = &table[(av0 as usize) << 8..((av0 as usize) << 8) + 256];
+                    let l1 = &table[(av1 as usize) << 8..((av1 as usize) << 8) + 256];
+                    let b0 = &b[kk * n..(kk + 1) * n];
+                    let b1 = &b[(kk + 1) * n..(kk + 2) * n];
+                    for j in 0..n {
+                        crow[j] += l0[b0[j] as usize] + l1[b1[j] as usize];
+                    }
+                }
+                kk += 2;
+            }
+            if kk < k {
+                let av = arow[kk];
+                if !(skip_zero && av == 0) {
+                    let lrow = &table[(av as usize) << 8..((av as usize) << 8) + 256];
+                    let brow = &b[kk * n..(kk + 1) * n];
+                    for (cv, &bv) in crow.iter_mut().zip(brow) {
+                        *cv += lrow[bv as usize];
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Row sums of the u8 code matrix (needed for zero-point correction).
+pub fn row_sums(a: &[u8], m: usize, k: usize) -> Vec<i32> {
+    (0..m)
+        .map(|i| a[i * k..(i + 1) * k].iter().map(|&x| x as i32).sum())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mult::ExactMul;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn f32_gemm_small() {
+        // [1 2; 3 4] * [5 6; 7 8] = [19 22; 43 50]
+        let a = [1., 2., 3., 4.];
+        let b = [5., 6., 7., 8.];
+        let mut c = [0f32; 4];
+        gemm_f32(&a, &b, &mut c, 2, 2, 2);
+        assert_eq!(c, [19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn lut_gemm_exact_matches_integer_matmul() {
+        let lut = Lut::build(&ExactMul::new(8, 8));
+        let mut rng = Pcg32::new(1);
+        let (m, k, n) = (7, 13, 5);
+        let a: Vec<u8> = (0..m * k).map(|_| rng.gen_range(256) as u8).collect();
+        let b: Vec<u8> = (0..k * n).map(|_| rng.gen_range(256) as u8).collect();
+        let mut acc = vec![0i32; m * n];
+        lut_gemm(&a, &b, &mut acc, m, k, n, &lut);
+        for i in 0..m {
+            for j in 0..n {
+                let want: i32 = (0..k)
+                    .map(|kk| a[i * k + kk] as i32 * b[kk * n + j] as i32)
+                    .sum();
+                assert_eq!(acc[i * n + j], want);
+            }
+        }
+    }
+
+    #[test]
+    fn lut_gemm_uses_the_table() {
+        // A zeroed LUT must produce zero accumulators regardless of input.
+        let lut = Lut {
+            name: "zero".into(),
+            table: vec![0; 65536],
+            zero_row_zero: true,
+        };
+        let a = vec![200u8; 12];
+        let b = vec![200u8; 12];
+        let mut acc = vec![0i32; 9];
+        lut_gemm(&a, &b, &mut acc, 3, 4, 3, &lut);
+        assert!(acc.iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn row_sums_correct() {
+        let a = [1u8, 2, 3, 4, 5, 6];
+        assert_eq!(row_sums(&a, 2, 3), vec![6, 15]);
+    }
+
+    #[test]
+    fn lut_gemm_matches_approx_multiplier() {
+        use crate::mult::by_name;
+        let m8 = by_name("mul8x8_2").unwrap();
+        let lut = Lut::build(m8.as_ref());
+        let a = [5u8, 7, 200, 6];
+        let b = [7u8, 6, 255, 40];
+        let mut acc = vec![0i32; 4];
+        lut_gemm(&a, &b, &mut acc, 2, 2, 2, &lut);
+        let want00 = m8.mul(5, 7) as i32 + m8.mul(7, 255) as i32;
+        assert_eq!(acc[0], want00);
+    }
+}

@@ -1,0 +1,129 @@
+//! im2col patch extraction: convolution as GEMM, identical layout to the
+//! python `_im2col` (conv_general_dilated_patches with OIHW weights).
+
+/// f32 im2col, VALID padding.
+/// x: [C, H, W] -> patches [OH*OW, C*k*k]; returns (patches, oh, ow).
+pub fn im2col_f32(
+    x: &[f32],
+    c: usize,
+    h: usize,
+    w: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+) -> (Vec<f32>, usize, usize) {
+    let oh = (h + 2 * pad - k) / stride + 1;
+    let ow = (w + 2 * pad - k) / stride + 1;
+    let mut out = vec![0f32; oh * ow * c * k * k];
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let base = (oy * ow + ox) * c * k * k;
+            let mut idx = base;
+            for ch in 0..c {
+                for ky in 0..k {
+                    for kx in 0..k {
+                        let iy = (oy * stride + ky) as isize - pad as isize;
+                        let ix = (ox * stride + kx) as isize - pad as isize;
+                        out[idx] = if iy >= 0 && ix >= 0 && (iy as usize) < h && (ix as usize) < w
+                        {
+                            x[ch * h * w + iy as usize * w + ix as usize]
+                        } else {
+                            0.0
+                        };
+                        idx += 1;
+                    }
+                }
+            }
+        }
+    }
+    (out, oh, ow)
+}
+
+/// u8-code im2col (zero padding maps to code 0 — correct because the
+/// activation quantization uses zero point 0).
+pub fn im2col_u8(
+    x: &[u8],
+    c: usize,
+    h: usize,
+    w: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+) -> (Vec<u8>, usize, usize) {
+    let oh = (h + 2 * pad - k) / stride + 1;
+    let ow = (w + 2 * pad - k) / stride + 1;
+    let mut out = vec![0u8; oh * ow * c * k * k];
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let base = (oy * ow + ox) * c * k * k;
+            let mut idx = base;
+            for ch in 0..c {
+                for ky in 0..k {
+                    for kx in 0..k {
+                        let iy = (oy * stride + ky) as isize - pad as isize;
+                        let ix = (ox * stride + kx) as isize - pad as isize;
+                        out[idx] = if iy >= 0 && ix >= 0 && (iy as usize) < h && (ix as usize) < w
+                        {
+                            x[ch * h * w + iy as usize * w + ix as usize]
+                        } else {
+                            0
+                        };
+                        idx += 1;
+                    }
+                }
+            }
+        }
+    }
+    (out, oh, ow)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_kernel_1x1() {
+        let x = [1., 2., 3., 4.];
+        let (p, oh, ow) = im2col_f32(&x, 1, 2, 2, 1, 1, 0);
+        assert_eq!((oh, ow), (2, 2));
+        assert_eq!(p, vec![1., 2., 3., 4.]);
+    }
+
+    #[test]
+    fn patches_2x2_valid() {
+        // 3x3 single channel, k=2 stride=1: 4 patches.
+        let x: Vec<f32> = (1..=9).map(|v| v as f32).collect();
+        let (p, oh, ow) = im2col_f32(&x, 1, 3, 3, 2, 1, 0);
+        assert_eq!((oh, ow), (2, 2));
+        assert_eq!(&p[0..4], &[1., 2., 4., 5.]);
+        assert_eq!(&p[12..16], &[5., 6., 8., 9.]);
+    }
+
+    #[test]
+    fn padding_zeroes_border() {
+        let x = [1f32];
+        let (p, oh, ow) = im2col_f32(&x, 1, 1, 1, 3, 1, 1);
+        assert_eq!((oh, ow), (1, 1));
+        assert_eq!(p.iter().filter(|&&v| v != 0.0).count(), 1);
+        assert_eq!(p[4], 1.0); // center of the 3x3 patch
+    }
+
+    #[test]
+    fn u8_matches_f32_structure() {
+        let xf: Vec<f32> = (0..27).map(|v| v as f32).collect();
+        let xu: Vec<u8> = (0..27).collect();
+        let (pf, _, _) = im2col_f32(&xf, 3, 3, 3, 2, 1, 0);
+        let (pu, _, _) = im2col_u8(&xu, 3, 3, 3, 2, 1, 0);
+        assert_eq!(
+            pf,
+            pu.iter().map(|&v| v as f32).collect::<Vec<f32>>()
+        );
+    }
+
+    #[test]
+    fn stride_two() {
+        let x: Vec<f32> = (0..16).map(|v| v as f32).collect();
+        let (_, oh, ow) = im2col_f32(&x, 1, 4, 4, 2, 2, 0);
+        assert_eq!((oh, ow), (2, 2));
+    }
+}

@@ -1,0 +1,17 @@
+//! Native DNN substrate: tensors, quantization, im2col, the LUT-GEMM hot
+//! path, float reference forward, and the quantized inference engine
+//! that drives Table VIII.
+
+pub mod float_net;
+pub mod gemm;
+pub mod im2col;
+pub mod qnet;
+pub mod quant;
+pub mod spec;
+pub mod tensor;
+
+pub use float_net::FloatNet;
+pub use gemm::{gemm_f32, lut_gemm};
+pub use qnet::{argmax, QNet};
+pub use spec::{num_params, spec, Op, NETWORKS};
+pub use tensor::{QTensor, Tensor};

@@ -1,0 +1,548 @@
+//! Quantized inference engine with swappable approximate silicon.
+//!
+//! The native (L3) mirror of the L1/L2 quantized path: every multiply in
+//! every conv/fc goes through the multiplier LUT.  This engine runs the
+//! full Table VIII sweep; the PJRT qinfer artifact exercises the same
+//! semantics through XLA for the LeNet family (cross-checked in
+//! integration tests).
+//!
+//! Quantization protocol (identical to python/compile/quant.py):
+//!   * weights: per-tensor affine uint8, zero point z_w;
+//!   * activations: uint8 with zero point 0 and calibrated scale with
+//!     headroom h (h=8 reproduces the paper's (0,31) input band);
+//!   * accumulation: i32 of lut[a, w] minus the zero-point correction
+//!     z_w * Σa (exact adder tree — only the multiplier is approximate).
+
+use super::float_net::FloatNet;
+use super::gemm::{lut_gemm, row_sums};
+use super::im2col::im2col_u8;
+use super::quant::{act_scale, quantize_weight, weight_qparams};
+use super::spec::{spec, Op};
+use super::tensor::Tensor;
+use crate::metrics::Lut;
+use crate::util::parallel_map;
+
+/// One quantized weighted layer.
+struct QLayer {
+    /// [K, Cout] u8 codes (weights already transposed for GEMM).
+    w_t: Vec<u8>,
+    k: usize,
+    cout: usize,
+    w_scale: f32,
+    w_zp: i32,
+    bias: Vec<f32>,
+}
+
+pub struct QNet {
+    pub net: String,
+    pub image_shape: (usize, usize, usize),
+    pub headroom: f32,
+    ops: Vec<Op>,
+    layers: Vec<QLayer>,
+    /// act_scales[0] = input scale; act_scales[i] = scale after ReLU i.
+    act_scales: Vec<f32>,
+}
+
+impl QNet {
+    /// Quantize a trained float network.  `calib` images calibrate the
+    /// activation scales (float probe, element-max, headroom h).
+    pub fn quantize(fnet: &FloatNet, calib: &[f32], n_calib: usize, headroom: f32) -> QNet {
+        let (c0, _, _) = fnet.image_shape;
+        let ops = spec(&fnet.net, c0).unwrap();
+
+        // Weight quantization per weighted layer (ResBlocks contribute
+        // 2-3 weighted layers in param order).
+        let mut layers = Vec::new();
+        let mut pi = 0;
+        for op in &ops {
+            match *op {
+                Op::Conv(..) | Op::Fc(..) => {
+                    layers.push(make_qlayer(&fnet.params[pi], &fnet.params[pi + 1]));
+                    pi += 2;
+                }
+                Op::ResBlock(cin, cout, _, stride) => {
+                    layers.push(make_qlayer(&fnet.params[pi], &fnet.params[pi + 1]));
+                    layers.push(make_qlayer(&fnet.params[pi + 2], &fnet.params[pi + 3]));
+                    pi += 4;
+                    if stride != 1 || cin != cout {
+                        layers.push(make_qlayer(&fnet.params[pi], &fnet.params[pi + 1]));
+                        pi += 2;
+                    }
+                }
+                _ => {}
+            }
+        }
+
+        // Activation calibration: input max + post-ReLU maxima.
+        // For residual nets we calibrate on the float activations at each
+        // quantization point (relu outputs + block outputs).
+        let input_max = calib.iter().fold(0f32, |m, &x| m.max(x.abs()));
+        let relu_maxima = fnet.calibrate(calib, n_calib);
+        let mut act_scales = vec![act_scale(input_max, headroom)];
+        for &m in &relu_maxima {
+            act_scales.push(act_scale(m.max(1e-6), headroom));
+        }
+        // Residual block outputs share the last computed scale; make sure
+        // the list is long enough for every requantization point.
+        let needed = 2 + layers.len();
+        while act_scales.len() < needed {
+            act_scales.push(*act_scales.last().unwrap());
+        }
+
+        QNet {
+            net: fnet.net.clone(),
+            image_shape: fnet.image_shape,
+            headroom,
+            ops,
+            layers,
+            act_scales,
+        }
+    }
+
+    /// Forward one image through the approximate silicon.  Returns float
+    /// logits.
+    pub fn forward_one(&self, x: &[f32], lut: &Lut) -> Vec<f32> {
+        let (c0, h0, w0) = self.image_shape;
+        let s0 = self.act_scales[0];
+        // quantize input (zero point 0)
+        let mut codes: Vec<u8> = x
+            .iter()
+            .map(|&v| (v / s0).round().clamp(0.0, 255.0) as u8)
+            .collect();
+        let (mut c, mut h, mut w) = (c0, h0, w0);
+        let mut s_in = s0;
+        let mut li = 0; // weighted-layer index
+        let mut scale_i = 1; // next act scale index
+        let mut real: Vec<f32> = Vec::new(); // real-valued buffer between q points
+        let mut in_real = false;
+
+        for op in &self.ops {
+            match *op {
+                Op::Conv(_, cout, k, stride) => {
+                    debug_assert!(!in_real, "conv must consume codes");
+                    let (patches, oh, ow) = im2col_u8(&codes, c, h, w, k, stride, 0);
+                    real = self.run_qlayer(li, &patches, oh * ow, s_in, lut);
+                    // [m, cout] -> [cout, m]
+                    real = transpose_pm(&real, oh * ow, cout);
+                    li += 1;
+                    c = cout;
+                    h = oh;
+                    w = ow;
+                    in_real = true;
+                }
+                Op::Fc(_, cout) => {
+                    let input: Vec<u8> = if in_real {
+                        // final fc after flatten of real values: requantize
+                        // with the pending scale
+                        let s = self.act_scales[scale_i];
+                        s_in = s;
+                        real.iter()
+                            .map(|&v| (v / s).round().clamp(0.0, 255.0) as u8)
+                            .collect()
+                    } else {
+                        codes.clone()
+                    };
+                    real = self.run_qlayer(li, &input, 1, s_in, lut);
+                    li += 1;
+                    c = cout;
+                    in_real = true;
+                }
+                Op::Relu => {
+                    for v in real.iter_mut() {
+                        *v = v.max(0.0);
+                    }
+                    // requantize to codes
+                    let s = self.act_scales[scale_i];
+                    scale_i += 1;
+                    codes = real
+                        .iter()
+                        .map(|&v| (v / s).round().clamp(0.0, 255.0) as u8)
+                        .collect();
+                    s_in = s;
+                    in_real = false;
+                }
+                Op::MaxPool(k) => {
+                    // max pooling commutes with the monotone quantization —
+                    // pool directly on codes.
+                    debug_assert!(!in_real);
+                    let (out, oh, ow) = maxpool_u8(&codes, c, h, w, k);
+                    codes = out;
+                    h = oh;
+                    w = ow;
+                }
+                Op::AvgPoolAll => {
+                    // average in real space for precision
+                    let src: Vec<f32> = if in_real {
+                        real.clone()
+                    } else {
+                        codes.iter().map(|&q| q as f32 * s_in).collect()
+                    };
+                    let mut out = vec![0f32; c];
+                    for ch in 0..c {
+                        out[ch] =
+                            src[ch * h * w..(ch + 1) * h * w].iter().sum::<f32>() / (h * w) as f32;
+                    }
+                    real = out;
+                    h = 1;
+                    w = 1;
+                    in_real = true;
+                }
+                Op::Flatten => {
+                    c *= h * w;
+                    h = 1;
+                    w = 1;
+                }
+                Op::ResBlock(cin, cout, k, stride) => {
+                    debug_assert!(!in_real);
+                    let id_codes = codes.clone();
+                    let (ic, ih, iw) = (c, h, w);
+                    let id_scale = s_in;
+                    // conv1 SAME + relu + requant
+                    let (p1, oh, ow) = im2col_u8(&codes, c, h, w, k, stride, 1);
+                    let mut r1 = self.run_qlayer(li, &p1, oh * ow, s_in, lut);
+                    li += 1;
+                    r1 = transpose_pm(&r1, oh * ow, cout);
+                    for v in r1.iter_mut() {
+                        *v = v.max(0.0);
+                    }
+                    let s_mid = self.act_scales[scale_i];
+                    scale_i += 1;
+                    let mid: Vec<u8> = r1
+                        .iter()
+                        .map(|&v| (v / s_mid).round().clamp(0.0, 255.0) as u8)
+                        .collect();
+                    // conv2 SAME stride 1
+                    let (p2, oh2, ow2) = im2col_u8(&mid, cout, oh, ow, k, 1, 1);
+                    let mut r2 = self.run_qlayer(li, &p2, oh2 * ow2, s_mid, lut);
+                    li += 1;
+                    r2 = transpose_pm(&r2, oh2 * ow2, cout);
+                    // shortcut
+                    let short: Vec<f32> = if stride != 1 || cin != cout {
+                        let (ps, soh, sow) = im2col_u8(&id_codes, ic, ih, iw, 1, stride, 0);
+                        let rs = self.run_qlayer(li, &ps, soh * sow, id_scale, lut);
+                        li += 1;
+                        transpose_pm(&rs, soh * sow, cout)
+                    } else {
+                        id_codes.iter().map(|&q| q as f32 * id_scale).collect()
+                    };
+                    for (o, s) in r2.iter_mut().zip(short.iter()) {
+                        *o = (*o + s).max(0.0);
+                    }
+                    // requantize block output
+                    let s_out = self.act_scales[scale_i];
+                    scale_i += 1;
+                    codes = r2
+                        .iter()
+                        .map(|&v| (v / s_out).round().clamp(0.0, 255.0) as u8)
+                        .collect();
+                    s_in = s_out;
+                    c = cout;
+                    h = oh2;
+                    w = ow2;
+                    in_real = false;
+                }
+            }
+        }
+        real
+    }
+
+    /// acc -> real: s_in * w_scale * (acc - z_w * rowsum) + bias.
+    /// input: [m, K] codes; returns [m, cout] real.
+    fn run_qlayer(&self, li: usize, input: &[u8], m: usize, s_in: f32, lut: &Lut) -> Vec<f32> {
+        let l = &self.layers[li];
+        debug_assert_eq!(input.len(), m * l.k, "layer {li} input size");
+        let mut acc = vec![0i32; m * l.cout];
+        lut_gemm(input, &l.w_t, &mut acc, m, l.k, l.cout, lut);
+        let rs = row_sums(input, m, l.k);
+        let mut out = vec![0f32; m * l.cout];
+        let sc = s_in * l.w_scale;
+        for p in 0..m {
+            let corr = l.w_zp * rs[p];
+            for o in 0..l.cout {
+                out[p * l.cout + o] = sc * (acc[p * l.cout + o] - corr) as f32 + l.bias[o];
+            }
+        }
+        out
+    }
+
+    /// Batched accuracy evaluation: fraction of argmax(logits) == label.
+    pub fn accuracy(&self, xs: &[f32], labels: &[i32], lut: &Lut) -> f64 {
+        let stride = {
+            let (c, h, w) = self.image_shape;
+            c * h * w
+        };
+        let n = labels.len();
+        let correct: usize = parallel_map(n, |i| {
+            let logits = self.forward_one(&xs[i * stride..(i + 1) * stride], lut);
+            let pred = argmax(&logits);
+            usize::from(pred == labels[i] as usize)
+        })
+        .into_iter()
+        .sum();
+        correct as f64 / n as f64
+    }
+
+    /// Histogram of weight codes across all layers (the §II-B
+    /// weight-distribution figure).
+    pub fn weight_code_histogram(&self) -> [u64; 256] {
+        let mut h = [0u64; 256];
+        for l in &self.layers {
+            for &c in &l.w_t {
+                h[c as usize] += 1;
+            }
+        }
+        h
+    }
+
+    /// Fraction of weight codes inside [lo, hi] (co-opt contract checks).
+    pub fn weight_band_fraction(&self, lo: u8, hi: u8) -> f64 {
+        let h = self.weight_code_histogram();
+        let total: u64 = h.iter().sum();
+        let inside: u64 = h[lo as usize..=hi as usize].iter().sum();
+        inside as f64 / total.max(1) as f64
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Calibrated activation scale `i` (0 = input, i = after ReLU i).
+    pub fn act_scale(&self, i: usize) -> f32 {
+        self.act_scales[i.min(self.act_scales.len() - 1)]
+    }
+}
+
+fn make_qlayer(w: &Tensor, b: &Tensor) -> QLayer {
+    let (scale, zp) = weight_qparams(&w.data);
+    let q = quantize_weight(w);
+    debug_assert_eq!(q.scale, scale);
+    // reshape to [cout, K] then transpose -> [K, cout]
+    let cout = w.shape[0];
+    let k: usize = w.shape[1..].iter().product::<usize>().max(w.numel() / cout);
+    let (k, cout, transpose) = if w.shape.len() == 2 {
+        // fc weights are [K, cout] already
+        (w.shape[0], w.shape[1], false)
+    } else {
+        (k, cout, true)
+    };
+    let mut w_t = vec![0u8; k * cout];
+    if transpose {
+        for o in 0..cout {
+            for j in 0..k {
+                w_t[j * cout + o] = q.data[o * k + j];
+            }
+        }
+    } else {
+        w_t.copy_from_slice(&q.data);
+    }
+    QLayer {
+        w_t,
+        k,
+        cout,
+        w_scale: scale,
+        w_zp: zp,
+        bias: b.data.clone(),
+    }
+}
+
+fn transpose_pm(x: &[f32], m: usize, cout: usize) -> Vec<f32> {
+    let mut out = vec![0f32; x.len()];
+    for p in 0..m {
+        for o in 0..cout {
+            out[o * m + p] = x[p * cout + o];
+        }
+    }
+    out
+}
+
+fn maxpool_u8(x: &[u8], c: usize, h: usize, w: usize, k: usize) -> (Vec<u8>, usize, usize) {
+    let oh = h / k;
+    let ow = w / k;
+    let mut out = vec![0u8; c * oh * ow];
+    for ch in 0..c {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut m = 0u8;
+                for ky in 0..k {
+                    for kx in 0..k {
+                        m = m.max(x[ch * h * w + (oy * k + ky) * w + (ox * k + kx)]);
+                    }
+                }
+                out[ch * oh * ow + oy * ow + ox] = m;
+            }
+        }
+    }
+    (out, oh, ow)
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mult::ExactMul;
+    use crate::util::rng::Pcg32;
+
+    fn toy_fnet(net: &str, shape: (usize, usize, usize), seed: u64) -> FloatNet {
+        // Reuse the float_net test-param generator via a fresh build here.
+        let mut rng = Pcg32::new(seed);
+        let ops = spec(net, shape.0).unwrap();
+        let (c0, mut h, mut w) = shape;
+        let mut c = c0;
+        let mut params = Vec::new();
+        let mut rand_t = |shape: Vec<usize>, fan: usize, rng: &mut Pcg32| {
+            let n: usize = shape.iter().product();
+            let s = (2.0 / fan as f64).sqrt();
+            Tensor::new(
+                shape,
+                (0..n).map(|_| (rng.next_gaussian() * s) as f32).collect(),
+            )
+        };
+        for op in ops {
+            match op {
+                Op::Conv(cin, cout, k, stride) => {
+                    params.push(rand_t(vec![cout, cin, k, k], cin * k * k, &mut rng));
+                    params.push(Tensor::zeros(vec![cout]));
+                    c = cout;
+                    h = (h - k) / stride + 1;
+                    w = (w - k) / stride + 1;
+                }
+                Op::ResBlock(cin, cout, k, stride) => {
+                    params.push(rand_t(vec![cout, cin, k, k], cin * k * k, &mut rng));
+                    params.push(Tensor::zeros(vec![cout]));
+                    params.push(rand_t(vec![cout, cout, k, k], cout * k * k, &mut rng));
+                    params.push(Tensor::zeros(vec![cout]));
+                    if stride != 1 || cin != cout {
+                        params.push(rand_t(vec![cout, cin, 1, 1], cin, &mut rng));
+                        params.push(Tensor::zeros(vec![cout]));
+                    }
+                    c = cout;
+                    h = (h - 1) / stride + 1;
+                    w = (w - 1) / stride + 1;
+                }
+                Op::MaxPool(k) => {
+                    h /= k;
+                    w /= k;
+                }
+                Op::AvgPoolAll => {
+                    h = 1;
+                    w = 1;
+                }
+                Op::Flatten => {
+                    c *= h * w;
+                    h = 1;
+                    w = 1;
+                }
+                Op::Fc(_, cout) => {
+                    params.push(rand_t(vec![c, cout], c, &mut rng));
+                    params.push(Tensor::zeros(vec![cout]));
+                    c = cout;
+                }
+                Op::Relu => {}
+            }
+        }
+        FloatNet::new(net, shape, params)
+    }
+
+    #[test]
+    fn quantized_exact_lut_tracks_float() {
+        let shape = (1, 28, 28);
+        let fnet = toy_fnet("lenet", shape, 1);
+        let mut rng = Pcg32::new(2);
+        let xs: Vec<f32> = (0..4 * 784).map(|_| rng.next_f32()).collect();
+        let qnet = QNet::quantize(&fnet, &xs, 4, 8.0);
+        let lut = Lut::build(&ExactMul::new(8, 8));
+        for i in 0..4 {
+            let fl = fnet.forward_one(&xs[i * 784..(i + 1) * 784], None);
+            let ql = qnet.forward_one(&xs[i * 784..(i + 1) * 784], &lut);
+            let corr = correlation(&fl, &ql);
+            assert!(corr > 0.97, "corr {corr}");
+        }
+    }
+
+    #[test]
+    fn all_nets_quantize_and_run() {
+        let lut = Lut::build(&ExactMul::new(8, 8));
+        for net in super::super::spec::NETWORKS {
+            let shape = (3, 32, 32);
+            let fnet = toy_fnet(net, shape, 4);
+            let mut rng = Pcg32::new(5);
+            let xs: Vec<f32> = (0..2 * 3 * 32 * 32).map(|_| rng.next_f32()).collect();
+            let qnet = QNet::quantize(&fnet, &xs, 2, 8.0);
+            let logits = qnet.forward_one(&xs[..3 * 32 * 32], &lut);
+            assert_eq!(logits.len(), 10, "{net}");
+            assert!(logits.iter().all(|v| v.is_finite()), "{net}");
+        }
+    }
+
+    #[test]
+    fn headroom_keeps_codes_small() {
+        let shape = (1, 28, 28);
+        let fnet = toy_fnet("lenet", shape, 1);
+        let mut rng = Pcg32::new(3);
+        let xs: Vec<f32> = (0..2 * 784).map(|_| rng.next_f32()).collect();
+        let qnet = QNet::quantize(&fnet, &xs, 2, 8.0);
+        // codes of the input with headroom 8: max 255/8 ≈ 31
+        let s0 = qnet.act_scales[0];
+        let max_code = xs[..784]
+            .iter()
+            .map(|&v| (v / s0).round() as i32)
+            .max()
+            .unwrap();
+        assert!(max_code <= 32, "max code {max_code}");
+    }
+
+    #[test]
+    fn weight_histogram_sums() {
+        let shape = (1, 28, 28);
+        let fnet = toy_fnet("lenet", shape, 1);
+        let qnet = QNet::quantize(&fnet, &vec![0.5; 784], 1, 8.0);
+        let h = qnet.weight_code_histogram();
+        let total: u64 = h.iter().sum();
+        let expected: u64 = fnet
+            .params
+            .iter()
+            .step_by(2)
+            .map(|p| p.numel() as u64)
+            .sum();
+        assert_eq!(total, expected);
+        assert!(qnet.weight_band_fraction(0, 255) > 0.999);
+    }
+
+    #[test]
+    fn different_luts_change_logits() {
+        use crate::mult::by_name;
+        let shape = (1, 28, 28);
+        let fnet = toy_fnet("lenet", shape, 1);
+        let mut rng = Pcg32::new(9);
+        let xs: Vec<f32> = (0..784).map(|_| rng.next_f32()).collect();
+        let qnet = QNet::quantize(&fnet, &xs, 1, 1.0); // no headroom: trigger approx rows
+        let exact = Lut::build(&ExactMul::new(8, 8));
+        let pkm = Lut::build(by_name("pkm").unwrap().as_ref());
+        let le = qnet.forward_one(&xs, &exact);
+        let lp = qnet.forward_one(&xs, &pkm);
+        assert_ne!(le, lp);
+    }
+
+    fn correlation(a: &[f32], b: &[f32]) -> f64 {
+        let n = a.len() as f64;
+        let ma = a.iter().map(|&x| x as f64).sum::<f64>() / n;
+        let mb = b.iter().map(|&x| x as f64).sum::<f64>() / n;
+        let mut num = 0.0;
+        let mut da = 0.0;
+        let mut db = 0.0;
+        for (&x, &y) in a.iter().zip(b) {
+            let (x, y) = (x as f64 - ma, y as f64 - mb);
+            num += x * y;
+            da += x * x;
+            db += y * y;
+        }
+        num / (da.sqrt() * db.sqrt()).max(1e-12)
+    }
+}

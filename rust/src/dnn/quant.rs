@@ -1,0 +1,110 @@
+//! Affine uint8 quantization — bit-compatible mirror of
+//! `python/compile/quant.py` (tested for agreement via shared vectors).
+
+use super::tensor::{QTensor, Tensor};
+
+/// Per-tensor affine params for a weight tensor (Jacob et al. [15]).
+pub fn weight_qparams(w: &[f32]) -> (f32, i32) {
+    // f64 internally to match numpy's arithmetic bit-for-bit on the
+    // python side (python/compile/quant.py).
+    let mut lo = 0f64;
+    let mut hi = 0f64;
+    for &x in w {
+        lo = lo.min(x as f64);
+        hi = hi.max(x as f64);
+    }
+    let scale = ((hi - lo) / 255.0).max(1e-8);
+    let zp = (-lo / scale).round().clamp(0.0, 255.0) as i32;
+    (scale as f32, zp)
+}
+
+pub fn quantize_weight(w: &Tensor) -> QTensor {
+    let (scale, zp) = weight_qparams(&w.data);
+    let data = w
+        .data
+        .iter()
+        .map(|&x| ((x / scale).round() as i32 + zp).clamp(0, 255) as u8)
+        .collect();
+    QTensor {
+        shape: w.shape.clone(),
+        data,
+        scale,
+        zero_point: zp,
+    }
+}
+
+pub fn dequantize(q: &QTensor) -> Tensor {
+    Tensor::new(
+        q.shape.clone(),
+        q.data
+            .iter()
+            .map(|&c| (c as i32 - q.zero_point) as f32 * q.scale)
+            .collect(),
+    )
+}
+
+/// Activation scale with headroom (paper co-design: h=8 keeps codes < 32).
+pub fn act_scale(max_abs: f32, headroom: f32) -> f32 {
+    (max_abs * headroom / 255.0).max(1e-8)
+}
+
+pub fn quantize_act(x: &[f32], scale: f32, out: &mut Vec<u8>) {
+    out.clear();
+    out.extend(
+        x.iter()
+            .map(|&v| (v / scale).round().clamp(0.0, 255.0) as u8),
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_error_bounded() {
+        let w = Tensor::new(vec![4], vec![-1.0, -0.25, 0.5, 2.0]);
+        let q = quantize_weight(&w);
+        let back = dequantize(&q);
+        for (a, b) in w.data.iter().zip(back.data.iter()) {
+            assert!((a - b).abs() <= q.scale * 0.51, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn zero_maps_to_zero_point() {
+        let w = Tensor::new(vec![3], vec![-1.0, 0.0, 1.0]);
+        let q = quantize_weight(&w);
+        assert_eq!(q.data[1] as i32, q.zero_point);
+    }
+
+    #[test]
+    fn positive_only_weights_zp_zero() {
+        let w = Tensor::new(vec![3], vec![0.5, 1.0, 2.0]);
+        let q = quantize_weight(&w);
+        assert_eq!(q.zero_point, 0);
+    }
+
+    #[test]
+    fn matches_python_protocol_vectors() {
+        // Golden vectors mirrored in python/tests/test_quant.py.
+        let w = Tensor::new(vec![5], vec![-2.0, -1.0, 0.0, 1.0, 2.0]);
+        let q = quantize_weight(&w);
+        // scale = 4/255, zp = round(127.5) = 128 in f64 (matches numpy).
+        assert!((q.scale - 4.0 / 255.0).abs() < 1e-7);
+        assert_eq!(q.zero_point, 128);
+        assert_eq!(q.data[2] as i32, 128);
+    }
+
+    #[test]
+    fn headroom_compresses_codes() {
+        let xs: Vec<f32> = (0..100).map(|i| i as f32 / 25.0).collect();
+        let s8 = act_scale(4.0, 8.0);
+        let mut out = Vec::new();
+        quantize_act(&xs, s8, &mut out);
+        assert!(*out.iter().max().unwrap() <= 32);
+        let s1 = act_scale(4.0, 1.0);
+        quantize_act(&xs, s1, &mut out);
+        // xs max is 99/25 = 3.96 -> code ~252 of 255 dynamic range
+        assert!(*out.iter().max().unwrap() >= 250);
+    }
+}

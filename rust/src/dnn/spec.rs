@@ -1,0 +1,151 @@
+//! Network specifications — the rust mirror of `python/compile/model.py`
+//! `SPECS` (kept in lock-step; integration tests cross-check parameter
+//! counts against the AOT manifest).
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Op {
+    /// (cin, cout, k, stride) — VALID padding
+    Conv(usize, usize, usize, usize),
+    /// Residual basic block: (cin, cout, k, stride); SAME padding convs,
+    /// optional 1x1 shortcut when stride != 1 || cin != cout.
+    ResBlock(usize, usize, usize, usize),
+    Relu,
+    MaxPool(usize),
+    AvgPoolAll,
+    Flatten,
+    /// (cin, cout); cin = 0 means "infer from incoming activations"
+    Fc(usize, usize),
+}
+
+pub fn spec(net: &str, in_ch: usize) -> Option<Vec<Op>> {
+    use Op::*;
+    Some(match net {
+        "lenet" => vec![
+            Conv(in_ch, 6, 5, 1),
+            Relu,
+            MaxPool(2),
+            Conv(6, 16, 5, 1),
+            Relu,
+            MaxPool(2),
+            Flatten,
+            Fc(0, 120),
+            Relu,
+            Fc(120, 84),
+            Relu,
+            Fc(84, 10),
+        ],
+        "lenet_plus" => vec![
+            Conv(in_ch, 8, 5, 1),
+            Relu,
+            MaxPool(2),
+            Conv(8, 16, 3, 1),
+            Relu,
+            Conv(16, 32, 3, 1),
+            Relu,
+            MaxPool(2),
+            Flatten,
+            Fc(0, 120),
+            Relu,
+            Fc(120, 84),
+            Relu,
+            Fc(84, 10),
+        ],
+        "vgg_s" => vec![
+            Conv(in_ch, 16, 3, 1),
+            Relu,
+            Conv(16, 16, 3, 1),
+            Relu,
+            MaxPool(2),
+            Conv(16, 32, 3, 1),
+            Relu,
+            Conv(32, 32, 3, 1),
+            Relu,
+            MaxPool(2),
+            Conv(32, 48, 3, 1),
+            Relu,
+            MaxPool(2),
+            Flatten,
+            Fc(0, 128),
+            Relu,
+            Fc(128, 10),
+        ],
+        "alexnet_s" => vec![
+            Conv(in_ch, 24, 5, 1),
+            Relu,
+            MaxPool(2),
+            Conv(24, 48, 5, 1),
+            Relu,
+            MaxPool(2),
+            Conv(48, 64, 3, 1),
+            Relu,
+            Conv(64, 48, 3, 1),
+            Relu,
+            Flatten,
+            Fc(0, 256),
+            Relu,
+            Fc(256, 10),
+        ],
+        "resnet19_s" => {
+            let mut s = vec![Conv(in_ch, 16, 3, 1), Relu];
+            let widths = [16usize, 32, 64];
+            let mut cin = 16;
+            for (si, &w) in widths.iter().enumerate() {
+                for bi in 0..3 {
+                    let stride = if si > 0 && bi == 0 { 2 } else { 1 };
+                    s.push(ResBlock(cin, w, 3, stride));
+                    cin = w;
+                }
+            }
+            s.push(AvgPoolAll);
+            s.push(Flatten);
+            s.push(Fc(0, 10));
+            s
+        }
+        _ => return None,
+    })
+}
+
+pub const NETWORKS: [&str; 5] = ["lenet", "lenet_plus", "vgg_s", "alexnet_s", "resnet19_s"];
+
+/// Number of parameter tensors (weights + biases) in the flat layout —
+/// must equal the python manifest's `param_shapes` length.
+pub fn num_params(net: &str, in_ch: usize) -> Option<usize> {
+    let mut n = 0;
+    for op in spec(net, in_ch)? {
+        match op {
+            Op::Conv(..) | Op::Fc(..) => n += 2,
+            Op::ResBlock(cin, cout, _, stride) => {
+                n += 4;
+                if stride != 1 || cin != cout {
+                    n += 2;
+                }
+            }
+            _ => {}
+        }
+    }
+    Some(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_networks_have_specs() {
+        for n in NETWORKS {
+            assert!(spec(n, 3).is_some(), "{n}");
+        }
+        assert!(spec("bogus", 3).is_none());
+    }
+
+    #[test]
+    fn param_counts_match_python() {
+        // Mirrors python: lenet 10, lenet_plus 12, vgg_s 14, alexnet_s 12,
+        // resnet19_s 44 (2 downsampling stages x extra shortcut pair).
+        assert_eq!(num_params("lenet", 1), Some(10));
+        assert_eq!(num_params("lenet_plus", 1), Some(12));
+        assert_eq!(num_params("vgg_s", 3), Some(14));
+        assert_eq!(num_params("alexnet_s", 3), Some(12));
+        assert_eq!(num_params("resnet19_s", 3), Some(44));
+    }
+}

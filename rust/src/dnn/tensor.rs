@@ -1,0 +1,77 @@
+//! Minimal dense tensors (NCHW) for the native inference engine.
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor {
+            shape,
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Max over all elements (activation calibration).
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0f32, |m, &x| m.max(x.abs()))
+    }
+
+    pub fn reshape(mut self, shape: Vec<usize>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape;
+        self
+    }
+}
+
+/// Quantized uint8 tensor with its affine params.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<u8>,
+    pub scale: f32,
+    pub zero_point: i32,
+}
+
+impl QTensor {
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_reshape() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.numel(), 6);
+        let r = t.reshape(vec![3, 2]);
+        assert_eq!(r.shape, vec![3, 2]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::new(vec![2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn max_abs() {
+        let t = Tensor::new(vec![3], vec![-5.0, 2.0, 4.0]);
+        assert_eq!(t.max_abs(), 5.0);
+    }
+}

@@ -1,0 +1,23 @@
+//! # axmul — approximate-multiplier hardware/software co-design
+//!
+//! Reproduction of Lu et al., *"Low Error-Rate Approximate Multiplier
+//! Design for DNNs with Hardware-Driven Co-Optimization"* (ISCAS 2022),
+//! as a three-layer rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the co-design platform: multiplier designs and
+//!   baselines, logic synthesis + ASAP7-style cost model, error metrics,
+//!   quantized DNN evaluation, retraining coordinator, PJRT runtime.
+//! * **L2 (python/compile)** — JAX model graphs (training + quantized
+//!   inference), AOT-lowered to HLO text artifacts.
+//! * **L1 (python/compile/kernels)** — the Pallas LUT-GEMM kernel that
+//!   executes "approximate silicon" as a 256×256 product LUT.
+
+pub mod data;
+pub mod dnn;
+pub mod coordinator;
+pub mod logic;
+pub mod metrics;
+pub mod synth;
+pub mod mult;
+pub mod runtime;
+pub mod util;

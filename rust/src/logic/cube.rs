@@ -1,0 +1,140 @@
+//! Cubes (product terms / implicants) over a fixed variable set.
+//!
+//! A cube is `(value, mask)`: variable k is cared-about iff bit k of
+//! `mask` is 1, in which case its required value is bit k of `value`.
+//! `mask == 0` is the universal cube (constant 1).
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Cube {
+    pub value: u32,
+    pub mask: u32,
+}
+
+impl Cube {
+    pub fn minterm(row: u32, nvars: usize) -> Self {
+        Self {
+            value: row,
+            mask: (1u32 << nvars) - 1,
+        }
+    }
+
+    /// Does this cube contain the given input assignment?
+    #[inline]
+    pub fn covers(&self, row: u32) -> bool {
+        (row & self.mask) == (self.value & self.mask)
+    }
+
+    /// Number of don't-care variables (log2 of cube size).
+    pub fn free_vars(&self, nvars: usize) -> u32 {
+        nvars as u32 - self.mask.count_ones()
+    }
+
+    /// Number of literals in the corresponding product term.
+    pub fn literals(&self) -> u32 {
+        self.mask.count_ones()
+    }
+
+    /// Try to merge two cubes that differ in exactly one cared bit
+    /// (the Quine–McCluskey combining step).
+    pub fn merge(&self, other: &Cube) -> Option<Cube> {
+        if self.mask != other.mask {
+            return None;
+        }
+        let diff = (self.value ^ other.value) & self.mask;
+        if diff.count_ones() == 1 {
+            Some(Cube {
+                value: self.value & !diff,
+                mask: self.mask & !diff,
+            })
+        } else {
+            None
+        }
+    }
+
+    /// Is `other` entirely inside this cube?
+    pub fn contains(&self, other: &Cube) -> bool {
+        // self's cared bits must be a subset of other's cared bits, and agree.
+        (self.mask & !other.mask) == 0
+            && (self.value & self.mask) == (other.value & self.mask)
+    }
+
+    /// Render as a product-term string over variables named by `names`.
+    pub fn to_term(&self, names: &[&str]) -> String {
+        if self.mask == 0 {
+            return "1".to_string();
+        }
+        let mut parts = Vec::new();
+        for (k, name) in names.iter().enumerate() {
+            if (self.mask >> k) & 1 == 1 {
+                if (self.value >> k) & 1 == 1 {
+                    parts.push((*name).to_string());
+                } else {
+                    parts.push(format!("{name}'"));
+                }
+            }
+        }
+        parts.join("·")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minterm_covers_only_itself() {
+        let c = Cube::minterm(0b1011, 4);
+        assert!(c.covers(0b1011));
+        for r in 0..16u32 {
+            if r != 0b1011 {
+                assert!(!c.covers(r), "r={r:04b}");
+            }
+        }
+    }
+
+    #[test]
+    fn merge_adjacent() {
+        let a = Cube::minterm(0b0000, 4);
+        let b = Cube::minterm(0b0001, 4);
+        let m = a.merge(&b).unwrap();
+        assert!(m.covers(0b0000) && m.covers(0b0001));
+        assert!(!m.covers(0b0010));
+        assert_eq!(m.literals(), 3);
+    }
+
+    #[test]
+    fn merge_nonadjacent_fails() {
+        let a = Cube::minterm(0b0000, 4);
+        let b = Cube::minterm(0b0011, 4);
+        assert!(a.merge(&b).is_none());
+    }
+
+    #[test]
+    fn merge_different_masks_fails() {
+        let a = Cube::minterm(0, 4);
+        let b = Cube::minterm(1, 4).merge(&Cube::minterm(0, 4)).unwrap();
+        assert!(a.merge(&b).is_none());
+    }
+
+    #[test]
+    fn containment() {
+        let big = Cube {
+            value: 0b00,
+            mask: 0b01,
+        }; // x0'
+        let small = Cube::minterm(0b10, 2); // x0' x1
+        assert!(big.contains(&small));
+        assert!(!small.contains(&big));
+        assert!(big.contains(&big));
+    }
+
+    #[test]
+    fn term_rendering() {
+        let c = Cube {
+            value: 0b01,
+            mask: 0b11,
+        };
+        assert_eq!(c.to_term(&["a", "b"]), "a·b'");
+        assert_eq!(Cube { value: 0, mask: 0 }.to_term(&["a"]), "1");
+    }
+}

@@ -1,0 +1,315 @@
+//! Boolean expression AST: sum-of-products construction from QMC cubes,
+//! evaluation, literal-count cost, and lowering to a gate netlist.
+
+use super::cube::Cube;
+use super::netlist::{GateKind, Netlist, SignalRef};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Expr {
+    Const(bool),
+    Var(usize),
+    Not(Box<Expr>),
+    And(Vec<Expr>),
+    Or(Vec<Expr>),
+    Xor(Box<Expr>, Box<Expr>),
+}
+
+impl Expr {
+    pub fn var(i: usize) -> Expr {
+        Expr::Var(i)
+    }
+
+    pub fn not(e: Expr) -> Expr {
+        match e {
+            Expr::Not(inner) => *inner,
+            Expr::Const(b) => Expr::Const(!b),
+            e => Expr::Not(Box::new(e)),
+        }
+    }
+
+    pub fn and(es: Vec<Expr>) -> Expr {
+        let mut flat = Vec::new();
+        for e in es {
+            match e {
+                Expr::Const(false) => return Expr::Const(false),
+                Expr::Const(true) => {}
+                Expr::And(inner) => flat.extend(inner),
+                e => flat.push(e),
+            }
+        }
+        match flat.len() {
+            0 => Expr::Const(true),
+            1 => flat.pop().unwrap(),
+            _ => Expr::And(flat),
+        }
+    }
+
+    pub fn or(es: Vec<Expr>) -> Expr {
+        let mut flat = Vec::new();
+        for e in es {
+            match e {
+                Expr::Const(true) => return Expr::Const(true),
+                Expr::Const(false) => {}
+                Expr::Or(inner) => flat.extend(inner),
+                e => flat.push(e),
+            }
+        }
+        match flat.len() {
+            0 => Expr::Const(false),
+            1 => flat.pop().unwrap(),
+            _ => Expr::Or(flat),
+        }
+    }
+
+    pub fn xor(a: Expr, b: Expr) -> Expr {
+        match (a, b) {
+            (Expr::Const(false), e) | (e, Expr::Const(false)) => e,
+            (Expr::Const(true), e) | (e, Expr::Const(true)) => Expr::not(e),
+            (a, b) => Expr::Xor(Box::new(a), Box::new(b)),
+        }
+    }
+
+    /// Algebraically factor a cube cover into multi-level logic
+    /// (the classic "quick factor": divide by the most frequent literal,
+    /// recurse on quotient and remainder).  This is the step a real
+    /// synthesis tool performs between two-level minimization and
+    /// technology mapping; without it SOP multipliers are 2-3× too large.
+    pub fn factor_cover(cover: &[Cube], nvars: usize) -> Expr {
+        if cover.is_empty() {
+            return Expr::Const(false);
+        }
+        if cover.iter().any(|c| c.mask == 0) {
+            return Expr::Const(true);
+        }
+        if cover.len() == 1 {
+            return Self::term(&cover[0], nvars);
+        }
+        // Count literal occurrences: (var, polarity).
+        let mut best: Option<(usize, bool, usize)> = None;
+        for k in 0..nvars {
+            for pol in [false, true] {
+                let count = cover
+                    .iter()
+                    .filter(|c| {
+                        (c.mask >> k) & 1 == 1 && ((c.value >> k) & 1 == 1) == pol
+                    })
+                    .count();
+                if count >= 2 && best.map(|(_, _, bc)| count > bc).unwrap_or(true) {
+                    best = Some((k, pol, count));
+                }
+            }
+        }
+        let Some((var, pol, _)) = best else {
+            // No shared literal: plain SOP of the terms.
+            let terms: Vec<Expr> = cover.iter().map(|c| Self::term(c, nvars)).collect();
+            return Expr::or(terms);
+        };
+        let bit = 1u32 << var;
+        let mut quotient = Vec::new();
+        let mut remainder = Vec::new();
+        for c in cover {
+            if (c.mask & bit) != 0 && ((c.value & bit) != 0) == pol {
+                quotient.push(Cube {
+                    value: c.value & !bit,
+                    mask: c.mask & !bit,
+                });
+            } else {
+                remainder.push(*c);
+            }
+        }
+        let lit = if pol {
+            Expr::var(var)
+        } else {
+            Expr::not(Expr::var(var))
+        };
+        let q = Self::factor_cover(&quotient, nvars);
+        let factored = Expr::and(vec![lit, q]);
+        if remainder.is_empty() {
+            factored
+        } else {
+            Expr::or(vec![factored, Self::factor_cover(&remainder, nvars)])
+        }
+    }
+
+    /// A single cube as an AND of literals (variables in canonical order
+    /// for maximal structural sharing downstream).
+    fn term(c: &Cube, nvars: usize) -> Expr {
+        let lits: Vec<Expr> = (0..nvars)
+            .filter(|&k| (c.mask >> k) & 1 == 1)
+            .map(|k| {
+                if (c.value >> k) & 1 == 1 {
+                    Expr::var(k)
+                } else {
+                    Expr::not(Expr::var(k))
+                }
+            })
+            .collect();
+        Expr::and(lits)
+    }
+
+    /// Build the sum-of-products expression for a cube cover.
+    pub fn from_cover(cover: &[Cube], nvars: usize) -> Expr {
+        let terms: Vec<Expr> = cover
+            .iter()
+            .map(|c| {
+                let lits: Vec<Expr> = (0..nvars)
+                    .filter(|&k| (c.mask >> k) & 1 == 1)
+                    .map(|k| {
+                        if (c.value >> k) & 1 == 1 {
+                            Expr::var(k)
+                        } else {
+                            Expr::not(Expr::var(k))
+                        }
+                    })
+                    .collect();
+                Expr::and(lits)
+            })
+            .collect();
+        Expr::or(terms)
+    }
+
+    /// Evaluate under a packed input assignment.
+    pub fn eval(&self, row: u32) -> bool {
+        match self {
+            Expr::Const(b) => *b,
+            Expr::Var(i) => (row >> i) & 1 == 1,
+            Expr::Not(e) => !e.eval(row),
+            Expr::And(es) => es.iter().all(|e| e.eval(row)),
+            Expr::Or(es) => es.iter().any(|e| e.eval(row)),
+            Expr::Xor(a, b) => a.eval(row) ^ b.eval(row),
+        }
+    }
+
+    /// Literal count (leaves that are Var or Not(Var)).
+    pub fn literals(&self) -> u32 {
+        match self {
+            Expr::Const(_) => 0,
+            Expr::Var(_) => 1,
+            Expr::Not(e) => e.literals(),
+            Expr::And(es) | Expr::Or(es) => es.iter().map(|e| e.literals()).sum(),
+            Expr::Xor(a, b) => a.literals() + b.literals(),
+        }
+    }
+
+    /// Lower into a netlist, mapping Var(i) to `input_signals[i]`.
+    /// Wide AND/OR gates are decomposed into balanced 2-input trees
+    /// (technology mapping happens later in `synth::mapper`).
+    pub fn lower(&self, nl: &mut Netlist, input_signals: &[SignalRef]) -> SignalRef {
+        match self {
+            Expr::Const(b) => nl.constant(*b),
+            Expr::Var(i) => input_signals[*i],
+            Expr::Not(e) => {
+                let s = e.lower(nl, input_signals);
+                nl.gate(GateKind::Not, vec![s])
+            }
+            Expr::And(es) => {
+                let sigs: Vec<SignalRef> =
+                    es.iter().map(|e| e.lower(nl, input_signals)).collect();
+                sorted_balanced_tree(nl, GateKind::And, sigs)
+            }
+            Expr::Or(es) => {
+                let sigs: Vec<SignalRef> =
+                    es.iter().map(|e| e.lower(nl, input_signals)).collect();
+                sorted_balanced_tree(nl, GateKind::Or, sigs)
+            }
+            Expr::Xor(a, b) => {
+                let sa = a.lower(nl, input_signals);
+                let sb = b.lower(nl, input_signals);
+                nl.gate(GateKind::Xor, vec![sa, sb])
+            }
+        }
+    }
+}
+
+/// Balanced tree over canonically sorted signals: minimal depth, and the
+/// sorted order still lets strash share whole aligned subtrees between
+/// the similar product terms factoring leaves behind.
+pub fn sorted_balanced_tree(nl: &mut Netlist, kind: GateKind, mut sigs: Vec<SignalRef>) -> SignalRef {
+    sigs.sort();
+    balanced_tree(nl, kind, sigs)
+}
+
+/// Reduce a list of signals with a left-deep chain of 2-input gates.
+/// Chains expose common prefixes to the structural-hashing optimizer —
+/// across the many similar product terms of a multiplier SOP this shares
+/// far more logic than a balanced tree (at a small depth cost that
+/// factoring mostly removes anyway).  Signals are sorted for canonical
+/// prefix order.
+pub fn left_deep_chain(nl: &mut Netlist, kind: GateKind, mut sigs: Vec<SignalRef>) -> SignalRef {
+    assert!(!sigs.is_empty());
+    sigs.sort();
+    let mut acc = sigs[0];
+    for &s in &sigs[1..] {
+        acc = nl.gate(kind, vec![acc, s]);
+    }
+    acc
+}
+
+/// Reduce a list of signals with a balanced tree of 2-input gates
+/// (minimizes logic depth, matching what a synthesis tool would do).
+pub fn balanced_tree(nl: &mut Netlist, kind: GateKind, mut sigs: Vec<SignalRef>) -> SignalRef {
+    assert!(!sigs.is_empty());
+    while sigs.len() > 1 {
+        let mut next = Vec::with_capacity(sigs.len().div_ceil(2));
+        let mut it = sigs.into_iter();
+        while let Some(a) = it.next() {
+            match it.next() {
+                Some(b) => next.push(nl.gate(kind, vec![a, b])),
+                None => next.push(a),
+            }
+        }
+        sigs = next;
+    }
+    sigs.pop().unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logic::qmc::minimal_cover;
+
+    #[test]
+    fn simplification_rules() {
+        assert_eq!(Expr::not(Expr::not(Expr::var(0))), Expr::var(0));
+        assert_eq!(
+            Expr::and(vec![Expr::Const(false), Expr::var(1)]),
+            Expr::Const(false)
+        );
+        assert_eq!(
+            Expr::or(vec![Expr::Const(false), Expr::var(1)]),
+            Expr::var(1)
+        );
+        assert_eq!(
+            Expr::xor(Expr::Const(true), Expr::var(2)),
+            Expr::not(Expr::var(2))
+        );
+    }
+
+    #[test]
+    fn sop_from_cover_evaluates_correctly() {
+        // f = majority(a, b, c)
+        let minterms: Vec<u32> = (0..8u32).filter(|r| r.count_ones() >= 2).collect();
+        let cover = minimal_cover(3, &minterms, &[]);
+        let e = Expr::from_cover(&cover, 3);
+        for row in 0..8 {
+            assert_eq!(e.eval(row), row.count_ones() >= 2, "row {row:03b}");
+        }
+        // Majority minimizes to ab + bc + ac = 6 literals.
+        assert_eq!(e.literals(), 6);
+    }
+
+    #[test]
+    fn empty_cover_is_constant_false() {
+        let e = Expr::from_cover(&[], 3);
+        assert_eq!(e, Expr::Const(false));
+    }
+
+    #[test]
+    fn xor_eval() {
+        let e = Expr::xor(Expr::var(0), Expr::var(1));
+        assert!(!e.eval(0b00));
+        assert!(e.eval(0b01));
+        assert!(e.eval(0b10));
+        assert!(!e.eval(0b11));
+    }
+}

@@ -1,0 +1,78 @@
+//! Boolean-logic substrate: truth tables, cubes, Quine–McCluskey
+//! minimization, expression ASTs, gate netlists and simulation.
+//!
+//! This is the foundation the paper's flow rests on: the approximate
+//! 3×3 multipliers are *defined* as K-map edits of the exact truth table
+//! (§II-A), synthesized here to netlists and costed by `crate::synth`.
+
+pub mod cube;
+pub mod expr;
+pub mod netlist;
+pub mod opt;
+pub mod qmc;
+pub mod sim;
+pub mod truth_table;
+pub mod verilog;
+
+pub use cube::Cube;
+pub use expr::Expr;
+pub use netlist::{GateKind, Netlist, SignalRef};
+pub use opt::{optimize, sweep};
+pub use qmc::{cover_equals, cover_literals, minimal_cover, minimize_output, prime_implicants};
+pub use sim::{switching_activity, uniform_sampler, Activity};
+pub use truth_table::{multiplier_truth_table, TruthTable};
+pub use verilog::{multiplier_testbench, to_verilog};
+
+/// Synthesize a multi-output truth table into a netlist: QMC per output,
+/// SOP lowering, shared input rail.  Returns the netlist with outputs in
+/// table order.
+pub fn synthesize_truth_table(name: &str, tt: &TruthTable) -> Netlist {
+    let mut nl = Netlist::new(name, tt.inputs);
+    let input_sigs = nl.inputs();
+    let mut outs = Vec::with_capacity(tt.num_outputs());
+    for o in 0..tt.num_outputs() {
+        let cover = minimize_output(tt, o);
+        // Multi-level: QMC two-level cover, then algebraic factoring.
+        let expr = Expr::factor_cover(&cover, tt.inputs);
+        outs.push(expr.lower(&mut nl, &input_sigs));
+    }
+    nl.set_outputs(outs);
+    nl
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthesized_exact_3x3_matches_function() {
+        let tt = multiplier_truth_table(3, 3);
+        let nl = synthesize_truth_table("exact3x3", &tt);
+        for row in 0..64u64 {
+            let a = row & 7;
+            let b = (row >> 3) & 7;
+            assert_eq!(nl.eval(row), a * b, "a={a} b={b}");
+        }
+    }
+
+    #[test]
+    fn synthesized_2x2_matches_function() {
+        let tt = multiplier_truth_table(2, 2);
+        let nl = synthesize_truth_table("exact2x2", &tt);
+        for row in 0..16u64 {
+            let a = row & 3;
+            let b = (row >> 2) & 3;
+            assert_eq!(nl.eval(row), a * b);
+        }
+    }
+
+    #[test]
+    fn exhaustive_eval_agrees_with_pointwise() {
+        let tt = multiplier_truth_table(3, 3);
+        let nl = synthesize_truth_table("exact3x3", &tt);
+        let all = nl.eval_exhaustive();
+        for row in 0..64u64 {
+            assert_eq!(all[row as usize], nl.eval(row));
+        }
+    }
+}

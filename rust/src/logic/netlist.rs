@@ -1,0 +1,376 @@
+//! Gate-level netlist IR with 64-way bit-parallel simulation.
+//!
+//! The netlist is a DAG in topological order by construction (gates can
+//! only reference already-created signals).  Simulation packs 64 input
+//! assignments per `u64` word, so exhaustive 2^16 simulation of an 8×8
+//! multiplier costs only 1024 passes — this is the engine behind both the
+//! error-metric sweeps and the switching-activity power model.
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum GateKind {
+    And,
+    Or,
+    Not,
+    Xor,
+    Nand,
+    Nor,
+    Xnor,
+    /// 2:1 mux — inputs [sel, a, b]: out = sel ? a : b.
+    Mux,
+    /// Full-adder majority (carry): inputs [a, b, cin].
+    Maj,
+}
+
+impl GateKind {
+    pub fn arity(&self) -> usize {
+        match self {
+            GateKind::Not => 1,
+            GateKind::Mux | GateKind::Maj => 3,
+            _ => 2,
+        }
+    }
+}
+
+/// A signal is either a primary input, a constant, or a gate output.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SignalRef(pub u32);
+
+#[derive(Clone, Debug)]
+pub enum Node {
+    Input(usize),
+    Const(bool),
+    Gate { kind: GateKind, inputs: Vec<SignalRef> },
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Netlist {
+    pub nodes: Vec<Node>,
+    pub num_inputs: usize,
+    pub outputs: Vec<SignalRef>,
+    pub name: String,
+}
+
+impl Netlist {
+    pub fn new(name: &str, num_inputs: usize) -> Self {
+        let mut nl = Self {
+            nodes: Vec::new(),
+            num_inputs,
+            outputs: Vec::new(),
+            name: name.to_string(),
+        };
+        for i in 0..num_inputs {
+            nl.nodes.push(Node::Input(i));
+        }
+        nl
+    }
+
+    pub fn input(&self, i: usize) -> SignalRef {
+        assert!(i < self.num_inputs);
+        SignalRef(i as u32)
+    }
+
+    pub fn inputs(&self) -> Vec<SignalRef> {
+        (0..self.num_inputs).map(|i| self.input(i)).collect()
+    }
+
+    pub fn constant(&mut self, v: bool) -> SignalRef {
+        self.nodes.push(Node::Const(v));
+        SignalRef(self.nodes.len() as u32 - 1)
+    }
+
+    pub fn gate(&mut self, kind: GateKind, inputs: Vec<SignalRef>) -> SignalRef {
+        assert_eq!(inputs.len(), kind.arity(), "bad arity for {kind:?}");
+        for s in &inputs {
+            assert!((s.0 as usize) < self.nodes.len(), "forward reference");
+        }
+        self.nodes.push(Node::Gate { kind, inputs });
+        SignalRef(self.nodes.len() as u32 - 1)
+    }
+
+    pub fn set_outputs(&mut self, outs: Vec<SignalRef>) {
+        self.outputs = outs;
+    }
+
+    pub fn num_gates(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| matches!(n, Node::Gate { .. }))
+            .count()
+    }
+
+    /// Gate count by kind (for reporting / sanity checks).
+    pub fn gate_histogram(&self) -> std::collections::BTreeMap<GateKind, usize> {
+        let mut h = std::collections::BTreeMap::new();
+        for n in &self.nodes {
+            if let Node::Gate { kind, .. } = n {
+                *h.entry(*kind).or_insert(0) += 1;
+            }
+        }
+        h
+    }
+
+    // ---- convenience builders -------------------------------------------
+
+    pub fn and2(&mut self, a: SignalRef, b: SignalRef) -> SignalRef {
+        self.gate(GateKind::And, vec![a, b])
+    }
+    pub fn or2(&mut self, a: SignalRef, b: SignalRef) -> SignalRef {
+        self.gate(GateKind::Or, vec![a, b])
+    }
+    pub fn xor2(&mut self, a: SignalRef, b: SignalRef) -> SignalRef {
+        self.gate(GateKind::Xor, vec![a, b])
+    }
+    pub fn not1(&mut self, a: SignalRef) -> SignalRef {
+        self.gate(GateKind::Not, vec![a])
+    }
+
+    /// Half adder: returns (sum, carry).
+    pub fn half_adder(&mut self, a: SignalRef, b: SignalRef) -> (SignalRef, SignalRef) {
+        (self.xor2(a, b), self.and2(a, b))
+    }
+
+    /// Full adder: returns (sum, carry).
+    pub fn full_adder(
+        &mut self,
+        a: SignalRef,
+        b: SignalRef,
+        cin: SignalRef,
+    ) -> (SignalRef, SignalRef) {
+        let axb = self.xor2(a, b);
+        let sum = self.xor2(axb, cin);
+        let carry = self.gate(GateKind::Maj, vec![a, b, cin]);
+        (sum, carry)
+    }
+
+    /// Ripple-carry addition of two equal-width signal vectors (LSB first).
+    /// Returns `width + 1` sum bits.
+    pub fn ripple_add(&mut self, a: &[SignalRef], b: &[SignalRef]) -> Vec<SignalRef> {
+        assert_eq!(a.len(), b.len());
+        let mut out = Vec::with_capacity(a.len() + 1);
+        let mut carry: Option<SignalRef> = None;
+        for i in 0..a.len() {
+            let (s, c) = match carry {
+                None => self.half_adder(a[i], b[i]),
+                Some(cin) => self.full_adder(a[i], b[i], cin),
+            };
+            out.push(s);
+            carry = Some(c);
+        }
+        out.push(carry.unwrap());
+        out
+    }
+
+    /// Inline another netlist as a subcircuit: `input_map[i]` supplies the
+    /// signal feeding `sub`'s input `i`.  Returns the signals corresponding
+    /// to `sub`'s outputs.  This is how aggregated multipliers (Fig. 1 of
+    /// the paper) instantiate their 3×3 / 2×2 building blocks.
+    pub fn inline(&mut self, sub: &Netlist, input_map: &[SignalRef]) -> Vec<SignalRef> {
+        assert_eq!(input_map.len(), sub.num_inputs, "inline input count");
+        let mut remap: Vec<SignalRef> = Vec::with_capacity(sub.nodes.len());
+        for node in &sub.nodes {
+            let mapped = match node {
+                Node::Input(i) => input_map[*i],
+                Node::Const(b) => self.constant(*b),
+                Node::Gate { kind, inputs } => {
+                    let new_inputs: Vec<SignalRef> =
+                        inputs.iter().map(|s| remap[s.0 as usize]).collect();
+                    self.gate(*kind, new_inputs)
+                }
+            };
+            remap.push(mapped);
+        }
+        sub.outputs.iter().map(|s| remap[s.0 as usize]).collect()
+    }
+
+    // ---- simulation ------------------------------------------------------
+
+    /// Bit-parallel evaluation: each input/output lane is a packed `u64`
+    /// of 64 independent assignments.
+    pub fn eval_packed(&self, input_words: &[u64]) -> Vec<u64> {
+        assert_eq!(input_words.len(), self.num_inputs);
+        let mut vals: Vec<u64> = Vec::with_capacity(self.nodes.len());
+        for node in &self.nodes {
+            let v = match node {
+                Node::Input(i) => input_words[*i],
+                Node::Const(b) => {
+                    if *b {
+                        !0u64
+                    } else {
+                        0u64
+                    }
+                }
+                Node::Gate { kind, inputs } => {
+                    let g = |k: usize| vals[inputs[k].0 as usize];
+                    match kind {
+                        GateKind::And => g(0) & g(1),
+                        GateKind::Or => g(0) | g(1),
+                        GateKind::Not => !g(0),
+                        GateKind::Xor => g(0) ^ g(1),
+                        GateKind::Nand => !(g(0) & g(1)),
+                        GateKind::Nor => !(g(0) | g(1)),
+                        GateKind::Xnor => !(g(0) ^ g(1)),
+                        GateKind::Mux => (g(0) & g(1)) | (!g(0) & g(2)),
+                        GateKind::Maj => (g(0) & g(1)) | (g(1) & g(2)) | (g(0) & g(2)),
+                    }
+                }
+            };
+            vals.push(v);
+        }
+        self.outputs.iter().map(|s| vals[s.0 as usize]).collect()
+    }
+
+    /// Evaluate a single assignment: input bit k of `row` = input k.
+    /// Returns packed output bits.
+    pub fn eval(&self, row: u64) -> u64 {
+        let inputs: Vec<u64> = (0..self.num_inputs)
+            .map(|i| if (row >> i) & 1 == 1 { !0u64 } else { 0 })
+            .collect();
+        let outs = self.eval_packed(&inputs);
+        let mut packed = 0u64;
+        for (o, w) in outs.iter().enumerate() {
+            if w & 1 == 1 {
+                packed |= 1 << o;
+            }
+        }
+        packed
+    }
+
+    /// Exhaustively evaluate all `2^num_inputs` assignments (num_inputs ≤ 20),
+    /// returning the packed output value for each row, 64 rows per sim pass.
+    pub fn eval_exhaustive(&self) -> Vec<u64> {
+        let n = self.num_inputs;
+        assert!(n <= 20, "exhaustive sim too large");
+        let rows = 1usize << n;
+        let mut out = vec![0u64; rows];
+        let words = rows.div_ceil(64);
+        for w in 0..words {
+            let base = (w * 64) as u64;
+            // Lane l in this word is assignment base + l.
+            let mut input_words = vec![0u64; n];
+            for (i, word) in input_words.iter_mut().enumerate() {
+                if i < 6 {
+                    // Bits 0..6 of the assignment index vary within the
+                    // word (base is a multiple of 64, so they follow fixed
+                    // lane patterns).
+                    *word = PATTERNS[i];
+                } else {
+                    *word = if (base >> i) & 1 == 1 { !0u64 } else { 0 };
+                }
+            }
+            let outs = self.eval_packed(&input_words);
+            let lanes = (rows - w * 64).min(64);
+            for l in 0..lanes {
+                let mut packed = 0u64;
+                for (o, ow) in outs.iter().enumerate() {
+                    if (ow >> l) & 1 == 1 {
+                        packed |= 1 << o;
+                    }
+                }
+                out[w * 64 + l] = packed;
+            }
+        }
+        out
+    }
+}
+
+/// Within-word exhaustive patterns: bit i of lane l equals bit i of l.
+const PATTERNS: [u64; 6] = [
+    0xAAAA_AAAA_AAAA_AAAA, // bit 0 of lane index
+    0xCCCC_CCCC_CCCC_CCCC,
+    0xF0F0_F0F0_F0F0_F0F0,
+    0xFF00_FF00_FF00_FF00,
+    0xFFFF_0000_FFFF_0000,
+    0xFFFF_FFFF_0000_0000,
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn xor_netlist() -> Netlist {
+        let mut nl = Netlist::new("xor", 2);
+        let a = nl.input(0);
+        let b = nl.input(1);
+        let o = nl.xor2(a, b);
+        nl.set_outputs(vec![o]);
+        nl
+    }
+
+    #[test]
+    fn eval_single_rows() {
+        let nl = xor_netlist();
+        assert_eq!(nl.eval(0b00), 0);
+        assert_eq!(nl.eval(0b01), 1);
+        assert_eq!(nl.eval(0b10), 1);
+        assert_eq!(nl.eval(0b11), 0);
+    }
+
+    #[test]
+    fn full_adder_truth() {
+        let mut nl = Netlist::new("fa", 3);
+        let (a, b, c) = (nl.input(0), nl.input(1), nl.input(2));
+        let (s, cy) = nl.full_adder(a, b, c);
+        nl.set_outputs(vec![s, cy]);
+        for row in 0..8u64 {
+            let expect = (row & 1) + ((row >> 1) & 1) + ((row >> 2) & 1);
+            assert_eq!(nl.eval(row), expect, "row {row:03b}");
+        }
+    }
+
+    #[test]
+    fn ripple_add_exhaustive_4bit() {
+        let mut nl = Netlist::new("add4", 8);
+        let a: Vec<SignalRef> = (0..4).map(|i| nl.input(i)).collect();
+        let b: Vec<SignalRef> = (4..8).map(|i| nl.input(i)).collect();
+        let sum = nl.ripple_add(&a, &b);
+        nl.set_outputs(sum);
+        for row in 0..256u64 {
+            let a = row & 0xF;
+            let b = (row >> 4) & 0xF;
+            assert_eq!(nl.eval(row), a + b, "a={a} b={b}");
+        }
+    }
+
+    #[test]
+    fn exhaustive_matches_single() {
+        let mut nl = Netlist::new("misc", 7);
+        let i: Vec<SignalRef> = nl.inputs();
+        let x = nl.and2(i[0], i[1]);
+        let y = nl.gate(GateKind::Mux, vec![i[2], x, i[3]]);
+        let z = nl.gate(GateKind::Nor, vec![y, i[4]]);
+        let w = nl.gate(GateKind::Xnor, vec![z, i[5]]);
+        let v = nl.gate(GateKind::Maj, vec![w, i[6], x]);
+        nl.set_outputs(vec![y, z, w, v]);
+        let all = nl.eval_exhaustive();
+        for row in 0..(1u64 << 7) {
+            assert_eq!(all[row as usize], nl.eval(row), "row {row}");
+        }
+    }
+
+    #[test]
+    fn gate_histogram_counts() {
+        let nl = xor_netlist();
+        assert_eq!(nl.num_gates(), 1);
+        assert_eq!(nl.gate_histogram()[&GateKind::Xor], 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "bad arity")]
+    fn arity_checked() {
+        let mut nl = Netlist::new("bad", 2);
+        let a = nl.input(0);
+        nl.gate(GateKind::And, vec![a]);
+    }
+
+    #[test]
+    fn mux_semantics() {
+        let mut nl = Netlist::new("mux", 3);
+        let (s, a, b) = (nl.input(0), nl.input(1), nl.input(2));
+        let m = nl.gate(GateKind::Mux, vec![s, a, b]);
+        nl.set_outputs(vec![m]);
+        // sel=1 -> a, sel=0 -> b
+        assert_eq!(nl.eval(0b011), 1); // sel=1, a=1, b=0
+        assert_eq!(nl.eval(0b100), 1); // sel=0, a=0, b=1
+        assert_eq!(nl.eval(0b010), 0); // sel=0, a=1, b=0
+    }
+}

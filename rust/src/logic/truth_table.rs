@@ -1,0 +1,156 @@
+//! Multi-output truth tables for small combinational functions.
+//!
+//! A `TruthTable` holds, for every output bit, a packed bitset over all
+//! `2^n` input assignments (n ≤ 16 is all this paper needs: 3×3 multiplier
+//! has n = 6, the 8×8 has n = 16 but we never tabulate that — large
+//! multipliers are built structurally by aggregation).
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TruthTable {
+    /// Number of input variables.
+    pub inputs: usize,
+    /// `outputs[o]` is a bitset of length `2^inputs`; bit `i` is the value
+    /// of output `o` under input assignment `i` (input bit k of `i` is
+    /// variable k).
+    pub outputs: Vec<Vec<u64>>,
+}
+
+impl TruthTable {
+    pub fn new(inputs: usize, num_outputs: usize) -> Self {
+        assert!(inputs <= 24, "truth table too large");
+        let words = (1usize << inputs).div_ceil(64);
+        Self {
+            inputs,
+            outputs: vec![vec![0u64; words]; num_outputs],
+        }
+    }
+
+    /// Build from a function mapping the packed input assignment to the
+    /// packed output word (bit o = output o).
+    pub fn from_fn(inputs: usize, num_outputs: usize, f: impl Fn(u32) -> u32) -> Self {
+        let mut tt = Self::new(inputs, num_outputs);
+        for i in 0..(1u32 << inputs) {
+            let out = f(i);
+            for o in 0..num_outputs {
+                if (out >> o) & 1 == 1 {
+                    tt.set(o, i, true);
+                }
+            }
+        }
+        tt
+    }
+
+    pub fn num_outputs(&self) -> usize {
+        self.outputs.len()
+    }
+
+    pub fn rows(&self) -> u32 {
+        1u32 << self.inputs
+    }
+
+    pub fn get(&self, output: usize, row: u32) -> bool {
+        (self.outputs[output][row as usize / 64] >> (row % 64)) & 1 == 1
+    }
+
+    pub fn set(&mut self, output: usize, row: u32, v: bool) {
+        let w = &mut self.outputs[output][row as usize / 64];
+        if v {
+            *w |= 1 << (row % 64);
+        } else {
+            *w &= !(1 << (row % 64));
+        }
+    }
+
+    /// Evaluate all outputs for one input assignment, packed.
+    pub fn eval(&self, row: u32) -> u32 {
+        let mut out = 0u32;
+        for o in 0..self.num_outputs() {
+            if self.get(o, row) {
+                out |= 1 << o;
+            }
+        }
+        out
+    }
+
+    /// Minterm list (rows where output `o` is 1).
+    pub fn minterms(&self, o: usize) -> Vec<u32> {
+        (0..self.rows()).filter(|&r| self.get(o, r)).collect()
+    }
+
+    /// Number of rows whose packed output value differs from `other`.
+    pub fn diff_count(&self, other: &TruthTable) -> u32 {
+        assert_eq!(self.inputs, other.inputs);
+        (0..self.rows())
+            .filter(|&r| self.eval(r) != other.eval(r))
+            .count() as u32
+    }
+}
+
+/// The exact n×m-bit unsigned multiplier as a truth table: inputs are
+/// `a` in bits [0, n) and `b` in bits [n, n+m); outputs are the n+m
+/// product bits.
+pub fn multiplier_truth_table(a_bits: usize, b_bits: usize) -> TruthTable {
+    TruthTable::from_fn(a_bits + b_bits, a_bits + b_bits, |i| {
+        let a = i & ((1 << a_bits) - 1);
+        let b = (i >> a_bits) & ((1 << b_bits) - 1);
+        a * b
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut tt = TruthTable::new(7, 3);
+        tt.set(1, 77, true);
+        assert!(tt.get(1, 77));
+        assert!(!tt.get(0, 77));
+        tt.set(1, 77, false);
+        assert!(!tt.get(1, 77));
+    }
+
+    #[test]
+    fn mult3x3_exact_values() {
+        let tt = multiplier_truth_table(3, 3);
+        for a in 0..8u32 {
+            for b in 0..8u32 {
+                let row = a | (b << 3);
+                assert_eq!(tt.eval(row), a * b, "a={a} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn mult3x3_six_rows_above_31() {
+        // Table I of the paper: exactly 6 products exceed 31.
+        let tt = multiplier_truth_table(3, 3);
+        let big = tt.minterms(5).len();
+        assert_eq!(big, 6);
+    }
+
+    #[test]
+    fn minterms_of_o0_are_odd_times_odd() {
+        let tt = multiplier_truth_table(3, 3);
+        for row in tt.minterms(0) {
+            let a = row & 7;
+            let b = (row >> 3) & 7;
+            assert_eq!((a & 1) & (b & 1), 1);
+        }
+    }
+
+    #[test]
+    fn from_fn_eval_matches() {
+        let tt = TruthTable::from_fn(4, 4, |i| (i.count_ones()) & 0xF);
+        for i in 0..16 {
+            assert_eq!(tt.eval(i), i.count_ones());
+        }
+    }
+
+    #[test]
+    fn diff_count_self_zero() {
+        let tt = multiplier_truth_table(2, 2);
+        assert_eq!(tt.diff_count(&tt.clone()), 0);
+    }
+}

@@ -1,0 +1,145 @@
+//! axmul — CLI for the approximate-multiplier co-design platform.
+//!
+//! Subcommands map 1:1 onto the paper's experiments:
+//!   table5           arithmetic error metrics sweep
+//!   table6           3×3 synthesis cost
+//!   table7           8×8 synthesis cost
+//!   table8           DNN accuracy sweep (needs `make artifacts`)
+//!   weights-hist     §II-B weight-code distribution (needs artifacts)
+//!   train            train one network, print the loss curve
+//!   designs          list registered multiplier designs
+//!   mul              evaluate one product: `axmul mul mul8x8_2 100 200`
+
+use axmul::coordinator::{self, resolve_table8};
+use axmul::mult::{all_names, by_name, DESIGNS_8X8};
+use axmul::runtime::Engine;
+use axmul::util::Args;
+use std::path::Path;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn artifacts_dir(args: &Args) -> String {
+    args.opt_or("artifacts", "artifacts").to_string()
+}
+
+fn run(args: &Args) -> anyhow::Result<()> {
+    match args.subcommand.as_deref() {
+        Some("table5") => {
+            let designs: Vec<&str> = match args.opt("designs") {
+                Some(d) => d.split(',').collect(),
+                None => {
+                    let mut v = DESIGNS_8X8.to_vec();
+                    v.extend(["sv", "roba", "mitchell"]);
+                    v
+                }
+            };
+            coordinator::table5(&designs)?.print();
+        }
+        Some("table6") => {
+            coordinator::table6(args.opt_usize("vectors", 4000))?.print();
+        }
+        Some("table7") => {
+            coordinator::table7(args.opt_usize("vectors", 2000))?.print();
+        }
+        Some("table8") => {
+            let engine = Engine::cpu(Path::new(&artifacts_dir(args)))?;
+            let cfg = resolve_table8(args)?;
+            coordinator::table8(&engine, &cfg)?.print();
+        }
+        Some("weights-hist") => {
+            let engine = Engine::cpu(Path::new(&artifacts_dir(args)))?;
+            let tag = args.opt_or("net", "lenet_mnist");
+            coordinator::weights_hist(
+                &engine,
+                tag,
+                args.opt_usize("steps", 200),
+                args.opt_usize("data", 1024),
+            )?
+            .print();
+        }
+        Some("train") => {
+            let engine = Engine::cpu(Path::new(&artifacts_dir(args)))?;
+            let tag = args.opt_or("net", "lenet_mnist").to_string();
+            let ds = tag.rsplit_once('_').map(|(_, d)| d).unwrap_or("mnist");
+            let data = axmul::data::Dataset::by_name(ds, args.opt_usize("data", 2048), 42)
+                .ok_or_else(|| anyhow::anyhow!("unknown dataset {ds}"))?;
+            let mut tr = coordinator::Trainer::new(&engine, &tag)?;
+            tr.train(
+                &data,
+                args.opt_usize("steps", 300),
+                args.opt_f64("lr", 0.05) as f32,
+                args.opt_f64("reg", 0.0) as f32,
+                7,
+                true,
+            )?;
+            let acc = tr.infer_accuracy(&data, args.opt_usize("eval", 512), 64)?;
+            println!("[train {tag}] float accuracy: {:.2}%", acc * 100.0);
+        }
+        Some("export-luts") => {
+            // Tabulate every 8×8 design as a .npy product LUT — the
+            // artifact any external runtime (incl. the python tests)
+            // consumes as "silicon".
+            let out = std::path::PathBuf::from(args.opt_or("out", "artifacts/luts"));
+            std::fs::create_dir_all(&out)?;
+            let mut n = 0;
+            for name in all_names() {
+                let m = by_name(name).unwrap();
+                if (m.a_bits(), m.b_bits()) != (8, 8) {
+                    continue;
+                }
+                let lut = axmul::metrics::Lut::build(m.as_ref());
+                lut.write_npy(&out.join(format!("{name}.npy")))?;
+                n += 1;
+            }
+            println!("wrote {n} LUTs to {}", out.display());
+        }
+        Some("designs") => {
+            println!("registered multiplier designs:");
+            for name in all_names() {
+                let m = by_name(name).unwrap();
+                println!(
+                    "  {:<16} {}x{}  netlist: {}",
+                    name,
+                    m.a_bits(),
+                    m.b_bits(),
+                    m.netlist().is_some()
+                );
+            }
+        }
+        Some("mul") => {
+            let name = args
+                .positional
+                .first()
+                .map(|s| s.as_str())
+                .unwrap_or("mul8x8_2");
+            let a: u32 = args.positional.get(1).and_then(|v| v.parse().ok()).unwrap_or(100);
+            let b: u32 = args.positional.get(2).and_then(|v| v.parse().ok()).unwrap_or(200);
+            let m = by_name(name).ok_or_else(|| anyhow::anyhow!("unknown design {name}"))?;
+            let v = m.mul(a, b);
+            println!(
+                "{name}: {a} x {b} = {v} (exact {}, ED {})",
+                a * b,
+                (v as i64 - (a * b) as i64).abs()
+            );
+        }
+        _ => {
+            println!(
+                "axmul — approximate multiplier co-design (ISCAS'22 reproduction)\n\
+                 usage: axmul <table5|table6|table7|table8|weights-hist|train|designs|mul> [options]\n\
+                 common options: --artifacts DIR --quick --verbose\n\
+                 table8: --nets a,b --designs x,y --steps N --eval N --config FILE"
+            );
+        }
+    }
+    Ok(())
+}

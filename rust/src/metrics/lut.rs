@@ -1,0 +1,116 @@
+//! Product lookup tables.
+//!
+//! A `Lut` tabulates an 8×8 multiplier as a dense 256×256 `i32` table —
+//! the exact artifact consumed by (a) the rust LUT-GEMM hot path, (b) the
+//! Pallas kernel (passed as a runtime tensor argument), and (c) the
+//! `.npy` exporter that feeds python tests.  One table = one "silicon"
+//! variant; swapping multipliers at runtime is swapping tables.
+
+use crate::mult::Multiplier;
+use crate::util::parallel_map;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Lut {
+    pub name: String,
+    /// Row-major: `table[a * 256 + b] = m.mul(a, b)`.
+    pub table: Vec<i32>,
+    /// True iff row 0 is all zeros (every sane multiplier: 0·b = 0).
+    /// Lets the GEMM hot path skip zero activation codes — post-ReLU
+    /// activations are heavily sparse, so this is a large win.
+    pub zero_row_zero: bool,
+}
+
+impl Lut {
+    /// Tabulate an 8×8 multiplier.
+    pub fn build(m: &dyn Multiplier) -> Lut {
+        assert_eq!(
+            (m.a_bits(), m.b_bits()),
+            (8, 8),
+            "LUTs are for 8x8 designs"
+        );
+        let rows = parallel_map(256, |a| {
+            let mut row = Vec::with_capacity(256);
+            for b in 0..256u32 {
+                row.push(m.mul(a as u32, b) as i32);
+            }
+            row
+        });
+        let table = rows.concat();
+        let zero_row_zero = table[..256].iter().all(|&v| v == 0);
+        Lut {
+            name: m.name().to_string(),
+            table,
+            zero_row_zero,
+        }
+    }
+
+    #[inline(always)]
+    pub fn mul(&self, a: u8, b: u8) -> i32 {
+        // SAFETY-free fast path: the index is structurally < 65536.
+        self.table[((a as usize) << 8) | b as usize]
+    }
+
+    /// Signed multiply for zero-point-adjusted quantized values: both
+    /// operands are u8 magnitudes here; the DNN engine handles sign by
+    /// operating in the unsigned domain (Jacob-style affine quantization
+    /// keeps everything unsigned until the i32 accumulator).
+    pub fn is_exact(&self) -> bool {
+        (0..256usize).all(|a| (0..256usize).all(|b| self.table[(a << 8) | b] == (a * b) as i32))
+    }
+
+    /// Serialize to a flat little-endian i32 `.npy`-compatible byte body.
+    pub fn to_le_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.table.len() * 4);
+        for v in &self.table {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    /// Write as a `.npy` file ([256,256] i32) — the interchange format the
+    /// python tests and any external consumer of the "silicon" use.
+    pub fn write_npy(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        crate::data::npy::write_npy(
+            path,
+            &crate::data::npy::NpyArray {
+                shape: vec![256, 256],
+                data: crate::data::npy::NpyData::I32(self.table.clone()),
+            },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mult::{by_name, ExactMul};
+
+    #[test]
+    fn exact_lut_is_exact() {
+        let lut = Lut::build(&ExactMul::new(8, 8));
+        assert!(lut.is_exact());
+        assert_eq!(lut.mul(255, 255), 65025);
+        assert_eq!(lut.mul(0, 17), 0);
+    }
+
+    #[test]
+    fn approx_lut_matches_behaviour() {
+        let m = by_name("mul8x8_2").unwrap();
+        let lut = Lut::build(m.as_ref());
+        assert!(!lut.is_exact());
+        for a in (0..256u32).step_by(11) {
+            for b in (0..256u32).step_by(7) {
+                assert_eq!(lut.mul(a as u8, b as u8), m.mul(a, b) as i32);
+            }
+        }
+    }
+
+    #[test]
+    fn le_bytes_roundtrip() {
+        let lut = Lut::build(&ExactMul::new(8, 8));
+        let bytes = lut.to_le_bytes();
+        assert_eq!(bytes.len(), 65536 * 4);
+        let v = i32::from_le_bytes(bytes[4..8].try_into().unwrap());
+        assert_eq!(v, lut.table[1]);
+    }
+}

@@ -1,0 +1,249 @@
+//! Error metrics for approximate multipliers (paper §III-A, eqs.
+//! (1)–(3), (10), (11)) and the product-LUT builder shared with the DNN
+//! engine and the Pallas kernel.
+
+pub mod lut;
+
+pub use lut::Lut;
+
+use crate::mult::Multiplier;
+use crate::util::parallel_map;
+
+/// Exhaustive error metrics over every input pair of a multiplier.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ErrorMetrics {
+    /// Error rate, fraction in [0,1] (eq. 3).
+    pub er: f64,
+    /// Mean error distance (eq. 2).
+    pub med: f64,
+    /// Normalized MED: MED / (2^n - 1)^2 (eq. 10).
+    pub nmed: f64,
+    /// Mean relative error distance: mean of ED/exact over nonzero exact
+    /// products (the standard MRED; the paper's eq. (11) normalizes by the
+    /// approximate value — we compute both, see `mred_paper`).
+    pub mred: f64,
+    /// Eq. (11) exactly as printed: ED / (Value' · 2^n) averaged.
+    pub mred_paper: f64,
+    /// Maximum error distance observed.
+    pub max_ed: u64,
+    /// Mean signed error (bias) — negative means underestimation; this is
+    /// the quantity that predicts DNN accuracy collapse (SiEi!).
+    pub bias: f64,
+}
+
+/// Compute exhaustive metrics for an (a_bits × b_bits) multiplier.
+/// Parallelized over rows of `a`; deterministic.
+pub fn exhaustive_metrics(m: &dyn Multiplier) -> ErrorMetrics {
+    let na = 1u32 << m.a_bits();
+    let nb = 1u32 << m.b_bits();
+    let n_bits = m.a_bits(); // eq. (10) uses the operand width n
+    struct Acc {
+        errs: u64,
+        ed_sum: u64,
+        signed: i64,
+        rel_sum: f64,
+        rel_paper_sum: f64,
+        rel_count: u64,
+        max_ed: u64,
+    }
+    let rows = parallel_map(na as usize, |a| {
+        let a = a as u32;
+        let mut acc = Acc {
+            errs: 0,
+            ed_sum: 0,
+            signed: 0,
+            rel_sum: 0.0,
+            rel_paper_sum: 0.0,
+            rel_count: 0,
+            max_ed: 0,
+        };
+        for b in 0..nb {
+            let exact = (a as u64) * (b as u64);
+            let approx = m.mul(a, b) as u64;
+            let signed = approx as i64 - exact as i64;
+            let ed = signed.unsigned_abs();
+            if ed > 0 {
+                acc.errs += 1;
+            }
+            acc.ed_sum += ed;
+            acc.signed += signed;
+            acc.max_ed = acc.max_ed.max(ed);
+            if exact > 0 {
+                acc.rel_sum += ed as f64 / exact as f64;
+                acc.rel_count += 1;
+            }
+            if approx > 0 {
+                acc.rel_paper_sum += ed as f64 / (approx as f64 * (1u64 << n_bits) as f64);
+            }
+        }
+        acc
+    });
+    let total = (na as u64) * (nb as u64);
+    let mut errs = 0u64;
+    let mut ed_sum = 0u64;
+    let mut signed = 0i64;
+    let mut rel_sum = 0.0;
+    let mut rel_paper = 0.0;
+    let mut rel_count = 0u64;
+    let mut max_ed = 0u64;
+    for r in rows {
+        errs += r.errs;
+        ed_sum += r.ed_sum;
+        signed += r.signed;
+        rel_sum += r.rel_sum;
+        rel_paper += r.rel_paper_sum;
+        rel_count += r.rel_count;
+        max_ed = max_ed.max(r.max_ed);
+    }
+    let med = ed_sum as f64 / total as f64;
+    let max_operand = ((1u64 << m.a_bits()) - 1) as f64;
+    ErrorMetrics {
+        er: errs as f64 / total as f64,
+        med,
+        nmed: med / (max_operand * max_operand),
+        mred: rel_sum / rel_count.max(1) as f64,
+        mred_paper: rel_paper / total as f64,
+        max_ed,
+        bias: signed as f64 / total as f64,
+    }
+}
+
+/// Metrics under a non-uniform operand distribution: `wa[a]` and `wb[b]`
+/// are (unnormalized) operand weights.  Used for the §II-B analysis of
+/// error under the DNN weight profile — the lens that explains the
+/// paper's Table V figure for MUL8x8_3.
+pub fn weighted_metrics(m: &dyn Multiplier, wa: &[f64], wb: &[f64]) -> ErrorMetrics {
+    let na = 1usize << m.a_bits();
+    let nb = 1usize << m.b_bits();
+    assert_eq!(wa.len(), na);
+    assert_eq!(wb.len(), nb);
+    let za: f64 = wa.iter().sum();
+    let zb: f64 = wb.iter().sum();
+    assert!(za > 0.0 && zb > 0.0);
+    let mut er = 0.0;
+    let mut med = 0.0;
+    let mut bias = 0.0;
+    let mut mred = 0.0;
+    let mut mred_paper = 0.0;
+    let mut rel_mass = 0.0;
+    let mut max_ed = 0u64;
+    let n_bits = m.a_bits();
+    for a in 0..na {
+        if wa[a] == 0.0 {
+            continue;
+        }
+        for b in 0..nb {
+            if wb[b] == 0.0 {
+                continue;
+            }
+            let p = (wa[a] / za) * (wb[b] / zb);
+            let exact = (a * b) as u64;
+            let approx = m.mul(a as u32, b as u32) as u64;
+            let signed = approx as i64 - exact as i64;
+            let ed = signed.unsigned_abs();
+            if ed > 0 {
+                er += p;
+            }
+            med += p * ed as f64;
+            bias += p * signed as f64;
+            if exact > 0 {
+                mred += p * ed as f64 / exact as f64;
+                rel_mass += p;
+            }
+            if approx > 0 {
+                mred_paper += p * ed as f64 / (approx as f64 * (1u64 << n_bits) as f64);
+            }
+            max_ed = max_ed.max(ed);
+        }
+    }
+    let max_operand = ((1u64 << m.a_bits()) - 1) as f64;
+    ErrorMetrics {
+        er,
+        med,
+        nmed: med / (max_operand * max_operand),
+        mred: if rel_mass > 0.0 { mred / rel_mass } else { 0.0 },
+        mred_paper,
+        max_ed,
+        bias,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mult::{by_name, ExactMul, Mul3x3V1, Mul3x3V2};
+
+    #[test]
+    fn exact_has_zero_everything() {
+        let m = exhaustive_metrics(&ExactMul::new(8, 8));
+        assert_eq!(m.er, 0.0);
+        assert_eq!(m.med, 0.0);
+        assert_eq!(m.max_ed, 0);
+        assert_eq!(m.bias, 0.0);
+    }
+
+    #[test]
+    fn mul3x3_1_matches_paper_exactly() {
+        // §II-A: ER = 9.375%, MED = 1.125.
+        let m = exhaustive_metrics(&Mul3x3V1);
+        assert!((m.er - 0.09375).abs() < 1e-12);
+        assert!((m.med - 1.125).abs() < 1e-12);
+        assert_eq!(m.max_ed, 20);
+        assert!(m.bias < 0.0, "v1 only underestimates");
+    }
+
+    #[test]
+    fn mul3x3_2_matches_paper_exactly() {
+        // §II-A: same ER, MED = 0.5.
+        let m = exhaustive_metrics(&Mul3x3V2);
+        assert!((m.er - 0.09375).abs() < 1e-12);
+        assert!((m.med - 0.5).abs() < 1e-12);
+        assert_eq!(m.max_ed, 8);
+    }
+
+    #[test]
+    fn mul8x8_2_dominates_1_on_med_nmed() {
+        let m1 = exhaustive_metrics(by_name("mul8x8_1").unwrap().as_ref());
+        let m2 = exhaustive_metrics(by_name("mul8x8_2").unwrap().as_ref());
+        assert!(m2.med < m1.med);
+        assert!(m2.nmed < m1.nmed);
+        assert_eq!(m1.er, m2.er, "same trigger rows, same ER");
+    }
+
+    #[test]
+    fn weighted_uniform_equals_exhaustive() {
+        let m = Mul3x3V1;
+        let uni = vec![1.0; 8];
+        let w = weighted_metrics(&m, &uni, &uni);
+        let e = exhaustive_metrics(&m);
+        assert!((w.er - e.er).abs() < 1e-9);
+        assert!((w.med - e.med).abs() < 1e-9);
+    }
+
+    #[test]
+    fn weighted_small_band_is_exact_for_mul8x8_3() {
+        // The co-optimization claim, in metric form: weights restricted to
+        // (0,31) make MUL8x8_3 error-free on the B side interactions with
+        // A < 64 (M2's term only needs A[7:6] = 0).
+        let m3 = by_name("mul8x8_3").unwrap();
+        let mut wa = vec![0.0; 256];
+        let mut wb = vec![0.0; 256];
+        for x in 1..32 {
+            wa[x] = 1.0; // A = activations in (0,31)
+        }
+        for x in 1..32 {
+            wb[x] = 1.0; // B = co-optimized weights in (0,31)
+        }
+        let w = weighted_metrics(m3.as_ref(), &wa, &wb);
+        // Inside the band the only residual errors are 3×3 trigger rows
+        // with both chunks ≥ 5, e.g. (5,7) — present but rare & bounded.
+        assert!(w.er < 0.25, "ER {}", w.er);
+        assert!(w.med < 10.0, "MED {}", w.med);
+    }
+
+    #[test]
+    fn siei_bias_is_negative_strongly() {
+        let m = exhaustive_metrics(by_name("siei").unwrap().as_ref());
+        assert!(m.bias < -10.0, "bias {}", m.bias);
+    }
+}

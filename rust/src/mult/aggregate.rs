@@ -1,0 +1,251 @@
+//! Fig. 1 — aggregation of low-bit-width multipliers into an 8×8
+//! multiplier.
+//!
+//! Operands are split `A = A2‖A1‖A0` with A0 = A[2:0], A1 = A[5:3],
+//! A2 = A[7:6] (3 + 3 + 2 bits) and likewise for B.  Nine partial
+//! products are formed (M0–M8 in our fixed layout below) and summed with
+//! shifts:
+//!
+//! | unit | operands          | shift | widths |
+//! |------|-------------------|-------|--------|
+//! | M0   | A0 × B0           | 0     | 3×3    |
+//! | M1   | A1 × B0           | 3     | 3×3    |
+//! | M2   | A2 × B0           | 6     | 2×3    |
+//! | M3   | A0 × B1           | 3     | 3×3    |
+//! | M4   | A1 × B1           | 6     | 3×3    |
+//! | M5   | A2 × B1           | 9     | 2×3    |
+//! | M6   | A0 × B2           | 6     | 3×2    |
+//! | M7   | A1 × B2           | 9     | 3×2    |
+//! | M8   | A2 × B2           | 12    | 2×2    |
+//!
+//! The mixed 2×3 / 3×2 products are computed by the *same* 3×3 design
+//! with the missing operand bit zero-extended — with one operand ≤ 3 the
+//! product never exceeds 21, so the approximate rows (which need both
+//! operands ≥ 5) can only trigger on M0/M1/M3/M4; the mixed units behave
+//! exactly, as the paper's architecture requires.
+//!
+//! `MUL8x8_3` (Table IV footnote) removes M2 *and its shifter*; the
+//! hardware-driven co-optimization (§II-B, §IV) retrains weights into
+//! (0, 31) so A[7:6] = 0 and the dropped term is usually zero anyway.
+
+use super::traits::Multiplier;
+use crate::logic::{Netlist, SignalRef};
+use crate::mult::reduce::wallace_reduce;
+
+/// Which partial-product units to instantiate (index = M0..M8).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct UnitMask(pub u16);
+
+impl UnitMask {
+    pub const ALL: UnitMask = UnitMask(0x1FF);
+    pub fn without(self, unit: usize) -> UnitMask {
+        UnitMask(self.0 & !(1 << unit))
+    }
+    pub fn contains(self, unit: usize) -> bool {
+        (self.0 >> unit) & 1 == 1
+    }
+}
+
+/// Operand-chunk descriptors: (bit offset, width) for A0..A2 / B0..B2.
+const CHUNKS: [(u32, u32); 3] = [(0, 3), (3, 3), (6, 2)];
+
+/// The unit layout: unit index -> (a_chunk, b_chunk).
+pub const UNIT_LAYOUT: [(usize, usize); 9] = [
+    (0, 0), // M0
+    (1, 0), // M1
+    (2, 0), // M2
+    (0, 1), // M3
+    (1, 1), // M4
+    (2, 1), // M5
+    (0, 2), // M6
+    (1, 2), // M7
+    (2, 2), // M8
+];
+
+/// An aggregated 8×8 multiplier built from a 3×3 design and a 2×2 design.
+pub struct Aggregated8x8 {
+    name: String,
+    m3: Box<dyn Multiplier>,
+    m2: Box<dyn Multiplier>,
+    units: UnitMask,
+}
+
+impl Aggregated8x8 {
+    pub fn new(
+        name: &str,
+        m3: Box<dyn Multiplier>,
+        m2: Box<dyn Multiplier>,
+        units: UnitMask,
+    ) -> Self {
+        assert_eq!((m3.a_bits(), m3.b_bits()), (3, 3), "M0-M7 must be 3x3");
+        assert_eq!((m2.a_bits(), m2.b_bits()), (2, 2), "M8 must be 2x2");
+        Self {
+            name: name.to_string(),
+            m3,
+            m2,
+            units,
+        }
+    }
+
+    fn chunk(x: u32, c: usize) -> u32 {
+        let (off, w) = CHUNKS[c];
+        (x >> off) & ((1 << w) - 1)
+    }
+
+    /// The shift applied to unit `u`'s product.
+    pub fn unit_shift(u: usize) -> u32 {
+        let (ca, cb) = UNIT_LAYOUT[u];
+        CHUNKS[ca].0 + CHUNKS[cb].0
+    }
+}
+
+impl Multiplier for Aggregated8x8 {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn a_bits(&self) -> usize {
+        8
+    }
+    fn b_bits(&self) -> usize {
+        8
+    }
+    fn mul(&self, a: u32, b: u32) -> u32 {
+        debug_assert!(a < 256 && b < 256);
+        let mut acc = 0u32;
+        for (u, &(ca, cb)) in UNIT_LAYOUT.iter().enumerate() {
+            if !self.units.contains(u) {
+                continue;
+            }
+            let xa = Self::chunk(a, ca);
+            let xb = Self::chunk(b, cb);
+            let p = if u == 8 {
+                self.m2.mul(xa, xb)
+            } else {
+                // zero-extended operands through the 3×3 unit
+                self.m3.mul(xa, xb)
+            };
+            acc += p << Self::unit_shift(u);
+        }
+        // Architectural width is 16 bits; approximate designs cannot
+        // overflow it (each unit's product fits its allotted columns).
+        acc & 0xFFFF
+    }
+    fn netlist(&self) -> Option<Netlist> {
+        let m3 = self.m3.netlist()?;
+        let m2 = self.m2.netlist()?;
+        let mut nl = Netlist::new(&self.name, 16);
+        let zero = nl.constant(false);
+        // input bit helpers: a = inputs 0..8, b = inputs 8..16
+        let a_bit = |i: u32| SignalRef(i);
+        let b_bit = |i: u32| SignalRef(8 + i);
+
+        let mut columns: Vec<Vec<SignalRef>> = vec![Vec::new(); 16];
+        for (u, &(ca, cb)) in UNIT_LAYOUT.iter().enumerate() {
+            if !self.units.contains(u) {
+                continue;
+            }
+            let (a_off, a_w) = CHUNKS[ca];
+            let (b_off, b_w) = CHUNKS[cb];
+            let outs = if u == 8 {
+                let ins: Vec<SignalRef> = (0..2)
+                    .map(|k| a_bit(a_off + k))
+                    .chain((0..2).map(|k| b_bit(b_off + k)))
+                    .collect();
+                nl.inline(&m2, &ins)
+            } else {
+                // zero-extend 2-bit chunks to 3 bits
+                let ins: Vec<SignalRef> = (0..3)
+                    .map(|k| if k < a_w { a_bit(a_off + k) } else { zero })
+                    .chain((0..3).map(|k| if k < b_w { b_bit(b_off + k) } else { zero }))
+                    .collect();
+                nl.inline(&m3, &ins)
+            };
+            let shift = Self::unit_shift(u) as usize;
+            for (k, &o) in outs.iter().enumerate() {
+                if shift + k < 16 {
+                    columns[shift + k].push(o);
+                }
+            }
+        }
+        let outs = wallace_reduce(&mut nl, columns, 16);
+        nl.set_outputs(outs);
+        Some(nl)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mult::exact::ExactMul;
+    use crate::mult::mul2x2::Exact2x2;
+
+    fn exact_aggregate(units: UnitMask) -> Aggregated8x8 {
+        Aggregated8x8::new(
+            "agg_exact",
+            Box::new(ExactMul::new(3, 3)),
+            Box::new(Exact2x2),
+            units,
+        )
+    }
+
+    #[test]
+    fn exact_components_give_exact_8x8() {
+        // Aggregating exact units must reproduce exact multiplication —
+        // the structural identity behind Fig. 1.
+        let m = exact_aggregate(UnitMask::ALL);
+        for a in (0..256).step_by(7) {
+            for b in 0..256 {
+                assert_eq!(m.mul(a, b), a * b, "a={a} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn exact_aggregate_netlist_consistent() {
+        assert_eq!(exact_aggregate(UnitMask::ALL).verify_netlist(), Some(0));
+    }
+
+    #[test]
+    fn unit_shifts() {
+        assert_eq!(Aggregated8x8::unit_shift(0), 0);
+        assert_eq!(Aggregated8x8::unit_shift(1), 3);
+        assert_eq!(Aggregated8x8::unit_shift(2), 6);
+        assert_eq!(Aggregated8x8::unit_shift(4), 6);
+        assert_eq!(Aggregated8x8::unit_shift(5), 9);
+        assert_eq!(Aggregated8x8::unit_shift(8), 12);
+    }
+
+    #[test]
+    fn dropping_m2_loses_high_a_low_b_term() {
+        let m = exact_aggregate(UnitMask::ALL.without(2));
+        // A[7:6] = 0 -> no error at all.
+        for a in 0..64u32 {
+            assert_eq!(m.mul(a, 255), a * 255);
+        }
+        // A[7:6] != 0 -> missing A2*B0 << 6 term exactly.
+        let (a, b) = (0xFF, 0x07);
+        let a2 = a >> 6;
+        let b0 = b & 7;
+        assert_eq!(m.mul(a, b), a * b - ((a2 * b0) << 6));
+    }
+
+    #[test]
+    fn dropped_unit_netlist_matches_behaviour() {
+        let m = exact_aggregate(UnitMask::ALL.without(2));
+        assert_eq!(m.verify_netlist(), Some(0));
+    }
+
+    #[test]
+    fn mixed_units_never_approximate() {
+        // With one operand zero-extended from 2 bits, the product ≤ 21 < 32,
+        // so the approximate overrides (needing both ≥ 5) cannot trigger.
+        use crate::mult::mul3x3::Mul3x3V2;
+        let m3 = Mul3x3V2;
+        for a in 0..4u32 {
+            for b in 0..8u32 {
+                assert_eq!(m3.mul(a, b), a * b, "2x3 path must stay exact");
+                assert_eq!(m3.mul(b, a), a * b, "3x2 path must stay exact");
+            }
+        }
+    }
+}

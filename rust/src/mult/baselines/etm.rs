@@ -1,0 +1,138 @@
+//! ETM — error-tolerant multiplier (Kyaw et al. [9], as compared in [12]).
+//!
+//! The operands are split into an h-bit MSB *multiplication part* and an
+//! h-bit LSB *non-multiplication part*.  If either operand's MSB part is
+//! non-zero, only the MSB parts are multiplied (shifted into place) and
+//! every lower product bit is forced to 1 (the static correction that
+//! gives the design its name); otherwise the LSB parts are multiplied
+//! exactly.  Cheap, but with ER ≈ 98.9% at 8×8 — the paper keeps it in
+//! Table V and then drops it from the DNN comparison for being too weak.
+
+use crate::logic::{GateKind, Netlist, SignalRef};
+use crate::mult::exact::wallace_multiplier_netlist;
+use crate::mult::traits::Multiplier;
+
+#[derive(Clone, Debug)]
+pub struct Etm {
+    name: String,
+    bits: usize,
+}
+
+impl Etm {
+    pub fn new(bits: usize) -> Self {
+        assert!(bits >= 2 && bits % 2 == 0);
+        Self {
+            name: format!("etm{bits}x{bits}"),
+            bits,
+        }
+    }
+
+    fn h(&self) -> usize {
+        self.bits / 2
+    }
+}
+
+impl Multiplier for Etm {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn a_bits(&self) -> usize {
+        self.bits
+    }
+    fn b_bits(&self) -> usize {
+        self.bits
+    }
+    fn mul(&self, a: u32, b: u32) -> u32 {
+        let h = self.h();
+        let mask = (1u32 << h) - 1;
+        let (al, ah) = (a & mask, a >> h);
+        let (bl, bh) = (b & mask, b >> h);
+        if ah == 0 && bh == 0 {
+            al * bl
+        } else {
+            // MSB multiplication part + all-ones LSB correction.
+            ((ah * bh) << (2 * h)) | ((1u32 << (2 * h)) - 1)
+        }
+    }
+    fn netlist(&self) -> Option<Netlist> {
+        let h = self.h();
+        let mut nl = Netlist::new(&self.name, 2 * self.bits);
+        let a: Vec<SignalRef> = (0..self.bits).map(|i| nl.input(i)).collect();
+        let b: Vec<SignalRef> = (self.bits..2 * self.bits).map(|i| nl.input(i)).collect();
+
+        // sel = OR of all MSB bits of both operands.
+        let mut sel = nl.or2(a[h], b[h]);
+        for &s in a[h + 1..].iter().chain(b[h + 1..].iter()) {
+            sel = nl.or2(sel, s);
+        }
+
+        // LSB exact h×h product (used when sel = 0).
+        let lsb_mul = wallace_multiplier_netlist(h, h);
+        let lsb_ins: Vec<SignalRef> = a[..h].iter().chain(b[..h].iter()).copied().collect();
+        let lsb_out = nl.inline(&lsb_mul, &lsb_ins);
+
+        // MSB exact h×h product (used when sel = 1, shifted by 2h).
+        let msb_mul = wallace_multiplier_netlist(h, h);
+        let msb_ins: Vec<SignalRef> = a[h..].iter().chain(b[h..].iter()).copied().collect();
+        let msb_out = nl.inline(&msb_mul, &msb_ins);
+
+        let mut outs = Vec::with_capacity(2 * self.bits);
+        for k in 0..2 * h {
+            // low half: sel ? 1 : lsb_out[k]
+            let one = nl.constant(true);
+            let o = nl.gate(GateKind::Mux, vec![sel, one, lsb_out[k]]);
+            outs.push(o);
+        }
+        for k in 0..2 * h {
+            // high half: sel ? msb_out[k] : 0
+            let o = nl.and2(sel, msb_out[k]);
+            outs.push(o);
+        }
+        nl.set_outputs(outs);
+        Some(nl)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_operands_exact() {
+        let m = Etm::new(8);
+        for a in 0..16 {
+            for b in 0..16 {
+                assert_eq!(m.mul(a, b), a * b);
+            }
+        }
+    }
+
+    #[test]
+    fn large_operands_truncate() {
+        let m = Etm::new(8);
+        // a = 0x34, b = 0x12: ah=3, bh=1 -> (3*1)<<8 | 0xFF = 0x3FF.
+        assert_eq!(m.mul(0x34, 0x12), (3 << 8) | 0xFF);
+    }
+
+    #[test]
+    fn error_rate_is_terrible() {
+        // Table V: ER 98.88% — nearly every non-trivial input errs.
+        let m = Etm::new(8);
+        let mut errs = 0u32;
+        for a in 0..256u32 {
+            for b in 0..256u32 {
+                if m.mul(a, b) != a * b {
+                    errs += 1;
+                }
+            }
+        }
+        let er = errs as f64 / 65536.0 * 100.0;
+        assert!(er > 90.0, "ER {er}");
+    }
+
+    #[test]
+    fn netlist_consistent() {
+        assert_eq!(Etm::new(4).verify_netlist(), Some(0));
+        assert_eq!(Etm::new(8).verify_netlist(), Some(0));
+    }
+}

@@ -1,0 +1,102 @@
+//! Mitchell's logarithmic multiplier [3] — the 1962 algebraic classic the
+//! paper's related-work section opens with.
+//!
+//! `log2(1+m) ≈ m` for mantissa m ∈ [0,1):  a·b ≈ 2^(ka+kb)·(1+ma+mb)
+//! when ma+mb < 1, else 2^(ka+kb+1)·(ma+mb).  Fixed-point behavioural
+//! model with `frac_bits` of mantissa precision.
+
+use crate::mult::traits::Multiplier;
+
+#[derive(Clone, Debug)]
+pub struct Mitchell {
+    name: String,
+    bits: usize,
+    frac_bits: u32,
+}
+
+impl Mitchell {
+    pub fn new(bits: usize) -> Self {
+        Self {
+            name: format!("mitchell{bits}x{bits}"),
+            bits,
+            frac_bits: 16,
+        }
+    }
+
+    /// Fixed-point `log2` approximation: characteristic + linear mantissa.
+    fn log2_fx(&self, x: u32) -> u64 {
+        debug_assert!(x > 0);
+        let k = 31 - x.leading_zeros();
+        // mantissa = (x - 2^k) / 2^k, in frac_bits fixed point
+        let m = ((x as u64 - (1u64 << k)) << self.frac_bits) >> k;
+        ((k as u64) << self.frac_bits) | m
+    }
+
+    /// Fixed-point `2^y` approximation (inverse of the above).
+    fn exp2_fx(&self, y: u64) -> u64 {
+        let k = y >> self.frac_bits;
+        let m = y & ((1u64 << self.frac_bits) - 1);
+        // 2^(k+m) ≈ 2^k * (1 + m)
+        ((1u64 << self.frac_bits) + m) << k >> self.frac_bits
+    }
+}
+
+impl Multiplier for Mitchell {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn a_bits(&self) -> usize {
+        self.bits
+    }
+    fn b_bits(&self) -> usize {
+        self.bits
+    }
+    fn mul(&self, a: u32, b: u32) -> u32 {
+        if a == 0 || b == 0 {
+            return 0;
+        }
+        let sum = self.log2_fx(a) + self.log2_fx(b);
+        self.exp2_fx(sum) as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_for_powers_of_two() {
+        let m = Mitchell::new(8);
+        for i in 0..8u32 {
+            for j in 0..8u32 {
+                assert_eq!(m.mul(1 << i, 1 << j), 1 << (i + j));
+            }
+        }
+    }
+
+    #[test]
+    fn zero_short_circuit() {
+        let m = Mitchell::new(8);
+        assert_eq!(m.mul(0, 200), 0);
+        assert_eq!(m.mul(200, 0), 0);
+    }
+
+    #[test]
+    fn mitchell_error_bound() {
+        // Mitchell's classic worst-case relative error is ~11.1% (under-
+        // estimation only).
+        let m = Mitchell::new(8);
+        for a in 1..256u32 {
+            for b in 1..256u32 {
+                let exact = (a * b) as f64;
+                let approx = m.mul(a, b) as f64;
+                assert!(approx <= exact * 1.001, "never overestimates: {a}x{b}");
+                assert!(
+                    (exact - approx) / exact < 0.115,
+                    "a={a} b={b} rel={}",
+                    (exact - approx) / exact
+                );
+            }
+        }
+    }
+}

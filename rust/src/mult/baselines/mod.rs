@@ -1,0 +1,17 @@
+//! Reimplementations of the approximate multipliers the paper compares
+//! against (Tables V, VII, VIII), plus two related-work designs (RoBA,
+//! Mitchell) used as extra baselines in our sweeps.
+
+pub mod etm;
+pub mod mitchell;
+pub mod pkm;
+pub mod roba;
+pub mod siei;
+pub mod sv_booth;
+
+pub use etm::Etm;
+pub use mitchell::Mitchell;
+pub use pkm::Pkm;
+pub use roba::Roba;
+pub use siei::SiEi;
+pub use sv_booth::SvBooth;

@@ -1,0 +1,115 @@
+//! RoBA — rounding-based approximate multiplier (Zendegani et al. [8]).
+//!
+//! Each operand is rounded to its nearest power of two (`ar`, `br`); the
+//! product is computed as `ar·b + a·br − ar·br`, which turns the
+//! multiplication into shifts and adds.  High speed, but a relatively
+//! high error rate — the paper cites it as the classic
+//! speed-vs-accuracy trade-off.  Behavioural-only (the paper does not
+//! synthesize it), used as an extra baseline in our metric sweeps.
+
+use crate::mult::traits::Multiplier;
+
+#[derive(Clone, Debug)]
+pub struct Roba {
+    name: String,
+    bits: usize,
+}
+
+impl Roba {
+    pub fn new(bits: usize) -> Self {
+        Self {
+            name: format!("roba{bits}x{bits}"),
+            bits,
+        }
+    }
+
+    /// Round to the nearest power of two (ties to the larger, per [8]).
+    pub fn round_pow2(x: u32) -> u32 {
+        if x == 0 {
+            return 0;
+        }
+        let msb = 31 - x.leading_zeros();
+        let lower = 1u32 << msb;
+        if msb == 0 {
+            return lower;
+        }
+        let upper = lower << 1;
+        // Nearest: compare x against the midpoint 1.5 * lower.
+        if (x as u64) * 2 >= 3 * (lower as u64) {
+            upper
+        } else {
+            lower
+        }
+    }
+}
+
+impl Multiplier for Roba {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn a_bits(&self) -> usize {
+        self.bits
+    }
+    fn b_bits(&self) -> usize {
+        self.bits
+    }
+    fn mul(&self, a: u32, b: u32) -> u32 {
+        let ar = Self::round_pow2(a) as u64;
+        let br = Self::round_pow2(b) as u64;
+        let (a, b) = (a as u64, b as u64);
+        // ar*b + a*br - ar*br  (shift-add only in hardware)
+        let v = ar * b + a * br;
+        let v = v.saturating_sub(ar * br);
+        v.min((1u64 << (2 * self.bits)) - 1) as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_pow2_values() {
+        assert_eq!(Roba::round_pow2(0), 0);
+        assert_eq!(Roba::round_pow2(1), 1);
+        assert_eq!(Roba::round_pow2(2), 2);
+        assert_eq!(Roba::round_pow2(3), 4); // tie 3 -> 4 (nearest up)
+        assert_eq!(Roba::round_pow2(5), 4);
+        assert_eq!(Roba::round_pow2(6), 8); // midpoint ties up
+        assert_eq!(Roba::round_pow2(11), 8);
+        assert_eq!(Roba::round_pow2(12), 16);
+        assert_eq!(Roba::round_pow2(255), 256);
+    }
+
+    #[test]
+    fn exact_for_powers_of_two() {
+        let m = Roba::new(8);
+        for i in 0..8 {
+            for b in 0..256u32 {
+                assert_eq!(m.mul(1 << i, b), (1 << i) * b);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_operand() {
+        let m = Roba::new(8);
+        for x in 0..256 {
+            assert_eq!(m.mul(0, x), 0);
+            assert_eq!(m.mul(x, 0), 0);
+        }
+    }
+
+    #[test]
+    fn relative_error_bounded() {
+        // [8] proves |error| <= ~11.1% of the exact product.
+        let m = Roba::new(8);
+        for a in 1..256u32 {
+            for b in 1..256u32 {
+                let exact = (a * b) as f64;
+                let err = (m.mul(a, b) as f64 - exact).abs() / exact;
+                assert!(err < 0.12, "a={a} b={b} err={err}");
+            }
+        }
+    }
+}

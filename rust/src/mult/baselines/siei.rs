@@ -1,0 +1,230 @@
+//! SiEi — Liu/Han/Lombardi approximate multiplier with configurable
+//! partial error recovery [7].
+//!
+//! The design replaces the carry-propagating adders of the partial-
+//! product tree with *approximate adders* that compute, per bit,
+//! `sum = a OR b` and emit `error = a AND b` on a separate rail; the
+//! error rails of the top `recovery` columns are added back (that is the
+//! "partial error recovery").  Errors are single-sided (the OR over-
+//! estimates never, underestimates when both bits are 1 — the missed
+//! carry), which is exactly why its DNN accuracy collapses in Table VIII
+//! while its NMED in Table V still looks respectable: the error is
+//! *biased*, and convolution sums accumulate the bias.
+
+use crate::logic::{Netlist, SignalRef};
+use crate::mult::reduce::wallace_reduce;
+use crate::mult::traits::Multiplier;
+
+#[derive(Clone, Debug)]
+pub struct SiEi {
+    name: String,
+    bits: usize,
+    /// Number of MSB columns whose error signals are recovered.
+    pub recovery: usize,
+}
+
+impl SiEi {
+    pub fn new(bits: usize, recovery: usize) -> Self {
+        assert!(recovery <= 2 * bits);
+        Self {
+            name: format!("siei{bits}x{bits}r{recovery}"),
+            bits,
+            recovery,
+        }
+    }
+
+    /// Default configuration used in the paper's comparison (8×8).
+    pub fn default8() -> Self {
+        Self::new(8, 8)
+    }
+
+    /// Behavioural model of one approximate accumulation: OR-reduce two
+    /// operands, collecting AND (missed carries) as the error word.
+    fn approx_add(x: u32, y: u32) -> (u32, u32) {
+        (x | y, x & y)
+    }
+}
+
+impl Multiplier for SiEi {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn a_bits(&self) -> usize {
+        self.bits
+    }
+    fn b_bits(&self) -> usize {
+        self.bits
+    }
+    fn mul(&self, a: u32, b: u32) -> u32 {
+        // Partial products.
+        let mut rows: Vec<u32> = (0..self.bits)
+            .map(|j| if (b >> j) & 1 == 1 { a << j } else { 0 })
+            .collect();
+        // Approximate binary reduction tree with error collection.
+        let mut errors: Vec<u32> = Vec::new();
+        while rows.len() > 1 {
+            let mut next = Vec::with_capacity(rows.len().div_ceil(2));
+            let mut it = rows.into_iter();
+            while let Some(x) = it.next() {
+                match it.next() {
+                    Some(y) => {
+                        let (s, e) = Self::approx_add(x, y);
+                        next.push(s);
+                        errors.push(e);
+                    }
+                    None => next.push(x),
+                }
+            }
+            rows = next;
+        }
+        let approx = rows[0];
+        // Partial error recovery: add back error words restricted to the
+        // top `recovery` columns.  Identity: x + y = (x|y) + (x&y), so a
+        // missed bit at column k is worth exactly 2^k.
+        let width = 2 * self.bits;
+        let lo_cut = width.saturating_sub(self.recovery);
+        let mask = if lo_cut >= 32 { 0 } else { !0u32 << lo_cut };
+        let mut result = approx as u64;
+        for e in errors {
+            result += (e & mask) as u64;
+        }
+        (result as u32) & ((1u64 << width) - 1) as u32
+    }
+    fn netlist(&self) -> Option<Netlist> {
+        // Structural model: OR-based compression of partial products plus
+        // an exact Wallace add of the recovered (masked) error rows.
+        let mut nl = Netlist::new(&self.name, 2 * self.bits);
+        let width = 2 * self.bits;
+        let lo_cut = width.saturating_sub(self.recovery);
+
+        // rows[r][k] = signal at column k (absolute) of row r
+        let mut rows: Vec<Vec<Option<SignalRef>>> = Vec::new();
+        for j in 0..self.bits {
+            let mut row: Vec<Option<SignalRef>> = vec![None; width];
+            for i in 0..self.bits {
+                let ai = nl.input(i);
+                let bj = nl.input(self.bits + j);
+                row[i + j] = Some(nl.and2(ai, bj));
+            }
+            rows.push(row);
+        }
+        let mut recovered: Vec<Vec<SignalRef>> = vec![Vec::new(); width];
+        while rows.len() > 1 {
+            let mut next = Vec::with_capacity(rows.len().div_ceil(2));
+            let mut it = rows.into_iter();
+            while let Some(x) = it.next() {
+                match it.next() {
+                    Some(y) => {
+                        let mut s_row: Vec<Option<SignalRef>> = vec![None; width];
+                        for k in 0..width {
+                            match (x[k], y[k]) {
+                                (Some(p), Some(q)) => {
+                                    s_row[k] = Some(nl.or2(p, q));
+                                    if k >= lo_cut {
+                                        // x + y = (x|y) + (x&y): recover the
+                                        // AND word at the same column weight.
+                                        let e = nl.and2(p, q);
+                                        recovered[k].push(e);
+                                    }
+                                }
+                                (Some(p), None) | (None, Some(p)) => s_row[k] = Some(p),
+                                (None, None) => {}
+                            }
+                        }
+                        next.push(s_row);
+                    }
+                    None => next.push(x),
+                }
+            }
+            rows = next;
+        }
+        // Final exact add of [approx row] + [recovered error columns].
+        let mut columns: Vec<Vec<SignalRef>> = vec![Vec::new(); width];
+        for (k, col) in columns.iter_mut().enumerate() {
+            if let Some(s) = rows[0][k] {
+                col.push(s);
+            }
+            col.extend(recovered[k].iter().copied());
+        }
+        let outs = wallace_reduce(&mut nl, columns, width);
+        nl.set_outputs(outs);
+        Some(nl)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_and_one_exact() {
+        let m = SiEi::default8();
+        for x in 0..256 {
+            assert_eq!(m.mul(0, x), 0);
+            assert_eq!(m.mul(1, x), x);
+            assert_eq!(m.mul(x, 1), x);
+        }
+    }
+
+    #[test]
+    fn powers_of_two_exact() {
+        // Single partial product -> no compression error.
+        let m = SiEi::default8();
+        for k in 0..8 {
+            for x in 0..256u32 {
+                let v = m.mul(x, 1 << k);
+                assert_eq!(v, x << k, "x={x} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn underestimates_without_recovery() {
+        // With recovery = 0 the OR-compression only loses carries.
+        let m = SiEi::new(8, 0);
+        for a in (0..256u32).step_by(3) {
+            for b in (0..256u32).step_by(7) {
+                assert!(m.mul(a, b) <= a.wrapping_mul(b).max(a * b));
+            }
+        }
+    }
+
+    #[test]
+    fn recovery_reduces_error() {
+        let none = SiEi::new(8, 0);
+        let full = SiEi::new(8, 16);
+        let mut ed_none = 0u64;
+        let mut ed_full = 0u64;
+        for a in (0..256u32).step_by(3) {
+            for b in 0..256u32 {
+                ed_none += (none.mul(a, b) as i64 - (a * b) as i64).unsigned_abs();
+                ed_full += (full.mul(a, b) as i64 - (a * b) as i64).unsigned_abs();
+            }
+        }
+        assert!(ed_full < ed_none, "recovery must help: {ed_full} vs {ed_none}");
+    }
+
+    #[test]
+    fn error_bias_is_negative() {
+        // The paper's DNN results hinge on SiEi's biased error: the mean
+        // signed error must be clearly negative (lost carries).
+        let m = SiEi::default8();
+        let mut signed = 0i64;
+        for a in 0..256u32 {
+            for b in 0..256u32 {
+                signed += m.mul(a, b) as i64 - (a * b) as i64;
+            }
+        }
+        assert!(signed < 0, "bias {signed}");
+    }
+
+    #[test]
+    fn netlist_consistent() {
+        assert_eq!(SiEi::new(4, 4).verify_netlist(), Some(0));
+    }
+
+    #[test]
+    fn netlist_consistent_8x8() {
+        assert_eq!(SiEi::default8().verify_netlist(), Some(0));
+    }
+}

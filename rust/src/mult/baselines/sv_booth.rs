@@ -1,0 +1,149 @@
+//! SV — approximate radix-4 Booth multiplier (Venkatachalam/Lee/Ko [21]).
+//!
+//! Radix-4 Booth recoding of B, with the `t` least-significant partial-
+//! product columns replaced by a constant compensation term instead of
+//! being computed ([21]'s truncation with error compensation).  Table V
+//! of the paper quotes only NMED/MRED for this design, which is what we
+//! reproduce; the DNN platform treats its 8-bit unsigned operands by
+//! zero-extending into the 9-bit signed Booth domain.
+
+use crate::mult::traits::Multiplier;
+
+#[derive(Clone, Debug)]
+pub struct SvBooth {
+    name: String,
+    bits: usize,
+    /// number of truncated low columns
+    pub trunc: usize,
+}
+
+impl SvBooth {
+    pub fn new(bits: usize, trunc: usize) -> Self {
+        Self {
+            name: format!("sv_booth{bits}x{bits}t{trunc}"),
+            bits,
+            trunc,
+        }
+    }
+
+    pub fn default8() -> Self {
+        Self::new(8, 4)
+    }
+
+    /// Radix-4 Booth digits of the (zero-extended, unsigned) multiplier.
+    fn booth_digits(&self, b: u32) -> Vec<i32> {
+        // digits over bits (b[2i+1], b[2i], b[2i-1]), b[-1] = 0
+        let n_digits = self.bits / 2 + 1;
+        (0..n_digits)
+            .map(|i| {
+                let idx = 2 * i as i32;
+                let bit = |k: i32| -> i32 {
+                    if k < 0 || k as usize >= self.bits + 1 {
+                        0
+                    } else {
+                        ((b >> k) & 1) as i32
+                    }
+                };
+                -2 * bit(idx + 1) + bit(idx) + bit(idx - 1)
+            })
+            .collect()
+    }
+}
+
+impl Multiplier for SvBooth {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn a_bits(&self) -> usize {
+        self.bits
+    }
+    fn b_bits(&self) -> usize {
+        self.bits
+    }
+    fn mul(&self, a: u32, b: u32) -> u32 {
+        let digits = self.booth_digits(b);
+        let mut acc: i64 = 0;
+        let trunc_mask: i64 = !((1i64 << self.trunc) - 1);
+        for (i, &d) in digits.iter().enumerate() {
+            let pp = d as i64 * a as i64; // exact row
+            let shifted = pp << (2 * i);
+            // truncate low columns of each row (approximate part)
+            acc += shifted & trunc_mask;
+        }
+        // constant compensation: half of the truncated columns' expected mass
+        acc += (1i64 << self.trunc) >> 1;
+        acc = acc.clamp(0, (1i64 << (2 * self.bits)) - 1);
+        acc as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn booth_digits_recode_correctly() {
+        // Σ digit_i * 4^i must equal b for every b.
+        let m = SvBooth::new(8, 0);
+        for b in 0..256u32 {
+            let total: i64 = m
+                .booth_digits(b)
+                .iter()
+                .enumerate()
+                .map(|(i, &d)| d as i64 * (1i64 << (2 * i)))
+                .sum();
+            assert_eq!(total, b as i64, "b={b}");
+        }
+    }
+
+    #[test]
+    fn no_truncation_is_near_exact() {
+        let m = SvBooth::new(8, 0);
+        for a in 0..256u32 {
+            for b in (0..256u32).step_by(3) {
+                // With trunc=0 the only deviation is the +0 compensation.
+                assert_eq!(m.mul(a, b), a * b, "a={a} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn truncation_bounds_error() {
+        let m = SvBooth::default8();
+        let worst: i64 = m
+            .booth_digits(255)
+            .len() as i64
+            * ((1i64 << m.trunc) - 1);
+        for a in (0..256u32).step_by(5) {
+            for b in 0..256u32 {
+                let err = (m.mul(a, b) as i64 - (a * b) as i64).abs();
+                assert!(err <= worst, "a={a} b={b} err={err}");
+            }
+        }
+    }
+
+    #[test]
+    fn mred_moderate() {
+        // Table V: SV has small NMED (0.35%) but larger MRED (6.75%) —
+        // check the qualitative signature: relative error worse than
+        // absolute error would suggest (truncation hits small products).
+        let m = SvBooth::default8();
+        let mut med = 0f64;
+        let mut mred = 0f64;
+        let mut n = 0u32;
+        for a in 1..256u32 {
+            for b in 1..256u32 {
+                let exact = (a * b) as f64;
+                let ed = (m.mul(a, b) as f64 - exact).abs();
+                med += ed;
+                mred += ed / exact;
+                n += 1;
+            }
+        }
+        med /= n as f64;
+        mred /= n as f64;
+        let nmed = med / (255.0 * 255.0);
+        assert!(nmed < 0.01, "NMED {nmed}");
+        assert!(mred > nmed, "MRED {mred} should exceed NMED {nmed}");
+    }
+}

@@ -1,0 +1,20 @@
+//! Multiplier designs: the paper's contribution (`mul3x3`, `aggregate`,
+//! `mul8x8`) plus the exact references and all comparison baselines.
+
+pub mod aggregate;
+pub mod baselines;
+pub mod exact;
+pub mod mul2x2;
+pub mod mul3x3;
+pub mod mul8x8;
+pub mod reduce;
+pub mod registry;
+pub mod traits;
+
+pub use aggregate::{Aggregated8x8, UnitMask};
+pub use exact::{wallace_multiplier_netlist, ExactMul};
+pub use mul2x2::{Exact2x2, Kulkarni2x2};
+pub use mul3x3::{Mul3x3V1, Mul3x3V2};
+pub use mul8x8::{mul8x8_1, mul8x8_2, mul8x8_3};
+pub use registry::{all_names, by_name, DESIGNS_8X8, DNN_DESIGNS};
+pub use traits::Multiplier;

@@ -1,0 +1,141 @@
+//! 2×2 multipliers: the exact cell used as M8 in the paper's aggregation
+//! (Table IV) and the Kulkarni approximate cell [10] that PKM builds on.
+
+use super::traits::Multiplier;
+use crate::logic::Netlist;
+
+/// Exact 2×2 multiplier with the standard 4-gate direct-form netlist:
+/// p0 = a0·b0, p1 = a1·b0 ⊕ a0·b1, p2 = a1·b1 ⊕ carry, p3 = carry-of-p2…
+/// (we build it straightforwardly from half adders).
+#[derive(Clone, Debug, Default)]
+pub struct Exact2x2;
+
+impl Multiplier for Exact2x2 {
+    fn name(&self) -> &str {
+        "exact2x2"
+    }
+    fn a_bits(&self) -> usize {
+        2
+    }
+    fn b_bits(&self) -> usize {
+        2
+    }
+    fn mul(&self, a: u32, b: u32) -> u32 {
+        debug_assert!(a < 4 && b < 4);
+        a * b
+    }
+    fn netlist(&self) -> Option<Netlist> {
+        let mut nl = Netlist::new("exact2x2", 4);
+        let (a0, a1, b0, b1) = (nl.input(0), nl.input(1), nl.input(2), nl.input(3));
+        let p00 = nl.and2(a0, b0);
+        let p10 = nl.and2(a1, b0);
+        let p01 = nl.and2(a0, b1);
+        let p11 = nl.and2(a1, b1);
+        let (o1, c1) = nl.half_adder(p10, p01);
+        let (o2, o3) = nl.half_adder(p11, c1);
+        nl.set_outputs(vec![p00, o1, o2, o3]);
+        Some(nl)
+    }
+}
+
+/// Kulkarni underdesigned 2×2 cell [10]: 3×3 ↦ 7 (0b111) instead of 9,
+/// which drops the O3 rail entirely — the cell needs only a handful of
+/// gates.  Used by the PKM baseline; ER = 1/16, MED = 2/16.
+#[derive(Clone, Debug, Default)]
+pub struct Kulkarni2x2;
+
+impl Multiplier for Kulkarni2x2 {
+    fn name(&self) -> &str {
+        "kulkarni2x2"
+    }
+    fn a_bits(&self) -> usize {
+        2
+    }
+    fn b_bits(&self) -> usize {
+        2
+    }
+    fn mul(&self, a: u32, b: u32) -> u32 {
+        debug_assert!(a < 4 && b < 4);
+        if a == 3 && b == 3 {
+            7
+        } else {
+            a * b
+        }
+    }
+    fn netlist(&self) -> Option<Netlist> {
+        // Kulkarni's published 3-output implementation:
+        //   O0 = a0·b0
+        //   O1 = (a1·b0) + (a0·b1)   [OR instead of XOR — safe because the
+        //        only double-carry case (3×3) is the approximated one]
+        //   O2 = a1·b1·(a0'+b0')  … but the standard form is:
+        //   O2 = a1·b1 with the 3×3 case folded; we realize the exact
+        //   published truth table via direct gates.
+        let mut nl = Netlist::new("kulkarni2x2", 4);
+        let (a0, a1, b0, b1) = (nl.input(0), nl.input(1), nl.input(2), nl.input(3));
+        let p00 = nl.and2(a0, b0);
+        let p10 = nl.and2(a1, b0);
+        let p01 = nl.and2(a0, b1);
+        let p11 = nl.and2(a1, b1);
+        let o1 = nl.or2(p10, p01);
+        // O2 = a1·b1 · !(a0·b0)  -> 2 for 2x3/3x2, but 3x3 gives O2=1? No:
+        // 3x3 = 0b111 needs O2=1, O1=1, O0=1. a1b1=1, a0b0=1 -> O2 must be 1.
+        // Truth: O2 = p11 (3x3 -> 1, giving 4+2+1 = 7). Exact cases:
+        // 2x2=4: p11=1, o1=0, p00=0 -> 4 ok. 2x3=6: p11=1, o1=1, p00=0 -> 6 ok.
+        nl.set_outputs(vec![p00, o1, p11]);
+        Some(nl)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_behaviour() {
+        for a in 0..4 {
+            for b in 0..4 {
+                assert_eq!(Exact2x2.mul(a, b), a * b);
+            }
+        }
+    }
+
+    #[test]
+    fn exact_netlist_consistent() {
+        assert_eq!(Exact2x2.verify_netlist(), Some(0));
+    }
+
+    #[test]
+    fn kulkarni_only_error_is_3x3() {
+        for a in 0..4 {
+            for b in 0..4 {
+                let v = Kulkarni2x2.mul(a, b);
+                if a == 3 && b == 3 {
+                    assert_eq!(v, 7);
+                } else {
+                    assert_eq!(v, a * b);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kulkarni_netlist_consistent() {
+        assert_eq!(Kulkarni2x2.verify_netlist(), Some(0));
+    }
+
+    #[test]
+    fn kulkarni_fits_three_bits() {
+        for a in 0..4 {
+            for b in 0..4 {
+                assert!(Kulkarni2x2.mul(a, b) <= 7);
+            }
+        }
+    }
+
+    #[test]
+    fn kulkarni_smaller_than_exact() {
+        let k = Kulkarni2x2.netlist().unwrap().num_gates();
+        let e = Exact2x2.netlist().unwrap().num_gates();
+        assert!(k < e, "kulkarni {k} vs exact {e}");
+    }
+}

@@ -1,0 +1,166 @@
+//! The paper's three approximate 8×8 multipliers (Table IV).
+//!
+//! | name      | M0–M7     | M8       | extra |
+//! |-----------|-----------|----------|-------|
+//! | MUL8x8_1  | MUL3x3_1  | exact2x2 |       |
+//! | MUL8x8_2  | MUL3x3_2  | exact2x2 |       |
+//! | MUL8x8_3  | MUL3x3_2  | exact2x2 | M2 + shifter removed |
+
+use super::aggregate::{Aggregated8x8, UnitMask};
+use super::mul2x2::Exact2x2;
+use super::mul3x3::{Mul3x3V1, Mul3x3V2};
+#[cfg(test)]
+use super::traits::Multiplier as _;
+
+pub fn mul8x8_1() -> Aggregated8x8 {
+    Aggregated8x8::new(
+        "mul8x8_1",
+        Box::new(Mul3x3V1),
+        Box::new(Exact2x2),
+        UnitMask::ALL,
+    )
+}
+
+pub fn mul8x8_2() -> Aggregated8x8 {
+    Aggregated8x8::new(
+        "mul8x8_2",
+        Box::new(Mul3x3V2),
+        Box::new(Exact2x2),
+        UnitMask::ALL,
+    )
+}
+
+pub fn mul8x8_3() -> Aggregated8x8 {
+    Aggregated8x8::new(
+        "mul8x8_3",
+        Box::new(Mul3x3V2),
+        Box::new(Exact2x2),
+        UnitMask::ALL.without(2),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mult::traits::Multiplier;
+
+    fn exhaustive_ed(m: &dyn Multiplier) -> (u32, u64) {
+        let mut errs = 0u32;
+        let mut ed_sum = 0u64;
+        for a in 0..256u32 {
+            for b in 0..256u32 {
+                let ed = (m.mul(a, b) as i64 - (a * b) as i64).unsigned_abs();
+                if ed > 0 {
+                    errs += 1;
+                }
+                ed_sum += ed;
+            }
+        }
+        (errs, ed_sum)
+    }
+
+    #[test]
+    fn v1_error_rate_near_paper() {
+        // Paper Table V: ER 22.8%, MED 137.04.  Our architecture yields the
+        // analytically exact ER for four shared-chunk 3×3 triggers:
+        // 1 − (1/64)·Σ_{b0,b1} ((8−|bad(b0)∪bad(b1)|)/8)² = 27.2%; the
+        // paper's slightly lower figure reflects its (unpublished) adder
+        // arrangement.  Shape: ~1/4 of inputs err, MED order 10².
+        let (errs, ed) = exhaustive_ed(&mul8x8_1());
+        let er = errs as f64 / 65536.0 * 100.0;
+        let med = ed as f64 / 65536.0;
+        assert!((er - 27.2).abs() < 0.1, "ER {er}");
+        assert!((50.0..300.0).contains(&med), "MED {med}");
+    }
+
+    #[test]
+    fn v2_error_rate_near_paper() {
+        // Paper Table V: ER 20.49%, MED 114.83.  Same ER as v1 by
+        // construction (identical trigger rows), lower MED.
+        let (errs, ed) = exhaustive_ed(&mul8x8_2());
+        let er = errs as f64 / 65536.0 * 100.0;
+        let med = ed as f64 / 65536.0;
+        assert!((er - 27.2).abs() < 0.1, "ER {er}");
+        assert!((30.0..200.0).contains(&med), "MED {med}");
+    }
+
+    #[test]
+    fn v3_error_rate_shape() {
+        // Paper Table V: ER 31.41%, MED 648.20.  Under a UNIFORM exhaustive
+        // sweep no single-unit removal can land at 31%: dropping A2×B0
+        // errs whenever A[7:6]≠0 ∧ B[2:0]≠0, i.e. (3/4)(7/8) = 65.6% of
+        // inputs (plus base triggers).  The paper's figure is consistent
+        // with an operand profile concentrated in the co-optimized weight
+        // band; see EXPERIMENTS.md §Table V for the analysis.  We assert
+        // the architectural shape: ER and MED both blow up vs v2, and the
+        // MED increase is dominated by the dropped term's mean
+        // E[A2]·E[B0]·2^6 = 1.5·3.5·64 = 336.
+        let (errs, ed) = exhaustive_ed(&mul8x8_3());
+        let er = errs as f64 / 65536.0 * 100.0;
+        let med = ed as f64 / 65536.0;
+        assert!(er > 60.0 && er < 80.0, "ER {er}");
+        assert!((med - 336.0).abs() < 200.0, "MED {med}");
+        let (errs2, ed2) = exhaustive_ed(&mul8x8_2());
+        assert!(errs > errs2 && ed > ed2);
+    }
+
+    #[test]
+    fn v2_beats_v1_on_med() {
+        let (_, ed1) = exhaustive_ed(&mul8x8_1());
+        let (_, ed2) = exhaustive_ed(&mul8x8_2());
+        assert!(ed2 < ed1, "prediction unit must reduce MED");
+    }
+
+    #[test]
+    fn small_low_chunk_operands_always_exact() {
+        // The approximate 3×3 rows need BOTH chunk operands ≥ 5, so any A
+        // whose live chunks stay below 5 multiplies exactly with every B.
+        // (A < 5 ⇒ A0 < 5 and A1 = A2 = 0.)
+        for m in [mul8x8_1(), mul8x8_2(), mul8x8_3()] {
+            for a in 0..5u32 {
+                for b in 0..256u32 {
+                    assert_eq!(m.mul(a, b), a * b, "{} a={a} b={b}", m.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn error_rate_nonzero_inside_weight_band() {
+        // §II-B claims the weight band (0,31) makes the design tolerable,
+        // NOT exact: chunk pairs ≥ 5 still approximate.  Verify both sides.
+        let m = mul8x8_2();
+        assert_eq!(m.mul(5, 7), Mul3x3V2Check::expected(5, 7)); // approx row
+        assert_ne!(m.mul(5, 7), 35);
+        assert_eq!(m.mul(4, 7), 28); // below the trigger: exact
+    }
+
+    struct Mul3x3V2Check;
+    impl Mul3x3V2Check {
+        fn expected(a: u32, b: u32) -> u32 {
+            use crate::mult::mul3x3::Mul3x3V2;
+            use crate::mult::traits::Multiplier as _;
+            Mul3x3V2.mul(a, b)
+        }
+    }
+
+    #[test]
+    fn v3_exact_when_a_high_clear() {
+        // The co-optimization contract: A < 64 ⇒ M2's term is zero ⇒
+        // MUL8x8_3 degrades exactly to MUL8x8_2.
+        let m3 = mul8x8_3();
+        let m2 = mul8x8_2();
+        for a in 0..64u32 {
+            for b in (0..256u32).step_by(3) {
+                assert_eq!(m3.mul(a, b), m2.mul(a, b));
+            }
+        }
+    }
+
+    #[test]
+    fn netlists_consistent() {
+        assert_eq!(mul8x8_1().verify_netlist(), Some(0));
+        assert_eq!(mul8x8_2().verify_netlist(), Some(0));
+        assert_eq!(mul8x8_3().verify_netlist(), Some(0));
+    }
+}

@@ -1,0 +1,141 @@
+//! Wallace-style column reduction for partial-product accumulation.
+//!
+//! Input: per-column lists of 1-bit signals (column k has weight 2^k).
+//! The reducer applies full/half adders until every column holds at most
+//! two bits, then finishes with a ripple-carry add — the same structure
+//! the paper's Fig. 1 aggregation uses to sum the shifted M0–M8 products.
+
+use crate::logic::{Netlist, SignalRef};
+
+/// Reduce `columns` (LSB first) to `out_bits` sum bits.
+/// Bits beyond `out_bits` columns are dropped (they are architecturally
+/// impossible for a correct multiplier, but approximate designs may
+/// deliberately truncate).
+pub fn wallace_reduce(
+    nl: &mut Netlist,
+    mut columns: Vec<Vec<SignalRef>>,
+    out_bits: usize,
+) -> Vec<SignalRef> {
+    columns.resize(out_bits.max(columns.len()), Vec::new());
+
+    // Stage 1: carry-save reduction until every column has ≤ 2 bits.
+    loop {
+        let max_height = columns.iter().map(|c| c.len()).max().unwrap_or(0);
+        if max_height <= 2 {
+            break;
+        }
+        let mut next: Vec<Vec<SignalRef>> = vec![Vec::new(); columns.len() + 1];
+        for (k, col) in columns.iter().enumerate() {
+            let mut i = 0;
+            while col.len() - i >= 3 {
+                let (s, c) = nl.full_adder(col[i], col[i + 1], col[i + 2]);
+                next[k].push(s);
+                next[k + 1].push(c);
+                i += 3;
+            }
+            if col.len() - i == 2 && col.len() > 2 {
+                // Compress leftover pairs in over-full columns.
+                let (s, c) = nl.half_adder(col[i], col[i + 1]);
+                next[k].push(s);
+                next[k + 1].push(c);
+            } else {
+                for &b in &col[i..] {
+                    next[k].push(b);
+                }
+            }
+        }
+        columns = next;
+    }
+
+    // Stage 2: final carry-propagate (ripple) add over the ≤2-high rows.
+    let width = columns.len().min(out_bits + 1).max(out_bits);
+    let mut out = Vec::with_capacity(out_bits);
+    let mut carry: Option<SignalRef> = None;
+    for k in 0..out_bits.min(width) {
+        let col = columns.get(k).cloned().unwrap_or_default();
+        let mut bits = col;
+        if let Some(c) = carry.take() {
+            bits.push(c);
+        }
+        let (sum, c) = match bits.len() {
+            0 => (nl.constant(false), None),
+            1 => (bits[0], None),
+            2 => {
+                let (s, c) = nl.half_adder(bits[0], bits[1]);
+                (s, Some(c))
+            }
+            3 => {
+                let (s, c) = nl.full_adder(bits[0], bits[1], bits[2]);
+                (s, Some(c))
+            }
+            _ => unreachable!("column height > 3 after reduction"),
+        };
+        carry = c;
+        out.push(sum);
+    }
+    while out.len() < out_bits {
+        let z = nl.constant(false);
+        out.push(z);
+    }
+    out.truncate(out_bits);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logic::Netlist;
+
+    /// Sum three 4-bit numbers via columns and check exhaustively.
+    #[test]
+    fn three_operand_addition() {
+        let mut nl = Netlist::new("sum3", 12);
+        let mut columns: Vec<Vec<SignalRef>> = vec![Vec::new(); 4];
+        for op in 0..3 {
+            for k in 0..4 {
+                columns[k].push(nl.input(op * 4 + k));
+            }
+        }
+        let out = wallace_reduce(&mut nl, columns, 6);
+        nl.set_outputs(out);
+        for row in 0..(1u64 << 12) {
+            let x = row & 0xF;
+            let y = (row >> 4) & 0xF;
+            let z = (row >> 8) & 0xF;
+            assert_eq!(nl.eval(row), x + y + z, "x={x} y={y} z={z}");
+        }
+    }
+
+    /// Seven single-bit operands in one column = popcount.
+    #[test]
+    fn popcount_column() {
+        let mut nl = Netlist::new("pop7", 7);
+        let columns = vec![nl.inputs()];
+        let out = wallace_reduce(&mut nl, columns, 3);
+        nl.set_outputs(out);
+        for row in 0..(1u64 << 7) {
+            assert_eq!(nl.eval(row), row.count_ones() as u64);
+        }
+    }
+
+    #[test]
+    fn empty_columns_give_zero() {
+        let mut nl = Netlist::new("zero", 1);
+        let out = wallace_reduce(&mut nl, vec![], 4);
+        nl.set_outputs(out);
+        assert_eq!(nl.eval(0), 0);
+        assert_eq!(nl.eval(1), 0);
+    }
+
+    #[test]
+    fn truncation_drops_high_bits() {
+        // 2 one-bit inputs in column 0, out_bits = 1: sum mod 2.
+        let mut nl = Netlist::new("trunc", 2);
+        let columns = vec![vec![nl.input(0), nl.input(1)]];
+        let out = wallace_reduce(&mut nl, columns, 1);
+        nl.set_outputs(out);
+        for row in 0..4u64 {
+            assert_eq!(nl.eval(row), (row & 1) ^ ((row >> 1) & 1));
+        }
+    }
+}

@@ -1,0 +1,147 @@
+//! Name-indexed registry of every multiplier design in the library.
+//!
+//! The coordinator, CLI, benches and python-facing LUT exporter all look
+//! designs up by the same stable names, so experiment configs stay plain
+//! strings.
+
+use super::aggregate::{Aggregated8x8, UnitMask};
+use super::baselines::{Etm, Mitchell, Pkm, Roba, SiEi, SvBooth};
+use super::exact::ExactMul;
+use super::mul2x2::{Exact2x2, Kulkarni2x2};
+use super::mul3x3::{Mul3x3V1, Mul3x3V2};
+use super::mul8x8::{mul8x8_1, mul8x8_2, mul8x8_3};
+use super::traits::Multiplier;
+
+/// All registered 8×8 design names, in the paper's comparison order.
+pub const DESIGNS_8X8: [&str; 7] = [
+    "exact8x8",
+    "mul8x8_1",
+    "mul8x8_2",
+    "mul8x8_3",
+    "siei",
+    "pkm",
+    "etm",
+];
+
+/// The subset the paper carries into the DNN evaluation (Table VIII).
+pub const DNN_DESIGNS: [&str; 6] = [
+    "exact8x8",
+    "mul8x8_1",
+    "mul8x8_2",
+    "mul8x8_3",
+    "siei",
+    "pkm",
+];
+
+/// Look a design up by name.
+pub fn by_name(name: &str) -> Option<Box<dyn Multiplier>> {
+    Some(match name {
+        "exact2x2" => Box::new(Exact2x2),
+        "kulkarni2x2" => Box::new(Kulkarni2x2),
+        "exact3x3" => Box::new(ExactMul::new(3, 3)),
+        "exact3x3_sop" => Box::new(super::exact::ExactSop3x3),
+        "mul3x3_1" => Box::new(Mul3x3V1),
+        "mul3x3_2" => Box::new(Mul3x3V2),
+        "exact8x8" => Box::new(ExactMul::new(8, 8)),
+        "mul8x8_1" => Box::new(mul8x8_1()),
+        "mul8x8_2" => Box::new(mul8x8_2()),
+        "mul8x8_3" => Box::new(mul8x8_3()),
+        "pkm" => Box::new(Pkm::new(8)),
+        "etm" => Box::new(Etm::new(8)),
+        "siei" => Box::new(SiEi::default8()),
+        "sv" => Box::new(SvBooth::default8()),
+        "roba" => Box::new(Roba::new(8)),
+        "mitchell" => Box::new(Mitchell::new(8)),
+        // Aggregation ablations (DESIGN.md §ablations): exact units in the
+        // Fig. 1 architecture isolate the aggregation cost from the
+        // approximation error.
+        "agg_exact" => Box::new(Aggregated8x8::new(
+            "agg_exact",
+            Box::new(ExactMul::new(3, 3)),
+            Box::new(Exact2x2),
+            UnitMask::ALL,
+        )),
+        "agg_exact_sop" => Box::new(Aggregated8x8::new(
+            "agg_exact_sop",
+            Box::new(super::exact::ExactSop3x3),
+            Box::new(Exact2x2),
+            UnitMask::ALL,
+        )),
+        "agg_exact_no_m2" => Box::new(Aggregated8x8::new(
+            "agg_exact_no_m2",
+            Box::new(ExactMul::new(3, 3)),
+            Box::new(Exact2x2),
+            UnitMask::ALL.without(2),
+        )),
+        _ => return None,
+    })
+}
+
+/// Every name `by_name` accepts.
+pub fn all_names() -> Vec<&'static str> {
+    vec![
+        "exact2x2",
+        "kulkarni2x2",
+        "exact3x3",
+        "exact3x3_sop",
+        "mul3x3_1",
+        "mul3x3_2",
+        "exact8x8",
+        "mul8x8_1",
+        "mul8x8_2",
+        "mul8x8_3",
+        "pkm",
+        "etm",
+        "siei",
+        "sv",
+        "roba",
+        "mitchell",
+        "agg_exact",
+        "agg_exact_sop",
+        "agg_exact_no_m2",
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_name_resolves() {
+        for name in all_names() {
+            let m = by_name(name).unwrap_or_else(|| panic!("{name} missing"));
+            // Display names may carry width/config suffixes (pkm8x8 etc.)
+            // but must share the registry key as prefix root.
+            assert!(
+                m.name().starts_with(name.trim_end_matches(char::is_numeric))
+                    || m.name().contains(name),
+                "name mismatch: key {name} -> {}",
+                m.name()
+            );
+        }
+    }
+
+    #[test]
+    fn unknown_name_is_none() {
+        assert!(by_name("nonsense").is_none());
+    }
+
+    #[test]
+    fn dnn_designs_resolve_to_8x8() {
+        for name in DNN_DESIGNS {
+            let m = by_name(name).unwrap();
+            assert_eq!((m.a_bits(), m.b_bits()), (8, 8), "{name}");
+        }
+    }
+
+    #[test]
+    fn designs_8x8_in_bounds() {
+        for name in DESIGNS_8X8 {
+            let m = by_name(name).unwrap();
+            for (a, b) in [(0u32, 0u32), (255, 255), (128, 7), (1, 254)] {
+                let v = m.mul(a, b);
+                assert!(v < (1 << 16), "{name} overflowed: {a}x{b} = {v}");
+            }
+        }
+    }
+}

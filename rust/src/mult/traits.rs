@@ -1,0 +1,80 @@
+//! The `Multiplier` abstraction shared by every design in the library.
+
+use crate::logic::Netlist;
+
+/// An unsigned integer multiplier design: a behavioural model (`mul`)
+/// plus, for synthesizable designs, a gate-level netlist.
+///
+/// Behavioural and structural views are cross-checked in tests: for every
+/// design that provides a netlist, `mul(a, b)` must equal the netlist
+/// evaluation for all inputs.
+pub trait Multiplier: Send + Sync {
+    /// Stable identifier, e.g. `"mul8x8_2"`.
+    fn name(&self) -> &str;
+    /// Bit width of operand A.
+    fn a_bits(&self) -> usize;
+    /// Bit width of operand B.
+    fn b_bits(&self) -> usize;
+    /// The (possibly approximate) product.  Operands must fit the widths.
+    fn mul(&self, a: u32, b: u32) -> u32;
+    /// Gate-level netlist with inputs `[a bits..., b bits...]` (LSB first)
+    /// and product bits as outputs (LSB first).  `None` for behavioural-
+    /// only reference designs.
+    fn netlist(&self) -> Option<Netlist> {
+        None
+    }
+
+    /// Exhaustively verify the netlist against the behavioural model.
+    /// Returns the number of mismatching input pairs (0 = consistent).
+    fn verify_netlist(&self) -> Option<u32> {
+        let nl = self.netlist()?;
+        assert_eq!(nl.num_inputs, self.a_bits() + self.b_bits());
+        let all = nl.eval_exhaustive();
+        let mut bad = 0u32;
+        for a in 0..(1u32 << self.a_bits()) {
+            for b in 0..(1u32 << self.b_bits()) {
+                let row = a | (b << self.a_bits());
+                if all[row as usize] as u32 != self.mul(a, b) {
+                    bad += 1;
+                }
+            }
+        }
+        Some(bad)
+    }
+}
+
+/// Maximum representable product width.
+pub fn product_bits(m: &dyn Multiplier) -> usize {
+    m.a_bits() + m.b_bits()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Dummy;
+    impl Multiplier for Dummy {
+        fn name(&self) -> &str {
+            "dummy"
+        }
+        fn a_bits(&self) -> usize {
+            2
+        }
+        fn b_bits(&self) -> usize {
+            2
+        }
+        fn mul(&self, a: u32, b: u32) -> u32 {
+            a * b
+        }
+    }
+
+    #[test]
+    fn product_bits_sum() {
+        assert_eq!(product_bits(&Dummy), 4);
+    }
+
+    #[test]
+    fn no_netlist_means_no_verification() {
+        assert!(Dummy.verify_netlist().is_none());
+    }
+}

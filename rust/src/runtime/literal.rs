@@ -1,0 +1,87 @@
+//! Host tensor <-> `xla::Literal` marshalling helpers.
+
+use anyhow::{bail, Result};
+use xla::{Literal, PrimitiveType};
+
+/// f32 tensor -> Literal with the given dims.
+pub fn f32_literal(data: &[f32], dims: &[usize]) -> Result<Literal> {
+    let n: usize = dims.iter().product();
+    if n != data.len() {
+        bail!("literal shape mismatch: {} vs {:?}", data.len(), dims);
+    }
+    let flat = Literal::vec1(data);
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(flat.reshape(&dims_i64)?)
+}
+
+/// i32 tensor -> Literal.
+pub fn i32_literal(data: &[i32], dims: &[usize]) -> Result<Literal> {
+    let n: usize = dims.iter().product();
+    if n != data.len() {
+        bail!("literal shape mismatch: {} vs {:?}", data.len(), dims);
+    }
+    let flat = Literal::vec1(data);
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(flat.reshape(&dims_i64)?)
+}
+
+/// Scalar f32 literal.
+pub fn scalar_f32(v: f32) -> Literal {
+    Literal::scalar(v)
+}
+
+/// Literal -> host f32 vec (converting if the artifact kept f64/bf16).
+pub fn to_f32_vec(lit: &Literal) -> Result<Vec<f32>> {
+    match lit.to_vec::<f32>() {
+        Ok(v) => Ok(v),
+        Err(_) => {
+            let conv = lit.convert(PrimitiveType::F32)?;
+            Ok(conv.to_vec::<f32>()?)
+        }
+    }
+}
+
+/// Literal -> host i32 vec.
+pub fn to_i32_vec(lit: &Literal) -> Result<Vec<i32>> {
+    match lit.to_vec::<i32>() {
+        Ok(v) => Ok(v),
+        Err(_) => {
+            let conv = lit.convert(PrimitiveType::S32)?;
+            Ok(conv.to_vec::<i32>()?)
+        }
+    }
+}
+
+/// Scalar extraction.
+pub fn to_scalar_f32(lit: &Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let lit = f32_literal(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(to_f32_vec(&lit).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(lit.element_count(), 4);
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let lit = i32_literal(&[5, -6], &[2]).unwrap();
+        assert_eq!(to_i32_vec(&lit).unwrap(), vec![5, -6]);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(f32_literal(&[1.0], &[2, 2]).is_err());
+    }
+
+    #[test]
+    fn scalar() {
+        let lit = scalar_f32(2.5);
+        assert_eq!(to_scalar_f32(&lit).unwrap(), 2.5);
+    }
+}

@@ -1,0 +1,143 @@
+//! Artifact manifest: the contract `python/compile/aot.py` writes and the
+//! coordinator reads (param orders, shapes, batch sizes).
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+#[derive(Clone, Debug)]
+pub struct NetworkEntry {
+    pub tag: String,
+    pub dataset: String,
+    pub image_shape: (usize, usize, usize),
+    pub param_names: Vec<String>,
+    pub param_shapes: Vec<Vec<usize>>,
+    pub has_qinfer: bool,
+    pub qinfer_layers: Vec<String>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub train_batch: usize,
+    pub infer_batch: usize,
+    pub networks: BTreeMap<String, NetworkEntry>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).context("manifest json")?;
+        let train_batch = j
+            .get("train_batch")
+            .and_then(|v| v.as_usize())
+            .context("train_batch")?;
+        let infer_batch = j
+            .get("infer_batch")
+            .and_then(|v| v.as_usize())
+            .context("infer_batch")?;
+        let mut networks = BTreeMap::new();
+        if let Some(nets) = j.get("networks").and_then(|v| v.as_obj()) {
+            for (tag, entry) in nets {
+                let shape: Vec<usize> = entry
+                    .get("image_shape")
+                    .and_then(|v| v.as_arr())
+                    .context("image_shape")?
+                    .iter()
+                    .filter_map(|v| v.as_usize())
+                    .collect();
+                let param_names = entry
+                    .get("param_names")
+                    .and_then(|v| v.as_arr())
+                    .context("param_names")?
+                    .iter()
+                    .filter_map(|v| v.as_str().map(String::from))
+                    .collect();
+                let param_shapes = entry
+                    .get("param_shapes")
+                    .and_then(|v| v.as_arr())
+                    .context("param_shapes")?
+                    .iter()
+                    .filter_map(|v| {
+                        v.as_arr().map(|dims| {
+                            dims.iter().filter_map(|d| d.as_usize()).collect()
+                        })
+                    })
+                    .collect();
+                let has_qinfer = entry
+                    .get("has_qinfer")
+                    .map(|v| v == &Json::Bool(true))
+                    .unwrap_or(false);
+                let qinfer_layers = entry
+                    .get("qinfer_layers")
+                    .and_then(|v| v.as_arr())
+                    .map(|a| {
+                        a.iter()
+                            .filter_map(|v| v.as_str().map(String::from))
+                            .collect()
+                    })
+                    .unwrap_or_default();
+                networks.insert(
+                    tag.clone(),
+                    NetworkEntry {
+                        tag: tag.clone(),
+                        dataset: entry
+                            .get("dataset")
+                            .and_then(|v| v.as_str())
+                            .unwrap_or("")
+                            .to_string(),
+                        image_shape: (shape[0], shape[1], shape[2]),
+                        param_names,
+                        param_shapes,
+                        has_qinfer,
+                        qinfer_layers,
+                    },
+                );
+            }
+        }
+        Ok(Manifest {
+            train_batch,
+            infer_batch,
+            networks,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "train_batch": 32, "infer_batch": 64,
+      "networks": {
+        "lenet_mnist": {
+          "dataset": "mnist", "image_shape": [1, 28, 28],
+          "param_names": ["w0", "b0"],
+          "param_shapes": [[6, 1, 5, 5], [6]],
+          "has_qinfer": true,
+          "qinfer_layers": ["l0_conv"]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.train_batch, 32);
+        let e = &m.networks["lenet_mnist"];
+        assert_eq!(e.image_shape, (1, 28, 28));
+        assert_eq!(e.param_shapes[0], vec![6, 1, 5, 5]);
+        assert!(e.has_qinfer);
+        assert_eq!(e.qinfer_layers, vec!["l0_conv"]);
+    }
+
+    #[test]
+    fn rejects_incomplete() {
+        assert!(Manifest::parse("{}").is_err());
+    }
+}

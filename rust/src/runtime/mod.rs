@@ -1,0 +1,104 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them from the
+//! rust hot path.  Python never runs here — the artifacts directory is
+//! the entire interface to the build-time L1/L2 layers.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `compile` → `execute`.  One `Engine` per process; executables are
+//! compiled once and cached by artifact name.
+
+pub mod literal;
+pub mod manifest;
+
+pub use literal::{f32_literal, i32_literal, scalar_f32, to_f32_vec, to_i32_vec, to_scalar_f32};
+pub use manifest::{Manifest, NetworkEntry};
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+pub struct Engine {
+    client: PjRtClient,
+    artifacts_dir: PathBuf,
+    cache: Mutex<HashMap<String, std::sync::Arc<PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    /// Create a CPU PJRT engine rooted at an artifacts directory.
+    pub fn cpu(artifacts_dir: &Path) -> Result<Engine> {
+        let client = PjRtClient::cpu().context("PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            artifacts_dir: artifacts_dir.to_path_buf(),
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.artifacts_dir
+    }
+
+    /// Load + compile an artifact by name (e.g. `lenet_mnist_train`),
+    /// caching the executable.
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let path = self.artifacts_dir.join(format!("{name}.hlo.txt"));
+        let proto =
+            xla::HloModuleProto::from_text_file(path.to_str().context("utf8 path")?)
+                .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {name}"))?;
+        let exe = std::sync::Arc::new(exe);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact with host literals; returns the flattened
+    /// tuple elements (all artifacts are lowered with return_tuple=True).
+    pub fn run(&self, name: &str, args: &[Literal]) -> Result<Vec<Literal>> {
+        let exe = self.load(name)?;
+        let result = exe.execute::<Literal>(args)?;
+        let lit = result[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Load the artifact manifest.
+    pub fn manifest(&self) -> Result<Manifest> {
+        Manifest::load(&self.artifacts_dir.join("manifest.json"))
+    }
+
+    /// Check whether an artifact exists without compiling it.
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.artifacts_dir.join(format!("{name}.hlo.txt")).exists()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Engine tests that need real artifacts live in rust/tests/
+    // (integration); here we only check graceful failure paths.
+    use super::*;
+
+    #[test]
+    fn missing_artifact_errors_cleanly() {
+        let dir = std::env::temp_dir().join("axmul_rt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let eng = Engine::cpu(&dir).unwrap();
+        assert!(!eng.has_artifact("nope"));
+        assert!(eng.load("nope").is_err());
+    }
+}

@@ -1,0 +1,195 @@
+//! Technology mapping: optimized netlist -> mapped cell netlist.
+//!
+//! After `logic::optimize`, gates map 1:1 onto library cells with two
+//! peephole absorptions a real mapper always finds:
+//!   * `NOT(AND(a,b))` with single fanout -> NAND2
+//!   * `NOT(OR(a,b))`  with single fanout -> NOR2
+//!   * `NOT(XOR(a,b))` with single fanout -> XNOR2
+
+use super::cell_lib::CellKind;
+use crate::logic::netlist::Node;
+use crate::logic::{GateKind, Netlist, SignalRef};
+
+#[derive(Clone, Debug)]
+pub struct MappedCell {
+    pub kind: CellKind,
+    /// Driving signals (indices into the mapped netlist's signal space,
+    /// which reuses the source netlist's `SignalRef`s).
+    pub inputs: Vec<SignalRef>,
+    /// The source node this cell drives.
+    pub output: SignalRef,
+}
+
+#[derive(Clone, Debug)]
+pub struct MappedNetlist {
+    pub name: String,
+    pub num_inputs: usize,
+    pub cells: Vec<MappedCell>,
+    pub outputs: Vec<SignalRef>,
+    /// fanout[signal] = number of cell inputs + primary outputs consuming it.
+    pub fanout: Vec<u32>,
+    /// For activity mapping: source-netlist node index of each cell output.
+    pub source_node: Vec<u32>,
+}
+
+/// Map an (already optimized) netlist onto the cell library.
+pub fn tech_map(nl: &Netlist) -> MappedNetlist {
+    // Fanout count in the source netlist.
+    let mut fanout = vec![0u32; nl.nodes.len()];
+    for node in &nl.nodes {
+        if let Node::Gate { inputs, .. } = node {
+            for s in inputs {
+                fanout[s.0 as usize] += 1;
+            }
+        }
+    }
+    for o in &nl.outputs {
+        fanout[o.0 as usize] += 1;
+    }
+
+    let mut cells = Vec::new();
+    let mut source_node = Vec::new();
+    // absorbed[i] = true if node i was fused into a NAND/NOR/XNOR.
+    let mut absorbed = vec![false; nl.nodes.len()];
+
+    for (i, node) in nl.nodes.iter().enumerate() {
+        match node {
+            Node::Input(_) => {}
+            Node::Const(_) => {
+                cells.push(MappedCell {
+                    kind: CellKind::Tie,
+                    inputs: vec![],
+                    output: SignalRef(i as u32),
+                });
+                source_node.push(i as u32);
+            }
+            Node::Gate { kind, inputs } => {
+                if absorbed[i] {
+                    continue;
+                }
+                // Peephole: NOT over single-fanout AND/OR/XOR.
+                if *kind == GateKind::Not {
+                    let src = inputs[0].0 as usize;
+                    if fanout[src] == 1 {
+                        if let Node::Gate {
+                            kind: inner_kind,
+                            inputs: inner_inputs,
+                        } = &nl.nodes[src]
+                        {
+                            let fused = match inner_kind {
+                                GateKind::And => Some(CellKind::Nand2),
+                                GateKind::Or => Some(CellKind::Nor2),
+                                GateKind::Xor => Some(CellKind::Xnor2),
+                                _ => None,
+                            };
+                            if let Some(cell) = fused {
+                                absorbed[src] = true;
+                                // Remove the inner gate if it was already
+                                // emitted (it precedes the NOT in topo
+                                // order).
+                                if let Some(pos) =
+                                    cells.iter().position(|c| c.output.0 as usize == src)
+                                {
+                                    cells.remove(pos);
+                                    source_node.remove(pos);
+                                }
+                                cells.push(MappedCell {
+                                    kind: cell,
+                                    inputs: inner_inputs.clone(),
+                                    output: SignalRef(i as u32),
+                                });
+                                source_node.push(i as u32);
+                                continue;
+                            }
+                        }
+                    }
+                }
+                cells.push(MappedCell {
+                    kind: CellKind::for_gate(*kind),
+                    inputs: inputs.clone(),
+                    output: SignalRef(i as u32),
+                });
+                source_node.push(i as u32);
+            }
+        }
+    }
+
+    MappedNetlist {
+        name: nl.name.clone(),
+        num_inputs: nl.num_inputs,
+        cells,
+        outputs: nl.outputs.clone(),
+        fanout,
+        source_node,
+    }
+}
+
+impl MappedNetlist {
+    /// Total cell area in NAND2-equivalent units.
+    pub fn area(&self) -> f64 {
+        self.cells.iter().map(|c| c.kind.params().area).sum()
+    }
+
+    pub fn cell_count(&self) -> usize {
+        self.cells.len()
+    }
+
+    pub fn cell_histogram(&self) -> std::collections::BTreeMap<CellKind, usize> {
+        let mut h = std::collections::BTreeMap::new();
+        for c in &self.cells {
+            *h.entry(c.kind).or_insert(0) += 1;
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logic::{optimize, Netlist};
+
+    #[test]
+    fn nand_absorption() {
+        let mut nl = Netlist::new("nand", 2);
+        let (a, b) = (nl.input(0), nl.input(1));
+        let x = nl.and2(a, b);
+        let o = nl.not1(x);
+        nl.set_outputs(vec![o]);
+        let mapped = tech_map(&nl);
+        assert_eq!(mapped.cell_count(), 1);
+        assert_eq!(mapped.cells[0].kind, CellKind::Nand2);
+    }
+
+    #[test]
+    fn no_absorption_with_shared_fanout() {
+        let mut nl = Netlist::new("shared", 2);
+        let (a, b) = (nl.input(0), nl.input(1));
+        let x = nl.and2(a, b);
+        let o1 = nl.not1(x);
+        nl.set_outputs(vec![o1, x]); // x also a primary output
+        let mapped = tech_map(&nl);
+        assert_eq!(mapped.cell_count(), 2); // AND2 + INV, no fusion
+    }
+
+    #[test]
+    fn area_accumulates() {
+        let mut nl = Netlist::new("x", 2);
+        let (a, b) = (nl.input(0), nl.input(1));
+        let x = nl.xor2(a, b);
+        nl.set_outputs(vec![x]);
+        let mapped = tech_map(&nl);
+        assert!((mapped.area() - 2.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn maps_optimized_multiplier() {
+        use crate::logic::{multiplier_truth_table, synthesize_truth_table};
+        let nl = optimize(&synthesize_truth_table(
+            "m33",
+            &multiplier_truth_table(3, 3),
+        ));
+        let mapped = tech_map(&nl);
+        assert!(mapped.cell_count() > 10);
+        assert!(mapped.area() > 10.0);
+    }
+}

@@ -1,0 +1,161 @@
+//! Synthesis + cost-model substrate (the paper's Synopsys DC / ASAP7
+//! stand-in): technology mapping, static timing, activity-based power,
+//! and the calibrated reports behind Tables VI and VII.
+
+pub mod cell_lib;
+pub mod mapper;
+pub mod power;
+pub mod timing;
+
+pub use cell_lib::{Cell, CellKind};
+pub use mapper::{tech_map, MappedNetlist};
+pub use power::{power, PowerReport};
+pub use timing::{sta, TimingReport};
+
+use crate::logic::optimize;
+use crate::mult::Multiplier;
+
+/// Raw (relative-unit) synthesis result for one design.
+#[derive(Clone, Debug)]
+pub struct SynthResult {
+    pub name: String,
+    pub cells: usize,
+    pub area: f64,
+    pub delay: f64,
+    pub power: f64,
+    pub depth: u32,
+}
+
+/// Full flow: netlist → optimize → polarity rewrite → map → STA + power.
+/// `vectors` controls the activity-simulation effort.
+pub fn synthesize(m: &dyn Multiplier, vectors: usize, seed: u64) -> Option<SynthResult> {
+    let nl = m.netlist()?;
+    let nl = optimize(&nl);
+    let nl = optimize(&crate::logic::opt::nand_rewrite(&nl));
+    let mapped = tech_map(&nl);
+    let t = sta(&mapped);
+    let p = power(&nl, &mapped, vectors, seed);
+    Some(SynthResult {
+        name: m.name().to_string(),
+        cells: mapped.cell_count(),
+        area: mapped.area(),
+        delay: t.critical_path,
+        power: p.total(),
+        depth: t.depth,
+    })
+}
+
+/// Physical-unit scaling anchored to the paper's Table VI exact-3×3
+/// baseline (67.68 µm², 3.73 mW, 0.45 ns).  All *relative* comparisons —
+/// the paper's actual claims — are unaffected by this normalization; it
+/// just puts our relative units on the familiar scale.
+#[derive(Clone, Copy, Debug)]
+pub struct Calibration {
+    pub area_um2_per_unit: f64,
+    pub power_mw_per_unit: f64,
+    pub delay_ns_per_unit: f64,
+}
+
+impl Calibration {
+    pub fn from_baseline(baseline: &SynthResult) -> Calibration {
+        Calibration {
+            area_um2_per_unit: 67.68 / baseline.area,
+            power_mw_per_unit: 3.73 / baseline.power,
+            delay_ns_per_unit: 0.45 / baseline.delay,
+        }
+    }
+
+    pub fn apply(&self, r: &SynthResult) -> (f64, f64, f64) {
+        (
+            r.area * self.area_um2_per_unit,
+            r.power * self.power_mw_per_unit,
+            r.delay * self.delay_ns_per_unit,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mult::{by_name, ExactMul, Mul3x3V1, Mul3x3V2};
+
+    #[test]
+    fn approx_3x3_cheaper_than_exact_same_flow() {
+        // Table VI's shape: both approximate designs improve area, power
+        // and delay over the exact design synthesized by the same flow.
+        use crate::logic::{multiplier_truth_table, synthesize_truth_table};
+        let exact_tt = synthesize_truth_table("exact3x3", &multiplier_truth_table(3, 3));
+        let exact_nl = optimize(&exact_tt);
+        let exact_mapped = tech_map(&exact_nl);
+        let exact_area = exact_mapped.area();
+        let exact_delay = sta(&exact_mapped).critical_path;
+
+        for m in [&Mul3x3V1 as &dyn Multiplier, &Mul3x3V2] {
+            let r = synthesize(m, 2000, 1).unwrap();
+            assert!(
+                r.area < exact_area * 0.80,
+                "{}: {} vs {exact_area}",
+                m.name(),
+                r.area
+            );
+            // Delay: our mapper is not timing-driven, so the paper's −42%
+            // does not reproduce; assert the designs are at least not
+            // meaningfully slower (see EXPERIMENTS.md §Table VI).
+            assert!(
+                r.delay < exact_delay * 1.15,
+                "{}: {} vs {exact_delay}",
+                m.name(),
+                r.delay
+            );
+        }
+    }
+
+    #[test]
+    fn v2_slightly_bigger_than_v1() {
+        // §II-A: the prediction unit costs "a small area overhead".
+        let r1 = synthesize(&Mul3x3V1, 1000, 1).unwrap();
+        let r2 = synthesize(&Mul3x3V2, 1000, 1).unwrap();
+        assert!(r2.area > r1.area * 0.98, "prediction unit adds gates");
+        assert!(r2.area < r1.area * 1.35, "but only a little");
+    }
+
+    #[test]
+    fn table7_ordering_holds() {
+        // 8×8 against the same-flow aggregated-exact baseline (the role
+        // DesignWare plays in the paper): every approximate design beats
+        // it on area+power, and MUL8x8_3 (M2 removed) is the smallest.
+        let exact = synthesize(by_name("agg_exact_sop").unwrap().as_ref(), 500, 1).unwrap();
+        let m1 = synthesize(by_name("mul8x8_1").unwrap().as_ref(), 500, 1).unwrap();
+        let m2 = synthesize(by_name("mul8x8_2").unwrap().as_ref(), 500, 1).unwrap();
+        let m3 = synthesize(by_name("mul8x8_3").unwrap().as_ref(), 500, 1).unwrap();
+        assert!(m1.area < exact.area);
+        assert!(m2.area < exact.area);
+        assert!(m1.power < exact.power);
+        assert!(m3.area < m2.area, "dropping M2 must shrink the design");
+        assert!(m3.area < m1.area);
+        // Paper Table VII improvement band check (area): 13–26%.
+        for (r, paper_pct) in [(&m1, 19.93), (&m2, 13.12), (&m3, 23.27)] {
+            let imp = (exact.area - r.area) / exact.area * 100.0;
+            assert!(
+                (imp - paper_pct).abs() < 8.0,
+                "{}: improvement {imp:.1}% vs paper {paper_pct}%",
+                r.name
+            );
+        }
+    }
+
+    #[test]
+    fn calibration_normalizes_baseline() {
+        let base = synthesize(&ExactMul::new(3, 3), 500, 1).unwrap();
+        let cal = Calibration::from_baseline(&base);
+        let (a, p, d) = cal.apply(&base);
+        assert!((a - 67.68).abs() < 1e-9);
+        assert!((p - 3.73).abs() < 1e-9);
+        assert!((d - 0.45).abs() < 1e-9);
+    }
+
+    #[test]
+    fn behavioural_only_designs_skip_synthesis() {
+        assert!(synthesize(by_name("roba").unwrap().as_ref(), 100, 1).is_none());
+    }
+}

@@ -1,0 +1,84 @@
+//! Power estimation: dynamic switching power from simulated toggle rates
+//! plus cell leakage — the standard activity-based estimator fast
+//! synthesis flows use in place of SPICE.
+
+use super::mapper::MappedNetlist;
+use crate::logic::sim::{switching_activity, uniform_sampler};
+use crate::logic::Netlist;
+
+#[derive(Clone, Copy, Debug)]
+pub struct PowerReport {
+    /// Dynamic power in relative units (Σ toggle·energy).
+    pub dynamic: f64,
+    /// Leakage in relative units.
+    pub leakage: f64,
+}
+
+impl PowerReport {
+    pub fn total(&self) -> f64 {
+        self.dynamic + self.leakage
+    }
+}
+
+/// Estimate power using `num_vectors` uniform random vector pairs.
+/// `nl` must be the same netlist `mapped` was produced from (activity is
+/// looked up by source node id).
+pub fn power(nl: &Netlist, mapped: &MappedNetlist, num_vectors: usize, seed: u64) -> PowerReport {
+    let act = switching_activity(nl, num_vectors, seed, uniform_sampler(nl.num_inputs));
+    let mut dynamic = 0.0;
+    let mut leakage = 0.0;
+    for (cell, &src) in mapped.cells.iter().zip(mapped.source_node.iter()) {
+        let p = cell.kind.params();
+        let toggle = act.toggle.get(src as usize).copied().unwrap_or(0.0);
+        // Output toggling charges the cell's own output cap (∝ energy) and
+        // the inputs it drives; fanout scales the switched capacitance.
+        let fo = mapped.fanout[cell.output.0 as usize].max(1) as f64;
+        dynamic += toggle * p.energy * (1.0 + 0.25 * (fo - 1.0));
+        leakage += p.leakage * 0.01;
+    }
+    PowerReport { dynamic, leakage }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logic::{optimize, Netlist};
+    use crate::synth::mapper::tech_map;
+
+    #[test]
+    fn idle_netlist_only_leaks() {
+        // Constant inputs -> zero toggles -> dynamic 0.
+        let mut nl = Netlist::new("idle", 2);
+        let (a, b) = (nl.input(0), nl.input(1));
+        let o = nl.and2(a, b);
+        nl.set_outputs(vec![o]);
+        let mapped = tech_map(&nl);
+        let act_power = {
+            let act = switching_activity(&nl, 100, 7, |_r| 0u64);
+            act.toggle.iter().sum::<f64>()
+        };
+        assert_eq!(act_power, 0.0);
+        let p = power(&nl, &mapped, 1000, 7);
+        assert!(p.leakage > 0.0);
+    }
+
+    #[test]
+    fn bigger_circuit_burns_more() {
+        use crate::mult::wallace_multiplier_netlist;
+        let n3 = optimize(&wallace_multiplier_netlist(3, 3));
+        let n8 = optimize(&wallace_multiplier_netlist(8, 8));
+        let p3 = power(&n3, &tech_map(&n3), 2000, 1).total();
+        let p8 = power(&n8, &tech_map(&n8), 2000, 1).total();
+        assert!(p8 > 3.0 * p3, "p8={p8} p3={p3}");
+    }
+
+    #[test]
+    fn deterministic() {
+        use crate::mult::wallace_multiplier_netlist;
+        let n = optimize(&wallace_multiplier_netlist(3, 3));
+        let m = tech_map(&n);
+        let a = power(&n, &m, 1000, 42).total();
+        let b = power(&n, &m, 1000, 42).total();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,110 @@
+//! Static timing analysis over a mapped netlist.
+//!
+//! Zero-slew model: arrival(cell) = max(arrival(inputs)) + intrinsic +
+//! per-fanout load term.  Critical path = max arrival at any primary
+//! output.  Relative units; `report` normalizes to the paper's baseline.
+
+use super::mapper::MappedNetlist;
+use std::collections::HashMap;
+
+#[derive(Clone, Debug)]
+pub struct TimingReport {
+    /// Arrival time per signal (keyed by source-netlist signal id).
+    pub arrival: HashMap<u32, f64>,
+    /// Critical-path delay (max over outputs).
+    pub critical_path: f64,
+    /// Logic depth in cells along the critical path.
+    pub depth: u32,
+}
+
+pub fn sta(m: &MappedNetlist) -> TimingReport {
+    let mut arrival: HashMap<u32, f64> = HashMap::new();
+    let mut depth: HashMap<u32, u32> = HashMap::new();
+    for i in 0..m.num_inputs {
+        arrival.insert(i as u32, 0.0);
+        depth.insert(i as u32, 0);
+    }
+    // Cells are in topological order (construction preserved source order).
+    for cell in &m.cells {
+        let p = cell.kind.params();
+        let in_arr = cell
+            .inputs
+            .iter()
+            .map(|s| *arrival.get(&s.0).unwrap_or(&0.0))
+            .fold(0.0f64, f64::max);
+        let in_depth = cell
+            .inputs
+            .iter()
+            .map(|s| *depth.get(&s.0).unwrap_or(&0))
+            .max()
+            .unwrap_or(0);
+        let fo = m.fanout[cell.output.0 as usize].max(1) as f64;
+        arrival.insert(
+            cell.output.0,
+            in_arr + p.delay_intrinsic + p.delay_per_fanout * fo,
+        );
+        depth.insert(cell.output.0, in_depth + 1);
+    }
+    let critical_path = m
+        .outputs
+        .iter()
+        .map(|s| *arrival.get(&s.0).unwrap_or(&0.0))
+        .fold(0.0f64, f64::max);
+    let max_depth = m
+        .outputs
+        .iter()
+        .map(|s| *depth.get(&s.0).unwrap_or(&0))
+        .max()
+        .unwrap_or(0);
+    TimingReport {
+        arrival,
+        critical_path,
+        depth: max_depth,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logic::Netlist;
+    use crate::synth::mapper::tech_map;
+
+    #[test]
+    fn chain_depth_accumulates() {
+        let mut nl = Netlist::new("chain", 1);
+        let mut s = nl.input(0);
+        for _ in 0..5 {
+            s = nl.not1(s);
+        }
+        nl.set_outputs(vec![s]);
+        let t = sta(&tech_map(&nl));
+        assert_eq!(t.depth, 5);
+        // 5 INVs: 5 * (0.6 + 0.12 * fanout-1) > 3.0
+        assert!(t.critical_path > 3.0);
+    }
+
+    #[test]
+    fn parallel_paths_take_max() {
+        let mut nl = Netlist::new("par", 2);
+        let a = nl.input(0);
+        let b = nl.input(1);
+        // Long path on a, short on b.
+        let mut x = a;
+        for _ in 0..4 {
+            x = nl.not1(x);
+        }
+        let o = nl.and2(x, b);
+        nl.set_outputs(vec![o]);
+        let t = sta(&tech_map(&nl));
+        assert_eq!(t.depth, 5);
+    }
+
+    #[test]
+    fn wider_multiplier_is_slower() {
+        use crate::logic::optimize;
+        use crate::mult::wallace_multiplier_netlist;
+        let t3 = sta(&tech_map(&optimize(&wallace_multiplier_netlist(3, 3))));
+        let t8 = sta(&tech_map(&optimize(&wallace_multiplier_netlist(8, 8))));
+        assert!(t8.critical_path > t3.critical_path * 1.5);
+    }
+}

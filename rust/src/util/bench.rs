@@ -1,0 +1,210 @@
+//! Micro-benchmark harness (criterion is not available offline).
+//!
+//! Provides warmup, adaptive iteration counts, robust statistics
+//! (mean / stddev / median / p95) and an aligned text report.  Used by all
+//! `benches/*.rs` targets (declared with `harness = false`).
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub stddev_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+    /// Optional throughput denominator (elements per iteration).
+    pub elements: Option<u64>,
+}
+
+impl BenchStats {
+    pub fn throughput_mops(&self) -> Option<f64> {
+        self.elements
+            .map(|e| e as f64 / self.mean_ns * 1e3) // elems/ns -> M elems/s
+    }
+}
+
+pub struct Bencher {
+    warmup: Duration,
+    target: Duration,
+    samples: usize,
+    results: Vec<BenchStats>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        // AXMUL_BENCH_FAST=1 trims times so `cargo bench` finishes quickly
+        // in CI while still producing stable medians.
+        let fast = std::env::var("AXMUL_BENCH_FAST").ok().as_deref() == Some("1");
+        Self {
+            warmup: if fast {
+                Duration::from_millis(50)
+            } else {
+                Duration::from_millis(300)
+            },
+            target: if fast {
+                Duration::from_millis(300)
+            } else {
+                Duration::from_secs(2)
+            },
+            samples: if fast { 11 } else { 31 },
+            results: Vec::new(),
+        }
+    }
+
+    /// Benchmark `f`, which performs ONE logical operation per call.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, f: F) -> &BenchStats {
+        self.bench_elems(name, None, f)
+    }
+
+    /// Benchmark with a throughput denominator (e.g. MACs per call).
+    pub fn bench_elems<F: FnMut()>(
+        &mut self,
+        name: &str,
+        elements: Option<u64>,
+        mut f: F,
+    ) -> &BenchStats {
+        // Warmup and calibration: find iters/sample so one sample ~ target/samples.
+        let mut calib_iters: u64 = 1;
+        loop {
+            let t0 = Instant::now();
+            for _ in 0..calib_iters {
+                f();
+            }
+            let dt = t0.elapsed();
+            if dt >= self.warmup || calib_iters > (1 << 30) {
+                let per_iter = dt.as_nanos().max(1) as f64 / calib_iters as f64;
+                let sample_budget =
+                    self.target.as_nanos() as f64 / self.samples as f64;
+                let iters = ((sample_budget / per_iter).ceil() as u64).max(1);
+                let mut samples_ns = Vec::with_capacity(self.samples);
+                for _ in 0..self.samples {
+                    let s0 = Instant::now();
+                    for _ in 0..iters {
+                        f();
+                    }
+                    samples_ns.push(s0.elapsed().as_nanos() as f64 / iters as f64);
+                }
+                let stats = Self::summarize(name, iters, elements, samples_ns);
+                self.results.push(stats);
+                return self.results.last().unwrap();
+            }
+            calib_iters = calib_iters.saturating_mul(2);
+        }
+    }
+
+    fn summarize(
+        name: &str,
+        iters: u64,
+        elements: Option<u64>,
+        mut ns: Vec<f64>,
+    ) -> BenchStats {
+        ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = ns.len() as f64;
+        let mean = ns.iter().sum::<f64>() / n;
+        let var = ns.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+        let pct = |p: f64| -> f64 {
+            let idx = (p * (ns.len() - 1) as f64).round() as usize;
+            ns[idx]
+        };
+        BenchStats {
+            name: name.to_string(),
+            iters,
+            mean_ns: mean,
+            stddev_ns: var.sqrt(),
+            median_ns: pct(0.5),
+            p95_ns: pct(0.95),
+            min_ns: ns[0],
+            elements,
+        }
+    }
+
+    /// Print a report over everything benchmarked so far.
+    pub fn report(&self, title: &str) {
+        println!("\n== {title} ==");
+        println!(
+            "{:<44} {:>12} {:>12} {:>12} {:>10}",
+            "benchmark", "median", "mean", "p95", "Mops/s"
+        );
+        for r in &self.results {
+            let tput = r
+                .throughput_mops()
+                .map(|t| format!("{t:.1}"))
+                .unwrap_or_else(|| "-".into());
+            println!(
+                "{:<44} {:>12} {:>12} {:>12} {:>10}",
+                r.name,
+                fmt_ns(r.median_ns),
+                fmt_ns(r.mean_ns),
+                fmt_ns(r.p95_ns),
+                tput
+            );
+        }
+    }
+
+    pub fn results(&self) -> &[BenchStats] {
+        &self.results
+    }
+}
+
+/// Human-friendly duration formatting for nanosecond quantities.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        std::env::set_var("AXMUL_BENCH_FAST", "1");
+        let mut b = Bencher::new();
+        let mut acc = 0u64;
+        let s = b.bench("noop-ish", || {
+            acc = acc.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(s.mean_ns > 0.0);
+        assert!(s.median_ns <= s.p95_ns * 1.001);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert!(fmt_ns(5.0).ends_with("ns"));
+        assert!(fmt_ns(5e3).ends_with("µs"));
+        assert!(fmt_ns(5e6).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with("s"));
+    }
+
+    #[test]
+    fn throughput_computed() {
+        let s = BenchStats {
+            name: "x".into(),
+            iters: 1,
+            mean_ns: 1000.0,
+            stddev_ns: 0.0,
+            median_ns: 1000.0,
+            p95_ns: 1000.0,
+            min_ns: 1000.0,
+            elements: Some(1000),
+        };
+        assert!((s.throughput_mops().unwrap() - 1000.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,22 @@
+//! Dependency-free utility substrate: PRNGs, fork-join parallelism, a
+//! micro-benchmark harness, JSON/TOML parsing, CLI args and table output.
+//!
+//! The execution image has no network access and only the `xla` crate's
+//! dependency closure vendored, so everything that would normally come
+//! from rayon/criterion/serde/clap is implemented here.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod table;
+pub mod threadpool;
+pub mod toml;
+
+pub use bench::{fmt_ns, BenchStats, Bencher};
+pub use cli::Args;
+pub use json::Json;
+pub use rng::{Pcg32, SplitMix64};
+pub use table::{fmt_improvement, Table};
+pub use threadpool::{num_threads, parallel_chunks, parallel_map, parallel_slice_chunks};
+pub use toml::{TomlDoc, TomlValue};

@@ -1,0 +1,105 @@
+//! ASCII/markdown table rendering for experiment reports.
+
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row width mismatch in table `{}`",
+            self.title
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        w
+    }
+
+    /// Render as an aligned text table.
+    pub fn render(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        out.push_str(&format!("\n## {}\n", self.title));
+        let line = |cells: &[String], out: &mut String| {
+            out.push('|');
+            for (i, c) in cells.iter().enumerate() {
+                out.push_str(&format!(" {:<width$} |", c, width = w[i]));
+            }
+            out.push('\n');
+        };
+        line(&self.headers, &mut out);
+        out.push('|');
+        for wi in &w {
+            out.push_str(&format!("{}|", "-".repeat(wi + 2)));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            line(row, &mut out);
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format a ratio as a percentage-improvement string, paper style:
+/// baseline 10, value 8 -> "8.00 (20.00%)".
+pub fn fmt_improvement(value: f64, baseline: f64, decimals: usize) -> String {
+    if baseline == 0.0 {
+        return format!("{value:.decimals$}");
+    }
+    let imp = (baseline - value) / baseline * 100.0;
+    format!("{value:.decimals$} ({imp:.2}%)")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("T", &["name", "v"]);
+        t.row(vec!["a".into(), "1".into()]);
+        t.row(vec!["longer".into(), "22".into()]);
+        let r = t.render();
+        assert!(r.contains("| name   | v  |"));
+        assert!(r.contains("| longer | 22 |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn rejects_ragged_rows() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["x".into()]);
+    }
+
+    #[test]
+    fn improvement_formatting() {
+        assert_eq!(fmt_improvement(8.0, 10.0, 2), "8.00 (20.00%)");
+        assert_eq!(fmt_improvement(5.0, 0.0, 1), "5.0");
+    }
+}

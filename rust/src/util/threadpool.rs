@@ -1,0 +1,155 @@
+//! Minimal data-parallel helpers built on `std::thread::scope`.
+//!
+//! The coordinator's hot loops (LUT-GEMM tiles, exhaustive metric sweeps,
+//! batched evaluation) need fork-join parallelism; with no external crates
+//! available we provide a small, predictable work-chunking layer instead of
+//! a general work-stealing pool.  Chunks are static (deterministic) which
+//! also keeps results bit-reproducible regardless of thread count.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use: `AXMUL_THREADS` env var, else the
+/// available parallelism, capped at 16.
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("AXMUL_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(16)
+}
+
+/// Apply `f` to every index in `0..n`, in parallel, collecting results in
+/// index order.  `f` must be `Sync`; results are written to disjoint slots.
+pub fn parallel_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = num_threads().min(n.max(1));
+    if workers <= 1 || n < 2 {
+        return (0..n).map(&f).collect();
+    }
+    let mut out: Vec<Option<T>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    let next = AtomicUsize::new(0);
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            let f = &f;
+            let next = &next;
+            let out_ptr = &out_ptr;
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let v = f(i);
+                // SAFETY: each index i is claimed by exactly one worker via
+                // the atomic counter, so writes are to disjoint slots, and
+                // the scope joins all workers before `out` is read.
+                unsafe { *out_ptr.0.add(i) = Some(v) };
+            });
+        }
+    });
+    out.into_iter().map(|v| v.expect("slot filled")).collect()
+}
+
+/// Run `f(chunk_index, range)` over `n` items split into near-equal
+/// contiguous ranges, one per worker.  Used when per-item dispatch would be
+/// too fine-grained (e.g. GEMM row blocks).
+pub fn parallel_chunks<F>(n: usize, f: F)
+where
+    F: Fn(usize, std::ops::Range<usize>) + Sync,
+{
+    let workers = num_threads().min(n.max(1));
+    if workers <= 1 || n < 2 {
+        f(0, 0..n);
+        return;
+    }
+    let chunk = n.div_ceil(workers);
+    std::thread::scope(|s| {
+        for w in 0..workers {
+            let f = &f;
+            s.spawn(move || {
+                let lo = w * chunk;
+                let hi = ((w + 1) * chunk).min(n);
+                if lo < hi {
+                    f(w, lo..hi);
+                }
+            });
+        }
+    });
+}
+
+/// Parallel in-place transform over disjoint mutable chunks of a slice.
+pub fn parallel_slice_chunks<T, F>(data: &mut [T], min_chunk: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let n = data.len();
+    let workers = num_threads().max(1);
+    let chunk = n.div_ceil(workers).max(min_chunk.max(1));
+    std::thread::scope(|s| {
+        for (w, piece) in data.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            s.spawn(move || f(w, piece));
+        }
+    });
+}
+
+struct SendPtr<T>(*mut T);
+// SAFETY: used only for disjoint writes inside a joined scope (see above).
+unsafe impl<T> Sync for SendPtr<T> {}
+unsafe impl<T> Send for SendPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_matches_serial() {
+        let got = parallel_map(1000, |i| i * i);
+        let want: Vec<usize> = (0..1000).map(|i| i * i).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn map_empty_and_single() {
+        assert_eq!(parallel_map(0, |i| i), Vec::<usize>::new());
+        assert_eq!(parallel_map(1, |i| i + 5), vec![5]);
+    }
+
+    #[test]
+    fn chunks_cover_all_indices() {
+        use std::sync::Mutex;
+        let seen = Mutex::new(vec![0u8; 500]);
+        parallel_chunks(500, |_, r| {
+            let mut g = seen.lock().unwrap();
+            for i in r {
+                g[i] += 1;
+            }
+        });
+        assert!(seen.into_inner().unwrap().iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn slice_chunks_transform() {
+        let mut data: Vec<u32> = (0..777).collect();
+        parallel_slice_chunks(&mut data, 16, |_, piece| {
+            for x in piece {
+                *x *= 2;
+            }
+        });
+        assert!(data.iter().enumerate().all(|(i, &x)| x == 2 * i as u32));
+    }
+
+    #[test]
+    fn num_threads_at_least_one() {
+        assert!(num_threads() >= 1);
+    }
+}

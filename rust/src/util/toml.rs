@@ -1,0 +1,290 @@
+//! Minimal TOML-subset parser for experiment configs.
+//!
+//! Supports: `[section]`, `[section.sub]`, `key = value` with strings,
+//! integers, floats, booleans and homogeneous inline arrays, plus `#`
+//! comments.  This covers every config the coordinator ships; anything
+//! fancier is rejected loudly rather than misparsed.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_arr(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: dotted-path key -> value, e.g. `"train.lr"`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TomlDoc {
+    pub entries: BTreeMap<String, TomlValue>,
+}
+
+#[derive(Debug)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml error on line {}: {}", self.line, self.msg)
+    }
+}
+impl std::error::Error for TomlError {}
+
+impl TomlDoc {
+    pub fn parse(src: &str) -> Result<Self, TomlError> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (ln, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let err = |msg: &str| TomlError {
+                line: ln + 1,
+                msg: msg.to_string(),
+            };
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or_else(|| err("expected ']'"))?;
+                let name = name.trim();
+                if name.is_empty()
+                    || !name
+                        .chars()
+                        .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-' || c == '.')
+                {
+                    return Err(err("bad section name"));
+                }
+                section = name.to_string();
+            } else if let Some(eq) = line.find('=') {
+                let key = line[..eq].trim();
+                if key.is_empty() {
+                    return Err(err("empty key"));
+                }
+                let val = parse_value(line[eq + 1..].trim()).map_err(|m| err(&m))?;
+                let full = if section.is_empty() {
+                    key.to_string()
+                } else {
+                    format!("{section}.{key}")
+                };
+                doc.entries.insert(full, val);
+            } else {
+                return Err(err("expected `key = value` or `[section]`"));
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.entries.get(key)
+    }
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(|v| v.as_str()).unwrap_or(default)
+    }
+    pub fn i64_or(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(|v| v.as_i64()).unwrap_or(default)
+    }
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+    /// All keys under a section prefix, e.g. `section("mult")`.
+    pub fn section<'a>(
+        &'a self,
+        prefix: &str,
+    ) -> impl Iterator<Item = (&'a str, &'a TomlValue)> + 'a {
+        let p = format!("{prefix}.");
+        let plen = prefix.len() + 1;
+        self.entries
+            .iter()
+            .filter(move |(k, _)| k.starts_with(&p))
+            .map(move |(k, v)| (&k[plen..], v))
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Respect '#' inside quoted strings.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(body) = s.strip_prefix('"') {
+        let body = body.strip_suffix('"').ok_or("unterminated string")?;
+        if body.contains('"') {
+            return Err("embedded quote not supported".into());
+        }
+        return Ok(TomlValue::Str(body.replace("\\n", "\n").replace("\\t", "\t")));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let body = body.strip_suffix(']').ok_or("unterminated array")?;
+        let body = body.trim();
+        if body.is_empty() {
+            return Ok(TomlValue::Arr(vec![]));
+        }
+        let mut items = Vec::new();
+        for part in split_top_level(body) {
+            items.push(parse_value(part.trim())?);
+        }
+        return Ok(TomlValue::Arr(items));
+    }
+    if s.contains('.') || s.contains('e') || s.contains('E') {
+        if let Ok(f) = s.parse::<f64>() {
+            return Ok(TomlValue::Float(f));
+        }
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    Err(format!("cannot parse value `{s}`"))
+}
+
+/// Split on commas that are not inside quotes or nested brackets.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basic() {
+        let doc = TomlDoc::parse(
+            r#"
+# comment
+title = "axmul"
+steps = 300
+lr = 0.05   # inline comment
+verbose = true
+
+[train]
+batch = 64
+nets = ["lenet", "lenet_plus"]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.str_or("title", ""), "axmul");
+        assert_eq!(doc.i64_or("steps", 0), 300);
+        assert!((doc.f64_or("lr", 0.0) - 0.05).abs() < 1e-12);
+        assert!(doc.bool_or("verbose", false));
+        assert_eq!(doc.i64_or("train.batch", 0), 64);
+        let nets = doc.get("train.nets").unwrap().as_arr().unwrap();
+        assert_eq!(nets.len(), 2);
+        assert_eq!(nets[0].as_str(), Some("lenet"));
+    }
+
+    #[test]
+    fn nested_sections() {
+        let doc = TomlDoc::parse("[a.b]\nc = 1\n").unwrap();
+        assert_eq!(doc.i64_or("a.b.c", 0), 1);
+    }
+
+    #[test]
+    fn hash_inside_string() {
+        let doc = TomlDoc::parse("x = \"a#b\"\n").unwrap();
+        assert_eq!(doc.str_or("x", ""), "a#b");
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let doc = TomlDoc::parse("x = [[1, 2], [3]]\n").unwrap();
+        let outer = doc.get("x").unwrap().as_arr().unwrap();
+        assert_eq!(outer.len(), 2);
+        assert_eq!(outer[0].as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(TomlDoc::parse("[unclosed\n").is_err());
+        assert!(TomlDoc::parse("novalue\n").is_err());
+        assert!(TomlDoc::parse("k = \n").is_err());
+        assert!(TomlDoc::parse("k = \"open\n").is_err());
+    }
+
+    #[test]
+    fn section_iter() {
+        let doc = TomlDoc::parse("[m]\na = 1\nb = 2\n[other]\nc = 3\n").unwrap();
+        let keys: Vec<&str> = doc.section("m").map(|(k, _)| k).collect();
+        assert_eq!(keys, vec!["a", "b"]);
+    }
+
+    #[test]
+    fn underscored_int() {
+        let doc = TomlDoc::parse("n = 1_000_000\n").unwrap();
+        assert_eq!(doc.i64_or("n", 0), 1_000_000);
+    }
+}

@@ -1,0 +1,313 @@
+//! Property-based tests (randomized, seeded, shrinking-free) over the
+//! library's core invariants.  proptest is unavailable offline; these
+//! use the library's own deterministic PRNG with many iterations, which
+//! preserves the essential property-test value: wide random coverage
+//! with reproducible failures (the failing seed is in the panic
+//! message).
+
+use axmul::data::{npy, Batcher, Dataset};
+use axmul::dnn::{gemm_f32, lut_gemm};
+use axmul::logic::{
+    cover_equals, minimal_cover, multiplier_truth_table, opt::nand_rewrite, optimize,
+    synthesize_truth_table, GateKind, Netlist, SignalRef, TruthTable,
+};
+use axmul::metrics::{exhaustive_metrics, weighted_metrics, Lut};
+use axmul::mult::{by_name, Aggregated8x8, Exact2x2, ExactMul, Multiplier, UnitMask};
+use axmul::util::rng::Pcg32;
+
+/// Random netlist generator: arbitrary DAG over the full gate set.
+fn random_netlist(rng: &mut Pcg32, inputs: usize, gates: usize) -> Netlist {
+    let mut nl = Netlist::new("rand", inputs);
+    let mut signals: Vec<SignalRef> = nl.inputs();
+    if rng.gen_range(4) == 0 {
+        let c = nl.constant(rng.gen_range(2) == 1);
+        signals.push(c);
+    }
+    for _ in 0..gates {
+        let kind = match rng.gen_range(9) {
+            0 => GateKind::And,
+            1 => GateKind::Or,
+            2 => GateKind::Not,
+            3 => GateKind::Xor,
+            4 => GateKind::Nand,
+            5 => GateKind::Nor,
+            6 => GateKind::Xnor,
+            7 => GateKind::Mux,
+            _ => GateKind::Maj,
+        };
+        let pick = |rng: &mut Pcg32, sigs: &[SignalRef]| {
+            sigs[rng.gen_range(sigs.len() as u32) as usize]
+        };
+        let ins: Vec<SignalRef> = (0..kind.arity())
+            .map(|_| pick(rng, &signals))
+            .collect();
+        let s = nl.gate(kind, ins);
+        signals.push(s);
+    }
+    // outputs: a random non-empty subset of recent signals
+    let n_out = 1 + rng.gen_range(4) as usize;
+    let outs: Vec<SignalRef> = (0..n_out)
+        .map(|_| signals[rng.gen_range(signals.len() as u32) as usize])
+        .collect();
+    nl.set_outputs(outs);
+    nl
+}
+
+#[test]
+fn prop_optimize_preserves_semantics() {
+    for seed in 0..60u64 {
+        let mut rng = Pcg32::new(seed);
+        let inputs = 2 + rng.gen_range(7) as usize; // 2..8
+        let gates = 5 + rng.gen_range(60) as usize;
+        let nl = random_netlist(&mut rng, inputs, gates);
+        let opt = optimize(&nl);
+        assert_eq!(
+            nl.eval_exhaustive(),
+            opt.eval_exhaustive(),
+            "seed {seed}: optimize changed function"
+        );
+        assert!(opt.num_gates() <= nl.num_gates(), "seed {seed}: grew");
+    }
+}
+
+#[test]
+fn prop_nand_rewrite_preserves_semantics() {
+    for seed in 100..150u64 {
+        let mut rng = Pcg32::new(seed);
+        let inputs = 2 + rng.gen_range(6) as usize;
+        let nl = random_netlist(&mut rng, inputs, 40);
+        let rw = nand_rewrite(&optimize(&nl));
+        assert_eq!(
+            optimize(&nl).eval_exhaustive(),
+            rw.eval_exhaustive(),
+            "seed {seed}"
+        );
+    }
+}
+
+#[test]
+fn prop_qmc_covers_arbitrary_functions() {
+    for seed in 0..80u64 {
+        let mut rng = Pcg32::new(seed ^ 0xABCD);
+        let nvars = 3 + rng.gen_range(3) as usize; // 3..6
+        let rows = 1u32 << nvars;
+        let minterms: Vec<u32> = (0..rows).filter(|_| rng.gen_range(3) == 0).collect();
+        let cover = minimal_cover(nvars, &minterms, &[]);
+        assert!(
+            cover_equals(nvars, &cover, &minterms),
+            "seed {seed}: cover wrong for {} minterms / {nvars} vars",
+            minterms.len()
+        );
+    }
+}
+
+#[test]
+fn prop_synthesized_tables_roundtrip() {
+    // Arbitrary multi-output truth tables synthesize to netlists
+    // computing exactly that table.
+    for seed in 0..25u64 {
+        let mut rng = Pcg32::new(seed ^ 0x7777);
+        let inputs = 3 + rng.gen_range(3) as usize;
+        let outputs = 1 + rng.gen_range(4) as usize;
+        let tt = TruthTable::from_fn(inputs, outputs, |row| {
+            let mut h = row.wrapping_mul(2654435761).wrapping_add(seed as u32);
+            h ^= h >> 13;
+            h & ((1 << outputs) - 1)
+        });
+        let nl = optimize(&synthesize_truth_table("t", &tt));
+        let sim = nl.eval_exhaustive();
+        for row in 0..(1u32 << inputs) {
+            assert_eq!(sim[row as usize] as u32, tt.eval(row), "seed {seed} row {row}");
+        }
+    }
+}
+
+#[test]
+fn prop_aggregation_identity_under_unit_masks() {
+    // For EXACT units, the aggregated product equals the sum of the
+    // included partial-product terms — for EVERY unit subset.
+    let mut rng = Pcg32::new(99);
+    for _ in 0..40 {
+        let mask = UnitMask(rng.gen_range(512) as u16);
+        let agg = Aggregated8x8::new(
+            "agg",
+            Box::new(ExactMul::new(3, 3)),
+            Box::new(Exact2x2),
+            mask,
+        );
+        for _ in 0..200 {
+            let a = rng.gen_range(256);
+            let b = rng.gen_range(256);
+            let mut want = 0u32;
+            for u in 0..9 {
+                if !mask.contains(u) {
+                    continue;
+                }
+                let (ca, cb) = axmul::mult::aggregate::UNIT_LAYOUT[u];
+                let chunks = |x: u32, c: usize| -> u32 {
+                    let (off, w) = [(0u32, 3u32), (3, 3), (6, 2)][c];
+                    (x >> off) & ((1 << w) - 1)
+                };
+                want +=
+                    (chunks(a, ca) * chunks(b, cb)) << Aggregated8x8::unit_shift(u);
+            }
+            assert_eq!(agg.mul(a, b), want & 0xFFFF, "mask {:?} a={a} b={b}", mask);
+        }
+    }
+}
+
+#[test]
+fn prop_lut_matches_behaviour_for_all_designs() {
+    let mut rng = Pcg32::new(5);
+    for name in ["mul8x8_1", "mul8x8_2", "mul8x8_3", "pkm", "etm", "siei", "sv"] {
+        let m = by_name(name).unwrap();
+        let lut = Lut::build(m.as_ref());
+        for _ in 0..500 {
+            let a = rng.gen_range(256);
+            let b = rng.gen_range(256);
+            assert_eq!(lut.mul(a as u8, b as u8), m.mul(a, b) as i32, "{name}");
+        }
+    }
+}
+
+#[test]
+fn prop_lut_gemm_equals_scalar_reference() {
+    let mut rng = Pcg32::new(17);
+    let m8 = by_name("mul8x8_2").unwrap();
+    let lut = Lut::build(m8.as_ref());
+    for trial in 0..15 {
+        let m = 1 + rng.gen_range(20) as usize;
+        let k = 1 + rng.gen_range(50) as usize;
+        let n = 1 + rng.gen_range(20) as usize;
+        let a: Vec<u8> = (0..m * k).map(|_| rng.gen_range(256) as u8).collect();
+        let b: Vec<u8> = (0..k * n).map(|_| rng.gen_range(256) as u8).collect();
+        let mut acc = vec![0i32; m * n];
+        lut_gemm(&a, &b, &mut acc, m, k, n, &lut);
+        for i in 0..m {
+            for j in 0..n {
+                let want: i32 = (0..k)
+                    .map(|kk| m8.mul(a[i * k + kk] as u32, b[kk * n + j] as u32) as i32)
+                    .sum();
+                assert_eq!(acc[i * n + j], want, "trial {trial} ({i},{j})");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_gemm_f32_matches_naive() {
+    let mut rng = Pcg32::new(23);
+    for trial in 0..20 {
+        let m = 1 + rng.gen_range(16) as usize;
+        let k = 1 + rng.gen_range(32) as usize;
+        let n = 1 + rng.gen_range(16) as usize;
+        let a: Vec<f32> = (0..m * k).map(|_| rng.next_f32() - 0.5).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.next_f32() - 0.5).collect();
+        let mut c = vec![0f32; m * n];
+        gemm_f32(&a, &b, &mut c, m, k, n);
+        for i in 0..m {
+            for j in 0..n {
+                let want: f32 = (0..k).map(|kk| a[i * k + kk] * b[kk * n + j]).sum();
+                assert!(
+                    (c[i * n + j] - want).abs() < 1e-4,
+                    "trial {trial} ({i},{j}): {} vs {want}",
+                    c[i * n + j]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_weighted_metrics_uniform_equals_exhaustive() {
+    for name in ["mul8x8_1", "pkm", "etm"] {
+        let m = by_name(name).unwrap();
+        let uni = vec![1.0f64; 256];
+        let e = exhaustive_metrics(m.as_ref());
+        let w = weighted_metrics(m.as_ref(), &uni, &uni);
+        assert!((e.er - w.er).abs() < 1e-9, "{name}");
+        assert!((e.med - w.med).abs() < 1e-6, "{name}");
+    }
+}
+
+#[test]
+fn prop_batcher_epoch_covers_dataset_exactly() {
+    // Batching invariant: over one epoch every sample appears exactly
+    // once (no duplication, no loss) for any divisible batch size.
+    for seed in 0..10u64 {
+        let n = 48;
+        let data = Dataset::synth_mnist(n, seed);
+        for batch in [1usize, 2, 4, 8, 16] {
+            let mut b = Batcher::new(&data, batch, seed ^ 1);
+            let mut seen = vec![0u32; n];
+            for _ in 0..(n / batch) {
+                let (xs, _) = b.next_batch();
+                for img in xs.chunks(784) {
+                    let idx = (0..n)
+                        .find(|&i| data.image(i) == img)
+                        .expect("batch image must come from the dataset");
+                    seen[idx] += 1;
+                }
+            }
+            assert!(
+                seen.iter().all(|&c| c == 1),
+                "seed {seed} batch {batch}: coverage {seen:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_npy_roundtrip_random_arrays() {
+    let dir = std::env::temp_dir().join("axmul_prop_npy");
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut rng = Pcg32::new(31);
+    for trial in 0..20 {
+        let ndim = 1 + rng.gen_range(4) as usize;
+        let shape: Vec<usize> = (0..ndim).map(|_| 1 + rng.gen_range(6) as usize).collect();
+        let n: usize = shape.iter().product();
+        let data: Vec<f32> = (0..n).map(|_| rng.next_f32() * 100.0 - 50.0).collect();
+        let arr = npy::NpyArray {
+            shape,
+            data: npy::NpyData::F32(data),
+        };
+        let p = dir.join(format!("t{trial}.npy"));
+        npy::write_npy(&p, &arr).unwrap();
+        assert_eq!(npy::read_npy(&p).unwrap(), arr, "trial {trial}");
+    }
+}
+
+#[test]
+fn prop_multiplier_truth_tables_consistent_with_mul() {
+    // Every synthesizable design's netlist agrees with mul() on random
+    // samples (the exhaustive check lives in unit tests; this covers the
+    // same invariant across the whole registry cheaply).
+    let mut rng = Pcg32::new(77);
+    for name in axmul::mult::all_names() {
+        let m = by_name(name).unwrap();
+        let Some(nl) = m.netlist() else { continue };
+        let all = nl.eval_exhaustive();
+        for _ in 0..200 {
+            let a = rng.gen_range(1 << m.a_bits());
+            let b = rng.gen_range(1 << m.b_bits());
+            let row = a | (b << m.a_bits());
+            assert_eq!(all[row as usize] as u32, m.mul(a, b), "{name} a={a} b={b}");
+        }
+    }
+}
+
+#[test]
+fn prop_truth_table_eval_matches_netlist_after_all_passes() {
+    // Full pipeline composition: tt -> synth -> optimize -> nand_rewrite
+    // -> optimize keeps the multiplier function intact.
+    let tt = multiplier_truth_table(3, 3);
+    let nl = synthesize_truth_table("m33", &tt);
+    let p1 = optimize(&nl);
+    let p2 = optimize(&nand_rewrite(&p1));
+    let sim = p2.eval_exhaustive();
+    for a in 0..8u32 {
+        for b in 0..8u32 {
+            assert_eq!(sim[(a | (b << 3)) as usize] as u32, a * b);
+        }
+    }
+}
