@@ -8,17 +8,17 @@
 use axmul::coordinator::{Evaluator, Trainer};
 use axmul::data::Dataset;
 use axmul::dnn::{lut_gemm, QNet};
-use axmul::metrics::Lut;
-use axmul::mult::{by_name, ExactMul};
+use axmul::engine::{LutCache, Workspace};
 use axmul::runtime::Engine;
 use axmul::util::{Bencher, Pcg32};
 use std::path::Path;
 
 fn main() {
     let mut b = Bencher::new();
+    let cache = LutCache::global();
 
     // --- the hot path: LUT-GEMM at Table VIII's real shapes -------------
-    let lut = Lut::build(&ExactMul::new(8, 8));
+    let lut = cache.get("exact8x8").expect("exact8x8 LUT");
     let mut rng = Pcg32::new(1);
     for (m, k, n, tag) in [
         (576usize, 150usize, 6usize, "lenet conv1 (im2col)"),
@@ -53,9 +53,10 @@ fn main() {
         trainer.train(&data, 10, 0.05, 0.0, 3, false).unwrap();
         let fnet = trainer.to_float_net();
         let qnet = QNet::quantize(&fnet, &data.images, 16, 8.0);
-        let lut2 = Lut::build(by_name("mul8x8_2").unwrap().as_ref());
-        b.bench("qnet_forward/lenet_mnist (1 image)", || {
-            std::hint::black_box(qnet.forward_one(data.image(0), &lut2));
+        let lut2 = cache.get("mul8x8_2").expect("mul8x8_2 LUT");
+        let mut ws = Workspace::new();
+        b.bench("qnet_forward/lenet_mnist (1 image, reused workspace)", || {
+            std::hint::black_box(qnet.forward_with(data.image(0), &lut2, &mut ws));
         });
         // PJRT train-step latency — the L2 side of the pipeline.
         let mut bt = Bencher::new();
@@ -84,4 +85,9 @@ fn main() {
     }
 
     b.report("Table VIII hot path (native LUT engine)");
+    println!(
+        "[lut cache] {} table(s) built, {} hits",
+        cache.misses(),
+        cache.hits()
+    );
 }

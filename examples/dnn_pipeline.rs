@@ -17,8 +17,8 @@
 
 use axmul::coordinator::{co_optimize, CooptConfig, Evaluator, Trainer};
 use axmul::data::Dataset;
-use axmul::metrics::Lut;
-use axmul::mult::{by_name, DNN_DESIGNS};
+use axmul::engine::LutCache;
+use axmul::mult::DNN_DESIGNS;
 use axmul::runtime::Engine;
 use axmul::util::{Args, Table};
 use std::path::Path;
@@ -83,7 +83,8 @@ fn main() -> anyhow::Result<()> {
         let fnet = trainer.to_float_net();
         let evaluator = Evaluator::default();
         let qnet = evaluator.quantize(&fnet, &data);
-        let lut = Lut::build(by_name("mul8x8_2").unwrap().as_ref());
+        // the co-opt sweep above already built this table; this is a hit
+        let lut = LutCache::global().get("mul8x8_2")?;
         let b = manifest.infer_batch.min(data.n);
         let mut native_preds = Vec::with_capacity(b);
         for i in 0..b {

@@ -3,7 +3,8 @@
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use axmul::metrics::{exhaustive_metrics, Lut};
+use axmul::engine::LutCache;
+use axmul::metrics::exhaustive_metrics;
 use axmul::mult::{by_name, Mul3x3V1, Mul3x3V2, Multiplier};
 use axmul::synth::synthesize;
 
@@ -51,8 +52,9 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    // 5. The runtime artifact every engine consumes: the product LUT.
-    let lut = Lut::build(by_name("mul8x8_2").unwrap().as_ref());
+    // 5. The runtime artifact every engine consumes: the product LUT,
+    //    served from the process-wide cache (built once, shared).
+    let lut = LutCache::global().get("mul8x8_2")?;
     println!(
         "\nLUT[100][200] = {} (exact 20000); LUT is the 'silicon' handed to \
          both the rust LUT-GEMM and the Pallas kernel.",

@@ -1,25 +1,38 @@
-//! Batched inference service demo: load (or quickly train) a LeNet,
-//! pick a multiplier design, and serve a synthetic request trace through
-//! the dynamic-batching server, reporting latency percentiles and
-//! throughput — the deployment story for the paper's silicon.
+//! Multi-design batched inference service demo: load (or quickly train)
+//! a LeNet, register it under several multiplier designs in one
+//! `ModelHub` (shared LUT cache, one table per design per process), and
+//! serve a synthetic A/B request trace through the per-session
+//! dynamic-batching server — reporting per-design accuracy and latency
+//! percentiles, the deployment story for the paper's silicon.
 //!
-//! Run: `cargo run --release --example serve -- [--design mul8x8_2]
-//!       [--requests 2000] [--workers 4] [--max-batch 16]`
+//! Run: `cargo run --release --example serve --
+//!       [--designs mul8x8_2,exact8x8] [--requests 2000] [--workers 4]
+//!       [--max-batch 16] [--max-wait-ms 2]`
 
 use axmul::coordinator::server::{BatchPolicy, InferServer};
 use axmul::coordinator::{Evaluator, Trainer};
 use axmul::data::Dataset;
-use axmul::metrics::Lut;
-use axmul::mult::by_name;
+use axmul::engine::ModelHub;
 use axmul::runtime::Engine;
 use axmul::util::{Args, Pcg32};
 use std::path::Path;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+const MODEL: &str = "lenet_mnist";
+
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
-    let design = args.opt_or("design", "mul8x8_2");
+    // `--designs a,b` routes traffic across sessions; `--design x` still
+    // works for the single-design case.
+    let designs: Vec<String> = args
+        .opt("designs")
+        .unwrap_or_else(|| args.opt_or("design", "mul8x8_2,exact8x8"))
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    anyhow::ensure!(!designs.is_empty(), "no designs given");
     let n_requests = args.opt_usize("requests", 2000);
     let workers = args.opt_usize("workers", 4);
     let policy = BatchPolicy {
@@ -34,42 +47,50 @@ fn main() -> anyhow::Result<()> {
         "run `make artifacts` first"
     );
     let data = Dataset::synth_mnist(1024, 42);
-    let mut trainer = Trainer::new(&engine, "lenet_mnist")?;
+    let mut trainer = Trainer::new(&engine, MODEL)?;
     println!("warming the model: 80 PJRT train steps…");
     trainer.train(&data, 80, 0.05, 0.0, 7, false)?;
     let fnet = trainer.to_float_net();
     let qnet = Arc::new(Evaluator::default().quantize(&fnet, &data));
-    let lut = Arc::new(Lut::build(
-        by_name(design)
-            .ok_or_else(|| anyhow::anyhow!("unknown design {design}"))?
-            .as_ref(),
-    ));
 
+    // One hub, one LUT cache: every design's 64K table is built exactly
+    // once, shared by all lanes.
+    let hub = ModelHub::with_global_cache();
+    for d in &designs {
+        hub.register(MODEL, d, qnet.clone())?;
+    }
     println!(
-        "serving synth-MNIST through {design} | workers={workers} \
-         max_batch={} max_wait={:?}",
-        policy.max_batch, policy.max_wait
+        "serving synth-MNIST through {designs:?} | workers/lane={workers} \
+         max_batch={} max_wait={:?} | {} LUT(s) cached",
+        policy.max_batch,
+        policy.max_wait,
+        hub.cache().len()
     );
-    let server = InferServer::start(qnet, lut, policy, workers);
+    let server = InferServer::start(&hub, policy, workers);
 
-    // Synthetic open-loop trace: Poisson-ish arrivals from 4 client threads.
+    // Synthetic open-loop trace: Poisson-ish arrivals from 4 client
+    // threads, round-robin A/B routed across the designs.
     let trace = Dataset::synth_mnist(256, 99);
     let t0 = Instant::now();
-    let mut latencies: Vec<Duration> = Vec::with_capacity(n_requests);
-    let mut correct = 0usize;
+    let mut per_design: Vec<(Vec<Duration>, usize, usize)> =
+        designs.iter().map(|_| (Vec::new(), 0usize, 0usize)).collect();
     std::thread::scope(|s| {
         let (tx, rx) = std::sync::mpsc::channel();
-        for c in 0..4 {
+        for c in 0..4usize {
             let tx = tx.clone();
             let server = &server;
             let trace = &trace;
+            let designs = &designs;
             s.spawn(move || {
                 let mut rng = Pcg32::substream(1, c as u64);
                 for i in 0..n_requests / 4 {
                     let idx = (i * 4 + c) % trace.n;
-                    let resp = server.infer(trace.image(idx).to_vec());
+                    let di = (i * 4 + c) % designs.len();
+                    let resp = server
+                        .infer(MODEL, &designs[di], trace.image(idx).to_vec())
+                        .expect("server alive");
                     let ok = resp.pred == trace.labels[idx] as usize;
-                    tx.send((resp.latency, ok)).unwrap();
+                    tx.send((di, resp.latency, ok)).unwrap();
                     // jittered pacing ~open-loop arrivals
                     std::thread::sleep(Duration::from_micros(
                         50 + rng.gen_range(300) as u64,
@@ -78,30 +99,50 @@ fn main() -> anyhow::Result<()> {
             });
         }
         drop(tx);
-        while let Ok((lat, ok)) = rx.recv() {
-            latencies.push(lat);
-            correct += usize::from(ok);
+        while let Ok((di, lat, ok)) = rx.recv() {
+            let slot = &mut per_design[di];
+            slot.0.push(lat);
+            slot.1 += 1;
+            slot.2 += usize::from(ok);
         }
     });
     let wall = t0.elapsed();
-    latencies.sort();
-    let pct = |p: f64| latencies[((latencies.len() - 1) as f64 * p) as usize];
-    let served = latencies.len();
+
+    let mut served = 0usize;
     println!("\n== service report ==");
+    for (di, design) in designs.iter().enumerate() {
+        let (lats, n, correct) = &mut per_design[di];
+        if lats.is_empty() {
+            continue;
+        }
+        lats.sort();
+        served += *n;
+        let pct = |p: f64| lats[((lats.len() - 1) as f64 * p) as usize];
+        let stats = server.session_stats(MODEL, design).unwrap();
+        let batches = stats.batches.load(std::sync::atomic::Ordering::Relaxed);
+        let breqs = stats
+            .batched_requests
+            .load(std::sync::atomic::Ordering::Relaxed);
+        println!(
+            "[{design:<10}] served {n:>6}  acc {:>6.2}%  p50 {:?}  p95 {:?}  p99 {:?}  \
+             mean batch {:.2}",
+            *correct as f64 / *n as f64 * 100.0,
+            pct(0.50),
+            pct(0.95),
+            pct(0.99),
+            breqs as f64 / batches.max(1) as f64,
+        );
+    }
     println!("requests        {served}");
-    println!("throughput      {:.0} req/s", served as f64 / wall.as_secs_f64());
-    println!("accuracy        {:.2}%", correct as f64 / served as f64 * 100.0);
-    println!("latency p50     {:?}", pct(0.50));
-    println!("latency p95     {:?}", pct(0.95));
-    println!("latency p99     {:?}", pct(0.99));
-    let batches = server.stats.batches.load(std::sync::atomic::Ordering::Relaxed);
-    let breqs = server
-        .stats
-        .batched_requests
-        .load(std::sync::atomic::Ordering::Relaxed);
     println!(
-        "mean batch size {:.2} ({batches} batches)",
-        breqs as f64 / batches.max(1) as f64
+        "throughput      {:.0} req/s",
+        served as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "lut cache       {} table(s), {} hits / {} builds",
+        hub.cache().len(),
+        hub.cache().hits(),
+        hub.cache().misses()
     );
     server.shutdown();
     Ok(())

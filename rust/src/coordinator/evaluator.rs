@@ -1,17 +1,18 @@
 //! Batched DAL evaluation across multiplier designs.
 //!
-//! Given a trained float network, quantize once, build each design's
-//! LUT once, and sweep the evaluation set — the core measurement of
-//! Table VIII.  A small worker pool (via `util::threadpool`) parallelizes
-//! over images inside `QNet::accuracy`; designs are swept sequentially so
-//! LUT builds are amortized and results are deterministic.
+//! Given a trained float network, quantize once, resolve each design's
+//! LUT through the shared [`LutCache`] (built at most once per process),
+//! and sweep the evaluation set — the core measurement of Table VIII.
+//! A small worker pool (via `util::threadpool`) parallelizes over images
+//! inside `QNet::accuracy` with one reusable `Workspace` per worker;
+//! designs are swept sequentially so results are deterministic.
 
 use crate::data::Dataset;
 use crate::dnn::{FloatNet, QNet};
-use crate::metrics::Lut;
-use crate::mult::by_name;
+use crate::engine::LutCache;
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 #[derive(Clone, Debug)]
 pub struct EvalReport {
@@ -34,6 +35,9 @@ impl EvalReport {
 pub struct Evaluator {
     pub headroom: f32,
     pub n_calib: usize,
+    /// Shared LUT cache: repeated sweeps (and the exact baseline when it
+    /// is also a swept design) tabulate each table at most once.
+    pub cache: Arc<LutCache>,
 }
 
 impl Default for Evaluator {
@@ -41,11 +45,21 @@ impl Default for Evaluator {
         Self {
             headroom: 8.0,
             n_calib: 64,
+            cache: LutCache::global(),
         }
     }
 }
 
 impl Evaluator {
+    /// An evaluator over its own private cache (hit/miss assertions in
+    /// tests; isolation from the process-wide cache).
+    pub fn with_cache(cache: Arc<LutCache>) -> Evaluator {
+        Evaluator {
+            cache,
+            ..Evaluator::default()
+        }
+    }
+
     /// Evaluate `designs` on `n_eval` samples of `data`.
     pub fn run(
         &self,
@@ -73,8 +87,10 @@ impl Evaluator {
 
         let mut accuracy = BTreeMap::new();
         for &name in designs {
-            let m = by_name(name).with_context(|| format!("unknown design {name}"))?;
-            let lut = Lut::build(m.as_ref());
+            let lut = self
+                .cache
+                .get(name)
+                .with_context(|| format!("design {name}"))?;
             let acc = qnet.accuracy(xs, ys, &lut);
             accuracy.insert(name.to_string(), acc);
         }
@@ -90,5 +106,42 @@ impl Evaluator {
         let n_calib = self.n_calib.min(data.n);
         let calib = &data.images[..n_calib * data.stride()];
         QNet::quantize(fnet, calib, n_calib, self.headroom)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_fnet() -> FloatNet {
+        crate::testutil::tiny_lenet(21)
+    }
+
+    #[test]
+    fn sweep_builds_each_lut_once() {
+        let fnet = tiny_fnet();
+        let data = Dataset::synth_mnist(16, 2);
+        let ev = Evaluator::with_cache(Arc::new(LutCache::new()));
+        // exact8x8 listed twice in one sweep: the dupe must be a cache hit,
+        // not a rebuild.
+        let designs = ["exact8x8", "mul8x8_2", "exact8x8"];
+        let rep = ev.run(&fnet, &data, 8, &designs).unwrap();
+        assert_eq!(rep.accuracy.len(), 2);
+        assert!(rep.dal("mul8x8_2").is_some());
+        assert_eq!(ev.cache.misses(), 2, "one build per distinct design");
+        assert_eq!(ev.cache.hits(), 1);
+        // a second sweep re-uses everything
+        ev.run(&fnet, &data, 8, &designs).unwrap();
+        assert_eq!(ev.cache.misses(), 2, "second sweep must be rebuild-free");
+        assert_eq!(ev.cache.hits(), 4);
+    }
+
+    #[test]
+    fn unknown_design_errors() {
+        let fnet = tiny_fnet();
+        let data = Dataset::synth_mnist(8, 2);
+        let ev = Evaluator::with_cache(Arc::new(LutCache::new()));
+        let err = ev.run(&fnet, &data, 4, &["exact8x8", "bogus"]).unwrap_err();
+        assert!(err.to_string().contains("bogus"), "{err:#}");
     }
 }

@@ -1,16 +1,20 @@
 //! Batched inference service: the deployment-shaped face of the
 //! platform.
 //!
-//! Clients submit single images; a dispatcher coalesces them into
-//! batches (size- or deadline-triggered, the classic dynamic-batching
-//! policy), a worker pool runs the quantized LUT engine, and responses
-//! flow back through per-request channels.  This is the L3 coordination
-//! layer a production deployment of the paper's multiplier would sit
-//! behind — and the harness `examples/serve.rs` uses to report
-//! latency/throughput.
+//! Clients submit single images addressed to a `(model, design)` session;
+//! each session has its own request lane with dynamic batching (size- or
+//! deadline-triggered) and worker pool, so one server instance serves
+//! several approximate-silicon designs side by side — the A/B
+//! accuracy-vs-power routing the paper's multiplier family is for.
+//! Workers run the quantized LUT engine through a per-thread [`Workspace`],
+//! so the steady-state hot path performs no scratch allocation, and all
+//! LUTs come from the hub's shared [`crate::engine::LutCache`] (built at
+//! most once per process).
 
-use crate::dnn::QNet;
-use crate::metrics::Lut;
+use crate::dnn::argmax;
+use crate::engine::{ModelHub, Session, SessionKey, Workspace};
+use std::collections::BTreeMap;
+use std::fmt;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -25,6 +29,8 @@ pub struct InferRequest {
 pub struct InferResponse {
     pub logits: Vec<f32>,
     pub pred: usize,
+    /// Which (model, design) session served this request.
+    pub key: SessionKey,
     /// Total time from submit to completion.
     pub latency: Duration,
     /// How many requests shared the batch.
@@ -55,58 +61,130 @@ pub struct ServerStats {
     pub batched_requests: AtomicU64,
 }
 
+/// Why a submission was rejected.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitError {
+    /// No session registered under this (model, design).
+    UnknownSession(SessionKey),
+    /// The session's queue no longer accepts work (server shutting down
+    /// or its workers are gone).
+    Closed(SessionKey),
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::UnknownSession(k) => write!(f, "no session registered for {k}"),
+            SubmitError::Closed(k) => write!(f, "session {k} is shut down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+struct SessionLane {
+    tx: mpsc::Sender<InferRequest>,
+    stats: Arc<ServerStats>,
+}
+
 /// A running service instance.  `shutdown()` (or drop) stops the workers.
 pub struct InferServer {
-    queue_tx: mpsc::Sender<InferRequest>,
+    lanes: BTreeMap<SessionKey, SessionLane>,
+    /// Aggregate stats across all sessions.
     pub stats: Arc<ServerStats>,
     stop: Arc<AtomicBool>,
     workers: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl InferServer {
-    /// Start a server over a quantized network + multiplier LUT.
-    pub fn start(qnet: Arc<QNet>, lut: Arc<Lut>, policy: BatchPolicy, workers: usize) -> Self {
-        let (tx, rx) = mpsc::channel::<InferRequest>();
-        let rx = Arc::new(Mutex::new(rx));
-        let stats = Arc::new(ServerStats::default());
+    /// Start serving every session currently registered in `hub`, with an
+    /// independent dynamic-batching lane and `workers` worker threads per
+    /// session.
+    pub fn start(hub: &ModelHub, policy: BatchPolicy, workers: usize) -> Self {
+        let sessions = hub.sessions();
+        assert!(!sessions.is_empty(), "hub has no sessions to serve");
         let stop = Arc::new(AtomicBool::new(false));
+        let global = Arc::new(ServerStats::default());
+        let mut lanes = BTreeMap::new();
         let mut handles = Vec::new();
-        for _ in 0..workers.max(1) {
-            let rx = rx.clone();
-            let qnet = qnet.clone();
-            let lut = lut.clone();
-            let stats = stats.clone();
-            let stop = stop.clone();
-            handles.push(std::thread::spawn(move || {
-                worker_loop(&rx, &qnet, &lut, policy, &stats, &stop);
-            }));
+        for sess in sessions {
+            let (tx, rx) = mpsc::channel::<InferRequest>();
+            let rx = Arc::new(Mutex::new(rx));
+            let stats = Arc::new(ServerStats::default());
+            for _ in 0..workers.max(1) {
+                let rx = rx.clone();
+                let sess = sess.clone();
+                let stats = stats.clone();
+                let global = global.clone();
+                let stop = stop.clone();
+                handles.push(std::thread::spawn(move || {
+                    worker_loop(&rx, &sess, policy, &stats, &global, &stop);
+                }));
+            }
+            lanes.insert(sess.key.clone(), SessionLane { tx, stats });
         }
         InferServer {
-            queue_tx: tx,
-            stats,
+            lanes,
+            stats: global,
             stop,
             workers: handles,
         }
     }
 
-    /// Submit one image; returns a receiver for the response.
-    pub fn submit(&self, image: Vec<f32>) -> mpsc::Receiver<InferResponse> {
+    /// Submit one image to a (model, design) session; returns a receiver
+    /// for the response, or why the request cannot be queued.
+    pub fn submit(
+        &self,
+        model: &str,
+        design: &str,
+        image: Vec<f32>,
+    ) -> Result<mpsc::Receiver<InferResponse>, SubmitError> {
+        let key = SessionKey::new(model, design);
+        let lane = self
+            .lanes
+            .get(&key)
+            .ok_or_else(|| SubmitError::UnknownSession(key.clone()))?;
         let (tx, rx) = mpsc::channel();
-        let _ = self.queue_tx.send(InferRequest {
-            image,
-            submitted: Instant::now(),
-            respond: tx,
-        });
-        rx
+        lane.tx
+            .send(InferRequest {
+                image,
+                submitted: Instant::now(),
+                respond: tx,
+            })
+            .map_err(|_| SubmitError::Closed(key))?;
+        Ok(rx)
     }
 
     /// Blocking convenience wrapper.
-    pub fn infer(&self, image: Vec<f32>) -> InferResponse {
-        self.submit(image).recv().expect("server alive")
+    pub fn infer(
+        &self,
+        model: &str,
+        design: &str,
+        image: Vec<f32>,
+    ) -> Result<InferResponse, SubmitError> {
+        let key = SessionKey::new(model, design);
+        self.submit(model, design, image)?
+            .recv()
+            .map_err(|_| SubmitError::Closed(key))
+    }
+
+    /// Per-session stats, if the session is being served.
+    pub fn session_stats(&self, model: &str, design: &str) -> Option<Arc<ServerStats>> {
+        self.lanes
+            .get(&SessionKey::new(model, design))
+            .map(|l| l.stats.clone())
+    }
+
+    /// The sessions this server routes to, in key order.
+    pub fn keys(&self) -> Vec<SessionKey> {
+        self.lanes.keys().cloned().collect()
     }
 
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::SeqCst);
+        // Drop the lane senders so any worker parked in recv sees a
+        // disconnect immediately.
+        self.lanes.clear();
         for h in self.workers.drain(..) {
             let _ = h.join();
         }
@@ -121,12 +199,15 @@ impl Drop for InferServer {
 
 fn worker_loop(
     rx: &Mutex<mpsc::Receiver<InferRequest>>,
-    qnet: &QNet,
-    lut: &Lut,
+    sess: &Session,
     policy: BatchPolicy,
     stats: &ServerStats,
+    global: &ServerStats,
     stop: &AtomicBool,
 ) {
+    // One workspace per worker: after warmup the per-image forward pass
+    // does not touch the allocator.
+    let mut ws = Workspace::new();
     loop {
         if stop.load(Ordering::Relaxed) {
             return;
@@ -156,16 +237,20 @@ fn worker_loop(
         let bsize = batch.len();
         stats.batches.fetch_add(1, Ordering::Relaxed);
         stats.batched_requests.fetch_add(bsize as u64, Ordering::Relaxed);
+        global.batches.fetch_add(1, Ordering::Relaxed);
+        global.batched_requests.fetch_add(bsize as u64, Ordering::Relaxed);
         for req in batch {
-            let logits = qnet.forward_one(&req.image, lut);
-            let pred = crate::dnn::argmax(&logits);
+            let logits = sess.infer_with(&req.image, &mut ws);
+            let pred = argmax(&logits);
             let resp = InferResponse {
                 latency: req.submitted.elapsed(),
                 pred,
                 logits,
+                key: sess.key.clone(),
                 batch_size: bsize,
             };
             stats.served.fetch_add(1, Ordering::Relaxed);
+            global.served.fetch_add(1, Ordering::Relaxed);
             let _ = req.respond.send(resp);
         }
     }
@@ -175,90 +260,134 @@ fn worker_loop(
 mod tests {
     use super::*;
     use crate::data::Dataset;
-    use crate::dnn::{FloatNet, Tensor};
-    use crate::mult::ExactMul;
-    use crate::util::rng::Pcg32;
+    use crate::dnn::QNet;
+    use crate::engine::LutCache;
 
-    fn tiny_qnet() -> (Arc<QNet>, Arc<Lut>) {
+    fn tiny_qnet() -> Arc<QNet> {
         // a small random lenet over synth-mnist
-        let mut rng = Pcg32::new(1);
-        let shape = (1, 28, 28);
-        let mut params = Vec::new();
-        let spec = crate::dnn::spec("lenet", 1).unwrap();
-        let (mut c, mut h, mut w) = shape;
-        for op in spec {
-            use crate::dnn::Op;
-            match op {
-                Op::Conv(cin, cout, k, stride) => {
-                    let n = cout * cin * k * k;
-                    params.push(Tensor::new(
-                        vec![cout, cin, k, k],
-                        (0..n).map(|_| (rng.next_f32() - 0.5) * 0.2).collect(),
-                    ));
-                    params.push(Tensor::zeros(vec![cout]));
-                    c = cout;
-                    h = (h - k) / stride + 1;
-                    w = (w - k) / stride + 1;
-                }
-                Op::MaxPool(k) => {
-                    h /= k;
-                    w /= k;
-                }
-                Op::Flatten => {
-                    c *= h * w;
-                    h = 1;
-                    w = 1;
-                }
-                Op::Fc(_, cout) => {
-                    params.push(Tensor::new(
-                        vec![c, cout],
-                        (0..c * cout).map(|_| (rng.next_f32() - 0.5) * 0.1).collect(),
-                    ));
-                    params.push(Tensor::zeros(vec![cout]));
-                    c = cout;
-                }
-                _ => {}
-            }
-        }
-        let fnet = FloatNet::new("lenet", shape, params);
+        let fnet = crate::testutil::tiny_lenet(1);
         let data = Dataset::synth_mnist(8, 2);
-        let qnet = QNet::quantize(&fnet, &data.images, 8, 8.0);
-        (Arc::new(qnet), Arc::new(Lut::build(&ExactMul::new(8, 8))))
+        Arc::new(QNet::quantize(&fnet, &data.images, 8, 8.0))
+    }
+
+    fn single_session_hub(design: &str) -> (ModelHub, Arc<QNet>) {
+        let hub = ModelHub::new(Arc::new(LutCache::new()));
+        let qnet = tiny_qnet();
+        hub.register("lenet", design, qnet.clone()).unwrap();
+        (hub, qnet)
     }
 
     #[test]
     fn serves_requests_correctly() {
-        let (qnet, lut) = tiny_qnet();
+        let (hub, qnet) = single_session_hub("exact8x8");
+        let lut = hub.cache().get("exact8x8").unwrap();
         let data = Dataset::synth_mnist(12, 3);
         // direct engine answers for comparison
         let direct: Vec<usize> = (0..12)
             .map(|i| crate::dnn::argmax(&qnet.forward_one(data.image(i), &lut)))
             .collect();
-        let server = InferServer::start(qnet, lut, BatchPolicy::default(), 2);
-        let rxs: Vec<_> = (0..12).map(|i| server.submit(data.image(i).to_vec())).collect();
+        let server = InferServer::start(&hub, BatchPolicy::default(), 2);
+        let rxs: Vec<_> = (0..12)
+            .map(|i| {
+                server
+                    .submit("lenet", "exact8x8", data.image(i).to_vec())
+                    .unwrap()
+            })
+            .collect();
         for (i, rx) in rxs.into_iter().enumerate() {
             let resp = rx.recv().unwrap();
             assert_eq!(resp.pred, direct[i], "request {i}");
             assert_eq!(resp.logits.len(), 10);
+            assert_eq!(resp.key, SessionKey::new("lenet", "exact8x8"));
         }
         assert_eq!(server.stats.served.load(Ordering::Relaxed), 12);
         server.shutdown();
     }
 
     #[test]
+    fn routes_mixed_designs_and_builds_each_lut_once() {
+        // One server, two designs over the same model: a mixed trace must
+        // come back with per-design predictions identical to single-design
+        // serving, without ever re-tabulating a LUT.
+        let cache = Arc::new(LutCache::new());
+        let hub = ModelHub::new(cache.clone());
+        let qnet = tiny_qnet();
+        hub.register("lenet", "mul8x8_2", qnet.clone()).unwrap();
+        hub.register("lenet", "exact8x8", qnet.clone()).unwrap();
+        assert_eq!(cache.misses(), 2, "one build per design at registration");
+
+        let data = Dataset::synth_mnist(16, 3);
+        let designs = ["mul8x8_2", "exact8x8"];
+        // single-design reference answers through the same cached LUTs
+        let direct: Vec<usize> = (0..16)
+            .map(|i| {
+                let lut = cache.get(designs[i % 2]).unwrap();
+                crate::dnn::argmax(&qnet.forward_one(data.image(i), &lut))
+            })
+            .collect();
+
+        let server = InferServer::start(&hub, BatchPolicy::default(), 2);
+        assert_eq!(server.keys().len(), 2);
+        let rxs: Vec<_> = (0..16)
+            .map(|i| {
+                server
+                    .submit("lenet", designs[i % 2], data.image(i).to_vec())
+                    .unwrap()
+            })
+            .collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.key.design, designs[i % 2], "routed to wrong lane");
+            assert_eq!(resp.pred, direct[i], "request {i} via {}", designs[i % 2]);
+        }
+        // 8 requests per lane, all served
+        for d in designs {
+            let stats = server.session_stats("lenet", d).unwrap();
+            assert_eq!(stats.served.load(Ordering::Relaxed), 8, "{d}");
+        }
+        assert_eq!(server.stats.served.load(Ordering::Relaxed), 16);
+        // serving never rebuilt a table: misses froze at registration time
+        assert_eq!(cache.misses(), 2, "serving path must be rebuild-free");
+        assert!(cache.hits() >= 16, "direct reference answers were cache hits");
+        server.shutdown();
+    }
+
+    #[test]
+    fn submit_to_unknown_session_is_an_error() {
+        let (hub, _) = single_session_hub("exact8x8");
+        let server = InferServer::start(&hub, BatchPolicy::default(), 1);
+        let err = server
+            .submit("lenet", "mul8x8_3", vec![0.0; 784])
+            .err()
+            .expect("unregistered design must be rejected");
+        assert_eq!(
+            err,
+            SubmitError::UnknownSession(SessionKey::new("lenet", "mul8x8_3"))
+        );
+        let err = server.infer("nope", "exact8x8", vec![0.0; 784]).unwrap_err();
+        assert!(matches!(err, SubmitError::UnknownSession(_)));
+        server.shutdown();
+    }
+
+    #[test]
     fn batching_coalesces_under_load() {
-        let (qnet, lut) = tiny_qnet();
+        let (hub, _) = single_session_hub("exact8x8");
         let data = Dataset::synth_mnist(32, 4);
         let server = InferServer::start(
-            qnet,
-            lut,
+            &hub,
             BatchPolicy {
                 max_batch: 8,
                 max_wait: Duration::from_millis(20),
             },
             1, // single worker so the queue backs up
         );
-        let rxs: Vec<_> = (0..32).map(|i| server.submit(data.image(i).to_vec())).collect();
+        let rxs: Vec<_> = (0..32)
+            .map(|i| {
+                server
+                    .submit("lenet", "exact8x8", data.image(i).to_vec())
+                    .unwrap()
+            })
+            .collect();
         let mut max_batch = 0;
         for rx in rxs {
             max_batch = max_batch.max(rx.recv().unwrap().batch_size);
@@ -271,8 +400,12 @@ mod tests {
 
     #[test]
     fn shutdown_joins_workers() {
-        let (qnet, lut) = tiny_qnet();
-        let server = InferServer::start(qnet, lut, BatchPolicy::default(), 3);
+        let cache = Arc::new(LutCache::new());
+        let hub = ModelHub::new(cache);
+        let qnet = tiny_qnet();
+        hub.register("lenet", "exact8x8", qnet.clone()).unwrap();
+        hub.register("lenet", "mul8x8_2", qnet).unwrap();
+        let server = InferServer::start(&hub, BatchPolicy::default(), 3);
         server.shutdown(); // must not hang
     }
 }

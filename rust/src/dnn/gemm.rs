@@ -98,9 +98,18 @@ pub fn lut_gemm(a: &[u8], b: &[u8], acc: &mut [i32], m: usize, k: usize, n: usiz
 
 /// Row sums of the u8 code matrix (needed for zero-point correction).
 pub fn row_sums(a: &[u8], m: usize, k: usize) -> Vec<i32> {
-    (0..m)
-        .map(|i| a[i * k..(i + 1) * k].iter().map(|&x| x as i32).sum())
-        .collect()
+    let mut out = vec![0i32; m];
+    row_sums_into(a, m, k, &mut out);
+    out
+}
+
+/// Allocation-free row sums into a caller-sized buffer (`out.len() == m`).
+pub fn row_sums_into(a: &[u8], m: usize, k: usize, out: &mut [i32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(out.len(), m);
+    for (i, slot) in out.iter_mut().enumerate() {
+        *slot = a[i * k..(i + 1) * k].iter().map(|&x| x as i32).sum();
+    }
 }
 
 #[cfg(test)]

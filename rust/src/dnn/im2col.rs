@@ -39,6 +39,15 @@ pub fn im2col_f32(
     (out, oh, ow)
 }
 
+/// Convolution output dims for an (h, w) input: the shared formula the
+/// workspace path uses to pre-size patch buffers before extraction.
+pub fn conv_out_dims(h: usize, w: usize, k: usize, stride: usize, pad: usize) -> (usize, usize) {
+    (
+        (h + 2 * pad - k) / stride + 1,
+        (w + 2 * pad - k) / stride + 1,
+    )
+}
+
 /// u8-code im2col (zero padding maps to code 0 — correct because the
 /// activation quantization uses zero point 0).
 pub fn im2col_u8(
@@ -50,9 +59,28 @@ pub fn im2col_u8(
     stride: usize,
     pad: usize,
 ) -> (Vec<u8>, usize, usize) {
-    let oh = (h + 2 * pad - k) / stride + 1;
-    let ow = (w + 2 * pad - k) / stride + 1;
+    let (oh, ow) = conv_out_dims(h, w, k, stride, pad);
     let mut out = vec![0u8; oh * ow * c * k * k];
+    let (oh, ow) = im2col_u8_into(x, c, h, w, k, stride, pad, &mut out);
+    (out, oh, ow)
+}
+
+/// Allocation-free u8 im2col into a caller-sized buffer
+/// (`out.len() == oh*ow*c*k*k`); returns (oh, ow).
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_u8_into(
+    x: &[u8],
+    c: usize,
+    h: usize,
+    w: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    out: &mut [u8],
+) -> (usize, usize) {
+    let (oh, ow) = conv_out_dims(h, w, k, stride, pad);
+    assert_eq!(x.len(), c * h * w);
+    assert_eq!(out.len(), oh * ow * c * k * k);
     for oy in 0..oh {
         for ox in 0..ow {
             let base = (oy * ow + ox) * c * k * k;
@@ -74,7 +102,7 @@ pub fn im2col_u8(
             }
         }
     }
-    (out, oh, ow)
+    (oh, ow)
 }
 
 #[cfg(test)]
@@ -118,6 +146,16 @@ mod tests {
             pf,
             pu.iter().map(|&v| v as f32).collect::<Vec<f32>>()
         );
+    }
+
+    #[test]
+    fn into_variant_matches_allocating() {
+        let x: Vec<u8> = (0..48).map(|v| (v * 5 % 251) as u8).collect();
+        let (p, oh, ow) = im2col_u8(&x, 3, 4, 4, 2, 1, 1);
+        let mut out = vec![0u8; p.len()];
+        assert_eq!(im2col_u8_into(&x, 3, 4, 4, 2, 1, 1, &mut out), (oh, ow));
+        assert_eq!(out, p);
+        assert_eq!(conv_out_dims(4, 4, 2, 1, 1), (oh, ow));
     }
 
     #[test]

@@ -14,13 +14,15 @@
 //!     z_w * Σa (exact adder tree — only the multiplier is approximate).
 
 use super::float_net::FloatNet;
-use super::gemm::{lut_gemm, row_sums};
-use super::im2col::im2col_u8;
+use super::gemm::{lut_gemm, row_sums_into};
+use super::im2col::{conv_out_dims, im2col_u8_into};
 use super::quant::{act_scale, quantize_weight, weight_qparams};
 use super::spec::{spec, Op};
 use super::tensor::Tensor;
+use crate::engine::workspace::{prep_f32, prep_i32, prep_u8};
+use crate::engine::Workspace;
 use crate::metrics::Lut;
-use crate::util::parallel_map;
+use crate::util::parallel_chunks;
 
 /// One quantized weighted layer.
 struct QLayer {
@@ -100,30 +102,55 @@ impl QNet {
     }
 
     /// Forward one image through the approximate silicon.  Returns float
-    /// logits.
+    /// logits.  Allocates a throwaway [`Workspace`]; steady-state callers
+    /// (server workers, batched evaluation) should hold their own and use
+    /// [`QNet::forward_with`].
     pub fn forward_one(&self, x: &[f32], lut: &Lut) -> Vec<f32> {
+        let mut ws = Workspace::new();
+        self.forward_with(x, lut, &mut ws)
+    }
+
+    /// Forward one image reusing the caller's scratch buffers.  After the
+    /// workspace has warmed up to the network's high-water shapes, this
+    /// path performs no heap allocation beyond the returned logits.
+    pub fn forward_with(&self, x: &[f32], lut: &Lut, ws: &mut Workspace) -> Vec<f32> {
         let (c0, h0, w0) = self.image_shape;
+        assert_eq!(
+            x.len(),
+            c0 * h0 * w0,
+            "{}: image size mismatch (want {}x{}x{})",
+            self.net,
+            c0,
+            h0,
+            w0
+        );
         let s0 = self.act_scales[0];
         // quantize input (zero point 0)
-        let mut codes: Vec<u8> = x
-            .iter()
-            .map(|&v| (v / s0).round().clamp(0.0, 255.0) as u8)
-            .collect();
+        prep_u8(&mut ws.codes, c0 * h0 * w0, &mut ws.grows);
+        for (dst, &v) in ws.codes.iter_mut().zip(x.iter()) {
+            *dst = (v / s0).round().clamp(0.0, 255.0) as u8;
+        }
         let (mut c, mut h, mut w) = (c0, h0, w0);
         let mut s_in = s0;
         let mut li = 0; // weighted-layer index
         let mut scale_i = 1; // next act scale index
-        let mut real: Vec<f32> = Vec::new(); // real-valued buffer between q points
+        // The current real-valued activation lives in ws.real_a between
+        // quantization points; ws.real_b/real_c are rotating scratch.
         let mut in_real = false;
 
         for op in &self.ops {
             match *op {
                 Op::Conv(_, cout, k, stride) => {
                     debug_assert!(!in_real, "conv must consume codes");
-                    let (patches, oh, ow) = im2col_u8(&codes, c, h, w, k, stride, 0);
-                    real = self.run_qlayer(li, &patches, oh * ow, s_in, lut);
+                    let (oh, ow) = conv_out_dims(h, w, k, stride, 0);
+                    let m = oh * ow;
+                    prep_u8(&mut ws.patches, m * c * k * k, &mut ws.grows);
+                    im2col_u8_into(&ws.codes, c, h, w, k, stride, 0, &mut ws.patches);
+                    self.qlayer_patches(li, m, s_in, lut, ws);
                     // [m, cout] -> [cout, m]
-                    real = transpose_pm(&real, oh * ow, cout);
+                    prep_f32(&mut ws.real_b, m * cout, &mut ws.grows);
+                    transpose_pm_into(&ws.real_a, m, cout, &mut ws.real_b);
+                    std::mem::swap(&mut ws.real_a, &mut ws.real_b);
                     li += 1;
                     c = cout;
                     h = oh;
@@ -131,33 +158,32 @@ impl QNet {
                     in_real = true;
                 }
                 Op::Fc(_, cout) => {
-                    let input: Vec<u8> = if in_real {
+                    if in_real {
                         // final fc after flatten of real values: requantize
                         // with the pending scale
                         let s = self.act_scales[scale_i];
                         s_in = s;
-                        real.iter()
-                            .map(|&v| (v / s).round().clamp(0.0, 255.0) as u8)
-                            .collect()
+                        prep_u8(&mut ws.patches, ws.real_a.len(), &mut ws.grows);
+                        for (dst, &v) in ws.patches.iter_mut().zip(ws.real_a.iter()) {
+                            *dst = (v / s).round().clamp(0.0, 255.0) as u8;
+                        }
                     } else {
-                        codes.clone()
-                    };
-                    real = self.run_qlayer(li, &input, 1, s_in, lut);
+                        prep_u8(&mut ws.patches, ws.codes.len(), &mut ws.grows);
+                        ws.patches.copy_from_slice(&ws.codes);
+                    }
+                    self.qlayer_patches(li, 1, s_in, lut, ws);
                     li += 1;
                     c = cout;
                     in_real = true;
                 }
                 Op::Relu => {
-                    for v in real.iter_mut() {
-                        *v = v.max(0.0);
-                    }
-                    // requantize to codes
+                    // relu + requantize to codes in one pass
                     let s = self.act_scales[scale_i];
                     scale_i += 1;
-                    codes = real
-                        .iter()
-                        .map(|&v| (v / s).round().clamp(0.0, 255.0) as u8)
-                        .collect();
+                    prep_u8(&mut ws.codes, ws.real_a.len(), &mut ws.grows);
+                    for (dst, &v) in ws.codes.iter_mut().zip(ws.real_a.iter()) {
+                        *dst = (v.max(0.0) / s).round().clamp(0.0, 255.0) as u8;
+                    }
                     s_in = s;
                     in_real = false;
                 }
@@ -165,24 +191,35 @@ impl QNet {
                     // max pooling commutes with the monotone quantization —
                     // pool directly on codes.
                     debug_assert!(!in_real);
-                    let (out, oh, ow) = maxpool_u8(&codes, c, h, w, k);
-                    codes = out;
+                    let (oh, ow) = (h / k, w / k);
+                    prep_u8(&mut ws.codes_alt, c * oh * ow, &mut ws.grows);
+                    maxpool_u8_into(&ws.codes, c, h, w, k, &mut ws.codes_alt);
+                    std::mem::swap(&mut ws.codes, &mut ws.codes_alt);
                     h = oh;
                     w = ow;
                 }
                 Op::AvgPoolAll => {
                     // average in real space for precision
-                    let src: Vec<f32> = if in_real {
-                        real.clone()
+                    let denom = (h * w) as f32;
+                    if in_real {
+                        prep_f32(&mut ws.real_b, c, &mut ws.grows);
+                        for ch in 0..c {
+                            ws.real_b[ch] = ws.real_a[ch * h * w..(ch + 1) * h * w]
+                                .iter()
+                                .sum::<f32>()
+                                / denom;
+                        }
+                        std::mem::swap(&mut ws.real_a, &mut ws.real_b);
                     } else {
-                        codes.iter().map(|&q| q as f32 * s_in).collect()
-                    };
-                    let mut out = vec![0f32; c];
-                    for ch in 0..c {
-                        out[ch] =
-                            src[ch * h * w..(ch + 1) * h * w].iter().sum::<f32>() / (h * w) as f32;
+                        prep_f32(&mut ws.real_a, c, &mut ws.grows);
+                        for ch in 0..c {
+                            ws.real_a[ch] = ws.codes[ch * h * w..(ch + 1) * h * w]
+                                .iter()
+                                .map(|&q| q as f32 * s_in)
+                                .sum::<f32>()
+                                / denom;
+                        }
                     }
-                    real = out;
                     h = 1;
                     w = 1;
                     in_real = true;
@@ -194,48 +231,64 @@ impl QNet {
                 }
                 Op::ResBlock(cin, cout, k, stride) => {
                     debug_assert!(!in_real);
-                    let id_codes = codes.clone();
+                    // The identity path stays in ws.codes untouched until
+                    // the final requantization — no snapshot copy needed.
                     let (ic, ih, iw) = (c, h, w);
                     let id_scale = s_in;
-                    // conv1 SAME + relu + requant
-                    let (p1, oh, ow) = im2col_u8(&codes, c, h, w, k, stride, 1);
-                    let mut r1 = self.run_qlayer(li, &p1, oh * ow, s_in, lut);
-                    li += 1;
-                    r1 = transpose_pm(&r1, oh * ow, cout);
-                    for v in r1.iter_mut() {
-                        *v = v.max(0.0);
-                    }
+                    // conv1 SAME + relu + requant -> codes_alt
+                    let (oh, ow) = conv_out_dims(h, w, k, stride, 1);
+                    let m1 = oh * ow;
+                    prep_u8(&mut ws.patches, m1 * c * k * k, &mut ws.grows);
+                    im2col_u8_into(&ws.codes, c, h, w, k, stride, 1, &mut ws.patches);
+                    self.qlayer_patches(li, m1, s_in, lut, ws);
+                    prep_f32(&mut ws.real_b, m1 * cout, &mut ws.grows);
+                    transpose_pm_into(&ws.real_a, m1, cout, &mut ws.real_b);
+                    std::mem::swap(&mut ws.real_a, &mut ws.real_b);
                     let s_mid = self.act_scales[scale_i];
                     scale_i += 1;
-                    let mid: Vec<u8> = r1
-                        .iter()
-                        .map(|&v| (v / s_mid).round().clamp(0.0, 255.0) as u8)
-                        .collect();
-                    // conv2 SAME stride 1
-                    let (p2, oh2, ow2) = im2col_u8(&mid, cout, oh, ow, k, 1, 1);
-                    let mut r2 = self.run_qlayer(li, &p2, oh2 * ow2, s_mid, lut);
-                    li += 1;
-                    r2 = transpose_pm(&r2, oh2 * ow2, cout);
-                    // shortcut
-                    let short: Vec<f32> = if stride != 1 || cin != cout {
-                        let (ps, soh, sow) = im2col_u8(&id_codes, ic, ih, iw, 1, stride, 0);
-                        let rs = self.run_qlayer(li, &ps, soh * sow, id_scale, lut);
-                        li += 1;
-                        transpose_pm(&rs, soh * sow, cout)
+                    prep_u8(&mut ws.codes_alt, ws.real_a.len(), &mut ws.grows);
+                    for (dst, &v) in ws.codes_alt.iter_mut().zip(ws.real_a.iter()) {
+                        *dst = (v.max(0.0) / s_mid).round().clamp(0.0, 255.0) as u8;
+                    }
+                    // conv2 SAME stride 1 -> real_a = r2 in [cout, m]
+                    let (oh2, ow2) = conv_out_dims(oh, ow, k, 1, 1);
+                    let m2 = oh2 * ow2;
+                    prep_u8(&mut ws.patches, m2 * cout * k * k, &mut ws.grows);
+                    im2col_u8_into(&ws.codes_alt, cout, oh, ow, k, 1, 1, &mut ws.patches);
+                    self.qlayer_patches(li + 1, m2, s_mid, lut, ws);
+                    prep_f32(&mut ws.real_b, m2 * cout, &mut ws.grows);
+                    transpose_pm_into(&ws.real_a, m2, cout, &mut ws.real_b);
+                    std::mem::swap(&mut ws.real_a, &mut ws.real_b);
+                    // shortcut, then add + relu
+                    let projected = stride != 1 || cin != cout;
+                    if projected {
+                        let (soh, sow) = conv_out_dims(ih, iw, 1, stride, 0);
+                        let ms = soh * sow;
+                        prep_u8(&mut ws.patches, ms * ic, &mut ws.grows);
+                        im2col_u8_into(&ws.codes, ic, ih, iw, 1, stride, 0, &mut ws.patches);
+                        // park r2 in real_c so the projection can use real_a
+                        std::mem::swap(&mut ws.real_a, &mut ws.real_c);
+                        self.qlayer_patches(li + 2, ms, id_scale, lut, ws);
+                        prep_f32(&mut ws.real_b, ms * cout, &mut ws.grows);
+                        transpose_pm_into(&ws.real_a, ms, cout, &mut ws.real_b);
+                        std::mem::swap(&mut ws.real_a, &mut ws.real_c); // real_a = r2
+                        for (o, &sv) in ws.real_a.iter_mut().zip(ws.real_b.iter()) {
+                            *o = (*o + sv).max(0.0);
+                        }
                     } else {
-                        id_codes.iter().map(|&q| q as f32 * id_scale).collect()
-                    };
-                    for (o, s) in r2.iter_mut().zip(short.iter()) {
-                        *o = (*o + s).max(0.0);
+                        for (o, &q) in ws.real_a.iter_mut().zip(ws.codes.iter()) {
+                            *o = (*o + q as f32 * id_scale).max(0.0);
+                        }
                     }
                     // requantize block output
                     let s_out = self.act_scales[scale_i];
                     scale_i += 1;
-                    codes = r2
-                        .iter()
-                        .map(|&v| (v / s_out).round().clamp(0.0, 255.0) as u8)
-                        .collect();
+                    prep_u8(&mut ws.codes, ws.real_a.len(), &mut ws.grows);
+                    for (dst, &v) in ws.codes.iter_mut().zip(ws.real_a.iter()) {
+                        *dst = (v / s_out).round().clamp(0.0, 255.0) as u8;
+                    }
                     s_in = s_out;
+                    li += 2 + usize::from(projected);
                     c = cout;
                     h = oh2;
                     w = ow2;
@@ -243,43 +296,51 @@ impl QNet {
                 }
             }
         }
-        real
+        ws.real_a.clone()
     }
 
-    /// acc -> real: s_in * w_scale * (acc - z_w * rowsum) + bias.
-    /// input: [m, K] codes; returns [m, cout] real.
-    fn run_qlayer(&self, li: usize, input: &[u8], m: usize, s_in: f32, lut: &Lut) -> Vec<f32> {
+    /// Run weighted layer `li` over the `m` rows of `ws.patches`, writing
+    /// real output [m, cout] into `ws.real_a` (acc -> real:
+    /// s_in * w_scale * (acc - z_w * rowsum) + bias).
+    fn qlayer_patches(&self, li: usize, m: usize, s_in: f32, lut: &Lut, ws: &mut Workspace) {
         let l = &self.layers[li];
-        debug_assert_eq!(input.len(), m * l.k, "layer {li} input size");
-        let mut acc = vec![0i32; m * l.cout];
-        lut_gemm(input, &l.w_t, &mut acc, m, l.k, l.cout, lut);
-        let rs = row_sums(input, m, l.k);
-        let mut out = vec![0f32; m * l.cout];
+        debug_assert_eq!(ws.patches.len(), m * l.k, "layer {li} input size");
+        prep_i32(&mut ws.acc, m * l.cout, &mut ws.grows);
+        prep_i32(&mut ws.rowsum, m, &mut ws.grows);
+        prep_f32(&mut ws.real_a, m * l.cout, &mut ws.grows);
+        lut_gemm(&ws.patches, &l.w_t, &mut ws.acc, m, l.k, l.cout, lut);
+        row_sums_into(&ws.patches, m, l.k, &mut ws.rowsum);
         let sc = s_in * l.w_scale;
         for p in 0..m {
-            let corr = l.w_zp * rs[p];
+            let corr = l.w_zp * ws.rowsum[p];
             for o in 0..l.cout {
-                out[p * l.cout + o] = sc * (acc[p * l.cout + o] - corr) as f32 + l.bias[o];
+                ws.real_a[p * l.cout + o] =
+                    sc * (ws.acc[p * l.cout + o] - corr) as f32 + l.bias[o];
             }
         }
-        out
     }
 
     /// Batched accuracy evaluation: fraction of argmax(logits) == label.
+    /// One workspace per worker thread keeps the sweep allocation-free
+    /// after warmup.
     pub fn accuracy(&self, xs: &[f32], labels: &[i32], lut: &Lut) -> f64 {
+        use std::sync::atomic::{AtomicUsize, Ordering};
         let stride = {
             let (c, h, w) = self.image_shape;
             c * h * w
         };
         let n = labels.len();
-        let correct: usize = parallel_map(n, |i| {
-            let logits = self.forward_one(&xs[i * stride..(i + 1) * stride], lut);
-            let pred = argmax(&logits);
-            usize::from(pred == labels[i] as usize)
-        })
-        .into_iter()
-        .sum();
-        correct as f64 / n as f64
+        let correct = AtomicUsize::new(0);
+        parallel_chunks(n, |_, range| {
+            let mut ws = Workspace::new();
+            let mut local = 0usize;
+            for i in range {
+                let logits = self.forward_with(&xs[i * stride..(i + 1) * stride], lut, &mut ws);
+                local += usize::from(argmax(&logits) == labels[i] as usize);
+            }
+            correct.fetch_add(local, Ordering::Relaxed);
+        });
+        correct.load(Ordering::Relaxed) as f64 / n as f64
     }
 
     /// Histogram of weight codes across all layers (the §II-B
@@ -345,20 +406,23 @@ fn make_qlayer(w: &Tensor, b: &Tensor) -> QLayer {
     }
 }
 
-fn transpose_pm(x: &[f32], m: usize, cout: usize) -> Vec<f32> {
-    let mut out = vec![0f32; x.len()];
+/// [m, cout] -> [cout, m] into a caller-sized buffer.
+fn transpose_pm_into(x: &[f32], m: usize, cout: usize, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), m * cout);
+    debug_assert_eq!(out.len(), m * cout);
     for p in 0..m {
         for o in 0..cout {
             out[o * m + p] = x[p * cout + o];
         }
     }
-    out
 }
 
-fn maxpool_u8(x: &[u8], c: usize, h: usize, w: usize, k: usize) -> (Vec<u8>, usize, usize) {
+/// k×k max pooling on codes into a caller-sized buffer
+/// (`out.len() == c * (h/k) * (w/k)`).
+fn maxpool_u8_into(x: &[u8], c: usize, h: usize, w: usize, k: usize, out: &mut [u8]) {
     let oh = h / k;
     let ow = w / k;
-    let mut out = vec![0u8; c * oh * ow];
+    debug_assert_eq!(out.len(), c * oh * ow);
     for ch in 0..c {
         for oy in 0..oh {
             for ox in 0..ow {
@@ -372,7 +436,6 @@ fn maxpool_u8(x: &[u8], c: usize, h: usize, w: usize, k: usize) -> (Vec<u8>, usi
             }
         }
     }
-    (out, oh, ow)
 }
 
 pub fn argmax(xs: &[f32]) -> usize {
@@ -478,6 +541,59 @@ mod tests {
             let logits = qnet.forward_one(&xs[..3 * 32 * 32], &lut);
             assert_eq!(logits.len(), 10, "{net}");
             assert!(logits.iter().all(|v| v.is_finite()), "{net}");
+        }
+    }
+
+    #[test]
+    fn forward_with_matches_forward_one_all_nets() {
+        // The workspace path must be bit-identical to the allocating path
+        // for every architecture (incl. resnet19_s's projection blocks).
+        let lut = Lut::build(&ExactMul::new(8, 8));
+        for net in super::super::spec::NETWORKS {
+            let shape = (3, 32, 32);
+            let fnet = toy_fnet(net, shape, 4);
+            let mut rng = Pcg32::new(5);
+            let xs: Vec<f32> = (0..4 * 3 * 32 * 32).map(|_| rng.next_f32()).collect();
+            let qnet = QNet::quantize(&fnet, &xs, 2, 8.0);
+            let mut ws = Workspace::new();
+            for i in 0..4 {
+                let x = &xs[i * 3 * 32 * 32..(i + 1) * 3 * 32 * 32];
+                assert_eq!(
+                    qnet.forward_with(x, &lut, &mut ws),
+                    qnet.forward_one(x, &lut),
+                    "{net} image {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn steady_state_forward_is_allocation_free() {
+        let lut = Lut::build(&ExactMul::new(8, 8));
+        for net in ["lenet_plus", "resnet19_s"] {
+            let shape = (3, 32, 32);
+            let fnet = toy_fnet(net, shape, 8);
+            let mut rng = Pcg32::new(6);
+            let xs: Vec<f32> = (0..8 * 3 * 32 * 32).map(|_| rng.next_f32()).collect();
+            let qnet = QNet::quantize(&fnet, &xs, 2, 8.0);
+            let mut ws = Workspace::new();
+            // Warmup: buffer roles rotate between calls, so capacities can
+            // take a few passes to converge to the high-water mark.
+            for i in 0..3 {
+                qnet.forward_with(&xs[i * 3072..(i + 1) * 3072], &lut, &mut ws);
+            }
+            let grows = ws.grow_events();
+            let caps = ws.capacity_bytes();
+            assert!(grows > 0, "{net}: warmup must have populated scratch");
+            for i in 0..8 {
+                qnet.forward_with(&xs[i * 3072..(i + 1) * 3072], &lut, &mut ws);
+            }
+            assert_eq!(
+                ws.grow_events(),
+                grows,
+                "{net}: steady-state forward must not grow scratch"
+            );
+            assert_eq!(ws.capacity_bytes(), caps, "{net}: capacity crept");
         }
     }
 

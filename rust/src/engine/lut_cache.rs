@@ -1,0 +1,166 @@
+//! Process-wide cache of built product LUTs.
+//!
+//! Tabulating an 8×8 design is 64K multiplier evaluations — cheap for
+//! table-backed designs, expensive for synthesized ones — and the seed
+//! architecture rebuilt it at every call site (server start, every
+//! evaluator sweep iteration, every bench).  The cache makes "one design
+//! name = one table in memory" a process invariant: every consumer holds
+//! the same `Arc<Lut>`, and the hit/miss counters make the invariant
+//! testable.
+
+use crate::metrics::Lut;
+use crate::mult::by_name;
+use anyhow::{anyhow, ensure, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+#[derive(Default)]
+pub struct LutCache {
+    luts: Mutex<HashMap<String, Arc<Lut>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl LutCache {
+    /// An empty cache.  Prefer [`LutCache::global`] in production paths so
+    /// every subsystem shares one table per design; fresh instances are
+    /// for tests that assert on hit/miss counters.
+    pub fn new() -> LutCache {
+        LutCache::default()
+    }
+
+    /// The shared per-process cache.
+    pub fn global() -> Arc<LutCache> {
+        static GLOBAL: OnceLock<Arc<LutCache>> = OnceLock::new();
+        GLOBAL.get_or_init(|| Arc::new(LutCache::new())).clone()
+    }
+
+    /// Look up (building at most once per cache) the LUT of a registered
+    /// 8×8 design.  Errors on unknown names and non-8×8 designs.
+    pub fn get(&self, design: &str) -> Result<Arc<Lut>> {
+        if let Some(lut) = self.luts.lock().unwrap().get(design) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(lut.clone());
+        }
+        // Build outside the lock: tabulation is the slow part (it
+        // parallelizes internally) and must not serialize other designs.
+        let m = by_name(design).ok_or_else(|| anyhow!("unknown design {design}"))?;
+        ensure!(
+            (m.a_bits(), m.b_bits()) == (8, 8),
+            "design {design} is {}x{}, LUTs are for 8x8 designs",
+            m.a_bits(),
+            m.b_bits()
+        );
+        let built = Arc::new(Lut::build(m.as_ref()));
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let mut guard = self.luts.lock().unwrap();
+        // A racing builder may have inserted first; keep the incumbent so
+        // every consumer shares a single allocation.
+        let entry = guard.entry(design.to_string()).or_insert(built);
+        Ok(entry.clone())
+    }
+
+    /// Insert a pre-built LUT under an explicit key (synthetic tables in
+    /// tests, externally loaded silicon).  Replaces any previous entry.
+    pub fn insert(&self, name: &str, lut: Arc<Lut>) {
+        self.luts.lock().unwrap().insert(name.to_string(), lut);
+    }
+
+    pub fn contains(&self, design: &str) -> bool {
+        self.luts.lock().unwrap().contains_key(design)
+    }
+
+    /// Number of distinct LUTs currently held.
+    pub fn len(&self) -> usize {
+        self.luts.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Lookups served from the cache.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Lookups that had to tabulate (one per distinct design, absent
+    /// races).
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_once_then_hits() {
+        let cache = LutCache::new();
+        let a = cache.get("exact8x8").unwrap();
+        let b = cache.get("exact8x8").unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "second get must share the same table");
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.len(), 1);
+
+        let c = cache.get("mul8x8_2").unwrap();
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(cache.misses(), 2);
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn unknown_and_narrow_designs_error() {
+        let cache = LutCache::new();
+        assert!(cache.get("nonsense").is_err());
+        // mul3x3_1 is registered but not an 8x8 design.
+        assert!(cache.get("mul3x3_1").is_err());
+        assert_eq!(cache.misses(), 0);
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn concurrent_gets_share_one_build() {
+        let cache = Arc::new(LutCache::new());
+        let tables: Vec<Arc<Lut>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..8)
+                .map(|_| {
+                    let cache = cache.clone();
+                    s.spawn(move || cache.get("mul8x8_3").unwrap())
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        // Races may tabulate more than once, but every consumer must end
+        // up holding the same winning allocation.
+        for t in &tables[1..] {
+            assert!(Arc::ptr_eq(&tables[0], t));
+        }
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.hits() + cache.misses(), 8);
+    }
+
+    #[test]
+    fn global_is_shared() {
+        let a = LutCache::global();
+        let b = LutCache::global();
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn insert_overrides() {
+        let cache = LutCache::new();
+        let zero = Arc::new(Lut {
+            name: "zero".into(),
+            table: vec![0; 65536],
+            zero_row_zero: true,
+        });
+        cache.insert("zero", zero.clone());
+        assert!(cache.contains("zero"));
+        let got = cache.get("zero").unwrap();
+        assert!(Arc::ptr_eq(&zero, &got));
+    }
+}

@@ -1,0 +1,26 @@
+//! Multi-design inference engine: the shared substrate between the
+//! serving layer, the evaluator, the benches and the python-facing LUT
+//! exporter.
+//!
+//! Three pieces:
+//!
+//! * [`LutCache`] — a concurrent design-name → `Arc<Lut>` cache so each
+//!   64K-entry product table is tabulated at most once per process, no
+//!   matter how many consumers (server lanes, evaluator sweeps, benches)
+//!   ask for it.
+//! * [`Session`] / [`ModelHub`] — a quantized model bound to one
+//!   approximate-silicon design, registered under a `(model, design)`
+//!   key.  One hub can hold the same model under several designs, which
+//!   is what lets a single server A/B-route traffic across
+//!   accuracy/power points (the paper's whole deployment story).
+//! * [`Workspace`] — reusable im2col/GEMM/accumulator scratch threaded
+//!   through `QNet::forward_with`, so steady-state serving performs no
+//!   per-batch heap allocation on the hot path.
+
+pub mod lut_cache;
+pub mod session;
+pub mod workspace;
+
+pub use lut_cache::LutCache;
+pub use session::{ModelHub, Session, SessionKey};
+pub use workspace::Workspace;

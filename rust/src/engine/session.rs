@@ -1,0 +1,185 @@
+//! Sessions and the model hub: the unit of routing for multi-design
+//! serving.
+//!
+//! A `Session` bundles a quantized model with one design's cached LUT —
+//! everything a worker needs to run inference.  The `ModelHub` registers
+//! sessions under `(model, design)` keys; registering the same `QNet`
+//! under several designs is how one server instance serves e.g.
+//! `mul8x8_2` and `exact8x8` traffic side by side for accuracy-vs-power
+//! A/B routing.
+
+use crate::dnn::{argmax, QNet};
+use crate::engine::{LutCache, Workspace};
+use crate::metrics::Lut;
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::{Arc, RwLock};
+
+/// Identity of a servable (model, design) pair.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct SessionKey {
+    pub model: String,
+    pub design: String,
+}
+
+impl SessionKey {
+    pub fn new(model: &str, design: &str) -> SessionKey {
+        SessionKey {
+            model: model.to_string(),
+            design: design.to_string(),
+        }
+    }
+}
+
+impl fmt::Display for SessionKey {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}@{}", self.model, self.design)
+    }
+}
+
+/// A quantized model bound to one approximate-silicon design.
+pub struct Session {
+    pub key: SessionKey,
+    pub qnet: Arc<QNet>,
+    pub lut: Arc<Lut>,
+}
+
+impl Session {
+    pub fn new(key: SessionKey, qnet: Arc<QNet>, lut: Arc<Lut>) -> Session {
+        Session { key, qnet, lut }
+    }
+
+    /// Forward one image through this session's silicon, reusing the
+    /// caller's scratch (allocation-free in steady state).
+    pub fn infer_with(&self, image: &[f32], ws: &mut Workspace) -> Vec<f32> {
+        self.qnet.forward_with(image, &self.lut, ws)
+    }
+
+    /// Convenience single-shot inference: returns (logits, argmax).
+    pub fn infer_one(&self, image: &[f32]) -> (Vec<f32>, usize) {
+        let logits = self.qnet.forward_one(image, &self.lut);
+        let pred = argmax(&logits);
+        (logits, pred)
+    }
+}
+
+/// Registry of live sessions keyed by (model, design), sharing one
+/// [`LutCache`] so every design's table is built at most once.
+pub struct ModelHub {
+    cache: Arc<LutCache>,
+    sessions: RwLock<BTreeMap<SessionKey, Arc<Session>>>,
+}
+
+impl ModelHub {
+    pub fn new(cache: Arc<LutCache>) -> ModelHub {
+        ModelHub {
+            cache,
+            sessions: RwLock::new(BTreeMap::new()),
+        }
+    }
+
+    /// A hub over the process-wide LUT cache.
+    pub fn with_global_cache() -> ModelHub {
+        ModelHub::new(LutCache::global())
+    }
+
+    /// Bind `qnet` to `design` (building or reusing its LUT) and register
+    /// the session.  Re-registering a key replaces the session.
+    pub fn register(&self, model: &str, design: &str, qnet: Arc<QNet>) -> Result<Arc<Session>> {
+        let lut = self.cache.get(design)?;
+        let key = SessionKey::new(model, design);
+        let sess = Arc::new(Session::new(key.clone(), qnet, lut));
+        self.sessions.write().unwrap().insert(key, sess.clone());
+        Ok(sess)
+    }
+
+    pub fn session(&self, model: &str, design: &str) -> Option<Arc<Session>> {
+        self.sessions
+            .read()
+            .unwrap()
+            .get(&SessionKey::new(model, design))
+            .cloned()
+    }
+
+    /// All registered sessions, in key order (deterministic).
+    pub fn sessions(&self) -> Vec<Arc<Session>> {
+        self.sessions.read().unwrap().values().cloned().collect()
+    }
+
+    pub fn keys(&self) -> Vec<SessionKey> {
+        self.sessions.read().unwrap().keys().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.sessions.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn cache(&self) -> &Arc<LutCache> {
+        &self.cache
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_qnet() -> Arc<QNet> {
+        let fnet = crate::testutil::tiny_lenet(11);
+        let mut rng = crate::util::rng::Pcg32::new(12);
+        let calib: Vec<f32> = (0..784).map(|_| rng.next_f32()).collect();
+        Arc::new(QNet::quantize(&fnet, &calib, 1, 8.0))
+    }
+
+    #[test]
+    fn register_shares_luts_across_sessions() {
+        let cache = Arc::new(LutCache::new());
+        let hub = ModelHub::new(cache.clone());
+        let qnet = tiny_qnet();
+        let a = hub.register("lenet", "exact8x8", qnet.clone()).unwrap();
+        let b = hub.register("lenet_v2", "exact8x8", qnet.clone()).unwrap();
+        let c = hub.register("lenet", "mul8x8_2", qnet).unwrap();
+        assert!(Arc::ptr_eq(&a.lut, &b.lut), "same design = same table");
+        assert!(!Arc::ptr_eq(&a.lut, &c.lut));
+        assert_eq!(cache.misses(), 2, "two distinct designs, two builds");
+        assert_eq!(hub.len(), 3);
+        assert_eq!(
+            hub.keys()[0],
+            SessionKey::new("lenet", "exact8x8"),
+            "keys are ordered"
+        );
+    }
+
+    #[test]
+    fn lookup_and_unknown_design() {
+        let hub = ModelHub::new(Arc::new(LutCache::new()));
+        let qnet = tiny_qnet();
+        hub.register("m", "exact8x8", qnet.clone()).unwrap();
+        assert!(hub.session("m", "exact8x8").is_some());
+        assert!(hub.session("m", "mul8x8_2").is_none());
+        assert!(hub.register("m", "not_a_design", qnet).is_err());
+    }
+
+    #[test]
+    fn session_infer_matches_direct_forward() {
+        let hub = ModelHub::new(Arc::new(LutCache::new()));
+        let qnet = tiny_qnet();
+        let sess = hub.register("m", "mul8x8_2", qnet.clone()).unwrap();
+        let image: Vec<f32> = (0..784).map(|i| (i % 7) as f32 / 7.0).collect();
+        let (logits, pred) = sess.infer_one(&image);
+        let direct = qnet.forward_one(&image, &sess.lut);
+        assert_eq!(logits, direct);
+        assert_eq!(pred, argmax(&direct));
+        let mut ws = Workspace::new();
+        assert_eq!(sess.infer_with(&image, &mut ws), direct);
+    }
+
+    #[test]
+    fn key_display() {
+        assert_eq!(SessionKey::new("lenet", "pkm").to_string(), "lenet@pkm");
+    }
+}

@@ -1,0 +1,123 @@
+//! Reusable scratch memory for the quantized forward path.
+//!
+//! `QNet::forward_with` threads a `Workspace` through every op: im2col
+//! patches, GEMM accumulators, row sums and the real-valued activation
+//! buffers all live here and are resized *within capacity* between
+//! calls.  Buffers grow to the high-water mark of the network being
+//! served during the first couple of calls (buffer roles rotate via
+//! pointer swaps, so capacities converge after at most a few passes) and
+//! steady-state inference then performs zero heap allocation per image.
+//!
+//! `grow_events()` counts capacity growth, which is what the reuse tests
+//! assert on: warm up, snapshot, keep serving, counter must not move.
+
+/// Scratch buffers for [`crate::dnn::QNet::forward_with`].
+///
+/// Not `Sync`/shared: one workspace per worker thread (the server keeps
+/// one per lane worker; `QNet::accuracy` keeps one per chunk worker).
+#[derive(Default)]
+pub struct Workspace {
+    /// Current activation codes (the quantized tensor between ops).
+    pub(crate) codes: Vec<u8>,
+    /// Secondary code buffer (pool output, residual mid activations).
+    pub(crate) codes_alt: Vec<u8>,
+    /// im2col patch matrix / fc input codes.
+    pub(crate) patches: Vec<u8>,
+    /// i32 GEMM accumulator.
+    pub(crate) acc: Vec<i32>,
+    /// Per-patch code sums (zero-point correction).
+    pub(crate) rowsum: Vec<i32>,
+    /// Real-valued activation buffers; roles rotate by `mem::swap`.
+    pub(crate) real_a: Vec<f32>,
+    pub(crate) real_b: Vec<f32>,
+    pub(crate) real_c: Vec<f32>,
+    /// Buffer growth (reallocation) events since creation.
+    pub(crate) grows: u64,
+}
+
+impl Workspace {
+    pub fn new() -> Workspace {
+        Workspace::default()
+    }
+
+    /// How many times any scratch buffer had to grow.  Stable across
+    /// calls ⇔ the forward path is allocation-free in steady state.
+    pub fn grow_events(&self) -> u64 {
+        self.grows
+    }
+
+    /// Total scratch capacity in bytes (diagnostics / capacity tests).
+    pub fn capacity_bytes(&self) -> usize {
+        self.codes.capacity()
+            + self.codes_alt.capacity()
+            + self.patches.capacity()
+            + 4 * self.acc.capacity()
+            + 4 * self.rowsum.capacity()
+            + 4 * (self.real_a.capacity() + self.real_b.capacity() + self.real_c.capacity())
+    }
+}
+
+/// Resize `v` to exactly `n` elements, reusing capacity and counting
+/// growth into `grows`.  Contents are UNSPECIFIED (stale data from the
+/// previous pass may remain) — every consumer of a prepped buffer fully
+/// overwrites it, so no per-call memset is paid on the hot path.
+pub(crate) fn prep_u8(v: &mut Vec<u8>, n: usize, grows: &mut u64) {
+    if n > v.capacity() {
+        *grows += 1;
+    }
+    if v.len() > n {
+        v.truncate(n);
+    } else {
+        v.resize(n, 0);
+    }
+}
+
+pub(crate) fn prep_i32(v: &mut Vec<i32>, n: usize, grows: &mut u64) {
+    if n > v.capacity() {
+        *grows += 1;
+    }
+    if v.len() > n {
+        v.truncate(n);
+    } else {
+        v.resize(n, 0);
+    }
+}
+
+pub(crate) fn prep_f32(v: &mut Vec<f32>, n: usize, grows: &mut u64) {
+    if n > v.capacity() {
+        *grows += 1;
+    }
+    if v.len() > n {
+        v.truncate(n);
+    } else {
+        v.resize(n, 0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prep_counts_growth_once_per_highwater() {
+        let mut v: Vec<u8> = Vec::new();
+        let mut grows = 0u64;
+        prep_u8(&mut v, 100, &mut grows);
+        assert_eq!((v.len(), grows), (100, 1));
+        let ptr = v.as_ptr();
+        prep_u8(&mut v, 50, &mut grows);
+        assert_eq!((v.len(), grows), (50, 1), "shrink must reuse capacity");
+        assert_eq!(v.as_ptr(), ptr, "no reallocation on shrink");
+        prep_u8(&mut v, 100, &mut grows);
+        assert_eq!(grows, 1, "regrow within capacity is free");
+        prep_u8(&mut v, 1000, &mut grows);
+        assert_eq!(grows, 2);
+    }
+
+    #[test]
+    fn fresh_workspace_is_empty() {
+        let ws = Workspace::new();
+        assert_eq!(ws.grow_events(), 0);
+        assert_eq!(ws.capacity_bytes(), 0);
+    }
+}

@@ -14,6 +14,7 @@
 
 pub mod data;
 pub mod dnn;
+pub mod engine;
 pub mod coordinator;
 pub mod logic;
 pub mod metrics;
@@ -21,3 +22,6 @@ pub mod synth;
 pub mod mult;
 pub mod runtime;
 pub mod util;
+
+#[cfg(test)]
+pub(crate) mod testutil;

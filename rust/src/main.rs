@@ -88,16 +88,19 @@ fn run(args: &Args) -> anyhow::Result<()> {
         Some("export-luts") => {
             // Tabulate every 8×8 design as a .npy product LUT — the
             // artifact any external runtime (incl. the python tests)
-            // consumes as "silicon".
+            // consumes as "silicon".  Tables come from the process-wide
+            // cache, so an exporter embedded in a serving process reuses
+            // whatever the server already built.
             let out = std::path::PathBuf::from(args.opt_or("out", "artifacts/luts"));
             std::fs::create_dir_all(&out)?;
+            let cache = axmul::engine::LutCache::global();
             let mut n = 0;
             for name in all_names() {
                 let m = by_name(name).unwrap();
                 if (m.a_bits(), m.b_bits()) != (8, 8) {
                     continue;
                 }
-                let lut = axmul::metrics::Lut::build(m.as_ref());
+                let lut = cache.get(name)?;
                 lut.write_npy(&out.join(format!("{name}.npy")))?;
                 n += 1;
             }

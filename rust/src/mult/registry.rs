@@ -127,6 +127,34 @@ mod tests {
     }
 
     #[test]
+    fn unknown_names_return_none() {
+        // near-misses of real keys: casing, whitespace, truncation and
+        // out-of-range variants must all be rejected, not fuzzy-matched
+        for bogus in ["", "mul8x8", "exact", "mul8x8_4", "EXACT8X8", "pkm ", " siei", "mul8x8_2x"] {
+            assert!(by_name(bogus).is_none(), "{bogus:?} should not resolve");
+        }
+    }
+
+    #[test]
+    fn design_consts_resolve_and_are_registered() {
+        // Guards registry/const drift: every name the sweeps and the DNN
+        // evaluation iterate over must stay resolvable and listed.
+        for &name in DESIGNS_8X8.iter().chain(DNN_DESIGNS.iter()) {
+            assert!(by_name(name).is_some(), "{name} in consts but not in by_name");
+            assert!(
+                all_names().contains(&name),
+                "{name} in consts but missing from all_names"
+            );
+        }
+        for name in DNN_DESIGNS {
+            assert!(
+                DESIGNS_8X8.contains(&name),
+                "DNN design {name} missing from DESIGNS_8X8"
+            );
+        }
+    }
+
+    #[test]
     fn dnn_designs_resolve_to_8x8() {
         for name in DNN_DESIGNS {
             let m = by_name(name).unwrap();

@@ -1,0 +1,47 @@
+//! Shared unit-test fixtures (compiled only under `cfg(test)`).
+
+use crate::dnn::{spec, FloatNet, Op, Tensor};
+use crate::util::rng::Pcg32;
+
+/// A small random LeNet over the synth-MNIST shape — the standard
+/// fixture for engine/serving/evaluator unit tests.
+pub fn tiny_lenet(seed: u64) -> FloatNet {
+    let mut rng = Pcg32::new(seed);
+    let shape = (1, 28, 28);
+    let (mut c, mut h, mut w) = shape;
+    let mut params = Vec::new();
+    for op in spec("lenet", 1).unwrap() {
+        match op {
+            Op::Conv(cin, cout, k, stride) => {
+                let n = cout * cin * k * k;
+                params.push(Tensor::new(
+                    vec![cout, cin, k, k],
+                    (0..n).map(|_| (rng.next_f32() - 0.5) * 0.2).collect(),
+                ));
+                params.push(Tensor::zeros(vec![cout]));
+                c = cout;
+                h = (h - k) / stride + 1;
+                w = (w - k) / stride + 1;
+            }
+            Op::MaxPool(k) => {
+                h /= k;
+                w /= k;
+            }
+            Op::Flatten => {
+                c *= h * w;
+                h = 1;
+                w = 1;
+            }
+            Op::Fc(_, cout) => {
+                params.push(Tensor::new(
+                    vec![c, cout],
+                    (0..c * cout).map(|_| (rng.next_f32() - 0.5) * 0.1).collect(),
+                ));
+                params.push(Tensor::zeros(vec![cout]));
+                c = cout;
+            }
+            _ => {}
+        }
+    }
+    FloatNet::new("lenet", shape, params)
+}

@@ -195,6 +195,73 @@ fn prop_lut_gemm_equals_scalar_reference() {
 }
 
 #[test]
+fn prop_lut_gemm_odd_k_tail_and_skip_zero() {
+    // The pairwise-k inner loop has three special paths: the odd-k tail,
+    // the skip-zero fast path (zero_row_zero LUTs over sparse codes) and
+    // the one-of-two-zero merge.  All must agree with the scalar
+    // reference for every shape — including LUTs whose row 0 is NOT zero,
+    // where skipping would be wrong.
+    let mut rng = Pcg32::new(41);
+    let m8 = by_name("mul8x8_2").unwrap();
+    let real = Lut::build(m8.as_ref());
+    // doctored table: row 0 made nonzero, so the fast path must stay off
+    let mut noisy = real.clone();
+    for b in 0..256usize {
+        noisy.table[b] = b as i32 - 7;
+    }
+    noisy.zero_row_zero = false;
+    noisy.name = "noisy".into();
+    for trial in 0..12 {
+        let m = 1 + rng.gen_range(9) as usize;
+        let n = 1 + rng.gen_range(9) as usize;
+        let k = 2 * rng.gen_range(12) as usize + 1; // odd: exercises the tail
+        // sparse activations: ~2/3 zero codes exercise the skip paths
+        let a: Vec<u8> = (0..m * k)
+            .map(|_| {
+                if rng.gen_range(3) == 0 {
+                    rng.gen_range(256) as u8
+                } else {
+                    0
+                }
+            })
+            .collect();
+        let b: Vec<u8> = (0..k * n).map(|_| rng.gen_range(256) as u8).collect();
+        for lut in [&real, &noisy] {
+            let mut acc = vec![0i32; m * n];
+            lut_gemm(&a, &b, &mut acc, m, k, n, lut);
+            for i in 0..m {
+                for j in 0..n {
+                    let want: i32 = (0..k).map(|kk| lut.mul(a[i * k + kk], b[kk * n + j])).sum();
+                    assert_eq!(
+                        acc[i * n + j],
+                        want,
+                        "trial {trial} k={k} ({i},{j}) lut={}",
+                        lut.name
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_cached_luts_are_identical_to_fresh_builds() {
+    // The engine cache must hand out tables indistinguishable from a
+    // direct Lut::build for every DNN design.
+    let cache = axmul::engine::LutCache::new();
+    for name in axmul::mult::DNN_DESIGNS {
+        let cached = cache.get(name).unwrap();
+        let fresh = Lut::build(by_name(name).unwrap().as_ref());
+        assert_eq!(*cached, fresh, "{name}");
+        assert!(
+            std::sync::Arc::ptr_eq(&cached, &cache.get(name).unwrap()),
+            "{name}: second get must be the same allocation"
+        );
+    }
+    assert_eq!(cache.misses() as usize, axmul::mult::DNN_DESIGNS.len());
+}
+
+#[test]
 fn prop_gemm_f32_matches_naive() {
     let mut rng = Pcg32::new(23);
     for trial in 0..20 {
