@@ -7,7 +7,7 @@
 
 use axmul::coordinator::{Evaluator, Trainer};
 use axmul::data::Dataset;
-use axmul::dnn::{lut_gemm, QNet};
+use axmul::dnn::{lut_gemm, FloatNet, QNet};
 use axmul::engine::{LutCache, Workspace};
 use axmul::runtime::Engine;
 use axmul::util::{Bencher, Pcg32};
@@ -37,6 +37,46 @@ fn main() {
                 std::hint::black_box(&acc);
             },
         );
+    }
+
+    // --- batched vs per-image forward (PR 2's headline) ------------------
+    // Same images, same LUT, same workspace: the batched path fuses each
+    // layer's GEMM over the whole batch (M = B × patches), the per-image
+    // loop is what the server lanes used to do after collecting a batch.
+    // The ratio of the two `images` rates at equal B is the speedup of
+    // executing a collected batch as a batch.  (Trained weights are
+    // unnecessary for timing; FloatNet::random is structurally real.)
+    {
+        let fnet = FloatNet::random("lenet", (1, 28, 28), 11);
+        let data = Dataset::synth_mnist(32, 3);
+        let qnet = QNet::quantize(&fnet, &data.images, 16, 8.0);
+        let lut = cache.get("mul8x8_2").expect("mul8x8_2 LUT");
+        let mut ws = Workspace::new();
+        for bsz in [1usize, 8, 16, 32] {
+            let xs = &data.images[..bsz * 784];
+            b.bench_elems(
+                &format!("qnet_forward/lenet batched (B={bsz}, 1 lut_gemm/layer)"),
+                Some(bsz as u64),
+                || {
+                    std::hint::black_box(qnet.forward_batch_with(xs, bsz, &lut, &mut ws));
+                },
+            );
+            if bsz > 1 {
+                b.bench_elems(
+                    &format!("qnet_forward/lenet per-image loop (B={bsz})"),
+                    Some(bsz as u64),
+                    || {
+                        for i in 0..bsz {
+                            std::hint::black_box(qnet.forward_with(
+                                &xs[i * 784..(i + 1) * 784],
+                                &lut,
+                                &mut ws,
+                            ));
+                        }
+                    },
+                );
+            }
+        }
     }
 
     // --- quantized single-image inference latency ------------------------

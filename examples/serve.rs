@@ -3,7 +3,10 @@
 //! `ModelHub` (shared LUT cache, one table per design per process), and
 //! serve a synthetic A/B request trace through the per-session
 //! dynamic-batching server — reporting per-design accuracy and latency
-//! percentiles, the deployment story for the paper's silicon.
+//! percentiles, the deployment story for the paper's silicon.  Each
+//! collected batch executes as ONE stacked LUT-GEMM per layer
+//! (`Session::infer_batch_with`), so raising `--max-batch` trades queue
+//! latency for real GEMM throughput, not just bookkeeping.
 //!
 //! Run: `cargo run --release --example serve --
 //!       [--designs mul8x8_2,exact8x8] [--requests 2000] [--workers 4]

@@ -1,0 +1,80 @@
+"""Property-testing shim: re-export the real `hypothesis` when it is
+installed (CI installs it), otherwise fall back to a minimal,
+deterministic random-example runner so the property tests still collect
+and run in offline environments (the execution image has no package
+index).
+
+The fallback keeps the essential property-test value — wide randomized
+coverage with a reproducible failing example in the assertion message —
+but implements no shrinking and only the strategy surface these tests
+use (`integers`, `floats`, `lists`).
+"""
+
+try:  # pragma: no cover - exercised only where hypothesis exists
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+except ModuleNotFoundError:
+    import random
+
+    _DEFAULT_EXAMPLES = 100
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value, width=64):
+            del width  # callers narrow with np.float32 themselves
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rng):
+                n = rng.randint(min_size, max_size)
+                return [elements.draw(rng) for _ in range(n)]
+
+            return _Strategy(draw)
+
+    st = _Strategies()
+
+    def settings(max_examples=_DEFAULT_EXAMPLES, deadline=None, **_ignored):
+        """Records max_examples on the (already-wrapped) test function."""
+        del deadline
+
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*arg_strategies, **kw_strategies):
+        def deco(fn):
+            def runner():
+                n = getattr(runner, "_max_examples", _DEFAULT_EXAMPLES)
+                for ex in range(n):
+                    # one independent, fixed-seed stream per example:
+                    # reruns reproduce the identical sequence
+                    rng = random.Random(0xA001 + 7919 * ex)
+                    args = [s.draw(rng) for s in arg_strategies]
+                    kwargs = {k: s.draw(rng) for k, s in kw_strategies.items()}
+                    try:
+                        fn(*args, **kwargs)
+                    except AssertionError as e:
+                        raise AssertionError(
+                            f"falsifying example #{ex}: args={args} "
+                            f"kwargs={kwargs}: {e}"
+                        ) from e
+
+            # Copy identity by hand; deliberately NOT functools.wraps —
+            # __wrapped__ would make pytest resolve the inner function's
+            # parameters as fixtures.
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            runner.__module__ = fn.__module__
+            return runner
+
+        return deco

@@ -8,7 +8,7 @@ including non-tile-aligned shapes (padding path) and approximate LUTs.
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from compile.kernels.approx_matmul import (
     approx_matmul,

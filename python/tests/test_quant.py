@@ -1,7 +1,7 @@
 """Quantization scheme tests (Jacob-style affine uint8)."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from compile import quant
 

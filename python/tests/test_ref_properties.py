@@ -4,7 +4,7 @@ against it."""
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from compile.kernels.ref import exact_lut, lut_matmul_ref
 

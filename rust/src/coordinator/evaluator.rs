@@ -3,9 +3,10 @@
 //! Given a trained float network, quantize once, resolve each design's
 //! LUT through the shared [`LutCache`] (built at most once per process),
 //! and sweep the evaluation set — the core measurement of Table VIII.
-//! A small worker pool (via `util::threadpool`) parallelizes over images
-//! inside `QNet::accuracy` with one reusable `Workspace` per worker;
-//! designs are swept sequentially so results are deterministic.
+//! `QNet::accuracy` chunks the sweep over *batches* (one stacked
+//! `lut_gemm` per layer per chunk, parallelized inside the GEMM over its
+//! `M = batch × patches` rows) with one reusable `Workspace`; designs
+//! are swept sequentially so results are deterministic.
 
 use crate::data::Dataset;
 use crate::dnn::{FloatNet, QNet};

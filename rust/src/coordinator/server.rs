@@ -6,10 +6,16 @@
 //! deadline-triggered) and worker pool, so one server instance serves
 //! several approximate-silicon designs side by side — the A/B
 //! accuracy-vs-power routing the paper's multiplier family is for.
-//! Workers run the quantized LUT engine through a per-thread [`Workspace`],
-//! so the steady-state hot path performs no scratch allocation, and all
-//! LUTs come from the hub's shared [`crate::engine::LutCache`] (built at
-//! most once per process).
+//!
+//! A collected batch is executed as a *batch*: the worker stacks the
+//! images and makes exactly one [`crate::engine::Session::infer_batch_with`]
+//! call, which issues one `lut_gemm` with `M = batch × patches` per
+//! layer — the dynamic-batching latency buys real GEMM throughput
+//! instead of a serialized per-image loop.  Workers run the quantized
+//! LUT engine through a per-thread [`Workspace`] (plus a reused stacking
+//! buffer), so the steady-state hot path performs no scratch allocation,
+//! and all LUTs come from the hub's shared [`crate::engine::LutCache`]
+//! (built at most once per process).
 
 use crate::dnn::argmax;
 use crate::engine::{ModelHub, Session, SessionKey, Workspace};
@@ -69,6 +75,14 @@ pub enum SubmitError {
     /// The session's queue no longer accepts work (server shutting down
     /// or its workers are gone).
     Closed(SessionKey),
+    /// The image has the wrong number of floats for the session's model.
+    /// Checked at submit time: a mis-sized image inside a stacked batch
+    /// would shift every neighbour's data, so it must never reach a lane.
+    ImageSize {
+        key: SessionKey,
+        want: usize,
+        got: usize,
+    },
 }
 
 impl fmt::Display for SubmitError {
@@ -76,6 +90,9 @@ impl fmt::Display for SubmitError {
         match self {
             SubmitError::UnknownSession(k) => write!(f, "no session registered for {k}"),
             SubmitError::Closed(k) => write!(f, "session {k} is shut down"),
+            SubmitError::ImageSize { key, want, got } => {
+                write!(f, "session {key} expects {want} floats per image, got {got}")
+            }
         }
     }
 }
@@ -85,6 +102,8 @@ impl std::error::Error for SubmitError {}
 struct SessionLane {
     tx: mpsc::Sender<InferRequest>,
     stats: Arc<ServerStats>,
+    /// Floats per image of this lane's model (submit-time validation).
+    image_len: usize,
 }
 
 /// A running service instance.  `shutdown()` (or drop) stops the workers.
@@ -121,7 +140,15 @@ impl InferServer {
                     worker_loop(&rx, &sess, policy, &stats, &global, &stop);
                 }));
             }
-            lanes.insert(sess.key.clone(), SessionLane { tx, stats });
+            let image_len = sess.image_len();
+            lanes.insert(
+                sess.key.clone(),
+                SessionLane {
+                    tx,
+                    stats,
+                    image_len,
+                },
+            );
         }
         InferServer {
             lanes,
@@ -144,6 +171,13 @@ impl InferServer {
             .lanes
             .get(&key)
             .ok_or_else(|| SubmitError::UnknownSession(key.clone()))?;
+        if image.len() != lane.image_len {
+            return Err(SubmitError::ImageSize {
+                key,
+                want: lane.image_len,
+                got: image.len(),
+            });
+        }
         let (tx, rx) = mpsc::channel();
         lane.tx
             .send(InferRequest {
@@ -205,9 +239,13 @@ fn worker_loop(
     global: &ServerStats,
     stop: &AtomicBool,
 ) {
-    // One workspace per worker: after warmup the per-image forward pass
-    // does not touch the allocator.
+    // One workspace per worker: after warming up to (network, max_batch)
+    // high-water shapes, batch execution does not touch the allocator.
     let mut ws = Workspace::new();
+    // Reused staging buffer: the collected batch is stacked here so the
+    // whole batch runs through ONE infer_batch_with call (one lut_gemm
+    // with M = batch × patches per layer) instead of per-image forwards.
+    let mut stacked: Vec<f32> = Vec::new();
     loop {
         if stop.load(Ordering::Relaxed) {
             return;
@@ -239,8 +277,17 @@ fn worker_loop(
         stats.batched_requests.fetch_add(bsize as u64, Ordering::Relaxed);
         global.batches.fetch_add(1, Ordering::Relaxed);
         global.batched_requests.fetch_add(bsize as u64, Ordering::Relaxed);
-        for req in batch {
-            let logits = sess.infer_with(&req.image, &mut ws);
+        // Execute the collected batch as a batch: stack, one batched
+        // forward, split the logits back per request.  (Image lengths
+        // were validated at submit time.)
+        stacked.clear();
+        for req in &batch {
+            stacked.extend_from_slice(&req.image);
+        }
+        let all_logits = sess.infer_batch_with(&stacked, bsize, &mut ws);
+        let n_logits = all_logits.len() / bsize;
+        for (i, req) in batch.into_iter().enumerate() {
+            let logits = all_logits[i * n_logits..(i + 1) * n_logits].to_vec();
             let pred = argmax(&logits);
             let resp = InferResponse {
                 latency: req.submitted.elapsed(),
@@ -349,6 +396,68 @@ mod tests {
         // serving never rebuilt a table: misses froze at registration time
         assert_eq!(cache.misses(), 2, "serving path must be rebuild-free");
         assert!(cache.hits() >= 16, "direct reference answers were cache hits");
+        server.shutdown();
+    }
+
+    #[test]
+    fn batched_execution_matches_per_image_results() {
+        // The PR-2 bugfix invariant: a coalesced batch must be executed
+        // through the batched GEMM path and still return, per request,
+        // exactly the logits of an independent per-image forward.  One
+        // worker + a generous deadline forces real multi-request batches.
+        let (hub, qnet) = single_session_hub("mul8x8_2");
+        let lut = hub.cache().get("mul8x8_2").unwrap();
+        let data = Dataset::synth_mnist(24, 5);
+        let direct: Vec<Vec<f32>> = (0..24)
+            .map(|i| qnet.forward_one(data.image(i), &lut))
+            .collect();
+        let server = InferServer::start(
+            &hub,
+            BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_millis(50),
+            },
+            1,
+        );
+        let rxs: Vec<_> = (0..24)
+            .map(|i| {
+                server
+                    .submit("lenet", "mul8x8_2", data.image(i).to_vec())
+                    .unwrap()
+            })
+            .collect();
+        let mut max_batch = 0;
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let resp = rx.recv().unwrap();
+            max_batch = max_batch.max(resp.batch_size);
+            assert_eq!(resp.logits, direct[i], "request {i} logits drifted");
+            assert_eq!(resp.pred, crate::dnn::argmax(&direct[i]), "request {i}");
+        }
+        assert!(
+            max_batch > 1,
+            "no multi-request batch formed — test exercised nothing"
+        );
+        server.shutdown();
+    }
+
+    #[test]
+    fn mis_sized_image_is_rejected_at_submit() {
+        let (hub, _) = single_session_hub("exact8x8");
+        let server = InferServer::start(&hub, BatchPolicy::default(), 1);
+        let err = server
+            .submit("lenet", "exact8x8", vec![0.0; 100])
+            .unwrap_err();
+        assert_eq!(
+            err,
+            SubmitError::ImageSize {
+                key: SessionKey::new("lenet", "exact8x8"),
+                want: 784,
+                got: 100,
+            }
+        );
+        // a correct image on the same lane still serves
+        let resp = server.infer("lenet", "exact8x8", vec![0.0; 784]).unwrap();
+        assert_eq!(resp.logits.len(), 10);
         server.shutdown();
     }
 

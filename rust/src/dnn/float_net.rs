@@ -10,6 +10,7 @@ use super::im2col::im2col_f32;
 use super::spec::{spec, Op};
 use super::tensor::Tensor;
 use crate::util::parallel_map;
+use crate::util::rng::Pcg32;
 
 pub struct FloatNet {
     pub net: String,
@@ -27,6 +28,71 @@ impl FloatNet {
             params,
             ops,
         }
+    }
+
+    /// A randomly initialized network (He-like gaussian fan-in init, the
+    /// python layout): the shared fixture for unit tests, property tests
+    /// and benches that need a structurally valid net of any
+    /// architecture without PJRT training artifacts.  Deterministic in
+    /// `seed`.
+    pub fn random(net: &str, image_shape: (usize, usize, usize), seed: u64) -> FloatNet {
+        let mut rng = Pcg32::new(seed);
+        let ops = spec(net, image_shape.0).expect("known network");
+        let (c0, mut h, mut w) = image_shape;
+        let mut c = c0;
+        let mut params = Vec::new();
+        let rand_t = |shape: Vec<usize>, fan: usize, rng: &mut Pcg32| {
+            let n: usize = shape.iter().product();
+            let s = (2.0 / fan as f64).sqrt();
+            Tensor::new(
+                shape,
+                (0..n).map(|_| (rng.next_gaussian() * s) as f32).collect(),
+            )
+        };
+        for op in ops {
+            match op {
+                Op::Conv(cin, cout, k, stride) => {
+                    params.push(rand_t(vec![cout, cin, k, k], cin * k * k, &mut rng));
+                    params.push(Tensor::zeros(vec![cout]));
+                    c = cout;
+                    h = (h - k) / stride + 1;
+                    w = (w - k) / stride + 1;
+                }
+                Op::ResBlock(cin, cout, k, stride) => {
+                    params.push(rand_t(vec![cout, cin, k, k], cin * k * k, &mut rng));
+                    params.push(Tensor::zeros(vec![cout]));
+                    params.push(rand_t(vec![cout, cout, k, k], cout * k * k, &mut rng));
+                    params.push(Tensor::zeros(vec![cout]));
+                    if stride != 1 || cin != cout {
+                        params.push(rand_t(vec![cout, cin, 1, 1], cin, &mut rng));
+                        params.push(Tensor::zeros(vec![cout]));
+                    }
+                    c = cout;
+                    h = (h - 1) / stride + 1;
+                    w = (w - 1) / stride + 1;
+                }
+                Op::MaxPool(k) => {
+                    h /= k;
+                    w /= k;
+                }
+                Op::AvgPoolAll => {
+                    h = 1;
+                    w = 1;
+                }
+                Op::Flatten => {
+                    c *= h * w;
+                    h = 1;
+                    w = 1;
+                }
+                Op::Fc(_, cout) => {
+                    params.push(rand_t(vec![c, cout], c, &mut rng));
+                    params.push(Tensor::zeros(vec![cout]));
+                    c = cout;
+                }
+                Op::Relu => {}
+            }
+        }
+        FloatNet::new(net, image_shape, params)
     }
 
     /// Forward one image; optionally record each post-ReLU max into
@@ -224,78 +290,10 @@ mod tests {
     use super::*;
     use crate::util::rng::Pcg32;
 
-    fn rand_params(net: &str, shape: (usize, usize, usize), seed: u64) -> Vec<Tensor> {
-        // He-like init mirroring python's layout (values differ — layout
-        // compatibility is what we test here; value compatibility is
-        // covered by the npy-loading integration tests).
-        let mut rng = Pcg32::new(seed);
-        let mut params = Vec::new();
-        let (c0, mut h, mut w) = shape;
-        let mut c = c0;
-        for op in spec(net, c0).unwrap() {
-            match op {
-                Op::Conv(cin, cout, k, stride) => {
-                    let fan = cin * k * k;
-                    params.push(rand_tensor(vec![cout, cin, k, k], fan, &mut rng));
-                    params.push(Tensor::zeros(vec![cout]));
-                    c = cout;
-                    h = (h - k) / stride + 1;
-                    w = (w - k) / stride + 1;
-                }
-                Op::ResBlock(cin, cout, k, stride) => {
-                    params.push(rand_tensor(vec![cout, cin, k, k], cin * k * k, &mut rng));
-                    params.push(Tensor::zeros(vec![cout]));
-                    params.push(rand_tensor(vec![cout, cout, k, k], cout * k * k, &mut rng));
-                    params.push(Tensor::zeros(vec![cout]));
-                    if stride != 1 || cin != cout {
-                        params.push(rand_tensor(vec![cout, cin, 1, 1], cin, &mut rng));
-                        params.push(Tensor::zeros(vec![cout]));
-                    }
-                    c = cout;
-                    h = (h - 1) / stride + 1;
-                    w = (w - 1) / stride + 1;
-                }
-                Op::MaxPool(k) => {
-                    h /= k;
-                    w /= k;
-                }
-                Op::AvgPoolAll => {
-                    h = 1;
-                    w = 1;
-                }
-                Op::Flatten => {
-                    c *= h * w;
-                    h = 1;
-                    w = 1;
-                }
-                Op::Fc(_, cout) => {
-                    params.push(rand_tensor(vec![c, cout], c, &mut rng));
-                    params.push(Tensor::zeros(vec![cout]));
-                    c = cout;
-                }
-                Op::Relu => {}
-            }
-        }
-        params
-    }
-
-    fn rand_tensor(shape: Vec<usize>, fan_in: usize, rng: &mut Pcg32) -> Tensor {
-        let n: usize = shape.iter().product();
-        let scale = (2.0 / fan_in as f64).sqrt();
-        Tensor::new(
-            shape,
-            (0..n)
-                .map(|_| (rng.next_gaussian() * scale) as f32)
-                .collect(),
-        )
-    }
-
     #[test]
     fn all_nets_forward_on_cifar_shape() {
         for net in super::super::spec::NETWORKS {
-            let shape = (3, 32, 32);
-            let params = rand_params(net, shape, 7);
-            let fnet = FloatNet::new(net, shape, params);
+            let fnet = FloatNet::random(net, (3, 32, 32), 7);
             let x = vec![0.5f32; 3 * 32 * 32];
             let logits = fnet.forward_one(&x, None);
             assert_eq!(logits.len(), 10, "{net}");
@@ -305,18 +303,14 @@ mod tests {
 
     #[test]
     fn lenet_on_mnist_shape() {
-        let shape = (1, 28, 28);
-        let params = rand_params("lenet", shape, 3);
-        let fnet = FloatNet::new("lenet", shape, params);
+        let fnet = FloatNet::random("lenet", (1, 28, 28), 3);
         let logits = fnet.forward_one(&vec![0.2; 784], None);
         assert_eq!(logits.len(), 10);
     }
 
     #[test]
     fn calibration_collects_relu_maxima() {
-        let shape = (1, 28, 28);
-        let params = rand_params("lenet", shape, 3);
-        let fnet = FloatNet::new("lenet", shape, params);
+        let fnet = FloatNet::random("lenet", (1, 28, 28), 3);
         let xs = vec![0.3f32; 2 * 784];
         let maxima = fnet.calibrate(&xs, 2);
         assert_eq!(maxima.len(), 4); // lenet has 4 ReLUs
@@ -325,9 +319,7 @@ mod tests {
 
     #[test]
     fn batch_matches_single() {
-        let shape = (1, 28, 28);
-        let params = rand_params("lenet", shape, 5);
-        let fnet = FloatNet::new("lenet", shape, params);
+        let fnet = FloatNet::random("lenet", (1, 28, 28), 5);
         let mut rng = Pcg32::new(8);
         let xs: Vec<f32> = (0..3 * 784).map(|_| rng.next_f32()).collect();
         let batch = fnet.forward_batch(&xs, 3);

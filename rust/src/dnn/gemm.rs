@@ -4,10 +4,18 @@
 //! product is a 64K-entry table lookup (the approximate silicon), with
 //! i32 accumulation.  This is the throughput-critical path of the whole
 //! Table VIII evaluation, so it is blocked for cache locality and
-//! parallelized over output rows.
+//! parallelized over output rows.  The batched forward path stacks a
+//! whole batch into one call (`M = batch × patches_per_image`), so row
+//! parallelism here is also the batch parallelism of the server.
+//!
+//! Workers receive disjoint `&mut` row blocks via
+//! [`parallel_row_chunks`] — the accumulator is split *before* dispatch,
+//! so this module needs (and statically rejects) any `unsafe`.
+
+#![forbid(unsafe_code)]
 
 use crate::metrics::Lut;
-use crate::util::parallel_chunks;
+use crate::util::parallel_row_chunks;
 
 /// Row-major f32 GEMM: c[M,N] = a[M,K] * b[K,N].
 pub fn gemm_f32(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
@@ -15,12 +23,9 @@ pub fn gemm_f32(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usiz
     assert_eq!(b.len(), k * n);
     assert_eq!(c.len(), m * n);
     c.fill(0.0);
-    parallel_chunks(m, |_, rows| {
-        // SAFETY-free: disjoint row ranges; we re-slice c per row.
-        for i in rows {
-            let crow = unsafe {
-                std::slice::from_raw_parts_mut(c.as_ptr().add(i * n) as *mut f32, n)
-            };
+    parallel_row_chunks(c, m, n, |row0, block| {
+        for (ri, crow) in block.chunks_mut(n).enumerate() {
+            let i = row0 + ri;
             for kk in 0..k {
                 let av = a[i * k + kk];
                 if av == 0.0 {
@@ -44,12 +49,10 @@ pub fn lut_gemm(a: &[u8], b: &[u8], acc: &mut [i32], m: usize, k: usize, n: usiz
     let table = &lut.table;
     let skip_zero = lut.zero_row_zero;
     acc.fill(0);
-    parallel_chunks(m, |_, rows| {
-        for i in rows {
+    parallel_row_chunks(acc, m, n, |row0, block| {
+        for (ri, crow) in block.chunks_mut(n).enumerate() {
+            let i = row0 + ri;
             let arow = &a[i * k..(i + 1) * k];
-            let crow = unsafe {
-                std::slice::from_raw_parts_mut(acc.as_ptr().add(i * n) as *mut i32, n)
-            };
             // Pairwise over k: two LUT rows in flight overlap the
             // dependent gather latency (§Perf iteration 2; a 4-wide
             // variant was measured slower — see EXPERIMENTS.md §Perf
@@ -104,6 +107,8 @@ pub fn row_sums(a: &[u8], m: usize, k: usize) -> Vec<i32> {
 }
 
 /// Allocation-free row sums into a caller-sized buffer (`out.len() == m`).
+/// The batched path passes `m = batch × patches_per_image` rows stacked
+/// image-major, which needs no special handling: sums are per row.
 pub fn row_sums_into(a: &[u8], m: usize, k: usize, out: &mut [i32]) {
     assert_eq!(a.len(), m * k);
     assert_eq!(out.len(), m);
@@ -179,5 +184,39 @@ mod tests {
         lut_gemm(&a, &b, &mut acc, 2, 2, 2, &lut);
         let want00 = m8.mul(5, 7) as i32 + m8.mul(7, 255) as i32;
         assert_eq!(acc[0], want00);
+    }
+
+    #[test]
+    fn lut_gemm_tall_matrix_spans_worker_blocks() {
+        // M larger than any plausible worker count: the disjoint row-block
+        // dispatch must still produce the exact integer matmul on every
+        // row, including the final partial block.
+        let lut = Lut::build(&ExactMul::new(8, 8));
+        let mut rng = Pcg32::new(3);
+        let (m, k, n) = (67, 9, 3);
+        let a: Vec<u8> = (0..m * k).map(|_| rng.gen_range(256) as u8).collect();
+        let b: Vec<u8> = (0..k * n).map(|_| rng.gen_range(256) as u8).collect();
+        let mut acc = vec![0i32; m * n];
+        lut_gemm(&a, &b, &mut acc, m, k, n, &lut);
+        for i in 0..m {
+            for j in 0..n {
+                let want: i32 = (0..k)
+                    .map(|kk| a[i * k + kk] as i32 * b[kk * n + j] as i32)
+                    .sum();
+                assert_eq!(acc[i * n + j], want, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn module_source_forbids_unsafe() {
+        // The aliasing fix must not regress: the module-level forbid is
+        // compile-enforced, and this guard keeps the attribute itself from
+        // being quietly dropped in a refactor.
+        let src = std::fs::read_to_string(file!()).expect("gemm.rs readable from crate root");
+        assert!(
+            src.contains("#![forbid(unsafe_code)]"),
+            "gemm.rs must forbid unsafe_code"
+        );
     }
 }

@@ -1,6 +1,8 @@
 //! im2col patch extraction: convolution as GEMM, identical layout to the
 //! python `_im2col` (conv_general_dilated_patches with OIHW weights).
 
+use crate::util::parallel_row_chunks;
+
 /// f32 im2col, VALID padding.
 /// x: [C, H, W] -> patches [OH*OW, C*k*k]; returns (patches, oh, ow).
 pub fn im2col_f32(
@@ -105,6 +107,42 @@ pub fn im2col_u8_into(
     (oh, ow)
 }
 
+/// Batched u8 im2col: `xs` holds `batch` images `[C, H, W]` back to
+/// back; `out` receives the stacked patch matrix
+/// `[batch * OH*OW, C*k*k]` (image-major), i.e. image `b`'s patches are
+/// rows `b*OH*OW .. (b+1)*OH*OW`.  This is the layout the batched
+/// forward path feeds to a single `lut_gemm` with
+/// `M = batch × patches_per_image`.  Extraction is parallelized over
+/// images via disjoint per-image output blocks (single-threaded at
+/// `batch == 1`, so the per-image path pays no dispatch cost); the
+/// output is position-deterministic regardless of thread count.
+/// Returns (oh, ow).
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_u8_batch_into(
+    xs: &[u8],
+    batch: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    out: &mut [u8],
+) -> (usize, usize) {
+    let (oh, ow) = conv_out_dims(h, w, k, stride, pad);
+    let img = c * h * w;
+    let per_img = oh * ow * c * k * k;
+    assert_eq!(xs.len(), batch * img);
+    assert_eq!(out.len(), batch * per_img);
+    parallel_row_chunks(out, batch, per_img, |img0, block| {
+        for (bi, ob) in block.chunks_mut(per_img).enumerate() {
+            let b = img0 + bi;
+            im2col_u8_into(&xs[b * img..(b + 1) * img], c, h, w, k, stride, pad, ob);
+        }
+    });
+    (oh, ow)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -156,6 +194,22 @@ mod tests {
         assert_eq!(im2col_u8_into(&x, 3, 4, 4, 2, 1, 1, &mut out), (oh, ow));
         assert_eq!(out, p);
         assert_eq!(conv_out_dims(4, 4, 2, 1, 1), (oh, ow));
+    }
+
+    #[test]
+    fn batch_variant_stacks_per_image_patches() {
+        let imgs: Vec<u8> = (0..3 * 27).map(|v| (v * 7 % 253) as u8).collect();
+        let (p0, oh, ow) = im2col_u8(&imgs[..27], 3, 3, 3, 2, 1, 0);
+        let rows = p0.len();
+        let mut out = vec![0u8; 3 * rows];
+        assert_eq!(
+            im2col_u8_batch_into(&imgs, 3, 3, 3, 2, 1, 0, &mut out),
+            (oh, ow)
+        );
+        for b in 0..3 {
+            let (pb, _, _) = im2col_u8(&imgs[b * 27..(b + 1) * 27], 3, 3, 3, 2, 1, 0);
+            assert_eq!(&out[b * rows..(b + 1) * rows], &pb[..], "image {b}");
+        }
     }
 
     #[test]

@@ -15,14 +15,19 @@
 
 use super::float_net::FloatNet;
 use super::gemm::{lut_gemm, row_sums_into};
-use super::im2col::{conv_out_dims, im2col_u8_into};
+use super::im2col::{conv_out_dims, im2col_u8_batch_into};
 use super::quant::{act_scale, quantize_weight, weight_qparams};
 use super::spec::{spec, Op};
 use super::tensor::Tensor;
 use crate::engine::workspace::{prep_f32, prep_i32, prep_u8};
 use crate::engine::Workspace;
 use crate::metrics::Lut;
-use crate::util::parallel_chunks;
+
+/// Images per `forward_batch_with` chunk in [`QNet::accuracy`]: large
+/// enough that every layer's `lut_gemm` has `M = batch × patches` rows
+/// to parallelize over, small enough to keep the stacked patch scratch
+/// cache-resident for the paper's network shapes.
+const ACCURACY_BATCH: usize = 64;
 
 /// One quantized weighted layer.
 struct QLayer {
@@ -104,7 +109,7 @@ impl QNet {
     /// Forward one image through the approximate silicon.  Returns float
     /// logits.  Allocates a throwaway [`Workspace`]; steady-state callers
     /// (server workers, batched evaluation) should hold their own and use
-    /// [`QNet::forward_with`].
+    /// [`QNet::forward_with`] / [`QNet::forward_batch_with`].
     pub fn forward_one(&self, x: &[f32], lut: &Lut) -> Vec<f32> {
         let mut ws = Workspace::new();
         self.forward_with(x, lut, &mut ws)
@@ -113,23 +118,65 @@ impl QNet {
     /// Forward one image reusing the caller's scratch buffers.  After the
     /// workspace has warmed up to the network's high-water shapes, this
     /// path performs no heap allocation beyond the returned logits.
+    /// The single-image case of [`QNet::forward_batch_with`], and
+    /// bit-identical to it at every batch size.
     pub fn forward_with(&self, x: &[f32], lut: &Lut, ws: &mut Workspace) -> Vec<f32> {
+        self.forward_batch_with(x, 1, lut, ws)
+    }
+
+    /// Batched forward with a throwaway workspace (convenience; hot
+    /// callers should reuse one via [`QNet::forward_batch_with`]).
+    /// `xs` holds `batch` images back to back; returns `batch`
+    /// concatenated logit vectors.
+    pub fn forward_batch(&self, xs: &[f32], batch: usize, lut: &Lut) -> Vec<f32> {
+        let mut ws = Workspace::new();
+        self.forward_batch_with(xs, batch, lut, &mut ws)
+    }
+
+    /// Forward `batch` images at once through the approximate silicon.
+    ///
+    /// This is the throughput path: each conv/fc layer quantizes and
+    /// im2cols the whole batch into one stacked patch matrix (image-major
+    /// rows) and issues a **single** `lut_gemm` with
+    /// `M = batch × patches_per_image`, so the GEMM's row parallelism is
+    /// also the batch parallelism — one table walk per layer per batch
+    /// instead of per image.  Zero-point correction stays per row via
+    /// `row_sums_into`, so the arithmetic per image is exactly the
+    /// per-image path's: the output is bit-identical to `batch`
+    /// independent [`QNet::forward_with`] calls.
+    ///
+    /// `xs` holds the images back to back (`batch * C*H*W` floats); the
+    /// returned vec is the concatenated logits (`batch * n_classes`).
+    /// Workspace buffers grow to `batch`-sized high-water marks during
+    /// warmup and are then reused allocation-free, exactly as in the
+    /// single-image path (smaller batches shrink within capacity).
+    pub fn forward_batch_with(
+        &self,
+        xs: &[f32],
+        batch: usize,
+        lut: &Lut,
+        ws: &mut Workspace,
+    ) -> Vec<f32> {
         let (c0, h0, w0) = self.image_shape;
+        assert!(batch > 0, "{}: empty batch", self.net);
         assert_eq!(
-            x.len(),
-            c0 * h0 * w0,
-            "{}: image size mismatch (want {}x{}x{})",
+            xs.len(),
+            batch * c0 * h0 * w0,
+            "{}: batch size mismatch (want {} images of {}x{}x{})",
             self.net,
+            batch,
             c0,
             h0,
             w0
         );
         let s0 = self.act_scales[0];
         // quantize input (zero point 0)
-        prep_u8(&mut ws.codes, c0 * h0 * w0, &mut ws.grows);
-        for (dst, &v) in ws.codes.iter_mut().zip(x.iter()) {
+        prep_u8(&mut ws.codes, batch * c0 * h0 * w0, &mut ws.grows);
+        for (dst, &v) in ws.codes.iter_mut().zip(xs.iter()) {
             *dst = (v / s0).round().clamp(0.0, 255.0) as u8;
         }
+        // (c, h, w) track the PER-IMAGE shape; every buffer holds `batch`
+        // such tensors back to back (image-major).
         let (mut c, mut h, mut w) = (c0, h0, w0);
         let mut s_in = s0;
         let mut li = 0; // weighted-layer index
@@ -144,12 +191,13 @@ impl QNet {
                     debug_assert!(!in_real, "conv must consume codes");
                     let (oh, ow) = conv_out_dims(h, w, k, stride, 0);
                     let m = oh * ow;
-                    prep_u8(&mut ws.patches, m * c * k * k, &mut ws.grows);
-                    im2col_u8_into(&ws.codes, c, h, w, k, stride, 0, &mut ws.patches);
-                    self.qlayer_patches(li, m, s_in, lut, ws);
-                    // [m, cout] -> [cout, m]
-                    prep_f32(&mut ws.real_b, m * cout, &mut ws.grows);
-                    transpose_pm_into(&ws.real_a, m, cout, &mut ws.real_b);
+                    prep_u8(&mut ws.patches, batch * m * c * k * k, &mut ws.grows);
+                    im2col_u8_batch_into(&ws.codes, batch, c, h, w, k, stride, 0, &mut ws.patches);
+                    // ONE GEMM for the whole batch: M = batch × patches.
+                    self.qlayer_patches(li, batch * m, s_in, lut, ws);
+                    // per image: [m, cout] -> [cout, m]
+                    prep_f32(&mut ws.real_b, batch * m * cout, &mut ws.grows);
+                    transpose_pm_batch_into(&ws.real_a, batch, m, cout, &mut ws.real_b);
                     std::mem::swap(&mut ws.real_a, &mut ws.real_b);
                     li += 1;
                     c = cout;
@@ -159,8 +207,8 @@ impl QNet {
                 }
                 Op::Fc(_, cout) => {
                     if in_real {
-                        // final fc after flatten of real values: requantize
-                        // with the pending scale
+                        // fc after flatten of real values: requantize with
+                        // the pending scale
                         let s = self.act_scales[scale_i];
                         s_in = s;
                         prep_u8(&mut ws.patches, ws.real_a.len(), &mut ws.grows);
@@ -171,13 +219,16 @@ impl QNet {
                         prep_u8(&mut ws.patches, ws.codes.len(), &mut ws.grows);
                         ws.patches.copy_from_slice(&ws.codes);
                     }
-                    self.qlayer_patches(li, 1, s_in, lut, ws);
+                    // fc over the batch is one GEMM with M = batch rows
+                    // (each image's flattened features are one row).
+                    self.qlayer_patches(li, batch, s_in, lut, ws);
                     li += 1;
                     c = cout;
                     in_real = true;
                 }
                 Op::Relu => {
-                    // relu + requantize to codes in one pass
+                    // relu + requantize to codes in one pass (elementwise:
+                    // batch-oblivious)
                     let s = self.act_scales[scale_i];
                     scale_i += 1;
                     prep_u8(&mut ws.codes, ws.real_a.len(), &mut ws.grows);
@@ -189,11 +240,17 @@ impl QNet {
                 }
                 Op::MaxPool(k) => {
                     // max pooling commutes with the monotone quantization —
-                    // pool directly on codes.
+                    // pool directly on codes, image by image.
                     debug_assert!(!in_real);
                     let (oh, ow) = (h / k, w / k);
-                    prep_u8(&mut ws.codes_alt, c * oh * ow, &mut ws.grows);
-                    maxpool_u8_into(&ws.codes, c, h, w, k, &mut ws.codes_alt);
+                    prep_u8(&mut ws.codes_alt, batch * c * oh * ow, &mut ws.grows);
+                    for (xb, ob) in ws
+                        .codes
+                        .chunks(c * h * w)
+                        .zip(ws.codes_alt.chunks_mut(c * oh * ow))
+                    {
+                        maxpool_u8_into(xb, c, h, w, k, ob);
+                    }
                     std::mem::swap(&mut ws.codes, &mut ws.codes_alt);
                     h = oh;
                     w = ow;
@@ -202,22 +259,28 @@ impl QNet {
                     // average in real space for precision
                     let denom = (h * w) as f32;
                     if in_real {
-                        prep_f32(&mut ws.real_b, c, &mut ws.grows);
-                        for ch in 0..c {
-                            ws.real_b[ch] = ws.real_a[ch * h * w..(ch + 1) * h * w]
-                                .iter()
-                                .sum::<f32>()
-                                / denom;
+                        prep_f32(&mut ws.real_b, batch * c, &mut ws.grows);
+                        for b in 0..batch {
+                            let src = &ws.real_a[b * c * h * w..(b + 1) * c * h * w];
+                            for ch in 0..c {
+                                ws.real_b[b * c + ch] = src[ch * h * w..(ch + 1) * h * w]
+                                    .iter()
+                                    .sum::<f32>()
+                                    / denom;
+                            }
                         }
                         std::mem::swap(&mut ws.real_a, &mut ws.real_b);
                     } else {
-                        prep_f32(&mut ws.real_a, c, &mut ws.grows);
-                        for ch in 0..c {
-                            ws.real_a[ch] = ws.codes[ch * h * w..(ch + 1) * h * w]
-                                .iter()
-                                .map(|&q| q as f32 * s_in)
-                                .sum::<f32>()
-                                / denom;
+                        prep_f32(&mut ws.real_a, batch * c, &mut ws.grows);
+                        for b in 0..batch {
+                            let src = &ws.codes[b * c * h * w..(b + 1) * c * h * w];
+                            for ch in 0..c {
+                                ws.real_a[b * c + ch] = src[ch * h * w..(ch + 1) * h * w]
+                                    .iter()
+                                    .map(|&q| q as f32 * s_in)
+                                    .sum::<f32>()
+                                    / denom;
+                            }
                         }
                     }
                     h = 1;
@@ -238,11 +301,11 @@ impl QNet {
                     // conv1 SAME + relu + requant -> codes_alt
                     let (oh, ow) = conv_out_dims(h, w, k, stride, 1);
                     let m1 = oh * ow;
-                    prep_u8(&mut ws.patches, m1 * c * k * k, &mut ws.grows);
-                    im2col_u8_into(&ws.codes, c, h, w, k, stride, 1, &mut ws.patches);
-                    self.qlayer_patches(li, m1, s_in, lut, ws);
-                    prep_f32(&mut ws.real_b, m1 * cout, &mut ws.grows);
-                    transpose_pm_into(&ws.real_a, m1, cout, &mut ws.real_b);
+                    prep_u8(&mut ws.patches, batch * m1 * c * k * k, &mut ws.grows);
+                    im2col_u8_batch_into(&ws.codes, batch, c, h, w, k, stride, 1, &mut ws.patches);
+                    self.qlayer_patches(li, batch * m1, s_in, lut, ws);
+                    prep_f32(&mut ws.real_b, batch * m1 * cout, &mut ws.grows);
+                    transpose_pm_batch_into(&ws.real_a, batch, m1, cout, &mut ws.real_b);
                     std::mem::swap(&mut ws.real_a, &mut ws.real_b);
                     let s_mid = self.act_scales[scale_i];
                     scale_i += 1;
@@ -250,32 +313,56 @@ impl QNet {
                     for (dst, &v) in ws.codes_alt.iter_mut().zip(ws.real_a.iter()) {
                         *dst = (v.max(0.0) / s_mid).round().clamp(0.0, 255.0) as u8;
                     }
-                    // conv2 SAME stride 1 -> real_a = r2 in [cout, m]
+                    // conv2 SAME stride 1 -> real_a = r2 in [cout, m] per image
                     let (oh2, ow2) = conv_out_dims(oh, ow, k, 1, 1);
                     let m2 = oh2 * ow2;
-                    prep_u8(&mut ws.patches, m2 * cout * k * k, &mut ws.grows);
-                    im2col_u8_into(&ws.codes_alt, cout, oh, ow, k, 1, 1, &mut ws.patches);
-                    self.qlayer_patches(li + 1, m2, s_mid, lut, ws);
-                    prep_f32(&mut ws.real_b, m2 * cout, &mut ws.grows);
-                    transpose_pm_into(&ws.real_a, m2, cout, &mut ws.real_b);
+                    prep_u8(&mut ws.patches, batch * m2 * cout * k * k, &mut ws.grows);
+                    im2col_u8_batch_into(
+                        &ws.codes_alt,
+                        batch,
+                        cout,
+                        oh,
+                        ow,
+                        k,
+                        1,
+                        1,
+                        &mut ws.patches,
+                    );
+                    self.qlayer_patches(li + 1, batch * m2, s_mid, lut, ws);
+                    prep_f32(&mut ws.real_b, batch * m2 * cout, &mut ws.grows);
+                    transpose_pm_batch_into(&ws.real_a, batch, m2, cout, &mut ws.real_b);
                     std::mem::swap(&mut ws.real_a, &mut ws.real_b);
                     // shortcut, then add + relu
                     let projected = stride != 1 || cin != cout;
                     if projected {
                         let (soh, sow) = conv_out_dims(ih, iw, 1, stride, 0);
                         let ms = soh * sow;
-                        prep_u8(&mut ws.patches, ms * ic, &mut ws.grows);
-                        im2col_u8_into(&ws.codes, ic, ih, iw, 1, stride, 0, &mut ws.patches);
+                        prep_u8(&mut ws.patches, batch * ms * ic, &mut ws.grows);
+                        im2col_u8_batch_into(
+                            &ws.codes,
+                            batch,
+                            ic,
+                            ih,
+                            iw,
+                            1,
+                            stride,
+                            0,
+                            &mut ws.patches,
+                        );
                         // park r2 in real_c so the projection can use real_a
                         std::mem::swap(&mut ws.real_a, &mut ws.real_c);
-                        self.qlayer_patches(li + 2, ms, id_scale, lut, ws);
-                        prep_f32(&mut ws.real_b, ms * cout, &mut ws.grows);
-                        transpose_pm_into(&ws.real_a, ms, cout, &mut ws.real_b);
+                        self.qlayer_patches(li + 2, batch * ms, id_scale, lut, ws);
+                        prep_f32(&mut ws.real_b, batch * ms * cout, &mut ws.grows);
+                        transpose_pm_batch_into(&ws.real_a, batch, ms, cout, &mut ws.real_b);
                         std::mem::swap(&mut ws.real_a, &mut ws.real_c); // real_a = r2
                         for (o, &sv) in ws.real_a.iter_mut().zip(ws.real_b.iter()) {
                             *o = (*o + sv).max(0.0);
                         }
                     } else {
+                        // identity: per-image blocks line up exactly
+                        // ([cout, m2] vs [cin, ih*iw] with cin == cout,
+                        // m2 == ih*iw), so one elementwise zip covers the
+                        // whole batch.
                         for (o, &q) in ws.real_a.iter_mut().zip(ws.codes.iter()) {
                             *o = (*o + q as f32 * id_scale).max(0.0);
                         }
@@ -296,12 +383,17 @@ impl QNet {
                 }
             }
         }
+        // final layer is an Fc, so real_a is [batch, n_classes] row-major
+        // — already the concatenated per-image logits.
         ws.real_a.clone()
     }
 
     /// Run weighted layer `li` over the `m` rows of `ws.patches`, writing
     /// real output [m, cout] into `ws.real_a` (acc -> real:
-    /// s_in * w_scale * (acc - z_w * rowsum) + bias).
+    /// s_in * w_scale * (acc - z_w * rowsum) + bias).  `m` may be a whole
+    /// batch's stacked rows (`batch × patches_per_image`): the GEMM, the
+    /// row sums and the per-row correction are all row-local, so batching
+    /// changes nothing but M.
     fn qlayer_patches(&self, li: usize, m: usize, s_in: f32, lut: &Lut, ws: &mut Workspace) {
         let l = &self.layers[li];
         debug_assert_eq!(ws.patches.len(), m * l.k, "layer {li} input size");
@@ -321,26 +413,41 @@ impl QNet {
     }
 
     /// Batched accuracy evaluation: fraction of argmax(logits) == label.
-    /// One workspace per worker thread keeps the sweep allocation-free
-    /// after warmup.
+    /// The sweep chunks over batches of [`ACCURACY_BATCH`] images through
+    /// [`QNet::forward_batch_with`] — one `lut_gemm` per layer per chunk
+    /// — instead of the old per-image forwards with outer image
+    /// parallelism.  The two heavy stages parallelize inside the batch
+    /// (the GEMM over its `M = batch × patches` rows, im2col over
+    /// images); the remaining elementwise stages (requantize, transpose)
+    /// run serial per chunk.  One reusable workspace keeps the sweep
+    /// allocation-free after warmup, and results stay deterministic and
+    /// bit-identical to per-image evaluation.
     pub fn accuracy(&self, xs: &[f32], labels: &[i32], lut: &Lut) -> f64 {
-        use std::sync::atomic::{AtomicUsize, Ordering};
-        let stride = {
-            let (c, h, w) = self.image_shape;
-            c * h * w
-        };
+        let stride = self.image_len();
         let n = labels.len();
-        let correct = AtomicUsize::new(0);
-        parallel_chunks(n, |_, range| {
-            let mut ws = Workspace::new();
-            let mut local = 0usize;
-            for i in range {
-                let logits = self.forward_with(&xs[i * stride..(i + 1) * stride], lut, &mut ws);
-                local += usize::from(argmax(&logits) == labels[i] as usize);
+        if n == 0 {
+            return 0.0;
+        }
+        let mut ws = Workspace::new();
+        let mut correct = 0usize;
+        let mut i = 0;
+        while i < n {
+            let b = ACCURACY_BATCH.min(n - i);
+            let logits = self.forward_batch_with(&xs[i * stride..(i + b) * stride], b, lut, &mut ws);
+            let nl = logits.len() / b;
+            for (j, &y) in labels[i..i + b].iter().enumerate() {
+                correct += usize::from(argmax(&logits[j * nl..(j + 1) * nl]) == y as usize);
             }
-            correct.fetch_add(local, Ordering::Relaxed);
-        });
-        correct.load(Ordering::Relaxed) as f64 / n as f64
+            i += b;
+        }
+        correct as f64 / n as f64
+    }
+
+    /// Floats per input image (`C*H*W`): the stride batched callers use
+    /// to stack and validate inputs.
+    pub fn image_len(&self) -> usize {
+        let (c, h, w) = self.image_shape;
+        c * h * w
     }
 
     /// Histogram of weight codes across all layers (the §II-B
@@ -406,6 +513,17 @@ fn make_qlayer(w: &Tensor, b: &Tensor) -> QLayer {
     }
 }
 
+/// Per-image [m, cout] -> [cout, m] over `batch` stacked blocks.  Pure
+/// block-local permutation, so the batched result is exactly the
+/// concatenation of per-image transposes.
+fn transpose_pm_batch_into(x: &[f32], batch: usize, m: usize, cout: usize, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), batch * m * cout);
+    debug_assert_eq!(out.len(), batch * m * cout);
+    for (xb, ob) in x.chunks(m * cout).zip(out.chunks_mut(m * cout)) {
+        transpose_pm_into(xb, m, cout, ob);
+    }
+}
+
 /// [m, cout] -> [cout, m] into a caller-sized buffer.
 fn transpose_pm_into(x: &[f32], m: usize, cout: usize, out: &mut [f32]) {
     debug_assert_eq!(x.len(), m * cout);
@@ -453,64 +571,9 @@ mod tests {
     use crate::util::rng::Pcg32;
 
     fn toy_fnet(net: &str, shape: (usize, usize, usize), seed: u64) -> FloatNet {
-        // Reuse the float_net test-param generator via a fresh build here.
-        let mut rng = Pcg32::new(seed);
-        let ops = spec(net, shape.0).unwrap();
-        let (c0, mut h, mut w) = shape;
-        let mut c = c0;
-        let mut params = Vec::new();
-        let mut rand_t = |shape: Vec<usize>, fan: usize, rng: &mut Pcg32| {
-            let n: usize = shape.iter().product();
-            let s = (2.0 / fan as f64).sqrt();
-            Tensor::new(
-                shape,
-                (0..n).map(|_| (rng.next_gaussian() * s) as f32).collect(),
-            )
-        };
-        for op in ops {
-            match op {
-                Op::Conv(cin, cout, k, stride) => {
-                    params.push(rand_t(vec![cout, cin, k, k], cin * k * k, &mut rng));
-                    params.push(Tensor::zeros(vec![cout]));
-                    c = cout;
-                    h = (h - k) / stride + 1;
-                    w = (w - k) / stride + 1;
-                }
-                Op::ResBlock(cin, cout, k, stride) => {
-                    params.push(rand_t(vec![cout, cin, k, k], cin * k * k, &mut rng));
-                    params.push(Tensor::zeros(vec![cout]));
-                    params.push(rand_t(vec![cout, cout, k, k], cout * k * k, &mut rng));
-                    params.push(Tensor::zeros(vec![cout]));
-                    if stride != 1 || cin != cout {
-                        params.push(rand_t(vec![cout, cin, 1, 1], cin, &mut rng));
-                        params.push(Tensor::zeros(vec![cout]));
-                    }
-                    c = cout;
-                    h = (h - 1) / stride + 1;
-                    w = (w - 1) / stride + 1;
-                }
-                Op::MaxPool(k) => {
-                    h /= k;
-                    w /= k;
-                }
-                Op::AvgPoolAll => {
-                    h = 1;
-                    w = 1;
-                }
-                Op::Flatten => {
-                    c *= h * w;
-                    h = 1;
-                    w = 1;
-                }
-                Op::Fc(_, cout) => {
-                    params.push(rand_t(vec![c, cout], c, &mut rng));
-                    params.push(Tensor::zeros(vec![cout]));
-                    c = cout;
-                }
-                Op::Relu => {}
-            }
-        }
-        FloatNet::new(net, shape, params)
+        // The shared random-init fixture (promoted to FloatNet::random so
+        // property tests and benches reuse the same generator).
+        FloatNet::random(net, shape, seed)
     }
 
     #[test]
@@ -568,6 +631,58 @@ mod tests {
     }
 
     #[test]
+    fn forward_batch_bit_identical_to_per_image_all_nets() {
+        // The tentpole invariant: one stacked GEMM per layer must produce
+        // exactly the bits of B independent per-image forwards, for every
+        // architecture (incl. resnet19_s's projection blocks) and for odd
+        // batch sizes that don't divide anything evenly.
+        let lut = Lut::build(&ExactMul::new(8, 8));
+        for net in super::super::spec::NETWORKS {
+            let shape = (3, 32, 32);
+            let stride = 3 * 32 * 32;
+            let fnet = toy_fnet(net, shape, 4);
+            let mut rng = Pcg32::new(5);
+            let xs: Vec<f32> = (0..7 * stride).map(|_| rng.next_f32()).collect();
+            let qnet = QNet::quantize(&fnet, &xs, 2, 8.0);
+            let mut ws = Workspace::new();
+            for batch in [1usize, 2, 7] {
+                let got = qnet.forward_batch_with(&xs[..batch * stride], batch, &lut, &mut ws);
+                let nl = got.len() / batch;
+                for i in 0..batch {
+                    let want = qnet.forward_one(&xs[i * stride..(i + 1) * stride], &lut);
+                    assert_eq!(nl, want.len(), "{net}");
+                    assert_eq!(
+                        &got[i * nl..(i + 1) * nl],
+                        &want[..],
+                        "{net} batch {batch} image {i}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn accuracy_matches_per_image_argmax() {
+        // accuracy() now sweeps in forward_batch_with chunks; the score
+        // must equal the per-image computation exactly.
+        let lut = Lut::build(&ExactMul::new(8, 8));
+        let fnet = toy_fnet("lenet_plus", (3, 32, 32), 6);
+        let mut rng = Pcg32::new(7);
+        let n = 9; // not a multiple of the internal chunk size
+        let xs: Vec<f32> = (0..n * 3072).map(|_| rng.next_f32()).collect();
+        let labels: Vec<i32> = (0..n as i32).map(|i| i % 10).collect();
+        let qnet = QNet::quantize(&fnet, &xs, 2, 8.0);
+        let want = (0..n)
+            .filter(|&i| {
+                argmax(&qnet.forward_one(&xs[i * 3072..(i + 1) * 3072], &lut)) == labels[i] as usize
+            })
+            .count() as f64
+            / n as f64;
+        assert_eq!(qnet.accuracy(&xs, &labels, &lut), want);
+        assert_eq!(qnet.accuracy(&xs, &[], &lut), 0.0, "empty eval set");
+    }
+
+    #[test]
     fn steady_state_forward_is_allocation_free() {
         let lut = Lut::build(&ExactMul::new(8, 8));
         for net in ["lenet_plus", "resnet19_s"] {
@@ -592,6 +707,36 @@ mod tests {
                 ws.grow_events(),
                 grows,
                 "{net}: steady-state forward must not grow scratch"
+            );
+            assert_eq!(ws.capacity_bytes(), caps, "{net}: capacity crept");
+        }
+    }
+
+    #[test]
+    fn steady_state_batched_forward_is_allocation_free() {
+        // The grow-events guarantee must survive batching: warm up at the
+        // largest batch, then serve mixed (smaller and equal) batches
+        // without a single buffer growth.
+        let lut = Lut::build(&ExactMul::new(8, 8));
+        for net in ["lenet_plus", "resnet19_s"] {
+            let fnet = toy_fnet(net, (3, 32, 32), 8);
+            let mut rng = Pcg32::new(6);
+            let xs: Vec<f32> = (0..8 * 3072).map(|_| rng.next_f32()).collect();
+            let qnet = QNet::quantize(&fnet, &xs, 2, 8.0);
+            let mut ws = Workspace::new();
+            for _ in 0..3 {
+                qnet.forward_batch_with(&xs, 8, &lut, &mut ws);
+            }
+            let grows = ws.grow_events();
+            let caps = ws.capacity_bytes();
+            assert!(grows > 0, "{net}: warmup must have populated scratch");
+            for batch in [8usize, 3, 1, 8, 5] {
+                qnet.forward_batch_with(&xs[..batch * 3072], batch, &lut, &mut ws);
+            }
+            assert_eq!(
+                ws.grow_events(),
+                grows,
+                "{net}: steady-state batched forward must not grow scratch"
             );
             assert_eq!(ws.capacity_bytes(), caps, "{net}: capacity crept");
         }

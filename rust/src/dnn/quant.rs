@@ -1,5 +1,10 @@
 //! Affine uint8 quantization — bit-compatible mirror of
 //! `python/compile/quant.py` (tested for agreement via shared vectors).
+//!
+//! Every transform here is elementwise (per weight / per activation), so
+//! the batched forward path can quantize `batch` stacked images in one
+//! pass with results bit-identical to per-image quantization — the base
+//! invariant behind `QNet::forward_batch_with`'s bit-identity guarantee.
 
 use super::tensor::{QTensor, Tensor};
 

@@ -56,6 +56,20 @@ impl Session {
         self.qnet.forward_with(image, &self.lut, ws)
     }
 
+    /// Forward a whole batch (`images` = `batch` images back to back)
+    /// through this session's silicon with ONE stacked `lut_gemm` per
+    /// layer — the server lanes' execution path.  Returns the
+    /// concatenated logits; bit-identical to `batch` [`Session::infer_with`]
+    /// calls.
+    pub fn infer_batch_with(&self, images: &[f32], batch: usize, ws: &mut Workspace) -> Vec<f32> {
+        self.qnet.forward_batch_with(images, batch, &self.lut, ws)
+    }
+
+    /// Floats per image this session expects (`C*H*W` of its model).
+    pub fn image_len(&self) -> usize {
+        self.qnet.image_len()
+    }
+
     /// Convenience single-shot inference: returns (logits, argmax).
     pub fn infer_one(&self, image: &[f32]) -> (Vec<f32>, usize) {
         let logits = self.qnet.forward_one(image, &self.lut);
@@ -176,6 +190,22 @@ mod tests {
         assert_eq!(pred, argmax(&direct));
         let mut ws = Workspace::new();
         assert_eq!(sess.infer_with(&image, &mut ws), direct);
+    }
+
+    #[test]
+    fn session_batch_inference_matches_per_image() {
+        let hub = ModelHub::new(Arc::new(LutCache::new()));
+        let qnet = tiny_qnet();
+        let sess = hub.register("m", "mul8x8_2", qnet.clone()).unwrap();
+        assert_eq!(sess.image_len(), 784);
+        let images: Vec<f32> = (0..3 * 784).map(|i| (i % 11) as f32 / 11.0).collect();
+        let mut ws = Workspace::new();
+        let batched = sess.infer_batch_with(&images, 3, &mut ws);
+        assert_eq!(batched.len(), 3 * 10);
+        for i in 0..3 {
+            let (single, _) = sess.infer_one(&images[i * 784..(i + 1) * 784]);
+            assert_eq!(&batched[i * 10..(i + 1) * 10], &single[..], "image {i}");
+        }
     }
 
     #[test]

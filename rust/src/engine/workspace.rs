@@ -1,15 +1,31 @@
 //! Reusable scratch memory for the quantized forward path.
 //!
-//! `QNet::forward_with` threads a `Workspace` through every op: im2col
-//! patches, GEMM accumulators, row sums and the real-valued activation
-//! buffers all live here and are resized *within capacity* between
-//! calls.  Buffers grow to the high-water mark of the network being
-//! served during the first couple of calls (buffer roles rotate via
-//! pointer swaps, so capacities converge after at most a few passes) and
-//! steady-state inference then performs zero heap allocation per image.
+//! `QNet::forward_batch_with` threads a `Workspace` through every op:
+//! im2col patches, GEMM accumulators, row sums and the real-valued
+//! activation buffers all live here and are resized *within capacity*
+//! between calls.  Buffers grow to the high-water mark of the (network,
+//! max batch) being served during the first couple of calls (buffer
+//! roles rotate via pointer swaps, so capacities converge after at most
+//! a few passes) and steady-state inference then performs zero heap
+//! allocation per batch; smaller batches shrink within capacity.
 //!
 //! `grow_events()` counts capacity growth, which is what the reuse tests
 //! assert on: warm up, snapshot, keep serving, counter must not move.
+//!
+//! # Buffer-content contract
+//!
+//! `prep_*` deliberately does NOT clear reused storage — stale contents
+//! from the previous pass (or the previous, smaller batch) remain, so no
+//! per-call memset is paid on the hot path.  The contract every consumer
+//! must uphold, single-image and batched alike, is: **fully overwrite a
+//! prepped slice before reading any of it**.  The batched accumulator
+//! path is the sharpest edge — a batch of B-1 images leaves a full
+//! B-image accumulator behind, and a consumer that read one stale row
+//! would silently blend two requests.  Debug builds therefore poison
+//! every prepped buffer with sentinel values (`0xAB` codes, `i32::MIN`
+//! accumulators, NaN reals); any read-before-write corrupts results
+//! loudly enough that the bit-identity tests catch it.  Release builds
+//! skip the poison and keep the memset-free hot path.
 
 /// Scratch buffers for [`crate::dnn::QNet::forward_with`].
 ///
@@ -59,8 +75,11 @@ impl Workspace {
 
 /// Resize `v` to exactly `n` elements, reusing capacity and counting
 /// growth into `grows`.  Contents are UNSPECIFIED (stale data from the
-/// previous pass may remain) — every consumer of a prepped buffer fully
-/// overwrites it, so no per-call memset is paid on the hot path.
+/// previous pass — or previous smaller batch — may remain) — every
+/// consumer of a prepped buffer fully overwrites it before reading, so
+/// no per-call memset is paid on the hot path.  Debug builds poison the
+/// buffer (see the module docs) to turn any read-before-write into a
+/// loud test failure instead of a silent cross-request blend.
 pub(crate) fn prep_u8(v: &mut Vec<u8>, n: usize, grows: &mut u64) {
     if n > v.capacity() {
         *grows += 1;
@@ -70,6 +89,8 @@ pub(crate) fn prep_u8(v: &mut Vec<u8>, n: usize, grows: &mut u64) {
     } else {
         v.resize(n, 0);
     }
+    #[cfg(debug_assertions)]
+    v.fill(POISON_U8);
 }
 
 pub(crate) fn prep_i32(v: &mut Vec<i32>, n: usize, grows: &mut u64) {
@@ -81,6 +102,8 @@ pub(crate) fn prep_i32(v: &mut Vec<i32>, n: usize, grows: &mut u64) {
     } else {
         v.resize(n, 0);
     }
+    #[cfg(debug_assertions)]
+    v.fill(POISON_I32);
 }
 
 pub(crate) fn prep_f32(v: &mut Vec<f32>, n: usize, grows: &mut u64) {
@@ -92,7 +115,17 @@ pub(crate) fn prep_f32(v: &mut Vec<f32>, n: usize, grows: &mut u64) {
     } else {
         v.resize(n, 0.0);
     }
+    #[cfg(debug_assertions)]
+    v.fill(f32::NAN);
 }
+
+/// Debug-build poison sentinels: values no correct forward pass can
+/// produce by accident in bulk (NaN for reals propagates through any
+/// arithmetic; `i32::MIN` wrecks any accumulation it leaks into).
+#[cfg(debug_assertions)]
+pub(crate) const POISON_U8: u8 = 0xAB;
+#[cfg(debug_assertions)]
+pub(crate) const POISON_I32: i32 = i32::MIN;
 
 #[cfg(test)]
 mod tests {
@@ -119,5 +152,26 @@ mod tests {
         let ws = Workspace::new();
         assert_eq!(ws.grow_events(), 0);
         assert_eq!(ws.capacity_bytes(), 0);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    fn prep_poisons_stale_contents_in_debug() {
+        // The buffer-content contract is "fully overwrite before read";
+        // debug builds must make stale reuse detectable by poisoning the
+        // whole prepped slice — including the tail beyond a previous
+        // smaller pass (the batched-accumulator hazard).
+        let mut grows = 0u64;
+        let mut u: Vec<u8> = Vec::new();
+        prep_u8(&mut u, 8, &mut grows);
+        u.fill(3); // a pass writes real data
+        prep_u8(&mut u, 8, &mut grows);
+        assert!(u.iter().all(|&x| x == POISON_U8), "stale codes must die");
+        let mut a: Vec<i32> = Vec::new();
+        prep_i32(&mut a, 4, &mut grows);
+        assert!(a.iter().all(|&x| x == POISON_I32));
+        let mut r: Vec<f32> = Vec::new();
+        prep_f32(&mut r, 4, &mut grows);
+        assert!(r.iter().all(|x| x.is_nan()));
     }
 }

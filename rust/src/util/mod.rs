@@ -18,5 +18,5 @@ pub use cli::Args;
 pub use json::Json;
 pub use rng::{Pcg32, SplitMix64};
 pub use table::{fmt_improvement, Table};
-pub use threadpool::{num_threads, parallel_chunks, parallel_map, parallel_slice_chunks};
+pub use threadpool::{num_threads, parallel_map, parallel_row_chunks, parallel_slice_chunks};
 pub use toml::{TomlDoc, TomlValue};

@@ -58,29 +58,32 @@ where
     out.into_iter().map(|v| v.expect("slot filled")).collect()
 }
 
-/// Run `f(chunk_index, range)` over `n` items split into near-equal
-/// contiguous ranges, one per worker.  Used when per-item dispatch would be
-/// too fine-grained (e.g. GEMM row blocks).
-pub fn parallel_chunks<F>(n: usize, f: F)
+/// Run `f(first_row, block)` over a row-major `[m, n]` matrix split into
+/// per-worker blocks of whole rows (`ceil(m / workers)` rows each, the
+/// last block possibly short).  Each block is a disjoint `&mut`
+/// sub-slice handed out by `chunks_mut`, so callers that previously
+/// conjured per-row mutable slices from a shared pointer (the old GEMM
+/// dispatch) need no `unsafe`.  This is the fork-join primitive of the
+/// GEMM kernels and the batched im2col (rows = images there).
+pub fn parallel_row_chunks<T, F>(data: &mut [T], m: usize, n: usize, f: F)
 where
-    F: Fn(usize, std::ops::Range<usize>) + Sync,
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
 {
-    let workers = num_threads().min(n.max(1));
-    if workers <= 1 || n < 2 {
-        f(0, 0..n);
+    debug_assert_eq!(data.len(), m * n);
+    if m == 0 || n == 0 {
         return;
     }
-    let chunk = n.div_ceil(workers);
+    let workers = num_threads().min(m);
+    if workers <= 1 || m < 2 {
+        f(0, data);
+        return;
+    }
+    let rows_per = m.div_ceil(workers);
     std::thread::scope(|s| {
-        for w in 0..workers {
+        for (w, block) in data.chunks_mut(rows_per * n).enumerate() {
             let f = &f;
-            s.spawn(move || {
-                let lo = w * chunk;
-                let hi = ((w + 1) * chunk).min(n);
-                if lo < hi {
-                    f(w, lo..hi);
-                }
-            });
+            s.spawn(move || f(w * rows_per, block));
         }
     });
 }
@@ -125,16 +128,31 @@ mod tests {
     }
 
     #[test]
-    fn chunks_cover_all_indices() {
-        use std::sync::Mutex;
-        let seen = Mutex::new(vec![0u8; 500]);
-        parallel_chunks(500, |_, r| {
-            let mut g = seen.lock().unwrap();
-            for i in r {
-                g[i] += 1;
+    fn row_chunks_cover_all_rows_disjointly() {
+        let (m, n) = (37, 5);
+        let mut data = vec![0u32; m * n];
+        parallel_row_chunks(&mut data, m, n, |row0, block| {
+            assert_eq!(block.len() % n, 0, "blocks are whole rows");
+            for (ri, row) in block.chunks_mut(n).enumerate() {
+                for v in row {
+                    *v = (row0 + ri) as u32 + 1;
+                }
             }
         });
-        assert!(seen.into_inner().unwrap().iter().all(|&c| c == 1));
+        for i in 0..m {
+            assert!(data[i * n..(i + 1) * n].iter().all(|&v| v == i as u32 + 1));
+        }
+    }
+
+    #[test]
+    fn row_chunks_degenerate_shapes() {
+        // empty matrix and zero-width rows must be no-ops, not panics
+        parallel_row_chunks(&mut Vec::<u8>::new(), 0, 4, |_, _| unreachable!());
+        parallel_row_chunks(&mut Vec::<u8>::new(), 4, 0, |_, _| unreachable!());
+        let mut one = vec![7u8; 3];
+        parallel_row_chunks(&mut one, 1, 3, |row0, block| {
+            assert_eq!((row0, block.len()), (0, 3));
+        });
     }
 
     #[test]

@@ -245,6 +245,45 @@ fn prop_lut_gemm_odd_k_tail_and_skip_zero() {
 }
 
 #[test]
+fn prop_forward_batch_bit_identical_for_all_designs_and_odd_batches() {
+    // PR-2 tentpole invariant, swept across the full Table VIII design
+    // registry: for EVERY registered DNN design and for batch sizes that
+    // exercise the odd/tail paths (1, 2, 7 and the server's default
+    // max_batch of 16), one stacked lut_gemm per layer must reproduce —
+    // bit for bit — the logits of B independent per-image forwards.
+    use axmul::dnn::{FloatNet, QNet};
+    use axmul::engine::Workspace;
+
+    let stride = 784;
+    let fnet = FloatNet::random("lenet", (1, 28, 28), 13);
+    let mut rng = Pcg32::new(29);
+    let max_batch = 16; // BatchPolicy::default().max_batch
+    let xs: Vec<f32> = (0..max_batch * stride).map(|_| rng.next_f32()).collect();
+    // headroom 1.0: codes span the full 0..=255 band, so approximate rows
+    // of every design's table actually participate.
+    let qnet = QNet::quantize(&fnet, &xs, 4, 1.0);
+    let cache = axmul::engine::LutCache::new();
+    for name in axmul::mult::DNN_DESIGNS {
+        let lut = cache.get(name).unwrap();
+        let mut ws = Workspace::new();
+        let per_image: Vec<Vec<f32>> = (0..max_batch)
+            .map(|i| qnet.forward_one(&xs[i * stride..(i + 1) * stride], &lut))
+            .collect();
+        for batch in [1usize, 2, 7, max_batch] {
+            let got = qnet.forward_batch_with(&xs[..batch * stride], batch, &lut, &mut ws);
+            let nl = got.len() / batch;
+            for i in 0..batch {
+                assert_eq!(
+                    &got[i * nl..(i + 1) * nl],
+                    &per_image[i][..],
+                    "{name} batch {batch} image {i}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn prop_cached_luts_are_identical_to_fresh_builds() {
     // The engine cache must hand out tables indistinguishable from a
     // direct Lut::build for every DNN design.
