@@ -7,7 +7,7 @@
 
 use axmul::coordinator::{Evaluator, Trainer};
 use axmul::data::Dataset;
-use axmul::dnn::{lut_gemm, FloatNet, QNet};
+use axmul::dnn::{lut_gemm, lut_gemm_packed, FloatNet, PackedWeights, QNet};
 use axmul::engine::{LutCache, Workspace};
 use axmul::runtime::Engine;
 use axmul::util::{Bencher, Pcg32};
@@ -18,7 +18,12 @@ fn main() {
     let cache = LutCache::global();
 
     // --- the hot path: LUT-GEMM at Table VIII's real shapes -------------
+    // Baseline (activation-major, walks the 256 KB table) vs the
+    // weight-stationary packed kernel (pre-packed panels + u16 b-major
+    // store) at the same four shapes — the ratio is PR 3's headline and
+    // is recorded to BENCH_table8.json for the perf trajectory.
     let lut = cache.get("exact8x8").expect("exact8x8 LUT");
+    lut.transposed(); // build outside the timed region, as serving does
     let mut rng = Pcg32::new(1);
     for (m, k, n, tag) in [
         (576usize, 150usize, 6usize, "lenet conv1 (im2col)"),
@@ -34,6 +39,15 @@ fn main() {
             Some((m * k * n) as u64),
             || {
                 lut_gemm(&a, &w, &mut acc, m, k, n, &lut);
+                std::hint::black_box(&acc);
+            },
+        );
+        let pw = PackedWeights::pack(&w, k, n);
+        b.bench_elems(
+            &format!("lut_gemm_packed/{tag} [{m}x{k}x{n}]"),
+            Some((m * k * n) as u64),
+            || {
+                lut_gemm_packed(&a, &pw, &mut acc, m, &lut);
                 std::hint::black_box(&acc);
             },
         );
@@ -125,6 +139,11 @@ fn main() {
     }
 
     b.report("Table VIII hot path (native LUT engine)");
+    let json_path = Path::new("BENCH_table8.json");
+    match b.write_json(json_path) {
+        Ok(()) => println!("[bench json] wrote {}", json_path.display()),
+        Err(e) => eprintln!("[bench json] write failed: {e}"),
+    }
     println!(
         "[lut cache] {} table(s) built, {} hits",
         cache.misses(),

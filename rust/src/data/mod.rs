@@ -8,7 +8,7 @@ pub mod synth_cifar;
 pub mod synth_mnist;
 
 pub use batcher::Batcher;
-pub use npy::{read_npy, write_npy, NpyArray, NpyData};
+pub use npy::{read_npy, write_npy, write_npy_view, NpyArray, NpyData, NpyView};
 pub use synth_cifar::SynthCifar;
 pub use synth_mnist::SynthMnist;
 

@@ -49,25 +49,69 @@ impl NpyArray {
     }
 }
 
-fn descr_of(data: &NpyData) -> &'static str {
-    match data {
-        NpyData::F32(_) => "<f4",
-        NpyData::I32(_) => "<i4",
-        NpyData::U8(_) => "|u1",
-        NpyData::I64(_) => "<i8",
+/// Borrowed-payload view of an array: what the writers actually need.
+/// Lets bulk exporters (the 256 KB LUT tables, workspace dumps) stream
+/// straight from their own storage instead of cloning into an
+/// [`NpyArray`] first.
+#[derive(Clone, Copy, Debug)]
+pub enum NpyView<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+    U8(&'a [u8]),
+    I64(&'a [i64]),
+}
+
+impl NpyArray {
+    /// Borrow this array's payload as a writer view.
+    pub fn view(&self) -> NpyView<'_> {
+        match &self.data {
+            NpyData::F32(v) => NpyView::F32(v),
+            NpyData::I32(v) => NpyView::I32(v),
+            NpyData::U8(v) => NpyView::U8(v),
+            NpyData::I64(v) => NpyView::I64(v),
+        }
     }
 }
 
-/// Write a `.npy` file.
+fn descr_of(data: &NpyView<'_>) -> &'static str {
+    match data {
+        NpyView::F32(_) => "<f4",
+        NpyView::I32(_) => "<i4",
+        NpyView::U8(_) => "|u1",
+        NpyView::I64(_) => "<i8",
+    }
+}
+
+/// Write a `.npy` file from an owned array (delegates to the borrowed
+/// writer — no payload copy).
 pub fn write_npy(path: &Path, arr: &NpyArray) -> Result<()> {
-    let mut f = std::fs::File::create(path)
+    write_npy_view(path, &arr.shape, arr.view())
+}
+
+/// Write a `.npy` file from a borrowed payload slice, buffered.
+pub fn write_npy_view(path: &Path, shape: &[usize], data: NpyView<'_>) -> Result<()> {
+    let count: usize = shape.iter().product();
+    let len = match data {
+        NpyView::F32(v) => v.len(),
+        NpyView::I32(v) => v.len(),
+        NpyView::U8(v) => v.len(),
+        NpyView::I64(v) => v.len(),
+    };
+    if len != count {
+        bail!(
+            "{}: shape {shape:?} needs {count} elements, payload has {len}",
+            path.display()
+        );
+    }
+    let f = std::fs::File::create(path)
         .with_context(|| format!("create {}", path.display()))?;
-    let shape_str = match arr.shape.len() {
+    let mut f = std::io::BufWriter::new(f);
+    let shape_str = match shape.len() {
         0 => "()".to_string(),
-        1 => format!("({},)", arr.shape[0]),
+        1 => format!("({},)", shape[0]),
         _ => format!(
             "({})",
-            arr.shape
+            shape
                 .iter()
                 .map(|d| d.to_string())
                 .collect::<Vec<_>>()
@@ -76,7 +120,7 @@ pub fn write_npy(path: &Path, arr: &NpyArray) -> Result<()> {
     };
     let header = format!(
         "{{'descr': '{}', 'fortran_order': False, 'shape': {}, }}",
-        descr_of(&arr.data),
+        descr_of(&data),
         shape_str
     );
     // Pad so that magic(6) + version(2) + hlen(2) + header is 64-aligned.
@@ -86,24 +130,25 @@ pub fn write_npy(path: &Path, arr: &NpyArray) -> Result<()> {
     f.write_all(b"\x93NUMPY\x01\x00")?;
     f.write_all(&(padded_header.len() as u16).to_le_bytes())?;
     f.write_all(padded_header.as_bytes())?;
-    match &arr.data {
-        NpyData::F32(v) => {
+    match data {
+        NpyView::F32(v) => {
             for x in v {
                 f.write_all(&x.to_le_bytes())?;
             }
         }
-        NpyData::I32(v) => {
+        NpyView::I32(v) => {
             for x in v {
                 f.write_all(&x.to_le_bytes())?;
             }
         }
-        NpyData::U8(v) => f.write_all(v)?,
-        NpyData::I64(v) => {
+        NpyView::U8(v) => f.write_all(v)?,
+        NpyView::I64(v) => {
             for x in v {
                 f.write_all(&x.to_le_bytes())?;
             }
         }
     }
+    f.flush()?;
     Ok(())
 }
 
@@ -255,6 +300,30 @@ mod tests {
         write_npy(&p, &arr).unwrap();
         let loaded = read_npy(&p).unwrap();
         assert_eq!(loaded.to_f32_vec(), vec![0.5, 1.5, -2.0]);
+    }
+
+    #[test]
+    fn view_writer_matches_owned_writer() {
+        // Lut::write_npy streams a borrowed slice; bytes must be
+        // identical to the owned-array path (the python interop format).
+        let data = vec![3i32, -4, 5, 600_000, 0, -1];
+        let p1 = tmpfile("view.npy");
+        write_npy_view(&p1, &[2, 3], NpyView::I32(&data)).unwrap();
+        let p2 = tmpfile("owned.npy");
+        let arr = NpyArray {
+            shape: vec![2, 3],
+            data: NpyData::I32(data.clone()),
+        };
+        write_npy(&p2, &arr).unwrap();
+        assert_eq!(std::fs::read(&p1).unwrap(), std::fs::read(&p2).unwrap());
+        assert_eq!(read_npy(&p1).unwrap(), arr);
+    }
+
+    #[test]
+    fn view_writer_rejects_shape_mismatch() {
+        let p = tmpfile("mismatch.npy");
+        let err = write_npy_view(&p, &[4, 4], NpyView::U8(&[1, 2, 3]));
+        assert!(err.is_err());
     }
 
     #[test]

@@ -1,21 +1,64 @@
-//! GEMM kernels: f32 reference and the LUT-GEMM hot path.
+//! GEMM kernels: f32 reference and the LUT-GEMM hot paths.
 //!
-//! `lut_gemm` is the native mirror of the L1 Pallas kernel: every scalar
-//! product is a 64K-entry table lookup (the approximate silicon), with
-//! i32 accumulation.  This is the throughput-critical path of the whole
-//! Table VIII evaluation, so it is blocked for cache locality and
-//! parallelized over output rows.  The batched forward path stacks a
-//! whole batch into one call (`M = batch × patches_per_image`), so row
-//! parallelism here is also the batch parallelism of the server.
+//! Two LUT kernels mirror the L1 Pallas kernel (every scalar product is a
+//! table lookup — the approximate silicon — with i32 accumulation):
 //!
-//! Workers receive disjoint `&mut` row blocks via
-//! [`parallel_row_chunks`] — the accumulator is split *before* dispatch,
-//! so this module needs (and statically rejects) any `unsafe`.
+//! * [`lut_gemm`] — **activation-major**: walks the canonical
+//!   `table[a*256 + b]` one activation row at a time.  Both operands are
+//!   dynamic, so this is the general kernel (benches, ad-hoc products).
+//! * [`lut_gemm_packed`] — **weight-stationary**: weights are static per
+//!   layer, so their codes are re-laid-out once into n-tiled, k-major
+//!   [`PackedWeights`] panels and the gathers go through the b-major
+//!   transposed store ([`Lut::transposed`], u16 when products fit 16
+//!   bits).  For a fixed output tile the accumulator (≤ 64 B) lives in
+//!   registers across the whole k loop, panel reads are sequential, and
+//!   the set of LUT rows gathered from is *fixed by the layer's weight
+//!   codes* — L1-resident across every row, batch and request instead of
+//!   re-walking the full 256 KB table.  This is the serving forward
+//!   path; it is bit-identical to [`lut_gemm`] (i32 addition is
+//!   associative, both accumulate in ascending k per output element —
+//!   property-tested across every DNN design).
+//!
+//! Both kernels are parallelized over output rows via
+//! [`parallel_row_chunks_n`]; workers receive disjoint `&mut` row blocks
+//! (the accumulator is split *before* dispatch, so this module needs —
+//! and statically rejects — any `unsafe`).  Tiny problems
+//! (< `PAR_MIN_MACS` multiplies — lenet's fc layers — and every M = 1
+//! shape via the row clamp) run inline on the caller's thread and never
+//! touch the pool queue.  The batched
+//! forward path stacks a whole batch into one call
+//! (`M = batch × patches_per_image`), so row parallelism here is also
+//! the batch parallelism of the server.
 
 #![forbid(unsafe_code)]
 
-use crate::metrics::Lut;
-use crate::util::parallel_row_chunks;
+use crate::metrics::{Lut, LutTStore};
+use crate::util::{num_threads, parallel_row_chunks_n};
+
+/// Output-column tile width of the packed kernel: 16 i32 accumulators =
+/// one 64 B cache line, small enough to stay register/L1-resident across
+/// the entire k loop.
+pub const TILE_N: usize = 16;
+
+/// Below this many multiply-accumulates a GEMM runs serially on the
+/// caller's thread: fork-join overhead beats the win on tiny shapes.
+/// lenet fc1 (1×400×120 = 48 000 MACs) sits under this bound — and
+/// single-row shapes are additionally forced inline by the
+/// `workers.min(m)` clamp in the row-chunk dispatch, so M = 1 never
+/// queues regardless of k·n.
+const PAR_MIN_MACS: usize = 1 << 16;
+
+/// Deterministic worker basis for an `m × k × n` GEMM: 1 (inline) for
+/// tiny problems, else the configured thread count.  Chunk geometry —
+/// and therefore results — depend only on this value, never on pool
+/// scheduling.
+fn gemm_workers(m: usize, k: usize, n: usize) -> usize {
+    if m.saturating_mul(k).saturating_mul(n) < PAR_MIN_MACS {
+        1
+    } else {
+        num_threads()
+    }
+}
 
 /// Row-major f32 GEMM: c[M,N] = a[M,K] * b[K,N].
 pub fn gemm_f32(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
@@ -23,7 +66,7 @@ pub fn gemm_f32(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usiz
     assert_eq!(b.len(), k * n);
     assert_eq!(c.len(), m * n);
     c.fill(0.0);
-    parallel_row_chunks(c, m, n, |row0, block| {
+    parallel_row_chunks_n(gemm_workers(m, k, n), c, m, n, |row0, block| {
         for (ri, crow) in block.chunks_mut(n).enumerate() {
             let i = row0 + ri;
             for kk in 0..k {
@@ -41,7 +84,9 @@ pub fn gemm_f32(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usiz
 }
 
 /// LUT-GEMM: acc[M,N] = Σ_k lut[a[m,k], b[k,n]] with i32 accumulation.
-/// `a` and `b` hold u8 codes.
+/// `a` and `b` hold u8 codes.  The activation-major kernel for dynamic
+/// `b`; layers with static weights should pack once and use
+/// [`lut_gemm_packed`].
 pub fn lut_gemm(a: &[u8], b: &[u8], acc: &mut [i32], m: usize, k: usize, n: usize, lut: &Lut) {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
@@ -49,7 +94,7 @@ pub fn lut_gemm(a: &[u8], b: &[u8], acc: &mut [i32], m: usize, k: usize, n: usiz
     let table = &lut.table;
     let skip_zero = lut.zero_row_zero;
     acc.fill(0);
-    parallel_row_chunks(acc, m, n, |row0, block| {
+    parallel_row_chunks_n(gemm_workers(m, k, n), acc, m, n, |row0, block| {
         for (ri, crow) in block.chunks_mut(n).enumerate() {
             let i = row0 + ri;
             let arow = &a[i * k..(i + 1) * k];
@@ -97,6 +142,176 @@ pub fn lut_gemm(a: &[u8], b: &[u8], acc: &mut [i32], m: usize, k: usize, n: usiz
             }
         }
     });
+}
+
+/// A layer's static weight codes re-laid-out for the weight-stationary
+/// kernel: the `[K, N]` code matrix is split into tiles of [`TILE_N`]
+/// output columns, each stored **k-major** (`panel[kk * tw + j]`), so
+/// the packed kernel streams weight codes sequentially while its i32
+/// accumulator tile stays register-resident for the whole k loop.
+///
+/// Built once per layer at quantization/registration time; every
+/// forward pass over any batch then reuses it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedWeights {
+    /// Concatenated panels; the tile starting at column `j0` lives at
+    /// byte offset `j0 * k` (every preceding tile holds exactly
+    /// `k × its-width` codes).
+    codes: Vec<u8>,
+    k: usize,
+    n: usize,
+}
+
+impl PackedWeights {
+    /// Pack a row-major `[k, n]` code matrix (the `w_t` layout the
+    /// activation-major kernel consumes directly).
+    pub fn pack(b: &[u8], k: usize, n: usize) -> PackedWeights {
+        assert_eq!(b.len(), k * n);
+        let mut codes = vec![0u8; k * n];
+        let mut j0 = 0;
+        while j0 < n {
+            let tw = TILE_N.min(n - j0);
+            let panel = &mut codes[j0 * k..j0 * k + k * tw];
+            for kk in 0..k {
+                let src = &b[kk * n + j0..kk * n + j0 + tw];
+                panel[kk * tw..(kk + 1) * tw].copy_from_slice(src);
+            }
+            j0 += tw;
+        }
+        PackedWeights { codes, k, n }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// The raw packed code stream — a tile permutation of the original
+    /// `[k, n]` matrix, so order-insensitive consumers (the weight-code
+    /// histogram) can read it zero-copy instead of keeping a second
+    /// row-major copy of every layer's weights alive.
+    pub fn codes(&self) -> &[u8] {
+        &self.codes
+    }
+
+    /// Unpack back to the row-major `[k, n]` layout (tests, exporters).
+    pub fn unpack(&self) -> Vec<u8> {
+        let (k, n) = (self.k, self.n);
+        let mut out = vec![0u8; k * n];
+        let mut j0 = 0;
+        while j0 < n {
+            let tw = TILE_N.min(n - j0);
+            let panel = &self.codes[j0 * k..j0 * k + k * tw];
+            for kk in 0..k {
+                out[kk * n + j0..kk * n + j0 + tw]
+                    .copy_from_slice(&panel[kk * tw..(kk + 1) * tw]);
+            }
+            j0 += tw;
+        }
+        out
+    }
+}
+
+/// Weight-stationary LUT-GEMM: `acc[M,N] = Σ_k lut[a[m,k], w[k,n]]` with
+/// the weights pre-packed and the gathers through the b-major transposed
+/// store.  Bit-identical to [`lut_gemm`] over the unpacked codes (same
+/// ascending-k i32 accumulation per output element, same
+/// `zero_row_zero` activation skip).  The serving forward path.
+pub fn lut_gemm_packed(a: &[u8], w: &PackedWeights, acc: &mut [i32], m: usize, lut: &Lut) {
+    lut_gemm_packed_n(gemm_workers(m, w.k, w.n), a, w, acc, m, lut)
+}
+
+/// [`lut_gemm_packed`] with an explicit worker basis — the determinism
+/// hook: any worker count (the `AXMUL_THREADS=1/2/16` contract) must
+/// produce identical bits, because chunk geometry is a pure function of
+/// the basis and each row's accumulation never depends on its block.
+pub fn lut_gemm_packed_n(
+    workers: usize,
+    a: &[u8],
+    w: &PackedWeights,
+    acc: &mut [i32],
+    m: usize,
+    lut: &Lut,
+) {
+    let (k, n) = (w.k, w.n);
+    assert_eq!(a.len(), m * k);
+    assert_eq!(acc.len(), m * n);
+    let lt = lut.transposed();
+    let skip_zero = lut.zero_row_zero;
+    acc.fill(0);
+    parallel_row_chunks_n(workers, acc, m, n, |row0, block| {
+        for (ri, crow) in block.chunks_mut(n).enumerate() {
+            let i = row0 + ri;
+            let arow = &a[i * k..(i + 1) * k];
+            let mut j0 = 0;
+            while j0 < n {
+                let tw = TILE_N.min(n - j0);
+                let panel = &w.codes[j0 * k..j0 * k + k * tw];
+                let ctile = &mut crow[j0..j0 + tw];
+                match lt {
+                    LutTStore::U16(t) => {
+                        packed_row_tile_u16(arow, panel, tw, t, skip_zero, ctile)
+                    }
+                    LutTStore::I32(t) => {
+                        packed_row_tile_i32(arow, panel, tw, t, skip_zero, ctile)
+                    }
+                }
+                j0 += tw;
+            }
+        }
+    });
+}
+
+/// One (row, output-tile) micro-kernel over the narrowed u16 store: for
+/// each k, gather `lut_t[w_code * 256 + a_code]` for the tile's `tw`
+/// weight codes (sequential panel reads, ≤ tw distinct 512 B LUT rows —
+/// all fixed by the layer's static weights) into the register-resident
+/// accumulator tile.
+#[inline]
+fn packed_row_tile_u16(
+    arow: &[u8],
+    panel: &[u8],
+    tw: usize,
+    t: &[u16],
+    skip_zero: bool,
+    out: &mut [i32],
+) {
+    for (kk, &av) in arow.iter().enumerate() {
+        if skip_zero && av == 0 {
+            continue;
+        }
+        let a = av as usize;
+        let prow = &panel[kk * tw..(kk + 1) * tw];
+        for (o, &wc) in out.iter_mut().zip(prow) {
+            *o += t[((wc as usize) << 8) | a] as i32;
+        }
+    }
+}
+
+/// i32-store variant of [`packed_row_tile_u16`] (tables with negative or
+/// > 16-bit products cannot narrow).
+#[inline]
+fn packed_row_tile_i32(
+    arow: &[u8],
+    panel: &[u8],
+    tw: usize,
+    t: &[i32],
+    skip_zero: bool,
+    out: &mut [i32],
+) {
+    for (kk, &av) in arow.iter().enumerate() {
+        if skip_zero && av == 0 {
+            continue;
+        }
+        let a = av as usize;
+        let prow = &panel[kk * tw..(kk + 1) * tw];
+        for (o, &wc) in out.iter_mut().zip(prow) {
+            *o += t[((wc as usize) << 8) | a];
+        }
+    }
 }
 
 /// Row sums of the u8 code matrix (needed for zero-point correction).
@@ -155,11 +370,7 @@ mod tests {
     #[test]
     fn lut_gemm_uses_the_table() {
         // A zeroed LUT must produce zero accumulators regardless of input.
-        let lut = Lut {
-            name: "zero".into(),
-            table: vec![0; 65536],
-            zero_row_zero: true,
-        };
+        let lut = Lut::from_table("zero", vec![0; 65536]);
         let a = vec![200u8; 12];
         let b = vec![200u8; 12];
         let mut acc = vec![0i32; 9];
@@ -204,6 +415,73 @@ mod tests {
                     .map(|kk| a[i * k + kk] as i32 * b[kk * n + j] as i32)
                     .sum();
                 assert_eq!(acc[i * n + j], want, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip_all_tail_widths() {
+        // n below, at, straddling and well past TILE_N; k odd and even.
+        let mut rng = Pcg32::new(7);
+        for (k, n) in [(1usize, 1usize), (3, 5), (4, 16), (5, 17), (9, 40), (2, 33)] {
+            let b: Vec<u8> = (0..k * n).map(|_| rng.gen_range(256) as u8).collect();
+            let pw = PackedWeights::pack(&b, k, n);
+            assert_eq!((pw.k(), pw.n()), (k, n));
+            assert_eq!(pw.unpack(), b, "k={k} n={n}");
+        }
+    }
+
+    #[test]
+    fn packed_matches_baseline_exact_lut() {
+        let lut = Lut::build(&ExactMul::new(8, 8));
+        let mut rng = Pcg32::new(11);
+        for (m, k, n) in [(7usize, 13usize, 5usize), (1, 400, 120), (3, 2, 17), (67, 9, 3)] {
+            let a: Vec<u8> = (0..m * k).map(|_| rng.gen_range(256) as u8).collect();
+            let b: Vec<u8> = (0..k * n).map(|_| rng.gen_range(256) as u8).collect();
+            let mut want = vec![0i32; m * n];
+            lut_gemm(&a, &b, &mut want, m, k, n, &lut);
+            let pw = PackedWeights::pack(&b, k, n);
+            let mut got = vec![0i32; m * n];
+            lut_gemm_packed(&a, &pw, &mut got, m, &lut);
+            assert_eq!(got, want, "m={m} k={k} n={n}");
+        }
+    }
+
+    #[test]
+    fn packed_skip_zero_only_when_row_zero() {
+        // A doctored table with a nonzero activation-0 row must NOT be
+        // skipped; a genuine zero-row table must be (and stay correct).
+        let mut table = vec![0i32; 65536];
+        for a in 0..256usize {
+            for b in 0..256usize {
+                table[(a << 8) | b] = (a * b) as i32;
+            }
+        }
+        for b in 0..256usize {
+            table[b] = b as i32 - 7; // row 0 nonzero → i32 store too
+        }
+        let noisy = Lut::from_table("noisy", table);
+        assert!(!noisy.zero_row_zero);
+        let mut rng = Pcg32::new(13);
+        let (m, k, n) = (4usize, 9usize, 19usize);
+        // sparse codes: mostly zero activations
+        let a: Vec<u8> = (0..m * k)
+            .map(|_| {
+                if rng.gen_range(3) == 0 {
+                    rng.gen_range(256) as u8
+                } else {
+                    0
+                }
+            })
+            .collect();
+        let b: Vec<u8> = (0..k * n).map(|_| rng.gen_range(256) as u8).collect();
+        let pw = PackedWeights::pack(&b, k, n);
+        let mut got = vec![0i32; m * n];
+        lut_gemm_packed(&a, &pw, &mut got, m, &noisy);
+        for i in 0..m {
+            for j in 0..n {
+                let want: i32 = (0..k).map(|kk| noisy.mul(a[i * k + kk], b[kk * n + j])).sum();
+                assert_eq!(got[i * n + j], want, "({i},{j})");
             }
         }
     }

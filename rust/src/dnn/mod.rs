@@ -11,7 +11,7 @@ pub mod spec;
 pub mod tensor;
 
 pub use float_net::FloatNet;
-pub use gemm::{gemm_f32, lut_gemm};
+pub use gemm::{gemm_f32, lut_gemm, lut_gemm_packed, lut_gemm_packed_n, PackedWeights, TILE_N};
 pub use qnet::{argmax, QNet};
 pub use spec::{num_params, spec, Op, NETWORKS};
 pub use tensor::{QTensor, Tensor};

@@ -14,7 +14,7 @@
 //!     z_w * Σa (exact adder tree — only the multiplier is approximate).
 
 use super::float_net::FloatNet;
-use super::gemm::{lut_gemm, row_sums_into};
+use super::gemm::{lut_gemm_packed, row_sums_into, PackedWeights};
 use super::im2col::{conv_out_dims, im2col_u8_batch_into};
 use super::quant::{act_scale, quantize_weight, weight_qparams};
 use super::spec::{spec, Op};
@@ -31,8 +31,13 @@ const ACCURACY_BATCH: usize = 64;
 
 /// One quantized weighted layer.
 struct QLayer {
-    /// [K, Cout] u8 codes (weights already transposed for GEMM).
-    w_t: Vec<u8>,
+    /// The layer's `[K, Cout]` weight codes, packed once into n-tiled,
+    /// k-major panels: the only resident copy.  The weight-stationary
+    /// hot path reads it every batch without re-layout (weights are
+    /// static per layer — the whole point); order-insensitive consumers
+    /// (histogram) read the same stream, and `PackedWeights::unpack`
+    /// recovers the row-major matrix if an exporter ever needs it.
+    packed: PackedWeights,
     k: usize,
     cout: usize,
     w_scale: f32,
@@ -400,7 +405,9 @@ impl QNet {
         prep_i32(&mut ws.acc, m * l.cout, &mut ws.grows);
         prep_i32(&mut ws.rowsum, m, &mut ws.grows);
         prep_f32(&mut ws.real_a, m * l.cout, &mut ws.grows);
-        lut_gemm(&ws.patches, &l.w_t, &mut ws.acc, m, l.k, l.cout, lut);
+        // Weight-stationary kernel over the layer's pre-packed panels —
+        // bit-identical to `lut_gemm` over the unpacked [K, Cout] codes.
+        lut_gemm_packed(&ws.patches, &l.packed, &mut ws.acc, m, lut);
         row_sums_into(&ws.patches, m, l.k, &mut ws.rowsum);
         let sc = s_in * l.w_scale;
         for p in 0..m {
@@ -455,7 +462,9 @@ impl QNet {
     pub fn weight_code_histogram(&self) -> [u64; 256] {
         let mut h = [0u64; 256];
         for l in &self.layers {
-            for &c in &l.w_t {
+            // The packed stream is a tile permutation of the row-major
+            // codes — a histogram is order-blind, so read it zero-copy.
+            for &c in l.packed.codes() {
                 h[c as usize] += 1;
             }
         }
@@ -503,8 +512,15 @@ fn make_qlayer(w: &Tensor, b: &Tensor) -> QLayer {
     } else {
         w_t.copy_from_slice(&q.data);
     }
+    // Pack once, at quantization time, and keep ONLY the packed panels:
+    // nothing reads the row-major codes again.  (With activation zero
+    // point 0 the accumulator correction `z_w · Σ_k a` has no
+    // weight-only static term, so there is no per-layer constant sum to
+    // hoist alongside — the scale product `s_in · w_scale` is already
+    // folded per call.)
+    let packed = PackedWeights::pack(&w_t, k, cout);
     QLayer {
-        w_t,
+        packed,
         k,
         cout,
         w_scale: scale,

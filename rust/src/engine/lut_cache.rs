@@ -153,11 +153,7 @@ mod tests {
     #[test]
     fn insert_overrides() {
         let cache = LutCache::new();
-        let zero = Arc::new(Lut {
-            name: "zero".into(),
-            table: vec![0; 65536],
-            zero_row_zero: true,
-        });
+        let zero = Arc::new(Lut::from_table("zero", vec![0; 65536]));
         cache.insert("zero", zero.clone());
         assert!(cache.contains("zero"));
         let got = cache.get("zero").unwrap();

@@ -47,6 +47,12 @@ pub struct Session {
 
 impl Session {
     pub fn new(key: SessionKey, qnet: Arc<QNet>, lut: Arc<Lut>) -> Session {
+        // Warm the b-major transposed store now (u16 where products fit):
+        // the weight-stationary forward path gathers through it, and the
+        // build must be paid at registration, not on the first request.
+        // It is cached inside the `Arc<Lut>`, i.e. once per design per
+        // process via the shared LutCache.
+        lut.transposed();
         Session { key, qnet, lut }
     }
 

@@ -3,7 +3,11 @@
 //! `QNet::forward_batch_with` threads a `Workspace` through every op:
 //! im2col patches, GEMM accumulators, row sums and the real-valued
 //! activation buffers all live here and are resized *within capacity*
-//! between calls.  Buffers grow to the high-water mark of the (network,
+//! between calls.  Note what deliberately does NOT live here: per-layer
+//! packed weight panels and the transposed LUT store are *static* (built
+//! once in `QNet`/`Lut` at registration), so the weight-stationary GEMM
+//! reads them shared and immutable while only the per-batch scratch
+//! below cycles.  Buffers grow to the high-water mark of the (network,
 //! max batch) being served during the first couple of calls (buffer
 //! roles rotate via pointer swaps, so capacities converge after at most
 //! a few passes) and steady-state inference then performs zero heap

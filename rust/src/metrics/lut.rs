@@ -5,11 +5,53 @@
 //! Pallas kernel (passed as a runtime tensor argument), and (c) the
 //! `.npy` exporter that feeds python tests.  One table = one "silicon"
 //! variant; swapping multipliers at runtime is swapping tables.
+//!
+//! Besides the canonical a-major table there is a lazily built **b-major
+//! transposed store** ([`Lut::transposed`]) for the weight-stationary
+//! packed GEMM: `lut_t[b * 256 + a] == table[a * 256 + b]`, contiguous
+//! per *weight* code, narrowed to `u16` whenever every product fits 16
+//! bits (the exact 8×8 maximum is 255·255 = 65025), which halves the
+//! gather footprint.  Because weights are static per layer, the set of
+//! `lut_t` rows a layer gathers from is fixed — and for co-optimized
+//! designs whose weight codes concentrate in a narrow band (§II-B), tiny.
 
 use crate::mult::Multiplier;
 use crate::util::parallel_map;
+use std::sync::OnceLock;
 
+/// The b-major transposed product store: `[b * 256 + a]`, one contiguous
+/// 256-entry row per weight code.  `U16` when every table value fits
+/// (512 B per row), `I32` otherwise (doctored/test tables with negative
+/// or oversized entries; 1 KB per row).
 #[derive(Clone, Debug, PartialEq)]
+pub enum LutTStore {
+    U16(Vec<u16>),
+    I32(Vec<i32>),
+}
+
+impl LutTStore {
+    /// Bytes occupied by the store (footprint diagnostics: 128 KB for
+    /// `U16`, 256 KB for `I32`).
+    pub fn bytes(&self) -> usize {
+        match self {
+            LutTStore::U16(v) => v.len() * 2,
+            LutTStore::I32(v) => v.len() * 4,
+        }
+    }
+
+    /// Entry for weight code `b`, activation code `a` — numerically
+    /// identical to `table[a * 256 + b]` in either representation.
+    #[inline(always)]
+    pub fn get(&self, b: u8, a: u8) -> i32 {
+        let idx = ((b as usize) << 8) | a as usize;
+        match self {
+            LutTStore::U16(v) => v[idx] as i32,
+            LutTStore::I32(v) => v[idx],
+        }
+    }
+}
+
+#[derive(Debug)]
 pub struct Lut {
     pub name: String,
     /// Row-major: `table[a * 256 + b] = m.mul(a, b)`.
@@ -18,6 +60,35 @@ pub struct Lut {
     /// Lets the GEMM hot path skip zero activation codes — post-ReLU
     /// activations are heavily sparse, so this is a large win.
     pub zero_row_zero: bool,
+    /// Lazily built transposed store (see the module docs).  Built at
+    /// most once per `Lut`; since production code shares tables through
+    /// `LutCache`'s `Arc<Lut>`, that is once per design per process.
+    /// NOTE: mutating `table` *after* the store was built desyncs the
+    /// two — only the property tests doctor tables, and they do so on a
+    /// fresh clone (cloning resets the store).
+    transposed: OnceLock<LutTStore>,
+}
+
+// Manual impls: the OnceLock cache is identity, not state.  Clone resets
+// it (a clone's `table` may be doctored before first use), equality and
+// the exporter ignore it.
+impl Clone for Lut {
+    fn clone(&self) -> Lut {
+        Lut {
+            name: self.name.clone(),
+            table: self.table.clone(),
+            zero_row_zero: self.zero_row_zero,
+            transposed: OnceLock::new(),
+        }
+    }
+}
+
+impl PartialEq for Lut {
+    fn eq(&self, other: &Lut) -> bool {
+        self.name == other.name
+            && self.table == other.table
+            && self.zero_row_zero == other.zero_row_zero
+    }
 }
 
 impl Lut {
@@ -35,12 +106,19 @@ impl Lut {
             }
             row
         });
-        let table = rows.concat();
+        Lut::from_table(m.name(), rows.concat())
+    }
+
+    /// Wrap a pre-computed 256×256 table (synthetic tables in tests,
+    /// externally loaded silicon), deriving the zero-row flag.
+    pub fn from_table(name: &str, table: Vec<i32>) -> Lut {
+        assert_eq!(table.len(), 65536, "LUT tables are 256x256");
         let zero_row_zero = table[..256].iter().all(|&v| v == 0);
         Lut {
-            name: m.name().to_string(),
+            name: name.to_string(),
             table,
             zero_row_zero,
+            transposed: OnceLock::new(),
         }
     }
 
@@ -48,6 +126,35 @@ impl Lut {
     pub fn mul(&self, a: u8, b: u8) -> i32 {
         // SAFETY-free fast path: the index is structurally < 65536.
         self.table[((a as usize) << 8) | b as usize]
+    }
+
+    /// The b-major transposed store for the weight-stationary kernel,
+    /// built on first use (`u16` when every product fits 16 bits, `i32`
+    /// fallback) and cached for the lifetime of this `Lut`.
+    pub fn transposed(&self) -> &LutTStore {
+        self.transposed.get_or_init(|| {
+            let fits_u16 = self
+                .table
+                .iter()
+                .all(|&v| (0..=u16::MAX as i32).contains(&v));
+            if fits_u16 {
+                let mut t = vec![0u16; 65536];
+                for a in 0..256usize {
+                    for b in 0..256usize {
+                        t[(b << 8) | a] = self.table[(a << 8) | b] as u16;
+                    }
+                }
+                LutTStore::U16(t)
+            } else {
+                let mut t = vec![0i32; 65536];
+                for a in 0..256usize {
+                    for b in 0..256usize {
+                        t[(b << 8) | a] = self.table[(a << 8) | b];
+                    }
+                }
+                LutTStore::I32(t)
+            }
+        })
     }
 
     /// Signed multiply for zero-point-adjusted quantized values: both
@@ -69,13 +176,12 @@ impl Lut {
 
     /// Write as a `.npy` file ([256,256] i32) — the interchange format the
     /// python tests and any external consumer of the "silicon" use.
+    /// Streams the borrowed table (it used to clone all 256 KB per export).
     pub fn write_npy(&self, path: &std::path::Path) -> anyhow::Result<()> {
-        crate::data::npy::write_npy(
+        crate::data::npy::write_npy_view(
             path,
-            &crate::data::npy::NpyArray {
-                shape: vec![256, 256],
-                data: crate::data::npy::NpyData::I32(self.table.clone()),
-            },
+            &[256, 256],
+            crate::data::npy::NpyView::I32(&self.table),
         )
     }
 }
@@ -112,5 +218,64 @@ mod tests {
         assert_eq!(bytes.len(), 65536 * 4);
         let v = i32::from_le_bytes(bytes[4..8].try_into().unwrap());
         assert_eq!(v, lut.table[1]);
+    }
+
+    #[test]
+    fn transposed_store_is_exact_transpose_u16() {
+        // The exact 8×8 table tops out at 65025, so it must narrow to
+        // u16 (half the footprint), and every entry must mirror the
+        // canonical table across the diagonal.
+        let lut = Lut::build(&ExactMul::new(8, 8));
+        let t = lut.transposed();
+        assert!(matches!(t, LutTStore::U16(_)), "exact 8x8 fits u16");
+        assert_eq!(t.bytes(), 65536 * 2);
+        for a in (0..256usize).step_by(7) {
+            for b in (0..256usize).step_by(11) {
+                assert_eq!(t.get(b as u8, a as u8), lut.mul(a as u8, b as u8));
+            }
+        }
+        // Built once: the second call must hand back the same allocation.
+        let p1 = lut.transposed() as *const LutTStore;
+        let p2 = lut.transposed() as *const LutTStore;
+        assert_eq!(p1, p2);
+    }
+
+    #[test]
+    fn transposed_store_i32_fallback_for_out_of_band_tables() {
+        // Negative (or > 65535) entries cannot narrow; the store must
+        // fall back to i32 and stay numerically identical.
+        let mut table = vec![0i32; 65536];
+        table[(3 << 8) | 5] = -7;
+        table[(250 << 8) | 250] = 70_000;
+        let lut = Lut::from_table("doctored", table);
+        let t = lut.transposed();
+        assert!(matches!(t, LutTStore::I32(_)));
+        assert_eq!(t.bytes(), 65536 * 4);
+        assert_eq!(t.get(5, 3), -7);
+        assert_eq!(t.get(250, 250), 70_000);
+        assert_eq!(t.get(0, 0), 0);
+    }
+
+    #[test]
+    fn clone_resets_transposed_cache() {
+        // The property tests doctor cloned tables in place; a stale
+        // transposed store on the clone would silently desync them.
+        let lut = Lut::build(&ExactMul::new(8, 8));
+        assert!(matches!(lut.transposed(), LutTStore::U16(_)));
+        let mut doctored = lut.clone();
+        doctored.table[0] = -1;
+        doctored.zero_row_zero = false;
+        assert_eq!(doctored.transposed().get(0, 0), -1, "rebuilt, not stale");
+        assert!(matches!(doctored.transposed(), LutTStore::I32(_)));
+    }
+
+    #[test]
+    fn from_table_derives_zero_row_flag() {
+        let zero = Lut::from_table("zeros", vec![0; 65536]);
+        assert!(zero.zero_row_zero);
+        let mut t = vec![0i32; 65536];
+        t[5] = 1; // row 0, b = 5
+        let nz = Lut::from_table("nz", t);
+        assert!(!nz.zero_row_zero);
     }
 }

@@ -4,7 +4,7 @@
 
 pub mod lut;
 
-pub use lut::Lut;
+pub use lut::{Lut, LutTStore};
 
 use crate::mult::Multiplier;
 use crate::util::parallel_map;

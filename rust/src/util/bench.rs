@@ -153,6 +153,38 @@ impl Bencher {
     pub fn results(&self) -> &[BenchStats] {
         &self.results
     }
+
+    /// Machine-readable dump of everything benchmarked so far: a JSON
+    /// array of objects with `name`, `ns_per_iter` (the median),
+    /// `mean_ns`, `p95_ns`, `iters`, and `elems_per_s` when a throughput
+    /// denominator was given.  This is the perf-trajectory artifact
+    /// (`BENCH_table8.json`) future PRs diff against — text reports
+    /// don't survive CI, JSON artifacts do.
+    pub fn write_json(&self, path: &std::path::Path) -> std::io::Result<()> {
+        use super::json::Json;
+        use std::collections::BTreeMap;
+        let arr = Json::Arr(
+            self.results
+                .iter()
+                .map(|r| {
+                    let mut o = BTreeMap::new();
+                    o.insert("name".to_string(), Json::Str(r.name.clone()));
+                    o.insert("ns_per_iter".to_string(), Json::Num(r.median_ns));
+                    o.insert("mean_ns".to_string(), Json::Num(r.mean_ns));
+                    o.insert("p95_ns".to_string(), Json::Num(r.p95_ns));
+                    o.insert("iters".to_string(), Json::Num(r.iters as f64));
+                    if let Some(e) = r.elements {
+                        o.insert(
+                            "elems_per_s".to_string(),
+                            Json::Num(e as f64 / r.median_ns * 1e9),
+                        );
+                    }
+                    Json::Obj(o)
+                })
+                .collect(),
+        );
+        std::fs::write(path, arr.to_string())
+    }
 }
 
 /// Human-friendly duration formatting for nanosecond quantities.
@@ -183,6 +215,29 @@ mod tests {
         assert!(s.mean_ns > 0.0);
         assert!(s.median_ns <= s.p95_ns * 1.001);
         assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn write_json_roundtrips_through_parser() {
+        std::env::set_var("AXMUL_BENCH_FAST", "1");
+        let mut b = Bencher::new();
+        b.bench_elems("with_tput", Some(1_000), || {
+            std::hint::black_box(2 + 2);
+        });
+        b.bench("no_tput", || {
+            std::hint::black_box(1 + 1);
+        });
+        let dir = std::env::temp_dir().join("axmul_bench_json");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("out.json");
+        b.write_json(&p).unwrap();
+        let parsed = crate::util::Json::parse(&std::fs::read_to_string(&p).unwrap()).unwrap();
+        let arr = parsed.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("name").unwrap().as_str(), Some("with_tput"));
+        assert!(arr[0].get("ns_per_iter").unwrap().as_f64().unwrap() > 0.0);
+        assert!(arr[0].get("elems_per_s").unwrap().as_f64().unwrap() > 0.0);
+        assert!(arr[1].get("elems_per_s").is_none(), "no denominator given");
     }
 
     #[test]

@@ -1,18 +1,39 @@
-//! Minimal data-parallel helpers built on `std::thread::scope`.
+//! Fork-join data parallelism on a lazily spawned **persistent** worker
+//! pool.
 //!
 //! The coordinator's hot loops (LUT-GEMM tiles, exhaustive metric sweeps,
-//! batched evaluation) need fork-join parallelism; with no external crates
-//! available we provide a small, predictable work-chunking layer instead of
-//! a general work-stealing pool.  Chunks are static (deterministic) which
-//! also keeps results bit-reproducible regardless of thread count.
+//! batched evaluation) need fork-join parallelism; with no external
+//! crates available we provide a small, predictable work-chunking layer
+//! instead of a general work-stealing pool.  Chunks are static
+//! (deterministic, a pure function of the shape and `num_threads()`),
+//! which also keeps results bit-reproducible regardless of how the pool
+//! actually schedules them.
+//!
+//! Earlier revisions forked and joined fresh OS threads via
+//! `std::thread::scope` on every call — once per GEMM dispatch, i.e. per
+//! layer per batch per request lane under serving load.  Now a single
+//! process-wide pool is spawned on first use and reused forever: a
+//! parallel call pushes one type-erased job onto a FIFO queue, the
+//! submitter *helps drain its own job* (so progress never depends on a
+//! free worker — this also makes nested submission from inside a task
+//! safe), and returns once every chunk has executed.  Steady-state GEMM
+//! calls therefore spawn zero OS threads ([`pool_threads_spawned`] is
+//! stable after warmup, and the tests pin that down).
+//!
+//! Tiny shapes (e.g. lenet fc1, `M = 1`) never touch the queue: the
+//! serial cutoffs below run them inline on the caller's thread.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
-/// Number of worker threads to use: `AXMUL_THREADS` env var, else the
-/// available parallelism, capped at 16.
-pub fn num_threads() -> usize {
-    if let Ok(v) = std::env::var("AXMUL_THREADS") {
-        if let Ok(n) = v.parse::<usize>() {
+/// Parse an `AXMUL_THREADS`-style override: a positive integer wins
+/// (clamped to ≥ 1), anything else falls back to the available
+/// parallelism capped at 16.  Pure, so the env semantics are testable
+/// without mutating process state.
+fn parse_threads(var: Option<&str>) -> usize {
+    if let Some(v) = var {
+        if let Ok(n) = v.trim().parse::<usize>() {
             return n.max(1);
         }
     }
@@ -21,6 +42,212 @@ pub fn num_threads() -> usize {
         .unwrap_or(4)
         .min(16)
 }
+
+/// Number of worker threads to use: `AXMUL_THREADS` env var, else the
+/// available parallelism, capped at 16.  Parsed **once** on first call
+/// (it used to re-read the env var on every GEMM dispatch); the pool is
+/// sized from the same value, so changing the variable after startup has
+/// no effect.
+pub fn num_threads() -> usize {
+    static THREADS: OnceLock<usize> = OnceLock::new();
+    *THREADS.get_or_init(|| parse_threads(std::env::var("AXMUL_THREADS").ok().as_deref()))
+}
+
+/// Worker threads the process-wide pool has spawned so far: 0 before the
+/// first parallel call, then `num_threads() - 1` forever (the submitting
+/// thread is the final participant).  Stable-after-warmup is the
+/// "no OS thread spawn per GEMM" invariant the tests assert.
+pub fn pool_threads_spawned() -> usize {
+    Pool::get()
+        .map(|p| p.shared.spawned.load(Ordering::Relaxed))
+        .unwrap_or(0)
+}
+
+// ---------------------------------------------------------------------
+// The pool
+// ---------------------------------------------------------------------
+
+/// One fork-join job: call `f(i)` for every `i in 0..total`, each index
+/// exactly once.  Indices are claimed via `next`; completions are
+/// counted down in `pending`; the submitter blocks on `done` until the
+/// last completion flips it.
+struct Job {
+    /// Lifetime-erased task body.  SAFETY: `Pool::run` guarantees the
+    /// referent outlives every call — see the transmute there.
+    f: &'static (dyn Fn(usize) + Sync),
+    total: usize,
+    next: AtomicUsize,
+    pending: AtomicUsize,
+    done: Mutex<bool>,
+    done_cv: Condvar,
+    /// First panic payload from any task.  Tasks are caught so a panic
+    /// cannot kill a persistent worker (or strand the submitter on a
+    /// count that will never reach zero); the submitter re-raises it
+    /// after the join, preserving the old `std::thread::scope` contract.
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+impl Job {
+    /// Run one claimed index, trapping panics, and record completion;
+    /// the last completion wakes the submitter.  The mutex section is
+    /// the lost-wakeup guard: the submitter re-checks `done` under the
+    /// same lock before sleeping.
+    fn execute_one(&self, i: usize) {
+        // AssertUnwindSafe: the closure state is only ever observed
+        // again by the submitter, which re-raises the panic before
+        // touching any of it.
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| (self.f)(i)));
+        if let Err(p) = r {
+            let mut slot = self.panic.lock().unwrap();
+            slot.get_or_insert(p);
+        }
+        // AcqRel: the thread that observes pending hit zero acquires
+        // every other worker's (Release) writes, so the submitter sees
+        // all task side effects once it sees `done`.
+        if self.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let mut done = self.done.lock().unwrap();
+            *done = true;
+            self.done_cv.notify_all();
+        }
+    }
+}
+
+struct Shared {
+    queue: Mutex<VecDeque<Arc<Job>>>,
+    work_cv: Condvar,
+    spawned: AtomicUsize,
+}
+
+struct Pool {
+    shared: Arc<Shared>,
+    /// Persistent worker count (`num_threads() - 1`; the submitter is
+    /// the final participant).  0 means every job runs inline.
+    workers: usize,
+}
+
+impl Pool {
+    /// The process-wide pool, spawned lazily on first use.
+    fn global() -> &'static Pool {
+        Self::cell().get_or_init(|| Pool::new(num_threads().saturating_sub(1)))
+    }
+
+    fn get() -> Option<&'static Pool> {
+        Self::cell().get()
+    }
+
+    fn cell() -> &'static OnceLock<Pool> {
+        static POOL: OnceLock<Pool> = OnceLock::new();
+        &POOL
+    }
+
+    fn new(workers: usize) -> Pool {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            work_cv: Condvar::new(),
+            spawned: AtomicUsize::new(0),
+        });
+        for i in 0..workers {
+            let sh = shared.clone();
+            sh.spawned.fetch_add(1, Ordering::Relaxed);
+            std::thread::Builder::new()
+                .name(format!("axmul-pool-{i}"))
+                .spawn(move || worker_loop(sh))
+                .expect("spawn pool worker");
+        }
+        Pool { shared, workers }
+    }
+
+    /// Execute `f(i)` for every `i in 0..total` across the pool and the
+    /// calling thread; returns once all have run.  The submitter always
+    /// helps drain its *own* job first, so a job completes even when
+    /// every worker is busy elsewhere — which is also why a task may
+    /// itself submit (nested fork-join) without deadlock.
+    fn run(&self, total: usize, f: &(dyn Fn(usize) + Sync)) {
+        if total == 0 {
+            return;
+        }
+        if self.workers == 0 || total == 1 {
+            for i in 0..total {
+                f(i);
+            }
+            return;
+        }
+        // SAFETY: the erased reference is only ever dereferenced for a
+        // claimed index `i < total`.  All `total` claims happen before
+        // `pending` can reach 0, and `run` does not return until it
+        // does, so no call outlives this frame.  Workers that merely
+        // observe the drained job afterwards touch its atomics, not `f`.
+        let f: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(f) };
+        let job = Arc::new(Job {
+            f,
+            total,
+            next: AtomicUsize::new(0),
+            pending: AtomicUsize::new(total),
+            done: Mutex::new(false),
+            done_cv: Condvar::new(),
+            panic: Mutex::new(None),
+        });
+        self.shared.queue.lock().unwrap().push_back(job.clone());
+        self.shared.work_cv.notify_all();
+        loop {
+            let i = job.next.fetch_add(1, Ordering::Relaxed);
+            if i >= job.total {
+                break;
+            }
+            job.execute_one(i);
+        }
+        {
+            let mut done = job.done.lock().unwrap();
+            while !*done {
+                done = job.done_cv.wait(done).unwrap();
+            }
+        }
+        // Re-raise the first task panic on the submitting thread — the
+        // behaviour scoped spawn-and-join used to give us for free.
+        if let Some(p) = job.panic.lock().unwrap().take() {
+            std::panic::resume_unwind(p);
+        }
+    }
+
+    fn run_fn<F: Fn(usize) + Sync>(&self, total: usize, f: F) {
+        self.run(total, &f);
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                match q.front().cloned() {
+                    Some(j) => {
+                        if j.next.load(Ordering::Relaxed) >= j.total {
+                            // Fully claimed jobs are dead weight (their
+                            // remaining work is in flight on other
+                            // threads) — drop them and look further down
+                            // the queue.
+                            q.pop_front();
+                        } else {
+                            break j;
+                        }
+                    }
+                    None => q = shared.work_cv.wait(q).unwrap(),
+                }
+            }
+        };
+        loop {
+            let i = job.next.fetch_add(1, Ordering::Relaxed);
+            if i >= job.total {
+                break;
+            }
+            job.execute_one(i);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Fork-join helpers (the public API)
+// ---------------------------------------------------------------------
 
 /// Apply `f` to every index in `0..n`, in parallel, collecting results in
 /// index order.  `f` must be `Sync`; results are written to disjoint slots.
@@ -35,25 +262,13 @@ where
     }
     let mut out: Vec<Option<T>> = Vec::with_capacity(n);
     out.resize_with(n, || None);
-    let next = AtomicUsize::new(0);
     let out_ptr = SendPtr(out.as_mut_ptr());
-    std::thread::scope(|s| {
-        for _ in 0..workers {
-            let f = &f;
-            let next = &next;
-            let out_ptr = &out_ptr;
-            s.spawn(move || loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let v = f(i);
-                // SAFETY: each index i is claimed by exactly one worker via
-                // the atomic counter, so writes are to disjoint slots, and
-                // the scope joins all workers before `out` is read.
-                unsafe { *out_ptr.0.add(i) = Some(v) };
-            });
-        }
+    Pool::global().run_fn(n, |i| {
+        let v = f(i);
+        // SAFETY: each index is claimed by exactly one pool task, so
+        // writes land in disjoint slots, and `run` joins every task
+        // before `out` is read below.
+        unsafe { *out_ptr.0.add(i) = Some(v) };
     });
     out.into_iter().map(|v| v.expect("slot filled")).collect()
 }
@@ -61,11 +276,25 @@ where
 /// Run `f(first_row, block)` over a row-major `[m, n]` matrix split into
 /// per-worker blocks of whole rows (`ceil(m / workers)` rows each, the
 /// last block possibly short).  Each block is a disjoint `&mut`
-/// sub-slice handed out by `chunks_mut`, so callers that previously
-/// conjured per-row mutable slices from a shared pointer (the old GEMM
-/// dispatch) need no `unsafe`.  This is the fork-join primitive of the
-/// GEMM kernels and the batched im2col (rows = images there).
+/// sub-slice, so callers that previously conjured per-row mutable slices
+/// from a shared pointer (the old GEMM dispatch) need no `unsafe`.  This
+/// is the fork-join primitive of the GEMM kernels and the batched im2col
+/// (rows = images there).
 pub fn parallel_row_chunks<T, F>(data: &mut [T], m: usize, n: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    parallel_row_chunks_n(num_threads(), data, m, n, f)
+}
+
+/// [`parallel_row_chunks`] with an explicit block-count basis.  The block
+/// geometry (`ceil(m / workers)` whole rows per block) is a pure function
+/// of `(m, workers)` and independent of how many threads the pool really
+/// has, so this is both the serial-cutoff hook for the GEMM kernels
+/// (`workers = 1` runs inline, no queue touch) and the determinism test
+/// hook: any `workers` value must produce bit-identical results.
+pub fn parallel_row_chunks_n<T, F>(workers: usize, data: &mut [T], m: usize, n: usize, f: F)
 where
     T: Send,
     F: Fn(usize, &mut [T]) + Sync,
@@ -74,17 +303,23 @@ where
     if m == 0 || n == 0 {
         return;
     }
-    let workers = num_threads().min(m);
+    let workers = workers.min(m).max(1);
     if workers <= 1 || m < 2 {
         f(0, data);
         return;
     }
     let rows_per = m.div_ceil(workers);
-    std::thread::scope(|s| {
-        for (w, block) in data.chunks_mut(rows_per * n).enumerate() {
-            let f = &f;
-            s.spawn(move || f(w * rows_per, block));
-        }
+    let chunks = m.div_ceil(rows_per);
+    let base = SendPtr(data.as_mut_ptr());
+    Pool::global().run_fn(chunks, |ci| {
+        let row0 = ci * rows_per;
+        let rows = rows_per.min(m - row0);
+        // SAFETY: chunk `ci` covers rows [row0, row0 + rows), disjoint
+        // across chunk indices and in bounds (row0 < m because
+        // chunks = ceil(m / rows_per)); `run` joins every chunk before
+        // `data` is usable again.
+        let block = unsafe { std::slice::from_raw_parts_mut(base.0.add(row0 * n), rows * n) };
+        f(row0, block);
     });
 }
 
@@ -95,18 +330,29 @@ where
     F: Fn(usize, &mut [T]) + Sync,
 {
     let n = data.len();
+    if n == 0 {
+        return;
+    }
     let workers = num_threads().max(1);
     let chunk = n.div_ceil(workers).max(min_chunk.max(1));
-    std::thread::scope(|s| {
-        for (w, piece) in data.chunks_mut(chunk).enumerate() {
-            let f = &f;
-            s.spawn(move || f(w, piece));
-        }
+    let chunks = n.div_ceil(chunk);
+    if chunks <= 1 {
+        f(0, data);
+        return;
+    }
+    let base = SendPtr(data.as_mut_ptr());
+    Pool::global().run_fn(chunks, |ci| {
+        let start = ci * chunk;
+        let len = chunk.min(n - start);
+        // SAFETY: disjoint [start, start + len) ranges, joined before
+        // `data` is usable again.
+        let piece = unsafe { std::slice::from_raw_parts_mut(base.0.add(start), len) };
+        f(ci, piece);
     });
 }
 
 struct SendPtr<T>(*mut T);
-// SAFETY: used only for disjoint writes inside a joined scope (see above).
+// SAFETY: used only for disjoint writes inside a joined job (see above).
 unsafe impl<T> Sync for SendPtr<T> {}
 unsafe impl<T> Send for SendPtr<T> {}
 
@@ -156,6 +402,32 @@ mod tests {
     }
 
     #[test]
+    fn row_chunks_any_worker_count_is_bit_identical() {
+        // The block geometry is a pure function of (m, workers); any
+        // worker basis — serial, fewer than the pool, far more than the
+        // pool — must produce the same bits (the AXMUL_THREADS=1/2/16
+        // reproducibility contract, testable in-process because the
+        // chunk basis is decoupled from the real thread count).
+        let (m, n) = (53, 7);
+        let run = |workers: usize| {
+            let mut data = vec![0u64; m * n];
+            parallel_row_chunks_n(workers, &mut data, m, n, |row0, block| {
+                for (ri, row) in block.chunks_mut(n).enumerate() {
+                    let i = (row0 + ri) as u64;
+                    for (j, v) in row.iter_mut().enumerate() {
+                        *v = i.wrapping_mul(2654435761).wrapping_add(j as u64);
+                    }
+                }
+            });
+            data
+        };
+        let want = run(1);
+        for workers in [2, 3, 16, 64] {
+            assert_eq!(run(workers), want, "workers={workers}");
+        }
+    }
+
+    #[test]
     fn slice_chunks_transform() {
         let mut data: Vec<u32> = (0..777).collect();
         parallel_slice_chunks(&mut data, 16, |_, piece| {
@@ -169,5 +441,107 @@ mod tests {
     #[test]
     fn num_threads_at_least_one() {
         assert!(num_threads() >= 1);
+    }
+
+    #[test]
+    fn parse_threads_env_semantics() {
+        // Override wins and clamps to ≥ 1; garbage and absence fall back
+        // to the capped default.  (num_threads() itself is OnceLock'd, so
+        // the parse is what carries the env contract.)
+        assert_eq!(parse_threads(Some("8")), 8);
+        assert_eq!(parse_threads(Some(" 3 ")), 3);
+        assert_eq!(parse_threads(Some("0")), 1);
+        let fallback = parse_threads(None);
+        assert!((1..=16).contains(&fallback));
+        assert_eq!(parse_threads(Some("not-a-number")), fallback);
+        assert_eq!(parse_threads(Some("")), fallback);
+    }
+
+    #[test]
+    fn steady_state_spawns_no_threads() {
+        // Warm the pool, snapshot the spawn counter, then hammer it with
+        // parallel work: the counter must not move (the persistent-pool
+        // guarantee that replaced per-call std::thread::scope).
+        let _ = parallel_map(64, |i| i);
+        let spawned = pool_threads_spawned();
+        assert!(spawned <= num_threads().saturating_sub(1));
+        for round in 0..50u32 {
+            let mut data = vec![0u32; 32 * 4];
+            parallel_row_chunks(&mut data, 32, 4, |row0, block| {
+                for v in block.iter_mut() {
+                    *v = row0 as u32 + round;
+                }
+            });
+            let _ = parallel_map(17, |i| i * i);
+        }
+        assert_eq!(
+            pool_threads_spawned(),
+            spawned,
+            "steady-state parallel calls must not spawn OS threads"
+        );
+    }
+
+    #[test]
+    fn task_panic_propagates_and_pool_survives() {
+        // A panicking task must re-raise on the submitter (the old
+        // scoped-join contract), not strand it or kill a persistent
+        // worker: the pool must keep serving afterwards.
+        let r = std::panic::catch_unwind(|| {
+            parallel_map(8, |i| {
+                assert!(i != 3, "boom");
+                i
+            })
+        });
+        assert!(r.is_err(), "task panic must surface on the submitter");
+        let got = parallel_map(8, |i| i * 2);
+        assert_eq!(got, (0..8).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn nested_submission_completes() {
+        // A task that itself forks a join-job must complete (the
+        // submitter-helps discipline): outer map over rows, inner map
+        // per row.
+        let got = parallel_map(8, |i| parallel_map(8, move |j| i * 8 + j));
+        for (i, row) in got.iter().enumerate() {
+            for (j, &v) in row.iter().enumerate() {
+                assert_eq!(v, i * 8 + j);
+            }
+        }
+    }
+
+    #[test]
+    fn concurrent_submitters_all_complete() {
+        // Server lanes submit GEMM jobs concurrently from independent OS
+        // threads; every job must drain correctly with one shared queue.
+        let results: Vec<Vec<u32>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..4)
+                .map(|t| {
+                    s.spawn(move || {
+                        let (m, n) = (29, 3);
+                        let mut data = vec![0u32; m * n];
+                        parallel_row_chunks(&mut data, m, n, |row0, block| {
+                            for (ri, row) in block.chunks_mut(n).enumerate() {
+                                for v in row {
+                                    *v = (t * 1000 + row0 + ri) as u32;
+                                }
+                            }
+                        });
+                        data
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (t, data) in results.iter().enumerate() {
+            for i in 0..29 {
+                assert!(
+                    data[i * 3..(i + 1) * 3]
+                        .iter()
+                        .all(|&v| v == (t * 1000 + i) as u32),
+                    "thread {t} row {i}"
+                );
+            }
+        }
     }
 }

@@ -6,7 +6,7 @@
 //! message).
 
 use axmul::data::{npy, Batcher, Dataset};
-use axmul::dnn::{gemm_f32, lut_gemm};
+use axmul::dnn::{gemm_f32, lut_gemm, lut_gemm_packed, lut_gemm_packed_n, PackedWeights};
 use axmul::logic::{
     cover_equals, minimal_cover, multiplier_truth_table, opt::nand_rewrite, optimize,
     synthesize_truth_table, GateKind, Netlist, SignalRef, TruthTable,
@@ -242,6 +242,131 @@ fn prop_lut_gemm_odd_k_tail_and_skip_zero() {
             }
         }
     }
+}
+
+#[test]
+fn prop_lut_gemm_packed_bit_identical_for_all_designs() {
+    // PR-3 tentpole invariant: the weight-stationary packed kernel must
+    // reproduce the activation-major kernel bit for bit, for EVERY
+    // Table VIII design (u16-narrowed stores included), across shapes
+    // that exercise the serial cutoff (M = 1, lenet fc1's shape), the
+    // n-tile tail (n not a multiple of TILE_N), tall-M worker blocks and
+    // sparse activations hitting the zero-skip path.
+    let cache = axmul::engine::LutCache::new();
+    for name in axmul::mult::DNN_DESIGNS {
+        let lut = cache.get(name).unwrap();
+        let mut rng = Pcg32::new(61);
+        for (m, k, n) in [
+            (1usize, 400usize, 120usize), // lenet fc1: serial cutoff
+            (7, 13, 5),                   // odd everything, n < TILE_N
+            (67, 9, 3),                   // tall: spans worker blocks
+            (5, 31, 17),                  // n straddles one tile boundary
+            (16, 24, 48),                 // exact multiple of TILE_N
+        ] {
+            // ~half the activation codes zero: the skip path must stay
+            // bit-equivalent between the two kernels.
+            let a: Vec<u8> = (0..m * k)
+                .map(|_| {
+                    if rng.gen_range(2) == 0 {
+                        rng.gen_range(256) as u8
+                    } else {
+                        0
+                    }
+                })
+                .collect();
+            let b: Vec<u8> = (0..k * n).map(|_| rng.gen_range(256) as u8).collect();
+            let mut want = vec![0i32; m * n];
+            lut_gemm(&a, &b, &mut want, m, k, n, &lut);
+            let pw = PackedWeights::pack(&b, k, n);
+            assert_eq!(pw.unpack(), b, "{name}: pack must be lossless");
+            let mut got = vec![0i32; m * n];
+            lut_gemm_packed(&a, &pw, &mut got, m, &lut);
+            assert_eq!(got, want, "{name} m={m} k={k} n={n}");
+        }
+    }
+}
+
+#[test]
+fn prop_lut_gemm_packed_i32_store_fallback() {
+    // Tables that cannot narrow to u16 — negative entries (doctored
+    // row 0, which also disables the zero-skip) and products past
+    // 65535 — must route through the i32 transposed store and still
+    // match the scalar reference exactly.
+    let mut rng = Pcg32::new(67);
+    let mut table = vec![0i32; 65536];
+    for a in 0..256usize {
+        for b in 0..256usize {
+            table[(a << 8) | b] = (a * b) as i32;
+        }
+    }
+    let mut neg = table.clone();
+    for b in 0..256usize {
+        neg[b] = b as i32 - 7;
+    }
+    let mut wide = table.clone();
+    wide[(255 << 8) | 255] = 1_000_000;
+    for lut in [
+        Lut::from_table("neg_row0", neg),
+        Lut::from_table("wide", wide),
+    ] {
+        assert!(
+            matches!(lut.transposed(), axmul::metrics::LutTStore::I32(_)),
+            "{}: must fall back to i32",
+            lut.name
+        );
+        for trial in 0..6 {
+            let m = 1 + rng.gen_range(8) as usize;
+            let k = 1 + rng.gen_range(24) as usize;
+            let n = 1 + rng.gen_range(40) as usize;
+            let a: Vec<u8> = (0..m * k)
+                .map(|_| {
+                    if rng.gen_range(3) == 0 {
+                        rng.gen_range(256) as u8
+                    } else {
+                        0
+                    }
+                })
+                .collect();
+            let b: Vec<u8> = (0..k * n).map(|_| rng.gen_range(256) as u8).collect();
+            let pw = PackedWeights::pack(&b, k, n);
+            let mut got = vec![0i32; m * n];
+            lut_gemm_packed(&a, &pw, &mut got, m, &lut);
+            for i in 0..m {
+                for j in 0..n {
+                    let want: i32 =
+                        (0..k).map(|kk| lut.mul(a[i * k + kk], b[kk * n + j])).sum();
+                    assert_eq!(got[i * n + j], want, "{} trial {trial} ({i},{j})", lut.name);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_lut_gemm_packed_identical_across_worker_counts() {
+    // The AXMUL_THREADS=1/2/16 reproducibility contract: the worker
+    // basis fixes the chunk geometry, and any basis must produce the
+    // same bits on the persistent pool (num_threads() itself is parsed
+    // once per process, so the contract is tested through the explicit
+    // basis hook).
+    let m8 = by_name("mul8x8_2").unwrap();
+    let lut = Lut::build(m8.as_ref());
+    let mut rng = Pcg32::new(71);
+    let (m, k, n) = (53, 37, 29);
+    let a: Vec<u8> = (0..m * k).map(|_| rng.gen_range(256) as u8).collect();
+    let b: Vec<u8> = (0..k * n).map(|_| rng.gen_range(256) as u8).collect();
+    let pw = PackedWeights::pack(&b, k, n);
+    let mut want = vec![0i32; m * n];
+    lut_gemm_packed_n(1, &a, &pw, &mut want, m, &lut);
+    for workers in [2usize, 3, 16, 64] {
+        let mut got = vec![0i32; m * n];
+        lut_gemm_packed_n(workers, &a, &pw, &mut got, m, &lut);
+        assert_eq!(got, want, "workers={workers}");
+    }
+    // And the production entry point (whatever basis it derives) agrees.
+    let mut prod = vec![0i32; m * n];
+    lut_gemm_packed(&a, &pw, &mut prod, m, &lut);
+    assert_eq!(prod, want);
 }
 
 #[test]
