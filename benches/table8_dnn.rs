@@ -7,7 +7,10 @@
 
 use axmul::coordinator::{Evaluator, Trainer};
 use axmul::data::Dataset;
-use axmul::dnn::{lut_gemm, lut_gemm_packed, FloatNet, PackedWeights, QNet};
+use axmul::dnn::{
+    im2col_u8_batch_into, lut_conv_packed, lut_gemm, lut_gemm_packed, pad_plane_batch_into,
+    row_sums_into, ConvPlan, FloatNet, PackedWeights, QNet,
+};
 use axmul::engine::{LutCache, Workspace};
 use axmul::runtime::Engine;
 use axmul::util::{Bencher, Pcg32};
@@ -53,6 +56,64 @@ fn main() {
         );
     }
 
+    // --- fused implicit-im2col conv vs explicit staging (PR 5) -----------
+    // At the Table VIII conv geometries: the old composition (materialize
+    // the k²-amplified patch matrix, run the packed GEMM over it, then
+    // re-read it all for row sums) against `lut_conv_packed` (gather in
+    // place through the ConvPlan, row sums fused; SAME convs stage one
+    // zero-padded plane).  Same MAC count, same bits — the ratio is this
+    // PR's headline and the sanity check below proves the bit identity
+    // before anything is timed.
+    {
+        let batch = 4usize;
+        for (c, h, w, k, stride, pad, cout, tag) in [
+            (1usize, 28usize, 28usize, 5usize, 1usize, 0usize, 6usize, "lenet conv1"),
+            (6, 12, 12, 5, 1, 0, 16, "lenet conv2"),
+            (48, 16, 16, 3, 1, 1, 48, "vgg_s conv SAME"),
+            (16, 32, 32, 3, 2, 1, 32, "resnet19_s stride-2 arm"),
+        ] {
+            let plan = ConvPlan::new(c, h, w, k, stride, pad);
+            let kk = plan.patch_len();
+            let m = batch * plan.out_pixels();
+            let xs: Vec<u8> = (0..batch * c * h * w)
+                .map(|_| rng.gen_range(256) as u8)
+                .collect();
+            let wcodes: Vec<u8> = (0..kk * cout).map(|_| rng.gen_range(256) as u8).collect();
+            let pw = PackedWeights::pack(&wcodes, kk, cout);
+            let macs = (m * kk * cout) as u64;
+            let mut patches = vec![0u8; m * kk];
+            let mut acc = vec![0i32; m * cout];
+            let mut rowsum = vec![0i32; m];
+            b.bench_elems(
+                &format!("conv_im2col+packed+rowsums/{tag} [B={batch} {m}x{kk}x{cout}]"),
+                Some(macs),
+                || {
+                    im2col_u8_batch_into(&xs, batch, c, h, w, k, stride, pad, &mut patches);
+                    lut_gemm_packed(&patches, &pw, &mut acc, m, &lut);
+                    row_sums_into(&patches, m, kk, &mut rowsum);
+                    std::hint::black_box((&acc, &rowsum));
+                },
+            );
+            let (want_acc, want_rs) = (acc.clone(), rowsum.clone());
+            let mut plane = vec![0u8; batch * plan.plane_len()];
+            b.bench_elems(
+                &format!("lut_conv_packed/{tag} [B={batch} {m}x{kk}x{cout}]"),
+                Some(macs),
+                || {
+                    if plan.needs_pad() {
+                        pad_plane_batch_into(&xs, batch, c, h, w, pad, &mut plane);
+                        lut_conv_packed(&plane, batch, &plan, &pw, &mut acc, &mut rowsum, &lut);
+                    } else {
+                        lut_conv_packed(&xs, batch, &plan, &pw, &mut acc, &mut rowsum, &lut);
+                    }
+                    std::hint::black_box((&acc, &rowsum));
+                },
+            );
+            assert_eq!(acc, want_acc, "{tag}: fused conv must be bit-identical");
+            assert_eq!(rowsum, want_rs, "{tag}: fused row sums must be bit-identical");
+        }
+    }
+
     // --- batched vs per-image forward (PR 2's headline) ------------------
     // Same images, same LUT, same workspace: the batched path fuses each
     // layer's GEMM over the whole batch (M = B × patches), the per-image
@@ -75,6 +136,10 @@ fn main() {
                     std::hint::black_box(qnet.forward_batch_with(xs, bsz, &lut, &mut ws));
                 },
             );
+            // Footprint alongside time: the implicit-conv workspace no
+            // longer holds a patch matrix, and the JSON trajectory
+            // should show it shrinking, not just ns/iter moving.
+            b.note_workspace_peak(ws.bytes());
             if bsz > 1 {
                 b.bench_elems(
                     &format!("qnet_forward/lenet per-image loop (B={bsz})"),
@@ -89,6 +154,7 @@ fn main() {
                         }
                     },
                 );
+                b.note_workspace_peak(ws.bytes());
             }
         }
     }
@@ -112,6 +178,7 @@ fn main() {
         b.bench("qnet_forward/lenet_mnist (1 image, reused workspace)", || {
             std::hint::black_box(qnet.forward_with(data.image(0), &lut2, &mut ws));
         });
+        b.note_workspace_peak(ws.bytes());
         // PJRT train-step latency — the L2 side of the pipeline.
         let mut bt = Bencher::new();
         let (xs, ys) = {

@@ -1,7 +1,7 @@
 //! GEMM kernels: f32 reference and the LUT-GEMM hot paths.
 //!
-//! Two LUT kernels mirror the L1 Pallas kernel (every scalar product is a
-//! table lookup — the approximate silicon — with i32 accumulation):
+//! Three LUT kernels mirror the L1 Pallas kernel (every scalar product is
+//! a table lookup — the approximate silicon — with i32 accumulation):
 //!
 //! * [`lut_gemm`] — **activation-major**: walks the canonical
 //!   `table[a*256 + b]` one activation row at a time.  Both operands are
@@ -14,26 +14,41 @@
 //!   registers across the whole k loop, panel reads are sequential, and
 //!   the set of LUT rows gathered from is *fixed by the layer's weight
 //!   codes* — L1-resident across every row, batch and request instead of
-//!   re-walking the full 256 KB table.  This is the serving forward
-//!   path; it is bit-identical to [`lut_gemm`] (i32 addition is
-//!   associative, both accumulate in ascending k per output element —
-//!   property-tested across every DNN design).
+//!   re-walking the full 256 KB table.  Bit-identical to [`lut_gemm`]
+//!   (i32 addition is associative, both accumulate in ascending k per
+//!   output element — property-tested across every DNN design).
+//!   [`lut_gemm_packed_fused`] is the serving fc path: same kernel, plus
+//!   the per-row activation sums (zero-point correction) accumulated in
+//!   the same pass instead of a separate full re-read of the operand.
+//! * [`lut_conv_packed`] — **implicit-im2col fused conv**: the serving
+//!   conv path.  Instead of materializing the k²-amplified
+//!   `[batch·OH·OW, C·k·k]` patch matrix and then re-reading it a second
+//!   time for row sums, the kernel gathers activation codes straight
+//!   from the (optionally zero-padded, batch-stacked) code plane through
+//!   a per-layer [`ConvPlan`]'s precomputed `(c, ky, kx)` offsets,
+//!   accumulating `Σ lut_t[w_code, a_code]` in the same ascending
+//!   `(c, ky, kx)` order the explicit composition uses — so the result
+//!   (accumulator AND fused row sums) is bit-identical to
+//!   im2col + [`lut_gemm_packed`] + `row_sums_into`, at
+//!   `C·(H+2p)·(W+2p)` staged bytes instead of `k²·C·H·W`-ish.
 //!
-//! Both kernels are parallelized over output rows via
-//! [`parallel_row_chunks_n`]; workers receive disjoint `&mut` row blocks
-//! (the accumulator is split *before* dispatch, so this module needs —
+//! All kernels are parallelized over output rows via
+//! [`parallel_row_chunks_n`] (the fused ones via
+//! [`parallel_row_chunks_pair_n`], which splits the accumulator and the
+//! row-sum vector on the same row boundaries); workers receive disjoint
+//! `&mut` row blocks (split *before* dispatch, so this module needs —
 //! and statically rejects — any `unsafe`).  Tiny problems
 //! (< `PAR_MIN_MACS` multiplies — lenet's fc layers — and every M = 1
 //! shape via the row clamp) run inline on the caller's thread and never
-//! touch the pool queue.  The batched
-//! forward path stacks a whole batch into one call
-//! (`M = batch × patches_per_image`), so row parallelism here is also
-//! the batch parallelism of the server.
+//! touch the pool queue.  The batched forward path fuses a whole batch
+//! into one call (`M = batch × OH·OW` for conv), so row parallelism here
+//! is also the (image, output-row) batch parallelism of the server.
 
 #![forbid(unsafe_code)]
 
+use super::im2col::ConvPlan;
 use crate::metrics::{Lut, LutTStore};
-use crate::util::{num_threads, parallel_row_chunks_n};
+use crate::util::{num_threads, parallel_row_chunks_n, parallel_row_chunks_pair_n};
 
 /// Output-column tile width of the packed kernel: 16 i32 accumulators =
 /// one 64 B cache line, small enough to stay register/L1-resident across
@@ -245,24 +260,30 @@ pub fn lut_gemm_packed_n(
     parallel_row_chunks_n(workers, acc, m, n, |row0, block| {
         for (ri, crow) in block.chunks_mut(n).enumerate() {
             let i = row0 + ri;
-            let arow = &a[i * k..(i + 1) * k];
-            let mut j0 = 0;
-            while j0 < n {
-                let tw = TILE_N.min(n - j0);
-                let panel = &w.codes[j0 * k..j0 * k + k * tw];
-                let ctile = &mut crow[j0..j0 + tw];
-                match lt {
-                    LutTStore::U16(t) => {
-                        packed_row_tile_u16(arow, panel, tw, t, skip_zero, ctile)
-                    }
-                    LutTStore::I32(t) => {
-                        packed_row_tile_i32(arow, panel, tw, t, skip_zero, ctile)
-                    }
-                }
-                j0 += tw;
-            }
+            packed_row(&a[i * k..(i + 1) * k], w, lt, skip_zero, crow);
         }
     });
+}
+
+/// The shared per-row body of the packed fc kernels: walk the row's
+/// output tiles, dispatching each to the store-width micro-kernel.  One
+/// definition, shared by [`lut_gemm_packed_n`] and
+/// [`lut_gemm_packed_fused_n`], so the fused and unfused kernels cannot
+/// drift apart on tiling or store dispatch.
+#[inline]
+fn packed_row(arow: &[u8], w: &PackedWeights, lt: &LutTStore, skip_zero: bool, crow: &mut [i32]) {
+    let (k, n) = (w.k, w.n);
+    let mut j0 = 0;
+    while j0 < n {
+        let tw = TILE_N.min(n - j0);
+        let panel = &w.codes[j0 * k..j0 * k + k * tw];
+        let ctile = &mut crow[j0..j0 + tw];
+        match lt {
+            LutTStore::U16(t) => packed_row_tile_u16(arow, panel, tw, t, skip_zero, ctile),
+            LutTStore::I32(t) => packed_row_tile_i32(arow, panel, tw, t, skip_zero, ctile),
+        }
+        j0 += tw;
+    }
 }
 
 /// One (row, output-tile) micro-kernel over the narrowed u16 store: for
@@ -314,6 +335,207 @@ fn packed_row_tile_i32(
     }
 }
 
+/// [`lut_gemm_packed`] with the per-row activation-code sums fused into
+/// the same pass: `rowsum[i] = Σ_k a[i*k + kk]`, written alongside the
+/// accumulator row by the same worker while the row's codes are hot in
+/// L1 — the serving fc path, which no longer pays `row_sums_into`'s
+/// second full read of the operand after the GEMM.  `acc` and `rowsum`
+/// are bit-identical to [`lut_gemm_packed`] + [`row_sums_into`].
+pub fn lut_gemm_packed_fused(
+    a: &[u8],
+    w: &PackedWeights,
+    acc: &mut [i32],
+    rowsum: &mut [i32],
+    m: usize,
+    lut: &Lut,
+) {
+    lut_gemm_packed_fused_n(gemm_workers(m, w.k, w.n), a, w, acc, rowsum, m, lut)
+}
+
+/// [`lut_gemm_packed_fused`] with an explicit worker basis (the
+/// `AXMUL_THREADS=1/2/16` determinism hook, as for the unfused kernel).
+#[allow(clippy::too_many_arguments)]
+pub fn lut_gemm_packed_fused_n(
+    workers: usize,
+    a: &[u8],
+    w: &PackedWeights,
+    acc: &mut [i32],
+    rowsum: &mut [i32],
+    m: usize,
+    lut: &Lut,
+) {
+    let (k, n) = (w.k, w.n);
+    assert_eq!(a.len(), m * k);
+    assert_eq!(acc.len(), m * n);
+    assert_eq!(rowsum.len(), m);
+    let lt = lut.transposed();
+    let skip_zero = lut.zero_row_zero;
+    acc.fill(0);
+    parallel_row_chunks_pair_n(workers, acc, rowsum, m, n, 1, |row0, block, rs| {
+        for (ri, crow) in block.chunks_mut(n).enumerate() {
+            let i = row0 + ri;
+            let arow = &a[i * k..(i + 1) * k];
+            // Fused row sum: same pass, codes L1-hot — the separate
+            // post-GEMM sweep over the operand is gone.
+            rs[ri] = arow.iter().map(|&x| x as i32).sum();
+            packed_row(arow, w, lt, skip_zero, crow);
+        }
+    });
+}
+
+/// Implicit-im2col fused convolution — the serving conv path.
+///
+/// `plane` holds `batch` code planes back to back: the raw `[C, H, W]`
+/// activation codes when `plan.pad() == 0` (no staging at all), or the
+/// zero-padded `[C, H+2p, W+2p]` planes staged by
+/// [`super::im2col::pad_plane_batch_into`].  For every output element
+/// `(i, j)` — `i` enumerating `(image, oy, ox)` row-major — the kernel
+/// accumulates `Σ_kk lut_t[w_code[kk, j], plane[base_i + off[kk]]]` in
+/// ascending `kk = (c, ky, kx)` order, which is exactly the explicit
+/// patch-matrix order: the accumulator is **bit-identical** to
+/// `im2col_u8_batch_into` + [`lut_gemm_packed`], and the fused `rowsum`
+/// to [`row_sums_into`] over that matrix (padding gathers code 0, which
+/// the explicit matrix also stores; zero codes are skipped only under
+/// `zero_row_zero`, exactly as there).  The patch matrix itself — the
+/// largest scratch buffer of the old path, re-read once more for the
+/// row sums — never exists.
+///
+/// Weight panels ([`PackedWeights`]) and the u16/i32 transposed store
+/// are reused unchanged: the register-resident [`TILE_N`] accumulator
+/// tile and the sequential panel streaming carry over, with the
+/// activation side now a plan-offset gather instead of a contiguous
+/// read.  Parallelism is over `M = batch × OH·OW` output rows —
+/// (image, output-row) blocks on the persistent pool, same disjoint
+/// row-block dispatch, same any-worker-count bit-reproducibility.
+pub fn lut_conv_packed(
+    plane: &[u8],
+    batch: usize,
+    plan: &ConvPlan,
+    w: &PackedWeights,
+    acc: &mut [i32],
+    rowsum: &mut [i32],
+    lut: &Lut,
+) {
+    let m = batch * plan.out_pixels();
+    lut_conv_packed_n(gemm_workers(m, w.k, w.n), plane, batch, plan, w, acc, rowsum, lut)
+}
+
+/// [`lut_conv_packed`] with an explicit worker basis (the
+/// `AXMUL_THREADS=1/2/16` determinism hook).
+#[allow(clippy::too_many_arguments)]
+pub fn lut_conv_packed_n(
+    workers: usize,
+    plane: &[u8],
+    batch: usize,
+    plan: &ConvPlan,
+    w: &PackedWeights,
+    acc: &mut [i32],
+    rowsum: &mut [i32],
+    lut: &Lut,
+) {
+    let (k, n) = (w.k, w.n);
+    let px = plan.out_pixels();
+    let m = batch * px;
+    assert_eq!(k, plan.patch_len(), "panel k must be the plan's C*k*k");
+    assert_eq!(plane.len(), batch * plan.plane_len());
+    assert_eq!(acc.len(), m * n);
+    assert_eq!(rowsum.len(), m);
+    let lt = lut.transposed();
+    let skip_zero = lut.zero_row_zero;
+    let offs = plan.offsets();
+    let (ow, stride, pw, plane_len) = (plan.ow(), plan.stride(), plan.pw(), plan.plane_len());
+    acc.fill(0);
+    parallel_row_chunks_pair_n(workers, acc, rowsum, m, n, 1, |row0, block, rs| {
+        for (ri, crow) in block.chunks_mut(n).enumerate() {
+            let i = row0 + ri;
+            let (b, p) = (i / px, i % px);
+            let (oy, ox) = (p / ow, p % ow);
+            let base = b * plane_len + oy * stride * pw + ox * stride;
+            // Fused row sum: every patch code, padding zeros included
+            // (they add 0, exactly like the explicit matrix's 0 codes).
+            // Same pass, L1-hot codes — the separate post-GEMM sweep
+            // over a k²-sized matrix is gone.
+            let mut s = 0i32;
+            for &off in offs {
+                s += plane[base + off as usize] as i32;
+            }
+            rs[ri] = s;
+            let mut j0 = 0;
+            while j0 < n {
+                let tw = TILE_N.min(n - j0);
+                let panel = &w.codes[j0 * k..j0 * k + k * tw];
+                let ctile = &mut crow[j0..j0 + tw];
+                match lt {
+                    LutTStore::U16(t) => {
+                        conv_row_tile_u16(plane, base, offs, panel, tw, t, skip_zero, ctile)
+                    }
+                    LutTStore::I32(t) => {
+                        conv_row_tile_i32(plane, base, offs, panel, tw, t, skip_zero, ctile)
+                    }
+                }
+                j0 += tw;
+            }
+        }
+    });
+}
+
+/// One (output-pixel, output-tile) micro-kernel of the implicit conv:
+/// like [`packed_row_tile_u16`] but the activation codes come from a
+/// plan-offset gather on the code plane instead of a contiguous row.
+/// Strictly ascending `kk` keeps the i32 accumulation order identical to
+/// the explicit composition.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn conv_row_tile_u16(
+    plane: &[u8],
+    base: usize,
+    offs: &[u32],
+    panel: &[u8],
+    tw: usize,
+    t: &[u16],
+    skip_zero: bool,
+    out: &mut [i32],
+) {
+    for (kk, &off) in offs.iter().enumerate() {
+        let av = plane[base + off as usize];
+        if skip_zero && av == 0 {
+            continue;
+        }
+        let a = av as usize;
+        let prow = &panel[kk * tw..(kk + 1) * tw];
+        for (o, &wc) in out.iter_mut().zip(prow) {
+            *o += t[((wc as usize) << 8) | a] as i32;
+        }
+    }
+}
+
+/// i32-store variant of [`conv_row_tile_u16`] (tables with negative or
+/// > 16-bit products cannot narrow).
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn conv_row_tile_i32(
+    plane: &[u8],
+    base: usize,
+    offs: &[u32],
+    panel: &[u8],
+    tw: usize,
+    t: &[i32],
+    skip_zero: bool,
+    out: &mut [i32],
+) {
+    for (kk, &off) in offs.iter().enumerate() {
+        let av = plane[base + off as usize];
+        if skip_zero && av == 0 {
+            continue;
+        }
+        let a = av as usize;
+        let prow = &panel[kk * tw..(kk + 1) * tw];
+        for (o, &wc) in out.iter_mut().zip(prow) {
+            *o += t[((wc as usize) << 8) | a];
+        }
+    }
+}
+
 /// Row sums of the u8 code matrix (needed for zero-point correction).
 pub fn row_sums(a: &[u8], m: usize, k: usize) -> Vec<i32> {
     let mut out = vec![0i32; m];
@@ -322,8 +544,11 @@ pub fn row_sums(a: &[u8], m: usize, k: usize) -> Vec<i32> {
 }
 
 /// Allocation-free row sums into a caller-sized buffer (`out.len() == m`).
-/// The batched path passes `m = batch × patches_per_image` rows stacked
-/// image-major, which needs no special handling: sums are per row.
+/// The serving forward path no longer calls this — both fused kernels
+/// accumulate the sums in their main pass — but it remains the reference
+/// the fused `rowsum` outputs are tested against (and the baseline the
+/// benches compare).  Sums are per row, so stacked batches need no
+/// special handling.
 pub fn row_sums_into(a: &[u8], m: usize, k: usize, out: &mut [i32]) {
     assert_eq!(a.len(), m * k);
     assert_eq!(out.len(), m);
@@ -484,6 +709,166 @@ mod tests {
                 assert_eq!(got[i * n + j], want, "({i},{j})");
             }
         }
+    }
+
+    #[test]
+    fn fused_gemm_matches_packed_plus_row_sums() {
+        // The fc fused kernel: acc bit-identical to lut_gemm_packed,
+        // rowsum bit-identical to row_sums_into, across the serial
+        // cutoff (M=1), tile tails and worker bases.
+        let lut = Lut::build(&ExactMul::new(8, 8));
+        let mut rng = Pcg32::new(17);
+        for (m, k, n) in [(1usize, 400usize, 120usize), (7, 13, 5), (67, 9, 3), (5, 31, 17)] {
+            let a: Vec<u8> = (0..m * k).map(|_| rng.gen_range(256) as u8).collect();
+            let b: Vec<u8> = (0..k * n).map(|_| rng.gen_range(256) as u8).collect();
+            let pw = PackedWeights::pack(&b, k, n);
+            let mut want = vec![0i32; m * n];
+            lut_gemm_packed(&a, &pw, &mut want, m, &lut);
+            let want_rs = row_sums(&a, m, k);
+            for workers in [0usize, 1, 2, 16] {
+                let mut acc = vec![-1i32; m * n];
+                let mut rs = vec![-1i32; m];
+                if workers == 0 {
+                    lut_gemm_packed_fused(&a, &pw, &mut acc, &mut rs, m, &lut);
+                } else {
+                    lut_gemm_packed_fused_n(workers, &a, &pw, &mut acc, &mut rs, m, &lut);
+                }
+                assert_eq!(acc, want, "m={m} k={k} n={n} workers={workers}");
+                assert_eq!(rs, want_rs, "m={m} k={k} n={n} workers={workers}");
+            }
+        }
+    }
+
+    /// The reference composition the conv kernel must reproduce bit for
+    /// bit: explicit im2col, packed GEMM, then the separate row-sum
+    /// sweep.
+    fn conv_reference(
+        xs: &[u8],
+        batch: usize,
+        (c, h, w): (usize, usize, usize),
+        (k, stride, pad): (usize, usize, usize),
+        wcodes: &[u8],
+        n: usize,
+        lut: &Lut,
+    ) -> (Vec<i32>, Vec<i32>) {
+        use super::super::im2col::{conv_out_dims, im2col_u8_batch_into};
+        let (oh, ow) = conv_out_dims(h, w, k, stride, pad);
+        let kk = c * k * k;
+        let m = batch * oh * ow;
+        let mut patches = vec![0u8; m * kk];
+        im2col_u8_batch_into(xs, batch, c, h, w, k, stride, pad, &mut patches);
+        let pw = PackedWeights::pack(wcodes, kk, n);
+        let mut acc = vec![0i32; m * n];
+        lut_gemm_packed(&patches, &pw, &mut acc, m, lut);
+        let mut rs = vec![0i32; m];
+        row_sums_into(&patches, m, kk, &mut rs);
+        (acc, rs)
+    }
+
+    #[test]
+    fn conv_packed_matches_im2col_composition() {
+        // Tentpole invariant at unit scale: pad 0/1, stride 1/2, k=1
+        // (the ResBlock projection arm), 1×1 inputs, tile tails, and
+        // batch sizes 1/3 — every (acc, rowsum) bit must match the
+        // explicit composition, for every worker basis.
+        use super::super::im2col::pad_plane_batch_into;
+        let lut = Lut::build(&ExactMul::new(8, 8));
+        let mut rng = Pcg32::new(19);
+        for (c, h, w, k, stride, pad, n) in [
+            (1usize, 6usize, 6usize, 3usize, 1usize, 0usize, 4usize),
+            (3, 5, 4, 3, 1, 1, 17),
+            (2, 7, 7, 3, 2, 1, 16),
+            (4, 6, 6, 1, 2, 0, 5), // ResBlock projection: 1×1 stride 2
+            (1, 1, 1, 3, 1, 1, 3), // 1×1 input, pure padding border
+            (2, 8, 8, 5, 1, 0, 33),
+        ] {
+            for batch in [1usize, 3] {
+                let xs: Vec<u8> = (0..batch * c * h * w)
+                    .map(|_| rng.gen_range(256) as u8)
+                    .collect();
+                let plan = ConvPlan::new(c, h, w, k, stride, pad);
+                let kk = plan.patch_len();
+                let wcodes: Vec<u8> = (0..kk * n).map(|_| rng.gen_range(256) as u8).collect();
+                let (want, want_rs) =
+                    conv_reference(&xs, batch, (c, h, w), (k, stride, pad), &wcodes, n, &lut);
+                let pw = PackedWeights::pack(&wcodes, kk, n);
+                let m = batch * plan.out_pixels();
+                let mut plane = vec![0u8; batch * plan.plane_len()];
+                pad_plane_batch_into(&xs, batch, c, h, w, pad, &mut plane);
+                for workers in [0usize, 1, 2, 16] {
+                    let mut acc = vec![-1i32; m * n];
+                    let mut rs = vec![-1i32; m];
+                    if workers == 0 {
+                        lut_conv_packed(&plane, batch, &plan, &pw, &mut acc, &mut rs, &lut);
+                    } else {
+                        lut_conv_packed_n(
+                            workers, &plane, batch, &plan, &pw, &mut acc, &mut rs, &lut,
+                        );
+                    }
+                    let tag = format!(
+                        "c{c} h{h} w{w} k{k} s{stride} p{pad} n{n} b{batch} workers={workers}"
+                    );
+                    assert_eq!(acc, want, "{tag}");
+                    assert_eq!(rs, want_rs, "{tag}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn conv_packed_skip_zero_only_when_row_zero() {
+        // Mirror of packed_skip_zero_only_when_row_zero for the conv
+        // kernel: a doctored table with a nonzero activation-0 row (i32
+        // store) must charge lut[w, 0] for every padding gather and
+        // every zero code — no skipping — and still match the explicit
+        // composition exactly.
+        let mut table = vec![0i32; 65536];
+        for a in 0..256usize {
+            for b in 0..256usize {
+                table[(a << 8) | b] = (a * b) as i32;
+            }
+        }
+        for b in 0..256usize {
+            table[b] = b as i32 - 7; // row 0 nonzero → i32 store too
+        }
+        let noisy = Lut::from_table("noisy", table);
+        assert!(!noisy.zero_row_zero);
+        assert!(matches!(noisy.transposed(), LutTStore::I32(_)));
+        use super::super::im2col::pad_plane_batch_into;
+        let mut rng = Pcg32::new(23);
+        let (c, h, w, k, stride, pad, n, batch) = (2usize, 5usize, 5usize, 3, 1, 1, 19, 2);
+        // sparse codes: mostly zero activations, plus the pad border
+        let xs: Vec<u8> = (0..batch * c * h * w)
+            .map(|_| {
+                if rng.gen_range(3) == 0 {
+                    rng.gen_range(256) as u8
+                } else {
+                    0
+                }
+            })
+            .collect();
+        let plan = ConvPlan::new(c, h, w, k, stride, pad);
+        let wcodes: Vec<u8> = (0..plan.patch_len() * n)
+            .map(|_| rng.gen_range(256) as u8)
+            .collect();
+        let (want, want_rs) =
+            conv_reference(&xs, batch, (c, h, w), (k, stride, pad), &wcodes, n, &noisy);
+        let pw = PackedWeights::pack(&wcodes, plan.patch_len(), n);
+        let m = batch * plan.out_pixels();
+        let mut plane = vec![0u8; batch * plan.plane_len()];
+        pad_plane_batch_into(&xs, batch, c, h, w, pad, &mut plane);
+        let mut acc = vec![0i32; m * n];
+        let mut rs = vec![0i32; m];
+        lut_conv_packed(&plane, batch, &plan, &pw, &mut acc, &mut rs, &noisy);
+        assert_eq!(acc, want);
+        assert_eq!(rs, want_rs);
+        // And the pad contribution is genuinely nonzero here: row 0 of
+        // the doctored table charges padding gathers, so a border output
+        // must differ from what the zero-row table would give.
+        let clean = Lut::build(&ExactMul::new(8, 8));
+        let (clean_want, _) =
+            conv_reference(&xs, batch, (c, h, w), (k, stride, pad), &wcodes, n, &clean);
+        assert_ne!(acc, clean_want, "doctored row 0 must be visible");
     }
 
     #[test]

@@ -1,22 +1,51 @@
-//! im2col patch extraction: convolution as GEMM, identical layout to the
-//! python `_im2col` (conv_general_dilated_patches with OIHW weights).
+//! im2col patch extraction and the implicit-im2col [`ConvPlan`].
+//!
+//! Two ways to turn a convolution into a GEMM live here:
+//!
+//! * **Explicit im2col** (`im2col_*`): materialize the
+//!   `[OH·OW, C·k·k]` patch matrix, identical layout to the python
+//!   `_im2col` (conv_general_dilated_patches with OIHW weights).  Still
+//!   the float reference path and the comparison baseline.
+//! * **Implicit im2col** ([`ConvPlan`]): precompute the `C·k·k` gather
+//!   offsets once per layer and let the fused conv kernel
+//!   (`lut_conv_packed`) read activation codes straight out of the
+//!   (optionally zero-padded) code plane — no k²-amplified operand copy
+//!   per batch.  Padding is staged once per conv at
+//!   `C·(H+2p)·(W+2p)` bytes ([`pad_plane_batch_into`]) instead of
+//!   being replicated into every overlapping patch.
 
 use crate::util::parallel_row_chunks;
 
-/// f32 im2col, VALID padding.
-/// x: [C, H, W] -> patches [OH*OW, C*k*k]; returns (patches, oh, ow).
-pub fn im2col_f32(
-    x: &[f32],
+/// Convolution output dims for an (h, w) input: the shared formula the
+/// workspace path uses to pre-size buffers before extraction.
+pub fn conv_out_dims(h: usize, w: usize, k: usize, stride: usize, pad: usize) -> (usize, usize) {
+    (
+        (h + 2 * pad - k) / stride + 1,
+        (w + 2 * pad - k) / stride + 1,
+    )
+}
+
+/// The shared im2col gather core (the f32 and u8 paths used to duplicate
+/// this indexing verbatim).  `x: [C, H, W] -> out [OH*OW, C*k*k]`, with
+/// out-of-bounds (padding) positions taking `T::default()` — `0.0` / `0`,
+/// which is exactly the zero-point-0 padding code.  Patch elements are
+/// written in ascending `(c, ky, kx)` order; [`ConvPlan`] emits its
+/// gather offsets in the same order, which is what makes the implicit
+/// kernel bit-identical to this matrix.  Returns `(oh, ow)`.
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_into<T: Copy + Default>(
+    x: &[T],
     c: usize,
     h: usize,
     w: usize,
     k: usize,
     stride: usize,
     pad: usize,
-) -> (Vec<f32>, usize, usize) {
-    let oh = (h + 2 * pad - k) / stride + 1;
-    let ow = (w + 2 * pad - k) / stride + 1;
-    let mut out = vec![0f32; oh * ow * c * k * k];
+    out: &mut [T],
+) -> (usize, usize) {
+    let (oh, ow) = conv_out_dims(h, w, k, stride, pad);
+    assert_eq!(x.len(), c * h * w);
+    assert_eq!(out.len(), oh * ow * c * k * k);
     for oy in 0..oh {
         for ox in 0..ow {
             let base = (oy * ow + ox) * c * k * k;
@@ -30,7 +59,7 @@ pub fn im2col_f32(
                         {
                             x[ch * h * w + iy as usize * w + ix as usize]
                         } else {
-                            0.0
+                            T::default()
                         };
                         idx += 1;
                     }
@@ -38,16 +67,24 @@ pub fn im2col_f32(
             }
         }
     }
-    (out, oh, ow)
+    (oh, ow)
 }
 
-/// Convolution output dims for an (h, w) input: the shared formula the
-/// workspace path uses to pre-size patch buffers before extraction.
-pub fn conv_out_dims(h: usize, w: usize, k: usize, stride: usize, pad: usize) -> (usize, usize) {
-    (
-        (h + 2 * pad - k) / stride + 1,
-        (w + 2 * pad - k) / stride + 1,
-    )
+/// f32 im2col, VALID padding.
+/// x: [C, H, W] -> patches [OH*OW, C*k*k]; returns (patches, oh, ow).
+pub fn im2col_f32(
+    x: &[f32],
+    c: usize,
+    h: usize,
+    w: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+) -> (Vec<f32>, usize, usize) {
+    let (oh, ow) = conv_out_dims(h, w, k, stride, pad);
+    let mut out = vec![0f32; oh * ow * c * k * k];
+    im2col_into(x, c, h, w, k, stride, pad, &mut out);
+    (out, oh, ow)
 }
 
 /// u8-code im2col (zero padding maps to code 0 — correct because the
@@ -80,43 +117,21 @@ pub fn im2col_u8_into(
     pad: usize,
     out: &mut [u8],
 ) -> (usize, usize) {
-    let (oh, ow) = conv_out_dims(h, w, k, stride, pad);
-    assert_eq!(x.len(), c * h * w);
-    assert_eq!(out.len(), oh * ow * c * k * k);
-    for oy in 0..oh {
-        for ox in 0..ow {
-            let base = (oy * ow + ox) * c * k * k;
-            let mut idx = base;
-            for ch in 0..c {
-                for ky in 0..k {
-                    for kx in 0..k {
-                        let iy = (oy * stride + ky) as isize - pad as isize;
-                        let ix = (ox * stride + kx) as isize - pad as isize;
-                        out[idx] = if iy >= 0 && ix >= 0 && (iy as usize) < h && (ix as usize) < w
-                        {
-                            x[ch * h * w + iy as usize * w + ix as usize]
-                        } else {
-                            0
-                        };
-                        idx += 1;
-                    }
-                }
-            }
-        }
-    }
-    (oh, ow)
+    im2col_into(x, c, h, w, k, stride, pad, out)
 }
 
 /// Batched u8 im2col: `xs` holds `batch` images `[C, H, W]` back to
 /// back; `out` receives the stacked patch matrix
 /// `[batch * OH*OW, C*k*k]` (image-major), i.e. image `b`'s patches are
-/// rows `b*OH*OW .. (b+1)*OH*OW`.  This is the layout the batched
-/// forward path feeds to a single `lut_gemm` with
-/// `M = batch × patches_per_image`.  Extraction is parallelized over
-/// images via disjoint per-image output blocks (single-threaded at
-/// `batch == 1`, so the per-image path pays no dispatch cost); the
-/// output is position-deterministic regardless of thread count.
-/// Returns (oh, ow).
+/// rows `b*OH*OW .. (b+1)*OH*OW`.  This is the layout a stacked
+/// `lut_gemm` with `M = batch × patches_per_image` consumes.  The
+/// serving forward path no longer materializes it (see [`ConvPlan`]);
+/// it remains the reference composition the fused kernel is
+/// property-tested against, and the baseline the benches compare.
+/// Extraction is parallelized over images via disjoint per-image output
+/// blocks (single-threaded at `batch == 1`, so the per-image path pays
+/// no dispatch cost); the output is position-deterministic regardless
+/// of thread count.  Returns (oh, ow).
 #[allow(clippy::too_many_arguments)]
 pub fn im2col_u8_batch_into(
     xs: &[u8],
@@ -141,6 +156,179 @@ pub fn im2col_u8_batch_into(
         }
     });
     (oh, ow)
+}
+
+/// Per-layer implicit-im2col geometry: everything the fused conv kernel
+/// needs to gather activation codes in place instead of reading a
+/// materialized patch matrix.
+///
+/// The heart is `offsets`: one gather offset per patch element, in
+/// **ascending `(c, ky, kx)` order** — exactly the column order
+/// [`im2col_into`] writes — relative to the top-left corner of a patch
+/// on the (padded) `[C, PH, PW]` code plane.  For output pixel
+/// `(oy, ox)` of image `b` the kernel reads
+/// `plane[b*plane_len + oy*stride*PW + ox*stride + offsets[kk]]` for
+/// `kk in 0..C·k·k`, which reproduces patch row `(oy*OW + ox)` of the
+/// explicit matrix element for element.  Because the order matches and
+/// i32 accumulation is associative-free (strictly ascending `kk` per
+/// output element), the fused kernel is bit-identical to
+/// im2col + packed GEMM.
+///
+/// Built once per conv layer at quantization time (a few hundred bytes:
+/// `C·k·k` u32 offsets) and reused by every batch.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ConvPlan {
+    c: usize,
+    h: usize,
+    w: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    oh: usize,
+    ow: usize,
+    /// Padded plane dims: `ph = h + 2*pad`, `pw = w + 2*pad` (equal to
+    /// `h, w` for VALID convs, which gather straight from the live code
+    /// buffer with no staging copy at all).
+    ph: usize,
+    pw: usize,
+    offsets: Vec<u32>,
+}
+
+impl ConvPlan {
+    pub fn new(c: usize, h: usize, w: usize, k: usize, stride: usize, pad: usize) -> ConvPlan {
+        assert!(c > 0 && k > 0 && stride > 0, "degenerate conv geometry");
+        assert!(h + 2 * pad >= k && w + 2 * pad >= k, "kernel exceeds padded input");
+        let (oh, ow) = conv_out_dims(h, w, k, stride, pad);
+        let (ph, pw) = (h + 2 * pad, w + 2 * pad);
+        assert!(c * ph * pw <= u32::MAX as usize, "plane exceeds u32 offsets");
+        let mut offsets = Vec::with_capacity(c * k * k);
+        for ch in 0..c {
+            for ky in 0..k {
+                for kx in 0..k {
+                    offsets.push((ch * ph * pw + ky * pw + kx) as u32);
+                }
+            }
+        }
+        ConvPlan {
+            c,
+            h,
+            w,
+            k,
+            stride,
+            pad,
+            oh,
+            ow,
+            ph,
+            pw,
+            offsets,
+        }
+    }
+
+    /// Gather offsets per patch element, ascending `(c, ky, kx)`.
+    pub fn offsets(&self) -> &[u32] {
+        &self.offsets
+    }
+
+    /// Patch length `C·k·k` — the GEMM's K and the packed panels' k.
+    pub fn patch_len(&self) -> usize {
+        self.c * self.k * self.k
+    }
+
+    /// Output pixels per image (`OH·OW`) — the GEMM rows one image
+    /// contributes.
+    pub fn out_pixels(&self) -> usize {
+        self.oh * self.ow
+    }
+
+    /// Unpadded input floats/codes per image (`C·H·W`).
+    pub fn input_len(&self) -> usize {
+        self.c * self.h * self.w
+    }
+
+    /// (Padded) plane codes per image (`C·PH·PW`): what one image costs
+    /// to stage when `pad > 0`, vs the explicit matrix's
+    /// `OH·OW·C·k·k` — the ~k²-fold footprint win.
+    pub fn plane_len(&self) -> usize {
+        self.c * self.ph * self.pw
+    }
+
+    /// True when the kernel must gather from a staged zero-padded plane;
+    /// VALID convs gather from the live code buffer directly.
+    pub fn needs_pad(&self) -> bool {
+        self.pad > 0
+    }
+
+    pub fn c(&self) -> usize {
+        self.c
+    }
+
+    pub fn h(&self) -> usize {
+        self.h
+    }
+
+    pub fn w(&self) -> usize {
+        self.w
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    pub fn pad(&self) -> usize {
+        self.pad
+    }
+
+    pub fn oh(&self) -> usize {
+        self.oh
+    }
+
+    pub fn ow(&self) -> usize {
+        self.ow
+    }
+
+    /// Padded plane width (the row stride of the gather).
+    pub fn pw(&self) -> usize {
+        self.pw
+    }
+}
+
+/// Stage `batch` `[C, H, W]` code images into zero-padded
+/// `[C, H+2p, W+2p]` planes, back to back.  One memset + row copies per
+/// image — `C·(H+2p)·(W+2p)` bytes, paid once per conv per batch,
+/// versus the explicit patch matrix's `OH·OW·C·k·k` (every interior
+/// pixel replicated up to k² times).  Parallel over images via disjoint
+/// per-image blocks; position-deterministic for any thread count.
+pub fn pad_plane_batch_into(
+    xs: &[u8],
+    batch: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    pad: usize,
+    out: &mut [u8],
+) {
+    let (ph, pw) = (h + 2 * pad, w + 2 * pad);
+    let img = c * h * w;
+    let per = c * ph * pw;
+    assert_eq!(xs.len(), batch * img);
+    assert_eq!(out.len(), batch * per);
+    parallel_row_chunks(out, batch, per, |img0, block| {
+        for (bi, ob) in block.chunks_mut(per).enumerate() {
+            let src = &xs[(img0 + bi) * img..(img0 + bi + 1) * img];
+            ob.fill(0);
+            for ch in 0..c {
+                for y in 0..h {
+                    let d0 = ch * ph * pw + (y + pad) * pw + pad;
+                    let s0 = ch * h * w + y * w;
+                    ob[d0..d0 + w].copy_from_slice(&src[s0..s0 + w]);
+                }
+            }
+        }
+    });
 }
 
 #[cfg(test)]
@@ -176,6 +364,8 @@ mod tests {
 
     #[test]
     fn u8_matches_f32_structure() {
+        // The two typed paths share one generic core; this pins the u8
+        // instantiation to the f32 one element for element.
         let xf: Vec<f32> = (0..27).map(|v| v as f32).collect();
         let xu: Vec<u8> = (0..27).collect();
         let (pf, _, _) = im2col_f32(&xf, 3, 3, 3, 2, 1, 0);
@@ -217,5 +407,80 @@ mod tests {
         let x: Vec<f32> = (0..16).map(|v| v as f32).collect();
         let (_, oh, ow) = im2col_f32(&x, 1, 4, 4, 2, 2, 0);
         assert_eq!((oh, ow), (2, 2));
+    }
+
+    #[test]
+    fn plan_gather_reproduces_explicit_patches() {
+        // For every patch element, reading the padded plane through the
+        // plan's offsets must yield exactly the explicit im2col matrix —
+        // the indexing identity the fused kernel is built on.  Sweeps
+        // pad 0/1, stride 1/2, k=1 and a 1×1 input.
+        for (c, h, w, k, stride, pad) in [
+            (3usize, 5usize, 4usize, 3usize, 1usize, 1usize),
+            (2, 6, 6, 3, 2, 1),
+            (1, 4, 5, 2, 1, 0),
+            (2, 4, 4, 1, 2, 0),
+            (1, 1, 1, 3, 1, 1),
+            (1, 1, 1, 1, 1, 0),
+        ] {
+            let x: Vec<u8> = (0..c * h * w).map(|v| (v * 13 % 251 + 1) as u8).collect();
+            let (patches, oh, ow) = im2col_u8(&x, c, h, w, k, stride, pad);
+            let plan = ConvPlan::new(c, h, w, k, stride, pad);
+            assert_eq!((plan.oh(), plan.ow()), (oh, ow));
+            assert_eq!(plan.patch_len(), c * k * k);
+            assert_eq!(plan.needs_pad(), pad > 0);
+            let mut plane = vec![0u8; plan.plane_len()];
+            pad_plane_batch_into(&x, 1, c, h, w, pad, &mut plane);
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let base = oy * stride * plan.pw() + ox * stride;
+                    let row = &patches[(oy * ow + ox) * plan.patch_len()..][..plan.patch_len()];
+                    for (kk, &off) in plan.offsets().iter().enumerate() {
+                        assert_eq!(
+                            plane[base + off as usize],
+                            row[kk],
+                            "c{c} h{h} w{w} k{k} s{stride} p{pad} ({oy},{ox}) kk={kk}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pad_plane_zero_pad_is_identity_copy() {
+        let x: Vec<u8> = (1..=24).collect();
+        let mut out = vec![0xAB; 24];
+        pad_plane_batch_into(&x, 2, 3, 2, 2, 0, &mut out);
+        assert_eq!(out, x);
+    }
+
+    #[test]
+    fn pad_plane_borders_are_zero_and_interior_intact() {
+        // Two images, stale sentinel bytes in the destination: every
+        // border byte must be force-zeroed (workspace reuse leaves trash
+        // behind) and the interior must be the source rows.
+        let (c, h, w, pad) = (2usize, 3usize, 2usize, 1usize);
+        let xs: Vec<u8> = (1..=2 * c as u8 * 6).collect();
+        let (ph, pw) = (h + 2 * pad, w + 2 * pad);
+        let mut out = vec![0xEE; 2 * c * ph * pw];
+        pad_plane_batch_into(&xs, 2, c, h, w, pad, &mut out);
+        for b in 0..2 {
+            for ch in 0..c {
+                for y in 0..ph {
+                    for x in 0..pw {
+                        let v = out[b * c * ph * pw + ch * ph * pw + y * pw + x];
+                        let interior =
+                            y >= pad && y < h + pad && x >= pad && x < w + pad;
+                        if interior {
+                            let s = xs[b * c * h * w + ch * h * w + (y - pad) * w + (x - pad)];
+                            assert_eq!(v, s, "img {b} ch {ch} ({y},{x})");
+                        } else {
+                            assert_eq!(v, 0, "border img {b} ch {ch} ({y},{x})");
+                        }
+                    }
+                }
+            }
+        }
     }
 }

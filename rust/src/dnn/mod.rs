@@ -11,7 +11,12 @@ pub mod spec;
 pub mod tensor;
 
 pub use float_net::FloatNet;
-pub use gemm::{gemm_f32, lut_gemm, lut_gemm_packed, lut_gemm_packed_n, PackedWeights, TILE_N};
+pub use gemm::{
+    gemm_f32, lut_conv_packed, lut_conv_packed_n, lut_gemm, lut_gemm_packed,
+    lut_gemm_packed_fused, lut_gemm_packed_fused_n, lut_gemm_packed_n, row_sums_into,
+    PackedWeights, TILE_N,
+};
+pub use im2col::{conv_out_dims, im2col_u8_batch_into, pad_plane_batch_into, ConvPlan};
 pub use qnet::{argmax, QNet};
 pub use spec::{num_params, spec, Op, NETWORKS};
 pub use tensor::{QTensor, Tensor};

@@ -14,8 +14,8 @@
 //!     z_w * Σa (exact adder tree — only the multiplier is approximate).
 
 use super::float_net::FloatNet;
-use super::gemm::{lut_gemm_packed, row_sums_into, PackedWeights};
-use super::im2col::{conv_out_dims, im2col_u8_batch_into};
+use super::gemm::{lut_conv_packed, lut_gemm_packed_fused, PackedWeights};
+use super::im2col::{conv_out_dims, pad_plane_batch_into, ConvPlan};
 use super::quant::{act_scale, quantize_weight, weight_qparams};
 use super::spec::{spec, Op};
 use super::tensor::Tensor;
@@ -24,9 +24,9 @@ use crate::engine::Workspace;
 use crate::metrics::Lut;
 
 /// Images per `forward_batch_with` chunk in [`QNet::accuracy`]: large
-/// enough that every layer's `lut_gemm` has `M = batch × patches` rows
-/// to parallelize over, small enough to keep the stacked patch scratch
-/// cache-resident for the paper's network shapes.
+/// enough that every layer's fused GEMM has `M = batch × OH·OW` rows to
+/// parallelize over, small enough to keep the per-chunk scratch (code
+/// planes + accumulator) cache-resident for the paper's network shapes.
 const ACCURACY_BATCH: usize = 64;
 
 /// One quantized weighted layer.
@@ -51,6 +51,11 @@ pub struct QNet {
     pub headroom: f32,
     ops: Vec<Op>,
     layers: Vec<QLayer>,
+    /// Implicit-im2col gather plans, index-parallel with `layers`
+    /// (`None` for fc layers).  Static per network — built once at
+    /// quantization time from the same shape walk the forward pass
+    /// performs, then shared by every batch.
+    plans: Vec<Option<ConvPlan>>,
     /// act_scales[0] = input scale; act_scales[i] = scale after ReLU i.
     act_scales: Vec<f32>,
 }
@@ -63,27 +68,65 @@ impl QNet {
         let ops = spec(&fnet.net, c0).unwrap();
 
         // Weight quantization per weighted layer (ResBlocks contribute
-        // 2-3 weighted layers in param order).
+        // 2-3 weighted layers in param order), each paired with its
+        // implicit-im2col plan (None for fc) built from the same shape
+        // walk the forward pass performs.  One loop pushes both, so
+        // layer/plan pairing — including the ResBlock
+        // conv1/conv2/projection arm order — is correct by construction.
         let mut layers = Vec::new();
+        let mut plans: Vec<Option<ConvPlan>> = Vec::new();
+        let (mut c, mut h, mut w) = fnet.image_shape;
         let mut pi = 0;
         for op in &ops {
             match *op {
-                Op::Conv(..) | Op::Fc(..) => {
+                Op::Conv(_, cout, k, stride) => {
                     layers.push(make_qlayer(&fnet.params[pi], &fnet.params[pi + 1]));
+                    plans.push(Some(ConvPlan::new(c, h, w, k, stride, 0)));
+                    pi += 2;
+                    let (oh, ow) = conv_out_dims(h, w, k, stride, 0);
+                    c = cout;
+                    h = oh;
+                    w = ow;
+                }
+                Op::Fc(..) => {
+                    layers.push(make_qlayer(&fnet.params[pi], &fnet.params[pi + 1]));
+                    plans.push(None);
                     pi += 2;
                 }
-                Op::ResBlock(cin, cout, _, stride) => {
+                Op::ResBlock(cin, cout, k, stride) => {
                     layers.push(make_qlayer(&fnet.params[pi], &fnet.params[pi + 1]));
+                    plans.push(Some(ConvPlan::new(c, h, w, k, stride, 1)));
+                    let (oh, ow) = conv_out_dims(h, w, k, stride, 1);
                     layers.push(make_qlayer(&fnet.params[pi + 2], &fnet.params[pi + 3]));
+                    plans.push(Some(ConvPlan::new(cout, oh, ow, k, 1, 1)));
                     pi += 4;
                     if stride != 1 || cin != cout {
                         layers.push(make_qlayer(&fnet.params[pi], &fnet.params[pi + 1]));
+                        plans.push(Some(ConvPlan::new(c, h, w, 1, stride, 0)));
                         pi += 2;
                     }
+                    let (oh2, ow2) = conv_out_dims(oh, ow, k, 1, 1);
+                    c = cout;
+                    h = oh2;
+                    w = ow2;
                 }
-                _ => {}
+                Op::MaxPool(k) => {
+                    h /= k;
+                    w /= k;
+                }
+                Op::AvgPoolAll => {
+                    h = 1;
+                    w = 1;
+                }
+                Op::Flatten => {
+                    c *= h * w;
+                    h = 1;
+                    w = 1;
+                }
+                Op::Relu => {}
             }
         }
+        debug_assert_eq!(plans.len(), layers.len());
 
         // Activation calibration: input max + post-ReLU maxima.
         // For residual nets we calibrate on the float activations at each
@@ -107,6 +150,7 @@ impl QNet {
             headroom,
             ops,
             layers,
+            plans,
             act_scales,
         }
     }
@@ -140,15 +184,20 @@ impl QNet {
 
     /// Forward `batch` images at once through the approximate silicon.
     ///
-    /// This is the throughput path: each conv/fc layer quantizes and
-    /// im2cols the whole batch into one stacked patch matrix (image-major
-    /// rows) and issues a **single** `lut_gemm` with
-    /// `M = batch × patches_per_image`, so the GEMM's row parallelism is
-    /// also the batch parallelism — one table walk per layer per batch
-    /// instead of per image.  Zero-point correction stays per row via
-    /// `row_sums_into`, so the arithmetic per image is exactly the
-    /// per-image path's: the output is bit-identical to `batch`
-    /// independent [`QNet::forward_with`] calls.
+    /// This is the throughput path: every conv layer runs the
+    /// **implicit-im2col fused kernel** (`lut_conv_packed`) — one GEMM
+    /// for the whole batch with `M = batch × OH·OW`, activation codes
+    /// gathered in place through the layer's static [`ConvPlan`], the
+    /// zero-padded plane staged once per SAME conv (VALID convs stage
+    /// nothing), and the per-row zero-point sums accumulated in the same
+    /// pass.  No patch matrix is ever materialized and no post-GEMM
+    /// row-sum sweep runs; fc layers use the fused packed GEMM the same
+    /// way.  The GEMM's row parallelism is also the (image, output-row)
+    /// batch parallelism — one table walk per layer per batch instead of
+    /// per image.  Because the fused kernels accumulate in the explicit
+    /// composition's exact order, the output is bit-identical to `batch`
+    /// independent [`QNet::forward_with`] calls (and to the old
+    /// im2col-staging path).
     ///
     /// `xs` holds the images back to back (`batch * C*H*W` floats); the
     /// returned vec is the concatenated logits (`batch * n_classes`).
@@ -196,14 +245,28 @@ impl QNet {
                     debug_assert!(!in_real, "conv must consume codes");
                     let (oh, ow) = conv_out_dims(h, w, k, stride, 0);
                     let m = oh * ow;
-                    prep_u8(&mut ws.patches, batch * m * c * k * k, &mut ws.grows);
-                    im2col_u8_batch_into(&ws.codes, batch, c, h, w, k, stride, 0, &mut ws.patches);
-                    // ONE GEMM for the whole batch: M = batch × patches.
-                    self.qlayer_patches(li, batch * m, s_in, lut, ws);
-                    // per image: [m, cout] -> [cout, m]
-                    prep_f32(&mut ws.real_b, batch * m * cout, &mut ws.grows);
-                    transpose_pm_batch_into(&ws.real_a, batch, m, cout, &mut ws.real_b);
-                    std::mem::swap(&mut ws.real_a, &mut ws.real_b);
+                    {
+                        let Workspace {
+                            codes,
+                            padded,
+                            acc,
+                            rowsum,
+                            real_a,
+                            real_b,
+                            grows,
+                            ..
+                        } = &mut *ws;
+                        // ONE fused implicit-im2col GEMM for the whole
+                        // batch: M = batch × OH·OW, codes gathered in
+                        // place, row sums fused.
+                        self.conv_fused(
+                            li, codes, batch, s_in, lut, padded, acc, rowsum, real_a, grows,
+                        );
+                        // per image: [m, cout] -> [cout, m]
+                        prep_f32(real_b, batch * m * cout, grows);
+                        transpose_pm_batch_into(real_a, batch, m, cout, real_b);
+                        std::mem::swap(real_a, real_b);
+                    }
                     li += 1;
                     c = cout;
                     h = oh;
@@ -211,22 +274,31 @@ impl QNet {
                     in_real = true;
                 }
                 Op::Fc(_, cout) => {
+                    // fc over the batch is one fused GEMM with M = batch
+                    // rows (each image's flattened features are one row).
+                    let Workspace {
+                        codes,
+                        codes_alt,
+                        acc,
+                        rowsum,
+                        real_a,
+                        grows,
+                        ..
+                    } = &mut *ws;
                     if in_real {
                         // fc after flatten of real values: requantize with
-                        // the pending scale
+                        // the pending scale into the secondary code buffer
                         let s = self.act_scales[scale_i];
                         s_in = s;
-                        prep_u8(&mut ws.patches, ws.real_a.len(), &mut ws.grows);
-                        for (dst, &v) in ws.patches.iter_mut().zip(ws.real_a.iter()) {
+                        prep_u8(codes_alt, real_a.len(), grows);
+                        for (dst, &v) in codes_alt.iter_mut().zip(real_a.iter()) {
                             *dst = (v / s).round().clamp(0.0, 255.0) as u8;
                         }
+                        self.fc_fused(li, codes_alt, batch, s_in, lut, acc, rowsum, real_a, grows);
                     } else {
-                        prep_u8(&mut ws.patches, ws.codes.len(), &mut ws.grows);
-                        ws.patches.copy_from_slice(&ws.codes);
+                        // codes feed the GEMM directly — no staging copy
+                        self.fc_fused(li, codes, batch, s_in, lut, acc, rowsum, real_a, grows);
                     }
-                    // fc over the batch is one GEMM with M = batch rows
-                    // (each image's flattened features are one row).
-                    self.qlayer_patches(li, batch, s_in, lut, ws);
                     li += 1;
                     c = cout;
                     in_real = true;
@@ -299,68 +371,77 @@ impl QNet {
                 }
                 Op::ResBlock(cin, cout, k, stride) => {
                     debug_assert!(!in_real);
-                    // The identity path stays in ws.codes untouched until
+                    // The identity path stays in `codes` untouched until
                     // the final requantization — no snapshot copy needed.
-                    let (ic, ih, iw) = (c, h, w);
+                    // All three arms (conv1 SAME, conv2 SAME, 1×1
+                    // projection) run the fused implicit-im2col kernel.
+                    let Workspace {
+                        codes,
+                        codes_alt,
+                        padded,
+                        acc,
+                        rowsum,
+                        real_a,
+                        real_b,
+                        real_c,
+                        grows,
+                    } = &mut *ws;
                     let id_scale = s_in;
                     // conv1 SAME + relu + requant -> codes_alt
                     let (oh, ow) = conv_out_dims(h, w, k, stride, 1);
                     let m1 = oh * ow;
-                    prep_u8(&mut ws.patches, batch * m1 * c * k * k, &mut ws.grows);
-                    im2col_u8_batch_into(&ws.codes, batch, c, h, w, k, stride, 1, &mut ws.patches);
-                    self.qlayer_patches(li, batch * m1, s_in, lut, ws);
-                    prep_f32(&mut ws.real_b, batch * m1 * cout, &mut ws.grows);
-                    transpose_pm_batch_into(&ws.real_a, batch, m1, cout, &mut ws.real_b);
-                    std::mem::swap(&mut ws.real_a, &mut ws.real_b);
+                    self.conv_fused(
+                        li, codes, batch, s_in, lut, padded, acc, rowsum, real_a, grows,
+                    );
+                    prep_f32(real_b, batch * m1 * cout, grows);
+                    transpose_pm_batch_into(real_a, batch, m1, cout, real_b);
+                    std::mem::swap(real_a, real_b);
                     let s_mid = self.act_scales[scale_i];
                     scale_i += 1;
-                    prep_u8(&mut ws.codes_alt, ws.real_a.len(), &mut ws.grows);
-                    for (dst, &v) in ws.codes_alt.iter_mut().zip(ws.real_a.iter()) {
+                    prep_u8(codes_alt, real_a.len(), grows);
+                    for (dst, &v) in codes_alt.iter_mut().zip(real_a.iter()) {
                         *dst = (v.max(0.0) / s_mid).round().clamp(0.0, 255.0) as u8;
                     }
                     // conv2 SAME stride 1 -> real_a = r2 in [cout, m] per image
                     let (oh2, ow2) = conv_out_dims(oh, ow, k, 1, 1);
                     let m2 = oh2 * ow2;
-                    prep_u8(&mut ws.patches, batch * m2 * cout * k * k, &mut ws.grows);
-                    im2col_u8_batch_into(
-                        &ws.codes_alt,
+                    self.conv_fused(
+                        li + 1,
+                        codes_alt,
                         batch,
-                        cout,
-                        oh,
-                        ow,
-                        k,
-                        1,
-                        1,
-                        &mut ws.patches,
+                        s_mid,
+                        lut,
+                        padded,
+                        acc,
+                        rowsum,
+                        real_a,
+                        grows,
                     );
-                    self.qlayer_patches(li + 1, batch * m2, s_mid, lut, ws);
-                    prep_f32(&mut ws.real_b, batch * m2 * cout, &mut ws.grows);
-                    transpose_pm_batch_into(&ws.real_a, batch, m2, cout, &mut ws.real_b);
-                    std::mem::swap(&mut ws.real_a, &mut ws.real_b);
+                    prep_f32(real_b, batch * m2 * cout, grows);
+                    transpose_pm_batch_into(real_a, batch, m2, cout, real_b);
+                    std::mem::swap(real_a, real_b);
                     // shortcut, then add + relu
                     let projected = stride != 1 || cin != cout;
                     if projected {
-                        let (soh, sow) = conv_out_dims(ih, iw, 1, stride, 0);
-                        let ms = soh * sow;
-                        prep_u8(&mut ws.patches, batch * ms * ic, &mut ws.grows);
-                        im2col_u8_batch_into(
-                            &ws.codes,
-                            batch,
-                            ic,
-                            ih,
-                            iw,
-                            1,
-                            stride,
-                            0,
-                            &mut ws.patches,
-                        );
+                        let ms = self.plans[li + 2].as_ref().unwrap().out_pixels();
                         // park r2 in real_c so the projection can use real_a
-                        std::mem::swap(&mut ws.real_a, &mut ws.real_c);
-                        self.qlayer_patches(li + 2, batch * ms, id_scale, lut, ws);
-                        prep_f32(&mut ws.real_b, batch * ms * cout, &mut ws.grows);
-                        transpose_pm_batch_into(&ws.real_a, batch, ms, cout, &mut ws.real_b);
-                        std::mem::swap(&mut ws.real_a, &mut ws.real_c); // real_a = r2
-                        for (o, &sv) in ws.real_a.iter_mut().zip(ws.real_b.iter()) {
+                        std::mem::swap(real_a, real_c);
+                        self.conv_fused(
+                            li + 2,
+                            codes,
+                            batch,
+                            id_scale,
+                            lut,
+                            padded,
+                            acc,
+                            rowsum,
+                            real_a,
+                            grows,
+                        );
+                        prep_f32(real_b, batch * ms * cout, grows);
+                        transpose_pm_batch_into(real_a, batch, ms, cout, real_b);
+                        std::mem::swap(real_a, real_c); // real_a = r2
+                        for (o, &sv) in real_a.iter_mut().zip(real_b.iter()) {
                             *o = (*o + sv).max(0.0);
                         }
                     } else {
@@ -368,15 +449,15 @@ impl QNet {
                         // ([cout, m2] vs [cin, ih*iw] with cin == cout,
                         // m2 == ih*iw), so one elementwise zip covers the
                         // whole batch.
-                        for (o, &q) in ws.real_a.iter_mut().zip(ws.codes.iter()) {
+                        for (o, &q) in real_a.iter_mut().zip(codes.iter()) {
                             *o = (*o + q as f32 * id_scale).max(0.0);
                         }
                     }
                     // requantize block output
                     let s_out = self.act_scales[scale_i];
                     scale_i += 1;
-                    prep_u8(&mut ws.codes, ws.real_a.len(), &mut ws.grows);
-                    for (dst, &v) in ws.codes.iter_mut().zip(ws.real_a.iter()) {
+                    prep_u8(codes, real_a.len(), grows);
+                    for (dst, &v) in codes.iter_mut().zip(real_a.iter()) {
                         *dst = (v / s_out).round().clamp(0.0, 255.0) as u8;
                     }
                     s_in = s_out;
@@ -393,38 +474,77 @@ impl QNet {
         ws.real_a.clone()
     }
 
-    /// Run weighted layer `li` over the `m` rows of `ws.patches`, writing
-    /// real output [m, cout] into `ws.real_a` (acc -> real:
-    /// s_in * w_scale * (acc - z_w * rowsum) + bias).  `m` may be a whole
-    /// batch's stacked rows (`batch × patches_per_image`): the GEMM, the
-    /// row sums and the per-row correction are all row-local, so batching
-    /// changes nothing but M.
-    fn qlayer_patches(&self, li: usize, m: usize, s_in: f32, lut: &Lut, ws: &mut Workspace) {
+    /// Run conv layer `li` — the fused implicit-im2col kernel — over
+    /// `batch` stacked images whose codes are in `input`, writing real
+    /// output `[batch·OH·OW, cout]` into `real`.  Stages the zero-padded
+    /// plane iff the layer's plan needs one (SAME convs); VALID convs
+    /// gather straight from `input` with no staging at all.  The fused
+    /// row sums feed the per-row zero-point correction directly — no
+    /// patch matrix, no second operand sweep.
+    #[allow(clippy::too_many_arguments)]
+    fn conv_fused(
+        &self,
+        li: usize,
+        input: &[u8],
+        batch: usize,
+        s_in: f32,
+        lut: &Lut,
+        padded: &mut Vec<u8>,
+        acc: &mut Vec<i32>,
+        rowsum: &mut Vec<i32>,
+        real: &mut Vec<f32>,
+        grows: &mut u64,
+    ) {
         let l = &self.layers[li];
-        debug_assert_eq!(ws.patches.len(), m * l.k, "layer {li} input size");
-        prep_i32(&mut ws.acc, m * l.cout, &mut ws.grows);
-        prep_i32(&mut ws.rowsum, m, &mut ws.grows);
-        prep_f32(&mut ws.real_a, m * l.cout, &mut ws.grows);
-        // Weight-stationary kernel over the layer's pre-packed panels —
-        // bit-identical to `lut_gemm` over the unpacked [K, Cout] codes.
-        lut_gemm_packed(&ws.patches, &l.packed, &mut ws.acc, m, lut);
-        row_sums_into(&ws.patches, m, l.k, &mut ws.rowsum);
-        let sc = s_in * l.w_scale;
-        for p in 0..m {
-            let corr = l.w_zp * ws.rowsum[p];
-            for o in 0..l.cout {
-                ws.real_a[p * l.cout + o] =
-                    sc * (ws.acc[p * l.cout + o] - corr) as f32 + l.bias[o];
-            }
+        let plan = self.plans[li].as_ref().expect("conv layer has a plan");
+        debug_assert_eq!(l.k, plan.patch_len(), "layer {li}: panel k vs plan");
+        debug_assert_eq!(input.len(), batch * plan.input_len(), "layer {li} input size");
+        let m = batch * plan.out_pixels();
+        prep_i32(acc, m * l.cout, grows);
+        prep_i32(rowsum, m, grows);
+        prep_f32(real, m * l.cout, grows);
+        if plan.needs_pad() {
+            prep_u8(padded, batch * plan.plane_len(), grows);
+            pad_plane_batch_into(input, batch, plan.c(), plan.h(), plan.w(), plan.pad(), padded);
+            lut_conv_packed(padded, batch, plan, &l.packed, acc, rowsum, lut);
+        } else {
+            lut_conv_packed(input, batch, plan, &l.packed, acc, rowsum, lut);
         }
+        dequant_into(l, m, s_in, acc, rowsum, real);
+    }
+
+    /// Run fc layer `li` over `m` rows of `input` codes (one image's
+    /// flattened features per row), writing real output `[m, cout]` into
+    /// `real` via the fused weight-stationary GEMM (row sums accumulated
+    /// in the GEMM pass).
+    #[allow(clippy::too_many_arguments)]
+    fn fc_fused(
+        &self,
+        li: usize,
+        input: &[u8],
+        m: usize,
+        s_in: f32,
+        lut: &Lut,
+        acc: &mut Vec<i32>,
+        rowsum: &mut Vec<i32>,
+        real: &mut Vec<f32>,
+        grows: &mut u64,
+    ) {
+        let l = &self.layers[li];
+        debug_assert_eq!(input.len(), m * l.k, "layer {li} input size");
+        prep_i32(acc, m * l.cout, grows);
+        prep_i32(rowsum, m, grows);
+        prep_f32(real, m * l.cout, grows);
+        lut_gemm_packed_fused(input, &l.packed, acc, rowsum, m, lut);
+        dequant_into(l, m, s_in, acc, rowsum, real);
     }
 
     /// Batched accuracy evaluation: fraction of argmax(logits) == label.
     /// The sweep chunks over batches of [`ACCURACY_BATCH`] images through
-    /// [`QNet::forward_batch_with`] — one `lut_gemm` per layer per chunk
-    /// — instead of the old per-image forwards with outer image
-    /// parallelism.  The two heavy stages parallelize inside the batch
-    /// (the GEMM over its `M = batch × patches` rows, im2col over
+    /// [`QNet::forward_batch_with`] — one fused LUT-GEMM per layer per
+    /// chunk — instead of per-image forwards with outer image
+    /// parallelism.  The heavy stages parallelize inside the batch (the
+    /// fused kernel over its `M = batch × OH·OW` rows, pad staging over
     /// images); the remaining elementwise stages (requantize, transpose)
     /// run serial per chunk.  One reusable workspace keeps the sweep
     /// allocation-free after warmup, and results stay deterministic and
@@ -526,6 +646,23 @@ fn make_qlayer(w: &Tensor, b: &Tensor) -> QLayer {
         w_scale: scale,
         w_zp: zp,
         bias: b.data.clone(),
+    }
+}
+
+/// acc -> real dequantization with the per-row zero-point correction:
+/// `real[p, o] = s_in · w_scale · (acc[p, o] − z_w · rowsum[p]) + bias[o]`.
+/// `m` may be a whole batch's stacked rows: the correction is row-local,
+/// so batching changes nothing but M.
+fn dequant_into(l: &QLayer, m: usize, s_in: f32, acc: &[i32], rowsum: &[i32], real: &mut [f32]) {
+    debug_assert_eq!(acc.len(), m * l.cout);
+    debug_assert_eq!(rowsum.len(), m);
+    debug_assert_eq!(real.len(), m * l.cout);
+    let sc = s_in * l.w_scale;
+    for p in 0..m {
+        let corr = l.w_zp * rowsum[p];
+        for o in 0..l.cout {
+            real[p * l.cout + o] = sc * (acc[p * l.cout + o] - corr) as f32 + l.bias[o];
+        }
     }
 }
 
@@ -728,11 +865,25 @@ mod tests {
         }
     }
 
+    /// Largest im2col patch matrix the retired explicit path would have
+    /// materialized for this network at `batch`: the footprint floor the
+    /// implicit-conv workspace must stay strictly under.
+    fn patch_matrix_floor(qnet: &QNet, batch: usize) -> usize {
+        qnet.plans
+            .iter()
+            .flatten()
+            .map(|p| batch * p.out_pixels() * p.patch_len())
+            .max()
+            .expect("net has at least one conv layer")
+    }
+
     #[test]
     fn steady_state_batched_forward_is_allocation_free() {
         // The grow-events guarantee must survive batching: warm up at the
         // largest batch, then serve mixed (smaller and equal) batches
-        // without a single buffer growth.
+        // without a single buffer growth.  And the implicit-conv
+        // footprint win must hold: no u8 scratch anywhere near the old
+        // patch matrix's size.
         let lut = Lut::build(&ExactMul::new(8, 8));
         for net in ["lenet_plus", "resnet19_s"] {
             let fnet = toy_fnet(net, (3, 32, 32), 8);
@@ -755,6 +906,17 @@ mod tests {
                 "{net}: steady-state batched forward must not grow scratch"
             );
             assert_eq!(ws.capacity_bytes(), caps, "{net}: capacity crept");
+            // No patch matrix: every code-staging buffer (codes,
+            // codes_alt, padded plane) must sit well under what the
+            // explicit im2col path allocated for this (net, batch) —
+            // the ~k²-fold shrink the implicit kernel exists for.
+            let floor = patch_matrix_floor(&qnet, 8);
+            assert!(
+                ws.max_u8_scratch_bytes() < floor,
+                "{net}: u8 scratch {} must stay under the {} B patch matrix",
+                ws.max_u8_scratch_bytes(),
+                floor
+            );
         }
     }
 

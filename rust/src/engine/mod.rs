@@ -13,9 +13,10 @@
 //!   key.  One hub can hold the same model under several designs, which
 //!   is what lets a single server A/B-route traffic across
 //!   accuracy/power points (the paper's whole deployment story).
-//! * [`Workspace`] — reusable im2col/GEMM/accumulator scratch threaded
-//!   through `QNet::forward_with`, so steady-state serving performs no
-//!   per-batch heap allocation on the hot path.
+//! * [`Workspace`] — reusable GEMM/accumulator/code-plane scratch
+//!   threaded through `QNet::forward_with`, so steady-state serving
+//!   performs no per-batch heap allocation on the hot path (and, since
+//!   the implicit-im2col conv kernel, never stages a patch matrix).
 
 pub mod lut_cache;
 pub mod session;

@@ -51,7 +51,12 @@ impl Session {
         // the weight-stationary forward path gathers through it, and the
         // build must be paid at registration, not on the first request.
         // It is cached inside the `Arc<Lut>`, i.e. once per design per
-        // process via the shared LutCache.
+        // process via the shared LutCache.  (The other static halves of
+        // the serving path — packed weight panels and the per-conv
+        // implicit-im2col gather plans — were already built inside the
+        // `QNet` at quantization time, so after this call a session's
+        // first request runs the same allocation profile as its
+        // thousandth.)
         lut.transposed();
         Session { key, qnet, lut }
     }
@@ -63,10 +68,11 @@ impl Session {
     }
 
     /// Forward a whole batch (`images` = `batch` images back to back)
-    /// through this session's silicon with ONE stacked `lut_gemm` per
-    /// layer — the server lanes' execution path.  Returns the
-    /// concatenated logits; bit-identical to `batch` [`Session::infer_with`]
-    /// calls.
+    /// through this session's silicon with ONE fused LUT-GEMM per layer
+    /// (implicit-im2col for convs: codes gathered in place, row sums
+    /// accumulated in the same pass, no patch matrix staged) — the
+    /// server lanes' execution path.  Returns the concatenated logits;
+    /// bit-identical to `batch` [`Session::infer_with`] calls.
     pub fn infer_batch_with(&self, images: &[f32], batch: usize, ws: &mut Workspace) -> Vec<f32> {
         self.qnet.forward_batch_with(images, batch, &self.lut, ws)
     }
@@ -212,6 +218,13 @@ mod tests {
             let (single, _) = sess.infer_one(&images[i * 784..(i + 1) * 784]);
             assert_eq!(&batched[i * 10..(i + 1) * 10], &single[..], "image {i}");
         }
+        // Serving-boundary footprint: the implicit-conv path must not
+        // have staged anything patch-matrix-sized.  lenet conv1's
+        // explicit matrix at batch 3 would be 3·(24·24)·(1·5·5) bytes.
+        assert!(
+            ws.max_u8_scratch_bytes() < 3 * 24 * 24 * 25,
+            "lane workspace staged a patch-matrix-sized buffer"
+        );
     }
 
     #[test]

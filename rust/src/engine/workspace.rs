@@ -1,20 +1,31 @@
 //! Reusable scratch memory for the quantized forward path.
 //!
 //! `QNet::forward_batch_with` threads a `Workspace` through every op:
-//! im2col patches, GEMM accumulators, row sums and the real-valued
-//! activation buffers all live here and are resized *within capacity*
-//! between calls.  Note what deliberately does NOT live here: per-layer
-//! packed weight panels and the transposed LUT store are *static* (built
-//! once in `QNet`/`Lut` at registration), so the weight-stationary GEMM
-//! reads them shared and immutable while only the per-batch scratch
-//! below cycles.  Buffers grow to the high-water mark of the (network,
-//! max batch) being served during the first couple of calls (buffer
-//! roles rotate via pointer swaps, so capacities converge after at most
-//! a few passes) and steady-state inference then performs zero heap
-//! allocation per batch; smaller batches shrink within capacity.
+//! GEMM accumulators, fused row sums, the staged zero-padded code plane
+//! (SAME convs only) and the real-valued activation buffers all live
+//! here and are resized *within capacity* between calls.  Note what
+//! deliberately does NOT live here: per-layer packed weight panels, the
+//! transposed LUT store and the per-layer `ConvPlan` gather offsets are
+//! *static* (built once in `QNet`/`Lut` at registration), so the
+//! weight-stationary GEMM reads them shared and immutable while only the
+//! per-batch scratch below cycles.
 //!
-//! `grow_events()` counts capacity growth, which is what the reuse tests
-//! assert on: warm up, snapshot, keep serving, counter must not move.
+//! There is — since the implicit-im2col conv kernel — **no patch
+//! matrix**.  The old path's largest buffer by far was the
+//! `[batch·OH·OW, C·k·k]` im2col staging area (every interior pixel
+//! replicated up to k² times, then read twice: GEMM + row sums).  The
+//! fused conv kernel gathers codes in place; the only conv staging left
+//! is `padded` at `batch·C·(H+2p)·(W+2p)` bytes, and only for padded
+//! convs.  `max_u8_scratch_bytes()` exposes the largest u8 buffer so
+//! tests can pin the ~k²-fold shrink.
+//!
+//! Buffers grow to the high-water mark of the (network, max batch) being
+//! served during the first couple of calls (buffer roles rotate via
+//! pointer swaps, so capacities converge after at most a few passes) and
+//! steady-state inference then performs zero heap allocation per batch;
+//! smaller batches shrink within capacity.  `grow_events()` counts
+//! capacity growth, which is what the reuse tests assert on: warm up,
+//! snapshot, keep serving, counter must not move.
 //!
 //! # Buffer-content contract
 //!
@@ -25,11 +36,13 @@
 //! prepped slice before reading any of it**.  The batched accumulator
 //! path is the sharpest edge — a batch of B-1 images leaves a full
 //! B-image accumulator behind, and a consumer that read one stale row
-//! would silently blend two requests.  Debug builds therefore poison
-//! every prepped buffer with sentinel values (`0xAB` codes, `i32::MIN`
-//! accumulators, NaN reals); any read-before-write corrupts results
-//! loudly enough that the bit-identity tests catch it.  Release builds
-//! skip the poison and keep the memset-free hot path.
+//! would silently blend two requests.  (`padded` upholds it by
+//! construction: the pad staging zero-fills the whole plane before the
+//! row copies.)  Debug builds therefore poison every prepped buffer with
+//! sentinel values (`0xAB` codes, `i32::MIN` accumulators, NaN reals);
+//! any read-before-write corrupts results loudly enough that the
+//! bit-identity tests catch it.  Release builds skip the poison and keep
+//! the memset-free hot path.
 
 /// Scratch buffers for [`crate::dnn::QNet::forward_with`].
 ///
@@ -39,13 +52,18 @@
 pub struct Workspace {
     /// Current activation codes (the quantized tensor between ops).
     pub(crate) codes: Vec<u8>,
-    /// Secondary code buffer (pool output, residual mid activations).
+    /// Secondary code buffer (pool output, residual mid activations,
+    /// requantized fc input).
     pub(crate) codes_alt: Vec<u8>,
-    /// im2col patch matrix / fc input codes.
-    pub(crate) patches: Vec<u8>,
+    /// Zero-padded, batch-stacked code plane for SAME convs —
+    /// `batch · C·(H+2p)·(W+2p)` bytes, the whole conv staging footprint
+    /// (VALID convs gather from `codes`/`codes_alt` directly and stage
+    /// nothing).  Replaces the k²-amplified im2col patch matrix.
+    pub(crate) padded: Vec<u8>,
     /// i32 GEMM accumulator.
     pub(crate) acc: Vec<i32>,
-    /// Per-patch code sums (zero-point correction).
+    /// Per-row code sums (zero-point correction), filled by the fused
+    /// kernels in the same pass as `acc`.
     pub(crate) rowsum: Vec<i32>,
     /// Real-valued activation buffers; roles rotate by `mem::swap`.
     pub(crate) real_a: Vec<f32>,
@@ -70,10 +88,29 @@ impl Workspace {
     pub fn capacity_bytes(&self) -> usize {
         self.codes.capacity()
             + self.codes_alt.capacity()
-            + self.patches.capacity()
+            + self.padded.capacity()
             + 4 * self.acc.capacity()
             + 4 * self.rowsum.capacity()
             + 4 * (self.real_a.capacity() + self.real_b.capacity() + self.real_c.capacity())
+    }
+
+    /// Alias of [`Workspace::capacity_bytes`] for perf-trajectory
+    /// consumers (`Bencher` records it as `workspace_peak_bytes` per
+    /// bench entry).
+    pub fn bytes(&self) -> usize {
+        self.capacity_bytes()
+    }
+
+    /// Capacity of the largest u8 scratch buffer.  With the implicit
+    /// conv kernel this is bounded by one batch of code planes
+    /// (`batch·C·(H+2p)·(W+2p)`); the retired patch matrix was
+    /// `batch·OH·OW·C·k·k` — ~k² larger on conv-dominant nets — and the
+    /// footprint tests assert that bound never silently comes back.
+    pub fn max_u8_scratch_bytes(&self) -> usize {
+        self.codes
+            .capacity()
+            .max(self.codes_alt.capacity())
+            .max(self.padded.capacity())
     }
 }
 
@@ -156,6 +193,18 @@ mod tests {
         let ws = Workspace::new();
         assert_eq!(ws.grow_events(), 0);
         assert_eq!(ws.capacity_bytes(), 0);
+        assert_eq!(ws.bytes(), 0);
+        assert_eq!(ws.max_u8_scratch_bytes(), 0);
+    }
+
+    #[test]
+    fn max_u8_scratch_tracks_largest_code_buffer() {
+        let mut ws = Workspace::new();
+        prep_u8(&mut ws.codes, 100, &mut ws.grows);
+        prep_u8(&mut ws.padded, 300, &mut ws.grows);
+        prep_i32(&mut ws.acc, 10_000, &mut ws.grows); // i32 scratch doesn't count
+        assert!(ws.max_u8_scratch_bytes() >= 300);
+        assert!(ws.max_u8_scratch_bytes() < 10_000);
     }
 
     #[test]

@@ -17,6 +17,11 @@ pub struct BenchStats {
     pub min_ns: f64,
     /// Optional throughput denominator (elements per iteration).
     pub elements: Option<u64>,
+    /// Steady-state scratch footprint of the benched path
+    /// (`Workspace::bytes()` after the run), when the bench drove a
+    /// workspace.  Recorded so the perf trajectory captures memory wins
+    /// (the implicit-conv patch-matrix removal), not just ns/iter.
+    pub workspace_peak_bytes: Option<u64>,
 }
 
 impl BenchStats {
@@ -124,6 +129,17 @@ impl Bencher {
             p95_ns: pct(0.95),
             min_ns: ns[0],
             elements,
+            workspace_peak_bytes: None,
+        }
+    }
+
+    /// Attach the benched path's steady-state workspace footprint
+    /// (`Workspace::bytes()`) to the most recent result, so the JSON
+    /// trajectory records memory alongside time.  Call right after the
+    /// `bench*` call whose closure drove the workspace.
+    pub fn note_workspace_peak(&mut self, bytes: usize) {
+        if let Some(last) = self.results.last_mut() {
+            last.workspace_peak_bytes = Some(bytes as u64);
         }
     }
 
@@ -179,6 +195,9 @@ impl Bencher {
                             Json::Num(e as f64 / r.median_ns * 1e9),
                         );
                     }
+                    if let Some(wb) = r.workspace_peak_bytes {
+                        o.insert("workspace_peak_bytes".to_string(), Json::Num(wb as f64));
+                    }
                     Json::Obj(o)
                 })
                 .collect(),
@@ -227,6 +246,7 @@ mod tests {
         b.bench("no_tput", || {
             std::hint::black_box(1 + 1);
         });
+        b.note_workspace_peak(12_345);
         let dir = std::env::temp_dir().join("axmul_bench_json");
         std::fs::create_dir_all(&dir).unwrap();
         let p = dir.join("out.json");
@@ -238,6 +258,15 @@ mod tests {
         assert!(arr[0].get("ns_per_iter").unwrap().as_f64().unwrap() > 0.0);
         assert!(arr[0].get("elems_per_s").unwrap().as_f64().unwrap() > 0.0);
         assert!(arr[1].get("elems_per_s").is_none(), "no denominator given");
+        // footprint annotation lands on the entry it was noted after
+        assert!(
+            arr[0].get("workspace_peak_bytes").is_none(),
+            "first entry was never annotated"
+        );
+        assert_eq!(
+            arr[1].get("workspace_peak_bytes").unwrap().as_f64(),
+            Some(12_345.0)
+        );
     }
 
     #[test]
@@ -259,6 +288,7 @@ mod tests {
             p95_ns: 1000.0,
             min_ns: 1000.0,
             elements: Some(1000),
+            workspace_peak_bytes: None,
         };
         assert!((s.throughput_mops().unwrap() - 1000.0).abs() < 1e-9);
     }

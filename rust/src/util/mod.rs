@@ -19,7 +19,7 @@ pub use json::Json;
 pub use rng::{Pcg32, SplitMix64};
 pub use table::{fmt_improvement, Table};
 pub use threadpool::{
-    num_threads, parallel_map, parallel_row_chunks, parallel_row_chunks_n, parallel_slice_chunks,
-    pool_threads_spawned,
+    num_threads, parallel_map, parallel_row_chunks, parallel_row_chunks_n,
+    parallel_row_chunks_pair_n, parallel_slice_chunks, pool_threads_spawned,
 };
 pub use toml::{TomlDoc, TomlValue};

@@ -323,6 +323,58 @@ where
     });
 }
 
+/// Two-buffer variant of [`parallel_row_chunks_n`]: split BOTH row-major
+/// buffers — `a` as `[m, na]`, `b` as `[m, nb]` — into the same
+/// `ceil(m / workers)`-row blocks and hand each worker the matching
+/// disjoint `&mut` pair.  This is what lets the fused GEMM kernels write
+/// the accumulator block *and* its per-row sums in one dispatch without
+/// any `unsafe` at the call site (gemm.rs stays `forbid(unsafe_code)`).
+/// Block geometry is the same pure function of `(m, workers)`, so the
+/// bit-reproducibility contract carries over unchanged.
+pub fn parallel_row_chunks_pair_n<T, U, F>(
+    workers: usize,
+    a: &mut [T],
+    b: &mut [U],
+    m: usize,
+    na: usize,
+    nb: usize,
+    f: F,
+) where
+    T: Send,
+    U: Send,
+    F: Fn(usize, &mut [T], &mut [U]) + Sync,
+{
+    // Hard asserts, not debug: the raw-pointer block construction below
+    // is only sound for exactly-sized buffers, and this is a safe pub
+    // API — a mis-sized release-build caller must panic, not write out
+    // of bounds.  (One-time cost per call, not per row.)
+    assert_eq!(a.len(), m * na);
+    assert_eq!(b.len(), m * nb);
+    if m == 0 {
+        return;
+    }
+    let workers = workers.min(m).max(1);
+    if workers <= 1 || m < 2 {
+        f(0, a, b);
+        return;
+    }
+    let rows_per = m.div_ceil(workers);
+    let chunks = m.div_ceil(rows_per);
+    let pa = SendPtr(a.as_mut_ptr());
+    let pb = SendPtr(b.as_mut_ptr());
+    Pool::global().run_fn(chunks, |ci| {
+        let row0 = ci * rows_per;
+        let rows = rows_per.min(m - row0);
+        // SAFETY: chunk `ci` covers rows [row0, row0 + rows) of BOTH
+        // buffers — disjoint across chunk indices and in bounds exactly
+        // as in `parallel_row_chunks_n`; `run` joins every chunk before
+        // either buffer is usable again.
+        let ba = unsafe { std::slice::from_raw_parts_mut(pa.0.add(row0 * na), rows * na) };
+        let bb = unsafe { std::slice::from_raw_parts_mut(pb.0.add(row0 * nb), rows * nb) };
+        f(row0, ba, bb);
+    });
+}
+
 /// Parallel in-place transform over disjoint mutable chunks of a slice.
 pub fn parallel_slice_chunks<T, F>(data: &mut [T], min_chunk: usize, f: F)
 where
@@ -425,6 +477,48 @@ mod tests {
         for workers in [2, 3, 16, 64] {
             assert_eq!(run(workers), want, "workers={workers}");
         }
+    }
+
+    #[test]
+    fn pair_chunks_cover_both_buffers_identically() {
+        // The fused-kernel primitive: both buffers must be split on the
+        // same row boundaries, rows covered exactly once, for any worker
+        // basis — and every basis must produce the same bits.
+        let (m, na, nb) = (37usize, 5usize, 1usize);
+        let run = |workers: usize| {
+            let mut a = vec![0u32; m * na];
+            let mut b = vec![0u32; m * nb];
+            parallel_row_chunks_pair_n(workers, &mut a, &mut b, m, na, nb, |row0, ba, bb| {
+                assert_eq!(ba.len() / na, bb.len() / nb, "same row count");
+                for (ri, row) in ba.chunks_mut(na).enumerate() {
+                    for (j, v) in row.iter_mut().enumerate() {
+                        *v = ((row0 + ri) * 100 + j) as u32;
+                    }
+                }
+                for (ri, row) in bb.chunks_mut(nb).enumerate() {
+                    row[0] = (row0 + ri) as u32 + 7;
+                }
+            });
+            (a, b)
+        };
+        let want = run(1);
+        for workers in [2usize, 3, 16, 64] {
+            assert_eq!(run(workers), want, "workers={workers}");
+        }
+        for i in 0..m {
+            assert_eq!(want.1[i], i as u32 + 7);
+            assert_eq!(want.0[i * na], (i * 100) as u32);
+        }
+        // degenerate shapes must be no-ops, not panics
+        parallel_row_chunks_pair_n(
+            4,
+            &mut Vec::<u8>::new(),
+            &mut Vec::<u8>::new(),
+            0,
+            3,
+            1,
+            |_, _, _| unreachable!(),
+        );
     }
 
     #[test]

@@ -6,7 +6,11 @@
 //! message).
 
 use axmul::data::{npy, Batcher, Dataset};
-use axmul::dnn::{gemm_f32, lut_gemm, lut_gemm_packed, lut_gemm_packed_n, PackedWeights};
+use axmul::dnn::{
+    gemm_f32, im2col_u8_batch_into, lut_conv_packed, lut_conv_packed_n, lut_gemm,
+    lut_gemm_packed, lut_gemm_packed_fused_n, lut_gemm_packed_n, pad_plane_batch_into,
+    row_sums_into, ConvPlan, PackedWeights,
+};
 use axmul::logic::{
     cover_equals, minimal_cover, multiplier_truth_table, opt::nand_rewrite, optimize,
     synthesize_truth_table, GateKind, Netlist, SignalRef, TruthTable,
@@ -337,6 +341,193 @@ fn prop_lut_gemm_packed_i32_store_fallback() {
                         (0..k).map(|kk| lut.mul(a[i * k + kk], b[kk * n + j])).sum();
                     assert_eq!(got[i * n + j], want, "{} trial {trial} ({i},{j})", lut.name);
                 }
+            }
+        }
+    }
+}
+
+/// The explicit composition the fused conv kernel must reproduce bit for
+/// bit: batched im2col, packed GEMM over the patch matrix, separate
+/// row-sum sweep.
+#[allow(clippy::too_many_arguments)]
+fn conv_composition(
+    xs: &[u8],
+    batch: usize,
+    (c, h, w): (usize, usize, usize),
+    (k, stride, pad): (usize, usize, usize),
+    wcodes: &[u8],
+    n: usize,
+    lut: &Lut,
+) -> (Vec<i32>, Vec<i32>) {
+    let plan = ConvPlan::new(c, h, w, k, stride, pad);
+    let kk = plan.patch_len();
+    let m = batch * plan.out_pixels();
+    let mut patches = vec![0u8; m * kk];
+    im2col_u8_batch_into(xs, batch, c, h, w, k, stride, pad, &mut patches);
+    let pw = PackedWeights::pack(wcodes, kk, n);
+    let mut acc = vec![0i32; m * n];
+    lut_gemm_packed(&patches, &pw, &mut acc, m, lut);
+    let mut rs = vec![0i32; m];
+    row_sums_into(&patches, m, kk, &mut rs);
+    (acc, rs)
+}
+
+#[test]
+fn prop_lut_conv_packed_bit_identical_for_all_designs() {
+    // PR-5 tentpole invariant: the implicit-im2col fused conv kernel
+    // must reproduce im2col + lut_gemm_packed + row_sums_into bit for
+    // bit, for EVERY Table VIII design, across conv geometries covering
+    // pad-1 borders, stride-2 tails (input sizes that don't divide
+    // evenly), the 1×1 projection arm, a 1×1 input (pure padding), tile
+    // tails — and across batch sizes 1/7 and worker bases 1/2/16.
+    let cache = axmul::engine::LutCache::new();
+    let geoms = [
+        // (c, h, w, k, stride, pad, n) — mirror the serving conv forms
+        (3usize, 8usize, 8usize, 3usize, 1usize, 0usize, 16usize), // VALID conv
+        (2, 9, 7, 3, 1, 1, 17),                                    // SAME, pad-1 borders
+        (2, 9, 9, 3, 2, 1, 32),  // stride-2 SAME: odd tail rows
+        (4, 10, 10, 1, 2, 0, 5), // ResBlock 1×1 projection arm
+        (1, 1, 1, 3, 1, 1, 3),   // 1×1 input: every gather is padding
+        (2, 6, 6, 5, 1, 2, 16),  // pad 2: border band wider than one pixel
+    ];
+    for name in axmul::mult::DNN_DESIGNS {
+        let lut = cache.get(name).unwrap();
+        let mut rng = Pcg32::new(83);
+        for &(c, h, w, k, stride, pad, n) in &geoms {
+            for batch in [1usize, 7] {
+                // ~half zero codes: the zero-skip path must stay
+                // bit-equivalent through the gather too.
+                let xs: Vec<u8> = (0..batch * c * h * w)
+                    .map(|_| {
+                        if rng.gen_range(2) == 0 {
+                            rng.gen_range(256) as u8
+                        } else {
+                            0
+                        }
+                    })
+                    .collect();
+                let plan = ConvPlan::new(c, h, w, k, stride, pad);
+                let kk = plan.patch_len();
+                let wcodes: Vec<u8> =
+                    (0..kk * n).map(|_| rng.gen_range(256) as u8).collect();
+                let (want, want_rs) =
+                    conv_composition(&xs, batch, (c, h, w), (k, stride, pad), &wcodes, n, &lut);
+                let pw = PackedWeights::pack(&wcodes, kk, n);
+                let m = batch * plan.out_pixels();
+                let mut plane = vec![0u8; batch * plan.plane_len()];
+                pad_plane_batch_into(&xs, batch, c, h, w, pad, &mut plane);
+                for workers in [1usize, 2, 16] {
+                    let mut acc = vec![-1i32; m * n];
+                    let mut rs = vec![-1i32; m];
+                    lut_conv_packed_n(
+                        workers, &plane, batch, &plan, &pw, &mut acc, &mut rs, &lut,
+                    );
+                    let tag = format!(
+                        "{name} c{c} h{h} w{w} k{k} s{stride} p{pad} n{n} b{batch} workers={workers}"
+                    );
+                    assert_eq!(acc, want, "{tag}");
+                    assert_eq!(rs, want_rs, "{tag}");
+                }
+                // Production entry point (derived basis) agrees too.
+                let mut acc = vec![0i32; m * n];
+                let mut rs = vec![0i32; m];
+                lut_conv_packed(&plane, batch, &plan, &pw, &mut acc, &mut rs, &lut);
+                assert_eq!(acc, want, "{name}: production basis");
+                assert_eq!(rs, want_rs, "{name}: production basis");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_lut_conv_packed_i32_store_and_nonzero_row0() {
+    // The padded-gather edge under the i32 fallback store: a doctored
+    // table whose activation-0 row is nonzero must charge lut[w, 0] for
+    // every padding position and every zero code — the implicit kernel
+    // may not skip them, exactly like the explicit matrix's stored 0
+    // codes.  Mirrors packed_skip_zero_only_when_row_zero at the conv
+    // level.
+    let mut table = vec![0i32; 65536];
+    for a in 0..256usize {
+        for b in 0..256usize {
+            table[(a << 8) | b] = (a * b) as i32;
+        }
+    }
+    for b in 0..256usize {
+        table[b] = b as i32 - 7; // row 0 nonzero → no skip, i32 store
+    }
+    let noisy = Lut::from_table("noisy", table);
+    assert!(!noisy.zero_row_zero);
+    assert!(matches!(
+        noisy.transposed(),
+        axmul::metrics::LutTStore::I32(_)
+    ));
+    let mut rng = Pcg32::new(89);
+    for &(c, h, w, k, stride, pad, n) in &[
+        (2usize, 5usize, 5usize, 3usize, 1usize, 1usize, 19usize),
+        (1, 1, 1, 3, 1, 1, 4), // 1×1 input: all-padding patches
+        (3, 7, 6, 3, 2, 1, 16),
+    ] {
+        for batch in [1usize, 3] {
+            let xs: Vec<u8> = (0..batch * c * h * w)
+                .map(|_| {
+                    if rng.gen_range(3) == 0 {
+                        rng.gen_range(256) as u8
+                    } else {
+                        0
+                    }
+                })
+                .collect();
+            let plan = ConvPlan::new(c, h, w, k, stride, pad);
+            let wcodes: Vec<u8> = (0..plan.patch_len() * n)
+                .map(|_| rng.gen_range(256) as u8)
+                .collect();
+            let (want, want_rs) =
+                conv_composition(&xs, batch, (c, h, w), (k, stride, pad), &wcodes, n, &noisy);
+            let pw = PackedWeights::pack(&wcodes, plan.patch_len(), n);
+            let m = batch * plan.out_pixels();
+            let mut plane = vec![0u8; batch * plan.plane_len()];
+            pad_plane_batch_into(&xs, batch, c, h, w, pad, &mut plane);
+            let mut acc = vec![0i32; m * n];
+            let mut rs = vec![0i32; m];
+            lut_conv_packed(&plane, batch, &plan, &pw, &mut acc, &mut rs, &noisy);
+            assert_eq!(acc, want, "c{c} h{h} k{k} s{stride} b{batch}");
+            assert_eq!(rs, want_rs, "c{c} h{h} k{k} s{stride} b{batch}");
+        }
+    }
+}
+
+#[test]
+fn prop_fused_fc_gemm_matches_unfused_plus_row_sums() {
+    // The fc side of the fusion: lut_gemm_packed_fused must equal the
+    // unfused kernel + the separate row-sum sweep for every design,
+    // every worker basis, and sparse/odd shapes.
+    let cache = axmul::engine::LutCache::new();
+    for name in axmul::mult::DNN_DESIGNS {
+        let lut = cache.get(name).unwrap();
+        let mut rng = Pcg32::new(97);
+        for (m, k, n) in [(1usize, 400usize, 120usize), (7, 13, 5), (53, 37, 29)] {
+            let a: Vec<u8> = (0..m * k)
+                .map(|_| {
+                    if rng.gen_range(2) == 0 {
+                        rng.gen_range(256) as u8
+                    } else {
+                        0
+                    }
+                })
+                .collect();
+            let b: Vec<u8> = (0..k * n).map(|_| rng.gen_range(256) as u8).collect();
+            let pw = PackedWeights::pack(&b, k, n);
+            let mut want = vec![0i32; m * n];
+            lut_gemm_packed(&a, &pw, &mut want, m, &lut);
+            let mut want_rs = vec![0i32; m];
+            row_sums_into(&a, m, k, &mut want_rs);
+            for workers in [1usize, 2, 16] {
+                let mut acc = vec![-1i32; m * n];
+                let mut rs = vec![-1i32; m];
+                lut_gemm_packed_fused_n(workers, &a, &pw, &mut acc, &mut rs, m, &lut);
+                assert_eq!(acc, want, "{name} m={m} workers={workers}");
+                assert_eq!(rs, want_rs, "{name} m={m} workers={workers}");
             }
         }
     }
