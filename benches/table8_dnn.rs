@@ -8,12 +8,13 @@
 use axmul::coordinator::{Evaluator, Trainer};
 use axmul::data::Dataset;
 use axmul::dnn::{
-    im2col_u8_batch_into, lut_conv_packed, lut_gemm, lut_gemm_packed, pad_plane_batch_into,
-    row_sums_into, ConvPlan, FloatNet, PackedWeights, QNet,
+    im2col_u8_batch_into, lut_conv_packed, lut_conv_packed_path, lut_gemm, lut_gemm_packed,
+    lut_gemm_packed_path, pad_plane_batch_into, row_sums_into, ConvPlan, FloatNet, KernelPath,
+    PackedWeights, QNet,
 };
 use axmul::engine::{LutCache, Workspace};
 use axmul::runtime::Engine;
-use axmul::util::{Bencher, Pcg32};
+use axmul::util::{num_threads, Bencher, Pcg32};
 use std::path::Path;
 
 fn main() {
@@ -52,6 +53,33 @@ fn main() {
             || {
                 lut_gemm_packed(&a, &pw, &mut acc, m, &lut);
                 std::hint::black_box(&acc);
+            },
+        );
+        // Scalar vs SIMD at the same shape with the path pinned, so the
+        // committed JSON carries BOTH sides of the ratio regardless of
+        // what AXMUL_SIMD dispatched above.  Bit-identity is asserted
+        // before either side is timed — a fast wrong kernel must fail
+        // the bench, not win it.
+        let workers = num_threads();
+        let mut scalar = vec![0i32; m * n];
+        let mut vector = vec![0i32; m * n];
+        lut_gemm_packed_path(KernelPath::Scalar, workers, &a, &pw, &mut scalar, m, &lut);
+        lut_gemm_packed_path(KernelPath::Vector, workers, &a, &pw, &mut vector, m, &lut);
+        assert_eq!(scalar, vector, "{tag}: vector path must be bit-identical");
+        b.bench_elems(
+            &format!("lut_gemm_packed_scalar/{tag} [{m}x{k}x{n}]"),
+            Some((m * k * n) as u64),
+            || {
+                lut_gemm_packed_path(KernelPath::Scalar, workers, &a, &pw, &mut scalar, m, &lut);
+                std::hint::black_box(&scalar);
+            },
+        );
+        b.bench_elems(
+            &format!("lut_gemm_packed_simd/{tag} [{m}x{k}x{n}]"),
+            Some((m * k * n) as u64),
+            || {
+                lut_gemm_packed_path(KernelPath::Vector, workers, &a, &pw, &mut vector, m, &lut);
+                std::hint::black_box(&vector);
             },
         );
     }
@@ -111,6 +139,56 @@ fn main() {
             );
             assert_eq!(acc, want_acc, "{tag}: fused conv must be bit-identical");
             assert_eq!(rowsum, want_rs, "{tag}: fused row sums must be bit-identical");
+
+            // Pinned scalar vs SIMD over the same fused conv kernel —
+            // identity against the staged ground truth asserted before
+            // timing, both entries recorded for the trajectory.
+            let workers = num_threads();
+            let src: &[u8] = if plan.needs_pad() {
+                pad_plane_batch_into(&xs, batch, c, h, w, pad, &mut plane);
+                &plane
+            } else {
+                &xs
+            };
+            let paths = [
+                (KernelPath::Scalar, "scalar"),
+                (KernelPath::Vector, "simd"),
+            ];
+            for (path, label) in paths {
+                lut_conv_packed_path(
+                    path,
+                    workers,
+                    src,
+                    batch,
+                    &plan,
+                    &pw,
+                    &mut acc,
+                    &mut rowsum,
+                    &lut,
+                );
+                assert_eq!(acc, want_acc, "{tag}: {label} conv must be bit-identical");
+                assert_eq!(rowsum, want_rs, "{tag}: {label} conv row sums must match");
+            }
+            for (path, label) in paths {
+                b.bench_elems(
+                    &format!("lut_conv_packed_{label}/{tag} [B={batch} {m}x{kk}x{cout}]"),
+                    Some(macs),
+                    || {
+                        lut_conv_packed_path(
+                            path,
+                            workers,
+                            src,
+                            batch,
+                            &plan,
+                            &pw,
+                            &mut acc,
+                            &mut rowsum,
+                            &lut,
+                        );
+                        std::hint::black_box((&acc, &rowsum));
+                    },
+                );
+            }
         }
     }
 

@@ -32,6 +32,15 @@
 //!   im2col + [`lut_gemm_packed`] + `row_sums_into`, at
 //!   `C·(H+2p)·(W+2p)` staged bytes instead of `k²·C·H·W`-ish.
 //!
+//! Each packed kernel additionally has a **vector body** (the fourth
+//! kernel path, [`super::simd`]): the per-(row, tile) gather loop runs
+//! as a 16-lane SIMD tile with an optional weight-side sparse skip
+//! driven by pack-time panel histograms.  Which body runs is resolved
+//! once per call by [`super::simd::select_path`] (`AXMUL_SIMD`
+//! dispatch); the `*_path` variants take the path explicitly and are
+//! the bit-identity test hooks.  Scalar and vector bodies accumulate
+//! the same i32 terms, so results are identical bit for bit.
+//!
 //! All kernels are parallelized over output rows via
 //! [`parallel_row_chunks_n`] (the fused ones via
 //! [`parallel_row_chunks_pair_n`], which splits the accumulator and the
@@ -47,6 +56,7 @@
 #![forbid(unsafe_code)]
 
 use super::im2col::ConvPlan;
+use super::simd::{self, KernelPath, TStoreElem};
 use crate::metrics::{Lut, LutTStore};
 use crate::util::{num_threads, parallel_row_chunks_n, parallel_row_chunks_pair_n};
 
@@ -175,25 +185,84 @@ pub struct PackedWeights {
     codes: Vec<u8>,
     k: usize,
     n: usize,
+    /// Pack-time histogram digest: per (panel, k-step) count of nonzero
+    /// weight codes in that k-row (`kz[p * k + kk]`, saturating at the
+    /// tile width ≤ 16 so `u8` always fits).  `kz == 0` rows contribute
+    /// only `lut_t[0, a]` terms, which are provably zero for
+    /// `zero_col_zero` tables — the vector kernels skip them.
+    kz: Vec<u8>,
+    /// Per panel: whether the histogram found at least one fully-zero
+    /// k-row, i.e. whether routing this panel down the skip-checking
+    /// vector kernel can pay at all.  Dense panels keep the unchecked
+    /// kernel (the per-k test would be pure overhead).
+    sparse: Vec<bool>,
 }
 
 impl PackedWeights {
     /// Pack a row-major `[k, n]` code matrix (the `w_t` layout the
-    /// activation-major kernel consumes directly).
+    /// activation-major kernel consumes directly), computing each
+    /// panel's weight-code histogram digest in the same pass.  The
+    /// paper's Fig. 1 weight distributions concentrate codes in a
+    /// narrow band around zero, so fully-zero k-rows — whole input
+    /// positions dead across a 16-channel tile — are the common case
+    /// this digest exists to exploit.
     pub fn pack(b: &[u8], k: usize, n: usize) -> PackedWeights {
         assert_eq!(b.len(), k * n);
         let mut codes = vec![0u8; k * n];
+        let num_panels = n.div_ceil(TILE_N);
+        let mut kz = Vec::with_capacity(num_panels * k);
+        let mut sparse = Vec::with_capacity(num_panels);
         let mut j0 = 0;
         while j0 < n {
             let tw = TILE_N.min(n - j0);
             let panel = &mut codes[j0 * k..j0 * k + k * tw];
+            let mut zero_rows = 0usize;
             for kk in 0..k {
                 let src = &b[kk * n + j0..kk * n + j0 + tw];
                 panel[kk * tw..(kk + 1) * tw].copy_from_slice(src);
+                let nz = src.iter().filter(|&&c| c != 0).count() as u8;
+                if nz == 0 {
+                    zero_rows += 1;
+                }
+                kz.push(nz);
             }
+            sparse.push(zero_rows > 0);
             j0 += tw;
         }
-        PackedWeights { codes, k, n }
+        PackedWeights {
+            codes,
+            k,
+            n,
+            kz,
+            sparse,
+        }
+    }
+
+    /// Number of [`TILE_N`]-column panels (the last may be narrower).
+    pub fn num_panels(&self) -> usize {
+        self.n.div_ceil(TILE_N)
+    }
+
+    /// Panel `p`'s per-k nonzero weight-code counts (len == k).
+    pub fn panel_kz(&self, p: usize) -> &[u8] {
+        &self.kz[p * self.k..(p + 1) * self.k]
+    }
+
+    /// Whether panel `p` routes down the weight-skip-checking kernel.
+    pub fn panel_sparse(&self, p: usize) -> bool {
+        self.sparse[p]
+    }
+
+    /// How many panels the pack-time histogram routed down the sparse
+    /// skip path (observability; see also `simd::skip_counters`).
+    pub fn sparse_panel_count(&self) -> usize {
+        self.sparse.iter().filter(|&&s| s).count()
+    }
+
+    /// Total fully-zero weight-code k-rows across all panels — the rows
+    /// the vector kernels skip outright under `zero_col_zero` tables.
+    pub fn zero_krow_count(&self) -> usize {
+        self.kz.iter().filter(|&&c| c == 0).count()
     }
 
     pub fn k(&self) -> usize {
@@ -251,86 +320,122 @@ pub fn lut_gemm_packed_n(
     m: usize,
     lut: &Lut,
 ) {
+    let path = simd::select_path(lut.transposed());
+    lut_gemm_packed_path(path, workers, a, w, acc, m, lut)
+}
+
+/// [`lut_gemm_packed_n`] with the kernel path pinned explicitly — the
+/// SIMD↔scalar bit-identity test hook (the `AXMUL_SIMD` `OnceLock` is
+/// process-wide, so tests pin paths here instead of mutating the env).
+pub fn lut_gemm_packed_path(
+    path: KernelPath,
+    workers: usize,
+    a: &[u8],
+    w: &PackedWeights,
+    acc: &mut [i32],
+    m: usize,
+    lut: &Lut,
+) {
     let (k, n) = (w.k, w.n);
     assert_eq!(a.len(), m * k);
     assert_eq!(acc.len(), m * n);
     let lt = lut.transposed();
     let skip_zero = lut.zero_row_zero;
+    let col_zero = lut.zero_col_zero;
     acc.fill(0);
     parallel_row_chunks_n(workers, acc, m, n, |row0, block| {
         for (ri, crow) in block.chunks_mut(n).enumerate() {
             let i = row0 + ri;
-            packed_row(&a[i * k..(i + 1) * k], w, lt, skip_zero, crow);
+            let arow = &a[i * k..(i + 1) * k];
+            gather_row_tiles(path, w, lt, skip_zero, col_zero, crow, |kk| arow[kk]);
         }
     });
 }
 
-/// The shared per-row body of the packed fc kernels: walk the row's
-/// output tiles, dispatching each to the store-width micro-kernel.  One
-/// definition, shared by [`lut_gemm_packed_n`] and
-/// [`lut_gemm_packed_fused_n`], so the fused and unfused kernels cannot
-/// drift apart on tiling or store dispatch.
+/// The shared per-row body of ALL packed kernels (fc, fused fc, conv):
+/// walk the row's output tiles, dispatching each to the (store width ×
+/// kernel path) micro-kernel.  One definition, so the three public
+/// kernels cannot drift apart on tiling, store dispatch or path
+/// selection.  `at(kk)` abstracts the activation source — a contiguous
+/// row read for fc, a plan-offset plane gather for conv — and
+/// monomorphizes per call site, so no dynamic dispatch reaches the hot
+/// loop.
+///
+/// The weight-side sparse skip is applied only on the vector path and
+/// only when it is provably sound (`col_zero` — i.e. `lut_t[0, a] == 0`
+/// for every `a` — and the panel's pack-time histogram found zero
+/// k-rows).  The scalar path stays byte-for-byte the pre-SIMD kernel:
+/// that is the `AXMUL_SIMD=off` contract.
 #[inline]
-fn packed_row(arow: &[u8], w: &PackedWeights, lt: &LutTStore, skip_zero: bool, crow: &mut [i32]) {
+fn gather_row_tiles(
+    path: KernelPath,
+    w: &PackedWeights,
+    lt: &LutTStore,
+    skip_zero: bool,
+    col_zero: bool,
+    crow: &mut [i32],
+    at: impl Fn(usize) -> u8 + Copy,
+) {
     let (k, n) = (w.k, w.n);
     let mut j0 = 0;
+    let mut p = 0;
     while j0 < n {
         let tw = TILE_N.min(n - j0);
         let panel = &w.codes[j0 * k..j0 * k + k * tw];
         let ctile = &mut crow[j0..j0 + tw];
-        match lt {
-            LutTStore::U16(t) => packed_row_tile_u16(arow, panel, tw, t, skip_zero, ctile),
-            LutTStore::I32(t) => packed_row_tile_i32(arow, panel, tw, t, skip_zero, ctile),
+        let wskip = match path {
+            KernelPath::Scalar => None,
+            KernelPath::Vector if col_zero && w.panel_sparse(p) => {
+                simd::note_sparse_visit();
+                Some(w.panel_kz(p))
+            }
+            KernelPath::Vector => None,
+        };
+        match (lt, path) {
+            (LutTStore::U16(t), KernelPath::Scalar) => {
+                gather_tile(k, at, panel, tw, t, skip_zero, ctile)
+            }
+            (LutTStore::I32(t), KernelPath::Scalar) => {
+                gather_tile(k, at, panel, tw, t, skip_zero, ctile)
+            }
+            (LutTStore::U16(t), KernelPath::Vector) => {
+                simd::vector_tile(k, at, panel, tw, t, skip_zero, wskip, ctile)
+            }
+            (LutTStore::I32(t), KernelPath::Vector) => {
+                simd::vector_tile(k, at, panel, tw, t, skip_zero, wskip, ctile)
+            }
         }
         j0 += tw;
+        p += 1;
     }
 }
 
-/// One (row, output-tile) micro-kernel over the narrowed u16 store: for
-/// each k, gather `lut_t[w_code * 256 + a_code]` for the tile's `tw`
-/// weight codes (sequential panel reads, ≤ tw distinct 512 B LUT rows —
-/// all fixed by the layer's static weights) into the register-resident
-/// accumulator tile.
+/// One (row, output-tile) scalar micro-kernel, generic over the store
+/// element: for each k, gather `lut_t[w_code * 256 + a_code]` for the
+/// tile's `tw` weight codes (sequential panel reads, ≤ tw distinct
+/// 512 B LUT rows — all fixed by the layer's static weights) into the
+/// register-resident accumulator tile.  Monomorphized per store width —
+/// this single definition replaces the former u16/i32 × fc/conv
+/// copy-paste quadruplet.
 #[inline]
-fn packed_row_tile_u16(
-    arow: &[u8],
+fn gather_tile<E: TStoreElem>(
+    k: usize,
+    at: impl Fn(usize) -> u8,
     panel: &[u8],
     tw: usize,
-    t: &[u16],
+    t: &[E],
     skip_zero: bool,
     out: &mut [i32],
 ) {
-    for (kk, &av) in arow.iter().enumerate() {
+    for kk in 0..k {
+        let av = at(kk);
         if skip_zero && av == 0 {
             continue;
         }
         let a = av as usize;
         let prow = &panel[kk * tw..(kk + 1) * tw];
         for (o, &wc) in out.iter_mut().zip(prow) {
-            *o += t[((wc as usize) << 8) | a] as i32;
-        }
-    }
-}
-
-/// i32-store variant of [`packed_row_tile_u16`] (tables with negative or
-/// > 16-bit products cannot narrow).
-#[inline]
-fn packed_row_tile_i32(
-    arow: &[u8],
-    panel: &[u8],
-    tw: usize,
-    t: &[i32],
-    skip_zero: bool,
-    out: &mut [i32],
-) {
-    for (kk, &av) in arow.iter().enumerate() {
-        if skip_zero && av == 0 {
-            continue;
-        }
-        let a = av as usize;
-        let prow = &panel[kk * tw..(kk + 1) * tw];
-        for (o, &wc) in out.iter_mut().zip(prow) {
-            *o += t[((wc as usize) << 8) | a];
+            *o += t[((wc as usize) << 8) | a].widen();
         }
     }
 }
@@ -364,12 +469,30 @@ pub fn lut_gemm_packed_fused_n(
     m: usize,
     lut: &Lut,
 ) {
+    let path = simd::select_path(lut.transposed());
+    lut_gemm_packed_fused_path(path, workers, a, w, acc, rowsum, m, lut)
+}
+
+/// [`lut_gemm_packed_fused_n`] with the kernel path pinned explicitly
+/// (the SIMD↔scalar bit-identity test hook).
+#[allow(clippy::too_many_arguments)]
+pub fn lut_gemm_packed_fused_path(
+    path: KernelPath,
+    workers: usize,
+    a: &[u8],
+    w: &PackedWeights,
+    acc: &mut [i32],
+    rowsum: &mut [i32],
+    m: usize,
+    lut: &Lut,
+) {
     let (k, n) = (w.k, w.n);
     assert_eq!(a.len(), m * k);
     assert_eq!(acc.len(), m * n);
     assert_eq!(rowsum.len(), m);
     let lt = lut.transposed();
     let skip_zero = lut.zero_row_zero;
+    let col_zero = lut.zero_col_zero;
     acc.fill(0);
     parallel_row_chunks_pair_n(workers, acc, rowsum, m, n, 1, |row0, block, rs| {
         for (ri, crow) in block.chunks_mut(n).enumerate() {
@@ -378,7 +501,7 @@ pub fn lut_gemm_packed_fused_n(
             // Fused row sum: same pass, codes L1-hot — the separate
             // post-GEMM sweep over the operand is gone.
             rs[ri] = arow.iter().map(|&x| x as i32).sum();
-            packed_row(arow, w, lt, skip_zero, crow);
+            gather_row_tiles(path, w, lt, skip_zero, col_zero, crow, |kk| arow[kk]);
         }
     });
 }
@@ -433,6 +556,27 @@ pub fn lut_conv_packed_n(
     rowsum: &mut [i32],
     lut: &Lut,
 ) {
+    let path = simd::select_path(lut.transposed());
+    lut_conv_packed_path(path, workers, plane, batch, plan, w, acc, rowsum, lut)
+}
+
+/// [`lut_conv_packed_n`] with the kernel path pinned explicitly (the
+/// SIMD↔scalar bit-identity test hook).  The activation source handed
+/// to the shared row body is the plan-offset plane gather
+/// `plane[base + off[kk]]` — same codes, same ascending `(c, ky, kx)`
+/// order as the scalar composition, so the path cannot change a bit.
+#[allow(clippy::too_many_arguments)]
+pub fn lut_conv_packed_path(
+    path: KernelPath,
+    workers: usize,
+    plane: &[u8],
+    batch: usize,
+    plan: &ConvPlan,
+    w: &PackedWeights,
+    acc: &mut [i32],
+    rowsum: &mut [i32],
+    lut: &Lut,
+) {
     let (k, n) = (w.k, w.n);
     let px = plan.out_pixels();
     let m = batch * px;
@@ -442,6 +586,7 @@ pub fn lut_conv_packed_n(
     assert_eq!(rowsum.len(), m);
     let lt = lut.transposed();
     let skip_zero = lut.zero_row_zero;
+    let col_zero = lut.zero_col_zero;
     let offs = plan.offsets();
     let (ow, stride, pw, plane_len) = (plan.ow(), plan.stride(), plan.pw(), plan.plane_len());
     acc.fill(0);
@@ -460,80 +605,11 @@ pub fn lut_conv_packed_n(
                 s += plane[base + off as usize] as i32;
             }
             rs[ri] = s;
-            let mut j0 = 0;
-            while j0 < n {
-                let tw = TILE_N.min(n - j0);
-                let panel = &w.codes[j0 * k..j0 * k + k * tw];
-                let ctile = &mut crow[j0..j0 + tw];
-                match lt {
-                    LutTStore::U16(t) => {
-                        conv_row_tile_u16(plane, base, offs, panel, tw, t, skip_zero, ctile)
-                    }
-                    LutTStore::I32(t) => {
-                        conv_row_tile_i32(plane, base, offs, panel, tw, t, skip_zero, ctile)
-                    }
-                }
-                j0 += tw;
-            }
+            gather_row_tiles(path, w, lt, skip_zero, col_zero, crow, |kk| {
+                plane[base + offs[kk] as usize]
+            });
         }
     });
-}
-
-/// One (output-pixel, output-tile) micro-kernel of the implicit conv:
-/// like [`packed_row_tile_u16`] but the activation codes come from a
-/// plan-offset gather on the code plane instead of a contiguous row.
-/// Strictly ascending `kk` keeps the i32 accumulation order identical to
-/// the explicit composition.
-#[allow(clippy::too_many_arguments)]
-#[inline]
-fn conv_row_tile_u16(
-    plane: &[u8],
-    base: usize,
-    offs: &[u32],
-    panel: &[u8],
-    tw: usize,
-    t: &[u16],
-    skip_zero: bool,
-    out: &mut [i32],
-) {
-    for (kk, &off) in offs.iter().enumerate() {
-        let av = plane[base + off as usize];
-        if skip_zero && av == 0 {
-            continue;
-        }
-        let a = av as usize;
-        let prow = &panel[kk * tw..(kk + 1) * tw];
-        for (o, &wc) in out.iter_mut().zip(prow) {
-            *o += t[((wc as usize) << 8) | a] as i32;
-        }
-    }
-}
-
-/// i32-store variant of [`conv_row_tile_u16`] (tables with negative or
-/// > 16-bit products cannot narrow).
-#[allow(clippy::too_many_arguments)]
-#[inline]
-fn conv_row_tile_i32(
-    plane: &[u8],
-    base: usize,
-    offs: &[u32],
-    panel: &[u8],
-    tw: usize,
-    t: &[i32],
-    skip_zero: bool,
-    out: &mut [i32],
-) {
-    for (kk, &off) in offs.iter().enumerate() {
-        let av = plane[base + off as usize];
-        if skip_zero && av == 0 {
-            continue;
-        }
-        let a = av as usize;
-        let prow = &panel[kk * tw..(kk + 1) * tw];
-        for (o, &wc) in out.iter_mut().zip(prow) {
-            *o += t[((wc as usize) << 8) | a];
-        }
-    }
 }
 
 /// Row sums of the u8 code matrix (needed for zero-point correction).
@@ -869,6 +945,139 @@ mod tests {
         let (clean_want, _) =
             conv_reference(&xs, batch, (c, h, w), (k, stride, pad), &wcodes, n, &clean);
         assert_ne!(acc, clean_want, "doctored row 0 must be visible");
+    }
+
+    #[test]
+    fn pack_histogram_digest_per_panel() {
+        // n = 20 → one full panel + one 4-wide tail.  k-row 1 is zero
+        // across ALL columns, k-row 2 is zero only in the tail panel.
+        let (k, n) = (4usize, 20usize);
+        let mut b = vec![1u8; k * n];
+        for j in 0..n {
+            b[n + j] = 0; // k-row 1: dead everywhere
+        }
+        for j in 16..n {
+            b[2 * n + j] = 0; // k-row 2: dead in the tail panel only
+        }
+        let pw = PackedWeights::pack(&b, k, n);
+        assert_eq!(pw.num_panels(), 2);
+        assert_eq!(pw.panel_kz(0), &[16, 0, 16, 16]);
+        assert_eq!(pw.panel_kz(1), &[4, 0, 0, 4]);
+        assert!(pw.panel_sparse(0) && pw.panel_sparse(1));
+        assert_eq!(pw.sparse_panel_count(), 2);
+        assert_eq!(pw.zero_krow_count(), 3);
+        // A panel with no dead k-rows must stay on the unchecked kernel.
+        let dense = PackedWeights::pack(&[3u8; 48], 6, 8);
+        assert_eq!(dense.sparse_panel_count(), 0);
+        assert_eq!(dense.zero_krow_count(), 0);
+    }
+
+    #[test]
+    fn forced_paths_bit_identical_u16_store() {
+        // Vector vs Scalar over the exact u16 store, with sparse weight
+        // columns so the zero_col_zero skip actually fires, across the
+        // M=1 serial clamp, tile tails and worker bases.
+        let lut = Lut::build(&ExactMul::new(8, 8));
+        assert!(lut.zero_col_zero);
+        let mut rng = Pcg32::new(29);
+        for (m, k, n) in [(1usize, 400usize, 120usize), (7, 13, 5), (5, 31, 17), (67, 9, 3)] {
+            let a: Vec<u8> = (0..m * k).map(|_| rng.gen_range(256) as u8).collect();
+            // mostly-zero weights: dead k-rows are common, as in Fig. 1
+            let b: Vec<u8> = (0..k * n)
+                .map(|_| {
+                    if rng.gen_range(4) == 0 {
+                        rng.gen_range(256) as u8
+                    } else {
+                        0
+                    }
+                })
+                .collect();
+            let pw = PackedWeights::pack(&b, k, n);
+            for workers in [1usize, 2, 16] {
+                let mut scalar = vec![-1i32; m * n];
+                lut_gemm_packed_path(KernelPath::Scalar, workers, &a, &pw, &mut scalar, m, &lut);
+                let mut vector = vec![-1i32; m * n];
+                lut_gemm_packed_path(KernelPath::Vector, workers, &a, &pw, &mut vector, m, &lut);
+                assert_eq!(vector, scalar, "m={m} k={k} n={n} workers={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn forced_vector_path_i32_store_nonzero_row0() {
+        // The i32 fallback store with a doctored nonzero row 0 AND
+        // nonzero column 0: neither skip may fire, and the vector path
+        // must still match the scalar one bit for bit.
+        let mut table = vec![0i32; 65536];
+        for a in 0..256usize {
+            for b in 0..256usize {
+                table[(a << 8) | b] = (a * b) as i32;
+            }
+        }
+        for b in 0..256usize {
+            table[b] = b as i32 - 7; // row 0 nonzero → i32 store
+        }
+        for a in 0..256usize {
+            table[a << 8] = 3 - a as i32; // column 0 nonzero too
+        }
+        let noisy = Lut::from_table("noisy", table);
+        assert!(!noisy.zero_row_zero && !noisy.zero_col_zero);
+        let mut rng = Pcg32::new(31);
+        let (m, k, n) = (6usize, 21usize, 37usize);
+        let a: Vec<u8> = (0..m * k).map(|_| rng.gen_range(256) as u8).collect();
+        let b: Vec<u8> = (0..k * n)
+            .map(|_| {
+                if rng.gen_range(3) == 0 {
+                    0
+                } else {
+                    rng.gen_range(256) as u8
+                }
+            })
+            .collect();
+        let pw = PackedWeights::pack(&b, k, n);
+        let mut scalar = vec![0i32; m * n];
+        lut_gemm_packed_path(KernelPath::Scalar, 2, &a, &pw, &mut scalar, m, &noisy);
+        let mut vector = vec![0i32; m * n];
+        lut_gemm_packed_path(KernelPath::Vector, 2, &a, &pw, &mut vector, m, &noisy);
+        assert_eq!(vector, scalar);
+        // And against the ground truth.
+        for i in 0..m {
+            for j in 0..n {
+                let want: i32 = (0..k).map(|kk| noisy.mul(a[i * k + kk], b[kk * n + j])).sum();
+                assert_eq!(scalar[i * n + j], want, "({i},{j})");
+            }
+        }
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    fn sparse_skip_counters_observe_vector_skips() {
+        use crate::dnn::simd::skip_counters;
+        let lut = Lut::build(&ExactMul::new(8, 8));
+        let (m, k, n) = (3usize, 8usize, 16usize);
+        let a = vec![5u8; m * k];
+        let mut b = vec![7u8; k * n];
+        for j in 0..n {
+            b[3 * n + j] = 0; // one dead k-row → panel is sparse
+        }
+        let pw = PackedWeights::pack(&b, k, n);
+        assert_eq!(pw.sparse_panel_count(), 1);
+        let mut acc = vec![0i32; m * n];
+        // Counters are process-wide and tests run concurrently, so only
+        // assert on deltas each path is guaranteed to produce (>= for
+        // vector, exact equality is impossible to isolate here).
+        let before = skip_counters();
+        lut_gemm_packed_path(KernelPath::Vector, 1, &a, &pw, &mut acc, m, &lut);
+        let after = skip_counters();
+        assert!(
+            after.sparse_panel_visits >= before.sparse_panel_visits + m as u64,
+            "one sparse-panel visit per row"
+        );
+        assert!(
+            after.skipped_krows >= before.skipped_krows + m as u64,
+            "the dead k-row is skipped in every row"
+        );
+        assert!(after.skipped_lanes >= before.skipped_lanes + (m * TILE_N) as u64);
     }
 
     #[test]

@@ -7,14 +7,19 @@ pub mod gemm;
 pub mod im2col;
 pub mod qnet;
 pub mod quant;
+pub mod simd;
 pub mod spec;
 pub mod tensor;
 
 pub use float_net::FloatNet;
 pub use gemm::{
-    gemm_f32, lut_conv_packed, lut_conv_packed_n, lut_gemm, lut_gemm_packed,
-    lut_gemm_packed_fused, lut_gemm_packed_fused_n, lut_gemm_packed_n, row_sums_into,
-    PackedWeights, TILE_N,
+    gemm_f32, lut_conv_packed, lut_conv_packed_n, lut_conv_packed_path, lut_gemm,
+    lut_gemm_packed, lut_gemm_packed_fused, lut_gemm_packed_fused_n, lut_gemm_packed_fused_path,
+    lut_gemm_packed_n, lut_gemm_packed_path, row_sums_into, PackedWeights, TILE_N,
+};
+pub use simd::{
+    parse_simd, reset_skip_counters, select_path, select_path_with, simd_backend, simd_compiled,
+    simd_lanes, simd_mode, skip_counters, KernelPath, SimdMode, SkipCounters,
 };
 pub use im2col::{conv_out_dims, im2col_u8_batch_into, pad_plane_batch_into, ConvPlan};
 pub use qnet::{argmax, QNet};

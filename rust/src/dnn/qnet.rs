@@ -591,6 +591,24 @@ impl QNet {
         h
     }
 
+    /// Pack-time sparse-skip routing summary across all layers:
+    /// `(total_panels, sparse_panels, zero_krows)` — how many weight
+    /// panels the vector kernels route down the skip-checking path and
+    /// how many fully-zero weight-code k-rows they can elide.  The
+    /// static counterpart of `simd::skip_counters` (which counts what
+    /// the kernels actually skipped at run time, debug builds only).
+    pub fn sparse_panel_stats(&self) -> (usize, usize, usize) {
+        let mut total = 0;
+        let mut sparse = 0;
+        let mut zero_krows = 0;
+        for l in &self.layers {
+            total += l.packed.num_panels();
+            sparse += l.packed.sparse_panel_count();
+            zero_krows += l.packed.zero_krow_count();
+        }
+        (total, sparse, zero_krows)
+    }
+
     /// Fraction of weight codes inside [lo, hi] (co-opt contract checks).
     pub fn weight_band_fraction(&self, lo: u8, hi: u8) -> f64 {
         let h = self.weight_code_histogram();
@@ -952,6 +970,25 @@ mod tests {
             .sum();
         assert_eq!(total, expected);
         assert!(qnet.weight_band_fraction(0, 255) > 0.999);
+    }
+
+    #[test]
+    fn sparse_panel_stats_totals_match_layers() {
+        let shape = (1, 28, 28);
+        let fnet = toy_fnet("lenet", shape, 1);
+        let qnet = QNet::quantize(&fnet, &vec![0.5; 784], 1, 8.0);
+        let (total, sparse, zero_krows) = qnet.sparse_panel_stats();
+        let expected: usize = qnet.layers.iter().map(|l| l.packed.num_panels()).sum();
+        assert_eq!(total, expected);
+        assert!(total > 0);
+        // A sparse panel needs >= 1 fully-zero k-row, and each such row
+        // is counted at most k times across a panel's rows.
+        assert!(sparse <= total);
+        if zero_krows == 0 {
+            assert_eq!(sparse, 0, "no zero k-rows but sparse panels");
+        } else {
+            assert!(sparse > 0, "zero k-rows but no sparse panels");
+        }
     }
 
     #[test]

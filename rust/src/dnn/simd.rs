@@ -1,0 +1,478 @@
+//! The vector LUT-gather path and its runtime dispatch.
+//!
+//! The packed kernels' inner loop is 16 independent gathers into a
+//! [`LutTStore`] row followed by 16 independent i32 adds — exactly the
+//! shape SIMD gather hardware wants.  This module provides:
+//!
+//! * **Dispatch** — `AXMUL_SIMD=auto|off|force`, parsed once into a
+//!   `OnceLock` (mirroring `AXMUL_THREADS`), selecting a [`KernelPath`]
+//!   per [`LutTStore`] variant.  `off` restores the exact scalar code
+//!   path byte for byte; `auto` (the default) vectorizes the narrowed
+//!   `U16` store and keeps the rare `I32` fallback tables scalar;
+//!   `force` vectorizes both.  The pure functions ([`parse_simd`],
+//!   [`select_path_with`]) are the testable surface, exactly like
+//!   `parse_threads` / `num_threads`.
+//! * **The vector tile kernel** ([`vector_tile`]) — with the `simd`
+//!   cargo feature (nightly portable-simd) a full [`TILE_N`] tile is one
+//!   `Simd<i32, 16>` register accumulator fed by 16-lane
+//!   `gather_or_default`s; without the feature a swizzle-free fallback
+//!   keeps the accumulator in a fixed-size local `[i32; 16]` with a
+//!   constant-trip inner loop the stable autovectorizer unrolls.  Either
+//!   way the accumulator tile stays register-resident across the whole k
+//!   loop and the ≤ 16 distinct 512 B LUT rows per tile (fixed by the
+//!   layer's static weight codes) stay L1-resident — the k-blocking that
+//!   makes the gathers cheap.
+//! * **The weight-side sparse skip** — panels whose pack-time histogram
+//!   found fully-zero weight-code k-rows (the paper's Fig. 1 band
+//!   concentration makes these common) pass a per-k nonzero count and
+//!   the kernel skips `kz[kk] == 0` rows outright.  Sound only when
+//!   column 0 of the canonical table is all zeros
+//!   (`Lut::zero_col_zero`, the weight-side mirror of `zero_row_zero`):
+//!   every skipped term is then provably 0, so bit-identity with the
+//!   scalar path is preserved.
+//!
+//! Accumulation remains plain i32 addition over the same set of nonzero
+//! terms, in k order per output element for the scalar/fallback kernel
+//! and in the same k order per lane for the gather kernel — i32 addition
+//! is associative and commutative and cannot overflow here, so every
+//! path produces identical bits (property-tested across all designs,
+//! both store widths and all worker counts).
+
+#![forbid(unsafe_code)]
+
+use crate::metrics::LutTStore;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+use super::gemm::TILE_N;
+
+/// `AXMUL_SIMD` dispatch mode (see [`parse_simd`] for the spellings).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdMode {
+    /// Vectorize the `U16` store, keep `I32` fallback tables scalar.
+    Auto,
+    /// Scalar everywhere — the pre-SIMD code path, byte for byte.
+    Off,
+    /// Vectorize both store widths (benchmarking the i32 gather path).
+    Force,
+}
+
+impl SimdMode {
+    /// Canonical spelling, as recorded in bench provenance.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SimdMode::Auto => "auto",
+            SimdMode::Off => "off",
+            SimdMode::Force => "force",
+        }
+    }
+}
+
+/// Which kernel body a packed GEMM call runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelPath {
+    /// The original gather-per-(row, tile, k) scalar micro-kernel.
+    Scalar,
+    /// The [`vector_tile`] kernel (portable-simd or the stable
+    /// fixed-width fallback, depending on the `simd` cargo feature).
+    Vector,
+}
+
+/// Parse an `AXMUL_SIMD` value.  `off`/`0`/`scalar`/`false` force the
+/// scalar path, `force`/`on`/`1` force the vector path, anything else
+/// (including unset) is [`SimdMode::Auto`].  Pure function so the
+/// parsing rules are unit-testable without touching process state.
+pub fn parse_simd(var: Option<&str>) -> SimdMode {
+    match var.map(|v| v.trim().to_ascii_lowercase()).as_deref() {
+        Some("off") | Some("0") | Some("scalar") | Some("false") => SimdMode::Off,
+        Some("force") | Some("on") | Some("1") => SimdMode::Force,
+        _ => SimdMode::Auto,
+    }
+}
+
+/// The process-wide dispatch mode, parsed from `AXMUL_SIMD` exactly once
+/// (mirroring `num_threads` / `AXMUL_THREADS`).  `Session::new` warms
+/// this alongside the transposed stores so serving never races the
+/// first parse.
+pub fn simd_mode() -> SimdMode {
+    static MODE: OnceLock<SimdMode> = OnceLock::new();
+    *MODE.get_or_init(|| parse_simd(std::env::var("AXMUL_SIMD").ok().as_deref()))
+}
+
+/// Dispatch rule as a pure function of (mode, store) — the testable
+/// core of [`select_path`].
+pub fn select_path_with(mode: SimdMode, store: &LutTStore) -> KernelPath {
+    match mode {
+        SimdMode::Off => KernelPath::Scalar,
+        SimdMode::Force => KernelPath::Vector,
+        SimdMode::Auto => match store {
+            LutTStore::U16(_) => KernelPath::Vector,
+            LutTStore::I32(_) => KernelPath::Scalar,
+        },
+    }
+}
+
+/// The path the production packed kernels take for `store` under the
+/// process-wide [`simd_mode`].
+pub fn select_path(store: &LutTStore) -> KernelPath {
+    select_path_with(simd_mode(), store)
+}
+
+/// Whether this build carries the nightly portable-simd kernel (the
+/// `simd` cargo feature) or the stable fixed-width fallback.
+pub fn simd_compiled() -> bool {
+    cfg!(feature = "simd")
+}
+
+/// Backend name for bench provenance.
+pub fn simd_backend() -> &'static str {
+    if cfg!(feature = "simd") {
+        "portable-simd"
+    } else {
+        "kblock-autovec"
+    }
+}
+
+/// Gather lanes per activation-code step — both vector backends process
+/// the full [`TILE_N`]-wide accumulator tile per step.
+pub fn simd_lanes() -> usize {
+    TILE_N
+}
+
+/// An element of a [`LutTStore`] backing slice.  Monomorphizes the
+/// gather kernels over the two store widths — no dyn dispatch anywhere
+/// on the hot path.
+pub trait TStoreElem: Copy + Default + Send + Sync + 'static {
+    /// Widen one gathered entry to the i32 accumulator domain.
+    fn widen(self) -> i32;
+
+    /// Gather 16 entries and widen them to the accumulator domain
+    /// (portable-simd builds only; every index is structurally
+    /// `< 65536 == t.len()`).
+    #[cfg(feature = "simd")]
+    fn gather16(t: &[Self], idx: std::simd::Simd<usize, 16>) -> std::simd::Simd<i32, 16>;
+}
+
+impl TStoreElem for u16 {
+    #[inline(always)]
+    fn widen(self) -> i32 {
+        self as i32
+    }
+
+    #[cfg(feature = "simd")]
+    #[inline(always)]
+    fn gather16(t: &[u16], idx: std::simd::Simd<usize, 16>) -> std::simd::Simd<i32, 16> {
+        std::simd::Simd::gather_or_default(t, idx).cast::<i32>()
+    }
+}
+
+impl TStoreElem for i32 {
+    #[inline(always)]
+    fn widen(self) -> i32 {
+        self
+    }
+
+    #[cfg(feature = "simd")]
+    #[inline(always)]
+    fn gather16(t: &[i32], idx: std::simd::Simd<usize, 16>) -> std::simd::Simd<i32, 16> {
+        std::simd::Simd::gather_or_default(t, idx)
+    }
+}
+
+/// One (row, output-tile) vector micro-kernel: the [`KernelPath::Vector`]
+/// counterpart of the scalar gather tile.  Full-width tiles take the
+/// 16-lane kernel; tail tiles (`tw < TILE_N`, at most one per row) fall
+/// back to the scalar loop — but still honor the weight-side skip.
+///
+/// `at(kk)` yields the activation code for step `kk` (a contiguous row
+/// read for fc, a plan-offset plane gather for conv).  `wskip`, when
+/// present, is the panel's per-k nonzero weight-code count from the
+/// pack-time histogram; `wskip[kk] == 0` rows contribute only
+/// `lut_t[0, a]` terms, which the caller has already proven zero
+/// (`zero_col_zero`), so they are skipped without touching the store.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub(crate) fn vector_tile<E: TStoreElem>(
+    k: usize,
+    at: impl Fn(usize) -> u8 + Copy,
+    panel: &[u8],
+    tw: usize,
+    t: &[E],
+    skip_zero: bool,
+    wskip: Option<&[u8]>,
+    out: &mut [i32],
+) {
+    if tw == TILE_N {
+        tile16(k, at, panel, t, skip_zero, wskip, out);
+        return;
+    }
+    for kk in 0..k {
+        let av = at(kk);
+        if skip_zero && av == 0 {
+            continue;
+        }
+        if let Some(kz) = wskip {
+            if kz[kk] == 0 {
+                note_krow_skip(tw);
+                continue;
+            }
+        }
+        let a = av as usize;
+        let prow = &panel[kk * tw..(kk + 1) * tw];
+        for (o, &wc) in out.iter_mut().zip(prow) {
+            *o += t[((wc as usize) << 8) | a].widen();
+        }
+    }
+}
+
+/// Full-width tile kernel, portable-simd backend: one `Simd<i32, 16>`
+/// accumulator lives in a register across the entire k loop; each
+/// non-skipped step builds a 16-lane index vector from the sequential
+/// panel row and gathers all 16 products at once.  Per-lane addition
+/// order over the surviving k steps matches the scalar kernel exactly.
+#[cfg(feature = "simd")]
+#[inline]
+fn tile16<E: TStoreElem>(
+    k: usize,
+    at: impl Fn(usize) -> u8 + Copy,
+    panel: &[u8],
+    t: &[E],
+    skip_zero: bool,
+    wskip: Option<&[u8]>,
+    out: &mut [i32],
+) {
+    use std::simd::Simd;
+    debug_assert_eq!(out.len(), TILE_N);
+    let mut acc = Simd::<i32, 16>::from_slice(out);
+    for kk in 0..k {
+        let av = at(kk);
+        if skip_zero && av == 0 {
+            continue;
+        }
+        if let Some(kz) = wskip {
+            if kz[kk] == 0 {
+                note_krow_skip(TILE_N);
+                continue;
+            }
+        }
+        let a = av as usize;
+        let prow = &panel[kk * TILE_N..(kk + 1) * TILE_N];
+        let idx =
+            Simd::<usize, 16>::from_array(std::array::from_fn(|j| ((prow[j] as usize) << 8) | a));
+        acc += E::gather16(t, idx);
+    }
+    out.copy_from_slice(acc.as_array());
+}
+
+/// Full-width tile kernel, stable fallback backend: swizzle-free —
+/// the accumulator is a local `[i32; 16]` and the inner loop has a
+/// constant trip count of [`TILE_N`], which is what the stable
+/// autovectorizer needs to keep the tile in vector registers.  Same
+/// per-element accumulation order as the scalar kernel.
+#[cfg(not(feature = "simd"))]
+#[inline]
+fn tile16<E: TStoreElem>(
+    k: usize,
+    at: impl Fn(usize) -> u8 + Copy,
+    panel: &[u8],
+    t: &[E],
+    skip_zero: bool,
+    wskip: Option<&[u8]>,
+    out: &mut [i32],
+) {
+    debug_assert_eq!(out.len(), TILE_N);
+    let mut acc = [0i32; TILE_N];
+    acc.copy_from_slice(out);
+    for kk in 0..k {
+        let av = at(kk);
+        if skip_zero && av == 0 {
+            continue;
+        }
+        if let Some(kz) = wskip {
+            if kz[kk] == 0 {
+                note_krow_skip(TILE_N);
+                continue;
+            }
+        }
+        let a = av as usize;
+        let prow = &panel[kk * TILE_N..(kk + 1) * TILE_N];
+        for (slot, &wc) in acc.iter_mut().zip(prow) {
+            *slot += t[((wc as usize) << 8) | a].widen();
+        }
+    }
+    out.copy_from_slice(&acc);
+}
+
+// ---------------------------------------------------------------------
+// Sparse-skip accounting (debug builds only, like LutCache hit/miss):
+// makes the weight-histogram split's benefit observable instead of
+// assumed.  Release builds compile the `note_*` helpers to nothing.
+// ---------------------------------------------------------------------
+
+static SPARSE_PANEL_VISITS: AtomicU64 = AtomicU64::new(0);
+static SKIPPED_KROWS: AtomicU64 = AtomicU64::new(0);
+static SKIPPED_LANES: AtomicU64 = AtomicU64::new(0);
+
+/// Snapshot of the process-wide sparse-skip counters (debug builds
+/// accumulate; release builds always read zeros).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SkipCounters {
+    /// (row, tile) visits that took the weight-skip-checking kernel.
+    pub sparse_panel_visits: u64,
+    /// k-rows skipped because every weight code in the row was 0.
+    pub skipped_krows: u64,
+    /// Individual gather+add lanes those skips avoided.
+    pub skipped_lanes: u64,
+}
+
+pub fn skip_counters() -> SkipCounters {
+    SkipCounters {
+        sparse_panel_visits: SPARSE_PANEL_VISITS.load(Ordering::Relaxed),
+        skipped_krows: SKIPPED_KROWS.load(Ordering::Relaxed),
+        skipped_lanes: SKIPPED_LANES.load(Ordering::Relaxed),
+    }
+}
+
+pub fn reset_skip_counters() {
+    SPARSE_PANEL_VISITS.store(0, Ordering::Relaxed);
+    SKIPPED_KROWS.store(0, Ordering::Relaxed);
+    SKIPPED_LANES.store(0, Ordering::Relaxed);
+}
+
+#[inline(always)]
+pub(crate) fn note_sparse_visit() {
+    #[cfg(debug_assertions)]
+    SPARSE_PANEL_VISITS.fetch_add(1, Ordering::Relaxed);
+}
+
+#[inline(always)]
+pub(crate) fn note_krow_skip(_lanes: usize) {
+    #[cfg(debug_assertions)]
+    {
+        SKIPPED_KROWS.fetch_add(1, Ordering::Relaxed);
+        SKIPPED_LANES.fetch_add(_lanes as u64, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn u16_store() -> Vec<u16> {
+        // t[(b << 8) | a] = a * b, the exact transposed store shape.
+        let mut t = vec![0u16; 65536];
+        for b in 0..256usize {
+            for a in 0..256usize {
+                t[(b << 8) | a] = (a * b).min(u16::MAX as usize) as u16;
+            }
+        }
+        t
+    }
+
+    #[test]
+    fn parse_simd_spellings() {
+        assert_eq!(parse_simd(None), SimdMode::Auto);
+        assert_eq!(parse_simd(Some("")), SimdMode::Auto);
+        assert_eq!(parse_simd(Some("auto")), SimdMode::Auto);
+        assert_eq!(parse_simd(Some("garbage")), SimdMode::Auto);
+        for off in ["off", "OFF", " off ", "0", "scalar", "false"] {
+            assert_eq!(parse_simd(Some(off)), SimdMode::Off, "{off:?}");
+        }
+        for force in ["force", "Force", "on", "1"] {
+            assert_eq!(parse_simd(Some(force)), SimdMode::Force, "{force:?}");
+        }
+    }
+
+    #[test]
+    fn dispatch_rules() {
+        let u16s = LutTStore::U16(vec![0u16; 65536]);
+        let i32s = LutTStore::I32(vec![0i32; 65536]);
+        // off forces scalar everywhere — the escape hatch contract.
+        assert_eq!(select_path_with(SimdMode::Off, &u16s), KernelPath::Scalar);
+        assert_eq!(select_path_with(SimdMode::Off, &i32s), KernelPath::Scalar);
+        // auto vectorizes the narrow store, keeps the fallback scalar.
+        assert_eq!(select_path_with(SimdMode::Auto, &u16s), KernelPath::Vector);
+        assert_eq!(select_path_with(SimdMode::Auto, &i32s), KernelPath::Scalar);
+        // force vectorizes both.
+        assert_eq!(select_path_with(SimdMode::Force, &u16s), KernelPath::Vector);
+        assert_eq!(select_path_with(SimdMode::Force, &i32s), KernelPath::Vector);
+    }
+
+    #[test]
+    fn mode_spellings_roundtrip() {
+        for m in [SimdMode::Auto, SimdMode::Off, SimdMode::Force] {
+            assert_eq!(parse_simd(Some(m.as_str())), m);
+        }
+    }
+
+    #[test]
+    fn vector_tile_matches_scalar_reference() {
+        let t = u16_store();
+        let k = 23usize;
+        let arow: Vec<u8> = (0..k).map(|i| ((i * 37 + 5) % 256) as u8).collect();
+        for tw in [TILE_N, 5] {
+            let panel: Vec<u8> = (0..k * tw).map(|i| ((i * 11 + 3) % 256) as u8).collect();
+            let mut want = vec![0i32; tw];
+            for kk in 0..k {
+                let a = arow[kk] as usize;
+                for j in 0..tw {
+                    want[j] += t[((panel[kk * tw + j] as usize) << 8) | a] as i32;
+                }
+            }
+            let mut got = vec![0i32; tw];
+            vector_tile(k, |kk| arow[kk], &panel, tw, &t, true, None, &mut got);
+            assert_eq!(got, want, "tw={tw}");
+        }
+    }
+
+    #[test]
+    fn vector_tile_weight_skip_only_drops_zero_krows() {
+        // kz marks two k-rows as all-zero weight codes; with a store
+        // whose column 0 is zero (a*0 = 0) skipping them must not change
+        // a single bit.
+        let t = u16_store();
+        let k = 9usize;
+        let arow: Vec<u8> = (0..k).map(|i| (i as u8).wrapping_mul(29).max(1)).collect();
+        let mut panel = vec![0u8; k * TILE_N];
+        let mut kz = vec![0u8; k];
+        for kk in 0..k {
+            if kk == 2 || kk == 6 {
+                continue; // rows 2 and 6 stay all-zero
+            }
+            for j in 0..TILE_N {
+                panel[kk * TILE_N + j] = ((kk * 31 + j * 7 + 1) % 256) as u8;
+            }
+            kz[kk] = panel[kk * TILE_N..(kk + 1) * TILE_N]
+                .iter()
+                .filter(|&&c| c != 0)
+                .count() as u8;
+        }
+        let mut want = vec![0i32; TILE_N];
+        vector_tile(k, |kk| arow[kk], &panel, TILE_N, &t, true, None, &mut want);
+        let mut got = vec![0i32; TILE_N];
+        vector_tile(
+            k,
+            |kk| arow[kk],
+            &panel,
+            TILE_N,
+            &t,
+            true,
+            Some(&kz),
+            &mut got,
+        );
+        assert_eq!(got, want);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    fn skip_counters_observe_krow_skips() {
+        let before = skip_counters();
+        note_sparse_visit();
+        note_krow_skip(TILE_N);
+        note_krow_skip(5);
+        let after = skip_counters();
+        assert_eq!(after.sparse_panel_visits - before.sparse_panel_visits, 1);
+        assert_eq!(after.skipped_krows - before.skipped_krows, 2);
+        assert_eq!(after.skipped_lanes - before.skipped_lanes, TILE_N as u64 + 5);
+    }
+}

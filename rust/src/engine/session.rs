@@ -58,6 +58,10 @@ impl Session {
         // first request runs the same allocation profile as its
         // thousandth.)
         lut.transposed();
+        // Warm the AXMUL_SIMD dispatch OnceLock too: kernel-path
+        // selection is resolved config, decided at registration like the
+        // thread count, never re-read from the environment mid-serve.
+        crate::dnn::simd::simd_mode();
         Session { key, qnet, lut }
     }
 

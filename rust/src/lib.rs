@@ -1,3 +1,7 @@
+// Nightly portable-simd for the vector LUT-gather kernels; stable
+// builds get a swizzle-free autovectorized fallback (see dnn::simd).
+#![cfg_attr(feature = "simd", feature(portable_simd))]
+
 //! # axmul — approximate-multiplier hardware/software co-design
 //!
 //! Reproduction of Lu et al., *"Low Error-Rate Approximate Multiplier

@@ -60,6 +60,14 @@ pub struct Lut {
     /// Lets the GEMM hot path skip zero activation codes — post-ReLU
     /// activations are heavily sparse, so this is a large win.
     pub zero_row_zero: bool,
+    /// True iff *column* 0 is all zeros (`table[a*256] == 0` for every
+    /// `a`, i.e. a·0 = 0) — equivalently, row 0 of the transposed store.
+    /// The weight-side mirror of `zero_row_zero`: it makes skipping
+    /// fully-zero weight-code k-rows sound in the vector kernels.
+    /// Derived in `from_table`; tests that doctor a cloned `table` in
+    /// place must keep BOTH flags in sync, exactly as for
+    /// `zero_row_zero`.
+    pub zero_col_zero: bool,
     /// Lazily built transposed store (see the module docs).  Built at
     /// most once per `Lut`; since production code shares tables through
     /// `LutCache`'s `Arc<Lut>`, that is once per design per process.
@@ -78,6 +86,7 @@ impl Clone for Lut {
             name: self.name.clone(),
             table: self.table.clone(),
             zero_row_zero: self.zero_row_zero,
+            zero_col_zero: self.zero_col_zero,
             transposed: OnceLock::new(),
         }
     }
@@ -88,6 +97,7 @@ impl PartialEq for Lut {
         self.name == other.name
             && self.table == other.table
             && self.zero_row_zero == other.zero_row_zero
+            && self.zero_col_zero == other.zero_col_zero
     }
 }
 
@@ -114,10 +124,12 @@ impl Lut {
     pub fn from_table(name: &str, table: Vec<i32>) -> Lut {
         assert_eq!(table.len(), 65536, "LUT tables are 256x256");
         let zero_row_zero = table[..256].iter().all(|&v| v == 0);
+        let zero_col_zero = table.iter().step_by(256).all(|&v| v == 0);
         Lut {
             name: name.to_string(),
             table,
             zero_row_zero,
+            zero_col_zero,
             transposed: OnceLock::new(),
         }
     }
@@ -265,6 +277,7 @@ mod tests {
         let mut doctored = lut.clone();
         doctored.table[0] = -1;
         doctored.zero_row_zero = false;
+        doctored.zero_col_zero = false; // entry (0,0) sits in both
         assert_eq!(doctored.transposed().get(0, 0), -1, "rebuilt, not stale");
         assert!(matches!(doctored.transposed(), LutTStore::I32(_)));
     }
@@ -277,5 +290,26 @@ mod tests {
         t[5] = 1; // row 0, b = 5
         let nz = Lut::from_table("nz", t);
         assert!(!nz.zero_row_zero);
+    }
+
+    #[test]
+    fn from_table_derives_zero_col_flag() {
+        // Exact multiplier: a·0 = 0 for every a, so column 0 is zero
+        // even though most of the table is not.
+        let exact = Lut::build(&ExactMul::new(8, 8));
+        assert!(exact.zero_col_zero);
+        // A single nonzero entry in column 0 (a = 5, b = 0) clears the
+        // flag without touching row 0.
+        let mut t = exact.table.clone();
+        t[5 << 8] = 1;
+        let nz = Lut::from_table("col0", t);
+        assert!(!nz.zero_col_zero);
+        assert!(nz.zero_row_zero);
+        // And the flags are independent in the other direction too.
+        let mut t = exact.table.clone();
+        t[5] = 1; // row 0, b = 5
+        let nz = Lut::from_table("row0", t);
+        assert!(!nz.zero_row_zero);
+        assert!(nz.zero_col_zero);
     }
 }

@@ -170,16 +170,18 @@ impl Bencher {
         &self.results
     }
 
-    /// Machine-readable dump of everything benchmarked so far: a JSON
-    /// array of objects with `name`, `ns_per_iter` (the median),
-    /// `mean_ns`, `p95_ns`, `iters`, and `elems_per_s` when a throughput
-    /// denominator was given.  This is the perf-trajectory artifact
-    /// (`BENCH_table8.json`) future PRs diff against — text reports
-    /// don't survive CI, JSON artifacts do.
+    /// Machine-readable dump of everything benchmarked so far: an object
+    /// with a `meta` block (git SHA, thread count, SIMD mode/backend/
+    /// lanes — the provenance a number is meaningless without) and a
+    /// `results` array of objects with `name`, `ns_per_iter` (the
+    /// median), `mean_ns`, `p95_ns`, `iters`, and `elems_per_s` when a
+    /// throughput denominator was given.  This is the perf-trajectory
+    /// artifact (`BENCH_table8.json`) future PRs diff against — text
+    /// reports don't survive CI, committed JSON does.
     pub fn write_json(&self, path: &std::path::Path) -> std::io::Result<()> {
         use super::json::Json;
         use std::collections::BTreeMap;
-        let arr = Json::Arr(
+        let results = Json::Arr(
             self.results
                 .iter()
                 .map(|r| {
@@ -202,8 +204,43 @@ impl Bencher {
                 })
                 .collect(),
         );
-        std::fs::write(path, arr.to_string())
+        let simd = crate::dnn::simd::simd_mode().as_str().to_string();
+        let backend = crate::dnn::simd::simd_backend().to_string();
+        let lanes = crate::dnn::simd::simd_lanes() as f64;
+        let threads = crate::util::num_threads() as f64;
+        let mut meta = BTreeMap::new();
+        meta.insert("git_sha".to_string(), Json::Str(git_sha()));
+        meta.insert("axmul_threads".to_string(), Json::Num(threads));
+        meta.insert("axmul_simd".to_string(), Json::Str(simd));
+        meta.insert("simd_backend".to_string(), Json::Str(backend));
+        meta.insert("simd_lanes".to_string(), Json::Num(lanes));
+        let mut top = BTreeMap::new();
+        top.insert("meta".to_string(), Json::Obj(meta));
+        top.insert("results".to_string(), results);
+        std::fs::write(path, Json::Obj(top).to_string())
     }
+}
+
+/// Best-effort commit identity for bench provenance: CI exports
+/// `GITHUB_SHA`; a local checkout answers `git rev-parse HEAD`; a bare
+/// source tarball gets `"unknown"`.  Never fails — provenance must not
+/// be able to sink a bench run.
+fn git_sha() -> String {
+    if let Ok(sha) = std::env::var("GITHUB_SHA") {
+        let sha = sha.trim().to_string();
+        if !sha.is_empty() {
+            return sha;
+        }
+    }
+    std::process::Command::new("git")
+        .args(["rev-parse", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
 }
 
 /// Human-friendly duration formatting for nanosecond quantities.
@@ -252,7 +289,16 @@ mod tests {
         let p = dir.join("out.json");
         b.write_json(&p).unwrap();
         let parsed = crate::util::Json::parse(&std::fs::read_to_string(&p).unwrap()).unwrap();
-        let arr = parsed.as_arr().unwrap();
+        // provenance block: always present, always complete
+        let meta = parsed.get("meta").unwrap();
+        assert!(!meta.get("git_sha").unwrap().as_str().unwrap().is_empty());
+        assert!(meta.get("axmul_threads").unwrap().as_f64().unwrap() >= 1.0);
+        let mode = meta.get("axmul_simd").unwrap().as_str().unwrap();
+        assert!(["auto", "off", "force"].contains(&mode), "mode {mode}");
+        let backend = meta.get("simd_backend").unwrap().as_str().unwrap();
+        assert_eq!(backend, crate::dnn::simd_backend());
+        assert!(meta.get("simd_lanes").unwrap().as_f64().unwrap() >= 1.0);
+        let arr = parsed.get("results").unwrap().as_arr().unwrap();
         assert_eq!(arr.len(), 2);
         assert_eq!(arr[0].get("name").unwrap().as_str(), Some("with_tput"));
         assert!(arr[0].get("ns_per_iter").unwrap().as_f64().unwrap() > 0.0);

@@ -7,9 +7,10 @@
 
 use axmul::data::{npy, Batcher, Dataset};
 use axmul::dnn::{
-    gemm_f32, im2col_u8_batch_into, lut_conv_packed, lut_conv_packed_n, lut_gemm,
-    lut_gemm_packed, lut_gemm_packed_fused_n, lut_gemm_packed_n, pad_plane_batch_into,
-    row_sums_into, ConvPlan, PackedWeights,
+    gemm_f32, im2col_u8_batch_into, lut_conv_packed, lut_conv_packed_n, lut_conv_packed_path,
+    lut_gemm, lut_gemm_packed, lut_gemm_packed_fused_n, lut_gemm_packed_fused_path,
+    lut_gemm_packed_n, lut_gemm_packed_path, pad_plane_batch_into, parse_simd, row_sums_into,
+    select_path_with, simd_mode, ConvPlan, KernelPath, PackedWeights, SimdMode,
 };
 use axmul::logic::{
     cover_equals, minimal_cover, multiplier_truth_table, opt::nand_rewrite, optimize,
@@ -214,6 +215,7 @@ fn prop_lut_gemm_odd_k_tail_and_skip_zero() {
         noisy.table[b] = b as i32 - 7;
     }
     noisy.zero_row_zero = false;
+    noisy.zero_col_zero = false; // entry (0,0) = -7 sits in both
     noisy.name = "noisy".into();
     for trial in 0..12 {
         let m = 1 + rng.gen_range(9) as usize;
@@ -715,6 +717,257 @@ fn prop_multiplier_truth_tables_consistent_with_mul() {
             let row = a | (b << m.a_bits());
             assert_eq!(all[row as usize] as u32, m.mul(a, b), "{name} a={a} b={b}");
         }
+    }
+}
+
+#[test]
+fn prop_simd_vector_path_bit_identical_for_all_designs() {
+    // PR-6 tentpole invariant, fc side: the vector kernel path (SIMD
+    // gather tile + weight-side sparse skip) must reproduce the scalar
+    // path bit for bit for EVERY Table VIII design, across the serial
+    // cutoff (M = 1), odd k, tile tails and worker bases 1/2/16 — for
+    // both dense weights and near-zero-density weights whose pack-time
+    // histogram routes panels down the skip path.  The fused kernel is
+    // held to the same bar (acc AND rowsum).
+    let cache = axmul::engine::LutCache::new();
+    for name in axmul::mult::DNN_DESIGNS {
+        let lut = cache.get(name).unwrap();
+        let mut rng = Pcg32::new(101);
+        for (m, k, n) in [
+            (1usize, 400usize, 120usize), // lenet fc1: serial cutoff
+            (7, 13, 5),                   // odd everything, n < TILE_N
+            (67, 9, 3),                   // tall: spans worker blocks
+            (5, 31, 17),                  // n straddles one tile boundary
+        ] {
+            let a: Vec<u8> = (0..m * k)
+                .map(|_| {
+                    if rng.gen_range(2) == 0 {
+                        rng.gen_range(256) as u8
+                    } else {
+                        0
+                    }
+                })
+                .collect();
+            for wdensity in [1u32, 4] {
+                // density 1: every code random (dense panels).
+                // density 4: ~3/4 of the weight codes zero — dead
+                // k-rows are common, the sparse skip path fires.
+                let b: Vec<u8> = (0..k * n)
+                    .map(|_| {
+                        if rng.gen_range(wdensity) == 0 {
+                            rng.gen_range(256) as u8
+                        } else {
+                            0
+                        }
+                    })
+                    .collect();
+                let pw = PackedWeights::pack(&b, k, n);
+                for workers in [1usize, 2, 16] {
+                    let tag = format!("{name} m={m} k={k} n={n} wd={wdensity} w={workers}");
+                    let mut scalar = vec![-1i32; m * n];
+                    lut_gemm_packed_path(
+                        KernelPath::Scalar, workers, &a, &pw, &mut scalar, m, &lut,
+                    );
+                    let mut vector = vec![-1i32; m * n];
+                    lut_gemm_packed_path(
+                        KernelPath::Vector, workers, &a, &pw, &mut vector, m, &lut,
+                    );
+                    assert_eq!(vector, scalar, "{tag}");
+                    let mut want_rs = vec![0i32; m];
+                    row_sums_into(&a, m, k, &mut want_rs);
+                    let mut facc = vec![-1i32; m * n];
+                    let mut frs = vec![-1i32; m];
+                    lut_gemm_packed_fused_path(
+                        KernelPath::Vector,
+                        workers,
+                        &a,
+                        &pw,
+                        &mut facc,
+                        &mut frs,
+                        m,
+                        &lut,
+                    );
+                    assert_eq!(facc, scalar, "{tag} fused acc");
+                    assert_eq!(frs, want_rs, "{tag} fused rowsum");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_simd_vector_conv_bit_identical_for_all_designs() {
+    // PR-6 tentpole invariant, conv side: the vector path of the
+    // implicit-im2col kernel (plan-offset gathers feeding the SIMD
+    // tile) equals the scalar path bit for bit across designs, padded /
+    // strided / 1×1 geometries and worker bases.
+    let cache = axmul::engine::LutCache::new();
+    let geoms = [
+        (2usize, 9usize, 7usize, 3usize, 1usize, 1usize, 17usize), // SAME, tile tail
+        (4, 10, 10, 1, 2, 0, 5),                                   // 1×1 projection arm
+        (1, 1, 1, 3, 1, 1, 3), // 1×1 input: every gather is padding
+        (3, 8, 8, 3, 1, 0, 32), // VALID, two full tiles
+    ];
+    for name in axmul::mult::DNN_DESIGNS {
+        let lut = cache.get(name).unwrap();
+        let mut rng = Pcg32::new(103);
+        for &(c, h, w, k, stride, pad, n) in &geoms {
+            let batch = 3usize;
+            let xs: Vec<u8> = (0..batch * c * h * w)
+                .map(|_| {
+                    if rng.gen_range(2) == 0 {
+                        rng.gen_range(256) as u8
+                    } else {
+                        0
+                    }
+                })
+                .collect();
+            let plan = ConvPlan::new(c, h, w, k, stride, pad);
+            // ~3/4 zero weight codes: sparse panels in the conv path too
+            let wcodes: Vec<u8> = (0..plan.patch_len() * n)
+                .map(|_| {
+                    if rng.gen_range(4) == 0 {
+                        rng.gen_range(256) as u8
+                    } else {
+                        0
+                    }
+                })
+                .collect();
+            let pw = PackedWeights::pack(&wcodes, plan.patch_len(), n);
+            let m = batch * plan.out_pixels();
+            let mut plane = vec![0u8; batch * plan.plane_len()];
+            pad_plane_batch_into(&xs, batch, c, h, w, pad, &mut plane);
+            for workers in [1usize, 2, 16] {
+                let tag = format!("{name} c{c} h{h} w{w} k{k} s{stride} p{pad} n{n} w={workers}");
+                let mut sacc = vec![-1i32; m * n];
+                let mut srs = vec![-1i32; m];
+                lut_conv_packed_path(
+                    KernelPath::Scalar,
+                    workers,
+                    &plane,
+                    batch,
+                    &plan,
+                    &pw,
+                    &mut sacc,
+                    &mut srs,
+                    &lut,
+                );
+                let mut vacc = vec![-1i32; m * n];
+                let mut vrs = vec![-1i32; m];
+                lut_conv_packed_path(
+                    KernelPath::Vector,
+                    workers,
+                    &plane,
+                    batch,
+                    &plan,
+                    &pw,
+                    &mut vacc,
+                    &mut vrs,
+                    &lut,
+                );
+                assert_eq!(vacc, sacc, "{tag}");
+                assert_eq!(vrs, srs, "{tag} rowsum");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_simd_forced_vector_i32_fallback_tables() {
+    // The vector path over the i32 fallback store (AXMUL_SIMD=force
+    // territory — auto keeps these scalar).  Two doctored tables:
+    // `neg_row0` has nonzero row 0 AND nonzero column 0, so neither the
+    // activation nor the weight skip may fire; `wide` keeps both zero
+    // lanes but cannot narrow, so the weight skip runs over the i32
+    // store.  Either way: bit-identical to the scalar path and to the
+    // ground-truth scalar reference.
+    let mut rng = Pcg32::new(107);
+    let mut table = vec![0i32; 65536];
+    for a in 0..256usize {
+        for b in 0..256usize {
+            table[(a << 8) | b] = (a * b) as i32;
+        }
+    }
+    let mut neg = table.clone();
+    for b in 0..256usize {
+        neg[b] = b as i32 - 7;
+    }
+    let mut wide = table.clone();
+    wide[(255 << 8) | 255] = 1_000_000;
+    for lut in [
+        Lut::from_table("neg_row0", neg),
+        Lut::from_table("wide", wide),
+    ] {
+        assert!(matches!(lut.transposed(), axmul::metrics::LutTStore::I32(_)));
+        assert_eq!(lut.name == "wide", lut.zero_col_zero);
+        for trial in 0..6 {
+            let m = 1 + rng.gen_range(8) as usize;
+            let k = 1 + rng.gen_range(24) as usize;
+            let n = 1 + rng.gen_range(40) as usize;
+            let a: Vec<u8> = (0..m * k)
+                .map(|_| {
+                    if rng.gen_range(3) == 0 {
+                        rng.gen_range(256) as u8
+                    } else {
+                        0
+                    }
+                })
+                .collect();
+            // ~2/3 zero weight codes: dead k-rows for the wide table's
+            // weight skip, dense enough to cover the no-skip arm too.
+            let b: Vec<u8> = (0..k * n)
+                .map(|_| {
+                    if rng.gen_range(3) == 0 {
+                        rng.gen_range(256) as u8
+                    } else {
+                        0
+                    }
+                })
+                .collect();
+            let pw = PackedWeights::pack(&b, k, n);
+            let mut scalar = vec![0i32; m * n];
+            lut_gemm_packed_path(KernelPath::Scalar, 2, &a, &pw, &mut scalar, m, &lut);
+            let mut vector = vec![0i32; m * n];
+            lut_gemm_packed_path(KernelPath::Vector, 2, &a, &pw, &mut vector, m, &lut);
+            assert_eq!(vector, scalar, "{} trial {trial}", lut.name);
+            for i in 0..m {
+                for j in 0..n {
+                    let want: i32 =
+                        (0..k).map(|kk| lut.mul(a[i * k + kk], b[kk * n + j])).sum();
+                    assert_eq!(vector[i * n + j], want, "{} trial {trial} ({i},{j})", lut.name);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_axmul_simd_dispatch_rules() {
+    // The pure dispatch contract: `off` forces the scalar path for both
+    // store widths (the escape hatch restoring the pre-SIMD kernels),
+    // `force` vectorizes both, `auto` vectorizes only the narrowed u16
+    // store.  And when AXMUL_SIMD is set in this process's environment
+    // (the dedicated CI legs), the live OnceLock must agree with the
+    // pure parser.
+    use axmul::metrics::LutTStore;
+    let u16s = LutTStore::U16(vec![0u16; 65536]);
+    let i32s = LutTStore::I32(vec![0i32; 65536]);
+    assert_eq!(parse_simd(Some("off")), SimdMode::Off);
+    assert_eq!(parse_simd(Some("force")), SimdMode::Force);
+    assert_eq!(parse_simd(Some("auto")), SimdMode::Auto);
+    assert_eq!(parse_simd(None), SimdMode::Auto);
+    assert_eq!(select_path_with(SimdMode::Off, &u16s), KernelPath::Scalar);
+    assert_eq!(select_path_with(SimdMode::Off, &i32s), KernelPath::Scalar);
+    assert_eq!(select_path_with(SimdMode::Force, &u16s), KernelPath::Vector);
+    assert_eq!(select_path_with(SimdMode::Force, &i32s), KernelPath::Vector);
+    assert_eq!(select_path_with(SimdMode::Auto, &u16s), KernelPath::Vector);
+    assert_eq!(select_path_with(SimdMode::Auto, &i32s), KernelPath::Scalar);
+    if let Ok(v) = std::env::var("AXMUL_SIMD") {
+        assert_eq!(
+            simd_mode(),
+            parse_simd(Some(&v)),
+            "live OnceLock must reflect the process environment"
+        );
     }
 }
 
