@@ -237,6 +237,58 @@ fn main() {
         }
     }
 
+    // --- per-layer plan forward: singleton vs heterogeneous (PR 7) -------
+    // The plan-bound forward at the server's default max_batch: a
+    // singleton plan must compute exactly what the classic single-LUT
+    // forward computes — the identity is asserted before either side is
+    // timed, so a fast wrong routing fails the bench — and the mixed
+    // plan (mul8x8_2 alternating with its ~neg error-mirrored partner,
+    // whose table goes negative and therefore takes the i32 transposed
+    // store) prices the heterogeneous u16+i32 per-layer dispatch the
+    // serving path now runs.
+    {
+        use axmul::engine::DesignPlan;
+        let fnet = FloatNet::random("lenet", (1, 28, 28), 19);
+        let data = Dataset::synth_mnist(16, 5);
+        let qnet = QNet::quantize(&fnet, &data.images, 16, 8.0);
+        let lut = cache.get("mul8x8_2").expect("mul8x8_2 LUT");
+        let n_layers = qnet.num_layers();
+        let single_luts = DesignPlan::single("mul8x8_2")
+            .resolve(n_layers, &cache)
+            .unwrap();
+        let mixed_luts = DesignPlan::paired_alternating("mul8x8_2", n_layers)
+            .unwrap()
+            .resolve(n_layers, &cache)
+            .unwrap();
+        for l in &mixed_luts {
+            l.transposed(); // warm outside the timed region, as bind() does
+        }
+        let bsz = 16usize;
+        let xs = &data.images[..bsz * 784];
+        let mut ws = Workspace::new();
+        let want = qnet.forward_batch_with(xs, bsz, &lut, &mut ws);
+        assert_eq!(
+            qnet.forward_batch_luts(xs, bsz, &single_luts, None, &mut ws),
+            want,
+            "singleton plan must be bit-identical to the single-LUT forward"
+        );
+        b.bench_elems(
+            &format!("qnet_forward/lenet singleton plan (B={bsz})"),
+            Some(bsz as u64),
+            || {
+                std::hint::black_box(qnet.forward_batch_luts(xs, bsz, &single_luts, None, &mut ws));
+            },
+        );
+        b.bench_elems(
+            &format!("qnet_forward/lenet mixed plan u16+i32 (B={bsz})"),
+            Some(bsz as u64),
+            || {
+                std::hint::black_box(qnet.forward_batch_luts(xs, bsz, &mixed_luts, None, &mut ws));
+            },
+        );
+        b.note_workspace_peak(ws.bytes());
+    }
+
     // --- quantized single-image inference latency ------------------------
     // (native engine; trained weights unnecessary for timing purposes)
     let data = Dataset::synth_mnist(64, 3);

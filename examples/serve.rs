@@ -9,8 +9,12 @@
 //! latency for real GEMM throughput, not just bookkeeping.
 //!
 //! Run: `cargo run --release --example serve --
-//!       [--designs mul8x8_2,exact8x8] [--requests 2000] [--workers 4]
-//!       [--max-batch 16] [--max-wait-ms 2]`
+//!       [--designs mul8x8_2,exact8x8] [--plan d1,d2,…] [--requests 2000]
+//!       [--workers 4] [--max-batch 16] [--max-wait-ms 2]`
+//!
+//! `--plan d1,d2,…` adds one heterogeneous per-layer lane (design i on
+//! quantizable layer i, `~neg` error-mirrored partner names allowed);
+//! its plan id joins the A/B rotation like any design.
 
 use axmul::coordinator::server::{BatchPolicy, InferServer};
 use axmul::coordinator::{Evaluator, Trainer};
@@ -59,11 +63,22 @@ fn main() -> anyhow::Result<()> {
     // One hub, one LUT cache: every design's 64K table is built exactly
     // once, shared by all lanes.
     let hub = ModelHub::with_global_cache();
+    let mut routes = designs.clone();
     for d in &designs {
         hub.register(MODEL, d, qnet.clone())?;
     }
+    // A per-layer plan lane: resolves each named design (the cache
+    // derives `~neg` partners), binds LUT i to layer i, and serves under
+    // its plan id next to the singleton lanes.
+    if let Some(spec) = args.opt("plan") {
+        let plan = axmul::engine::DesignPlan::new(
+            spec.split(',').map(|s| s.trim().to_string()).collect(),
+        )?;
+        let sess = hub.register_plan(MODEL, plan, qnet.clone())?;
+        routes.push(sess.key.design.clone());
+    }
     println!(
-        "serving synth-MNIST through {designs:?} | workers/lane={workers} \
+        "serving synth-MNIST through {routes:?} | workers/lane={workers} \
          max_batch={} max_wait={:?} | {} LUT(s) cached",
         policy.max_batch,
         policy.max_wait,
@@ -76,21 +91,21 @@ fn main() -> anyhow::Result<()> {
     let trace = Dataset::synth_mnist(256, 99);
     let t0 = Instant::now();
     let mut per_design: Vec<(Vec<Duration>, usize, usize)> =
-        designs.iter().map(|_| (Vec::new(), 0usize, 0usize)).collect();
+        routes.iter().map(|_| (Vec::new(), 0usize, 0usize)).collect();
     std::thread::scope(|s| {
         let (tx, rx) = std::sync::mpsc::channel();
         for c in 0..4usize {
             let tx = tx.clone();
             let server = &server;
             let trace = &trace;
-            let designs = &designs;
+            let routes = &routes;
             s.spawn(move || {
                 let mut rng = Pcg32::substream(1, c as u64);
                 for i in 0..n_requests / 4 {
                     let idx = (i * 4 + c) % trace.n;
-                    let di = (i * 4 + c) % designs.len();
+                    let di = (i * 4 + c) % routes.len();
                     let resp = server
-                        .infer(MODEL, &designs[di], trace.image(idx).to_vec())
+                        .infer(MODEL, &routes[di], trace.image(idx).to_vec())
                         .expect("server alive");
                     let ok = resp.pred == trace.labels[idx] as usize;
                     tx.send((di, resp.latency, ok)).unwrap();
@@ -113,7 +128,7 @@ fn main() -> anyhow::Result<()> {
 
     let mut served = 0usize;
     println!("\n== service report ==");
-    for (di, design) in designs.iter().enumerate() {
+    for (di, design) in routes.iter().enumerate() {
         let (lats, n, correct) = &mut per_design[di];
         if lats.is_empty() {
             continue;
@@ -142,8 +157,9 @@ fn main() -> anyhow::Result<()> {
         served as f64 / wall.as_secs_f64()
     );
     println!(
-        "lut cache       {} table(s), {} hits / {} builds",
+        "lut cache       {} table(s) [{}], {} hits / {} builds",
         hub.cache().len(),
+        hub.cache().designs().join(", "),
         hub.cache().hits(),
         hub.cache().misses()
     );

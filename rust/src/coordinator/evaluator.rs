@@ -10,7 +10,7 @@
 
 use crate::data::Dataset;
 use crate::dnn::{FloatNet, QNet};
-use crate::engine::LutCache;
+use crate::engine::{DesignPlan, LutCache};
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -102,6 +102,54 @@ impl Evaluator {
         })
     }
 
+    /// Evaluate per-layer design `plans` on `n_eval` samples of `data`,
+    /// keyed by plan id in the report (so DAL lookups work for plans the
+    /// same way they do for designs).  Each plan resolves through the
+    /// shared cache — a plan reusing another plan's designs rebuilds
+    /// nothing — and compensated plans get their control-variate terms
+    /// computed once per (plan, layer) here, not per image.
+    pub fn run_plans(
+        &self,
+        fnet: &FloatNet,
+        data: &Dataset,
+        n_eval: usize,
+        plans: &[DesignPlan],
+    ) -> Result<EvalReport> {
+        let n_eval = n_eval.min(data.n);
+        let stride = data.stride();
+        let qnet = self.quantize(fnet, data);
+
+        let xs = &data.images[..n_eval * stride];
+        let ys = &data.labels[..n_eval];
+
+        let float_preds = fnet.forward_batch(xs, n_eval);
+        let float_correct = float_preds
+            .iter()
+            .zip(ys)
+            .filter(|(logits, &y)| crate::dnn::argmax(logits) == y as usize)
+            .count();
+
+        let mut accuracy = BTreeMap::new();
+        for plan in plans {
+            let luts = plan
+                .resolve(qnet.num_layers(), &self.cache)
+                .with_context(|| format!("plan {}", plan.id()))?;
+            let comp: Option<Vec<Vec<i32>>> = plan.compensated().then(|| {
+                luts.iter()
+                    .enumerate()
+                    .map(|(li, lut)| qnet.compensation_for(li, lut))
+                    .collect()
+            });
+            let acc = qnet.accuracy_luts(xs, ys, &luts, comp.as_deref());
+            accuracy.insert(plan.id(), acc);
+        }
+        Ok(EvalReport {
+            accuracy,
+            float_accuracy: float_correct as f64 / n_eval as f64,
+            n_eval,
+        })
+    }
+
     /// Quantize and return the QNet (for histogram / inspection flows).
     pub fn quantize(&self, fnet: &FloatNet, data: &Dataset) -> QNet {
         let n_calib = self.n_calib.min(data.n);
@@ -135,6 +183,50 @@ mod tests {
         ev.run(&fnet, &data, 8, &designs).unwrap();
         assert_eq!(ev.cache.misses(), 2, "second sweep must be rebuild-free");
         assert_eq!(ev.cache.hits(), 4);
+    }
+
+    #[test]
+    fn plan_sweep_matches_singleton_design_sweep() {
+        // A singleton plan must score exactly what the design-name sweep
+        // scores (same tables, same forward), and the report must key it
+        // under the bare name so dal() keeps working.
+        let fnet = tiny_fnet();
+        let data = Dataset::synth_mnist(16, 2);
+        let ev = Evaluator::with_cache(Arc::new(LutCache::new()));
+        let by_design = ev.run(&fnet, &data, 8, &["exact8x8", "mul8x8_2"]).unwrap();
+        let by_plan = ev
+            .run_plans(
+                &fnet,
+                &data,
+                8,
+                &[
+                    DesignPlan::single("exact8x8"),
+                    DesignPlan::single("mul8x8_2"),
+                ],
+            )
+            .unwrap();
+        assert_eq!(by_design.accuracy, by_plan.accuracy);
+        assert!(by_plan.dal("mul8x8_2").is_some());
+        // Plans re-used the cached tables from the first sweep.
+        assert_eq!(ev.cache.misses(), 2);
+    }
+
+    #[test]
+    fn plan_sweep_resolution_failure_names_the_layer() {
+        let fnet = tiny_fnet();
+        let data = Dataset::synth_mnist(8, 2);
+        let ev = Evaluator::with_cache(Arc::new(LutCache::new()));
+        let plan = DesignPlan::new(vec![
+            "exact8x8".into(),
+            "exact8x8".into(),
+            "ghost".into(),
+            "exact8x8".into(),
+            "exact8x8".into(),
+        ])
+        .unwrap();
+        let err = format!("{:#}", ev.run_plans(&fnet, &data, 4, &[plan]).unwrap_err());
+        assert!(err.contains("layer 2"), "{err}");
+        assert!(err.contains("ghost"), "{err}");
     }
 
     #[test]

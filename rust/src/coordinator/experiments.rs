@@ -2,14 +2,18 @@
 //! producing a rendered `util::Table` plus machine-readable rows.
 
 use super::coopt::{co_optimize, CooptConfig};
+use super::evaluator::Evaluator;
 use super::trainer::Trainer;
 use crate::data::Dataset;
-use crate::metrics::exhaustive_metrics;
+use crate::dnn::FloatNet;
+use crate::engine::DesignPlan;
+use crate::metrics::{exhaustive_metrics, Lut, NEG_SUFFIX};
 use crate::mult::by_name;
 use crate::runtime::Engine;
 use crate::synth::{synthesize, Calibration};
 use crate::util::{fmt_improvement, Table};
-use anyhow::{Context, Result};
+use anyhow::{ensure, Context, Result};
+use std::sync::Arc;
 
 /// Paper reference values for side-by-side reporting.
 pub mod paper {
@@ -224,9 +228,126 @@ pub fn weights_hist(engine: &Engine, tag: &str, steps: usize, n_data: usize) -> 
     Ok(t)
 }
 
+/// Per-multiply power (mW) of a design, from the paper's Table VII.
+/// Mirrored `~neg` partners cost what their base costs (same logic plus
+/// a sign-fixup that Table VII's flow folds into the array, not the
+/// cell), and designs outside the table are priced as the exact
+/// baseline — i.e. "no measured win", so the greedy assigner never
+/// prefers them over keeping a layer exact.
+pub fn design_power(name: &str) -> f64 {
+    let base = name.strip_suffix(NEG_SUFFIX).unwrap_or(name);
+    paper::TABLE7
+        .iter()
+        .find(|(n, ..)| *n == base)
+        .map(|&(_, _, power, _)| power)
+        .unwrap_or(58.12)
+}
+
+/// Output of [`assign_plan`]: the chosen per-layer plan plus the
+/// measurements that justified it.
+#[derive(Clone, Debug)]
+pub struct PlanAssignment {
+    pub plan: DesignPlan,
+    /// Full-net accuracy of the chosen plan on the probe set.
+    pub accuracy: f64,
+    /// All-exact accuracy on the same probe set (the budget's anchor).
+    pub exact_accuracy: f64,
+    /// Drop-one sensitivity per layer: accuracy lost when ONLY that
+    /// layer runs the cheapest candidate (exact everywhere else).
+    pub sensitivity: Vec<f64>,
+    /// The plan serialized as a `[plan]` manifest
+    /// ([`DesignPlan::to_toml`]), ready to ship to a fleet.
+    pub manifest: String,
+}
+
+/// Greedy per-layer design assignment: walk layers from least to most
+/// sensitive (drop-one accuracy delta with the cheapest candidate
+/// substituted), and at each layer accept the lowest-power candidate
+/// that keeps the *cumulative* plan's accuracy within `budget` of the
+/// all-exact baseline.  Layers where every candidate blows the budget
+/// stay exact.  Power comes from Table VII ([`design_power`]), accuracy
+/// from the per-layer forward path, so the search optimizes exactly
+/// what the hardware pays and the serving path delivers.
+pub fn assign_plan(
+    ev: &Evaluator,
+    fnet: &FloatNet,
+    data: &Dataset,
+    n_eval: usize,
+    candidates: &[&str],
+    budget: f64,
+) -> Result<PlanAssignment> {
+    ensure!(!candidates.is_empty(), "assign_plan: no candidate designs");
+    ensure!(budget >= 0.0, "assign_plan: negative budget {budget}");
+    let n_eval = n_eval.min(data.n);
+    let qnet = ev.quantize(fnet, data);
+    let n_layers = qnet.num_layers();
+    let xs = &data.images[..n_eval * data.stride()];
+    let ys = &data.labels[..n_eval];
+
+    let exact = ev.cache.get("exact8x8").context("exact8x8 baseline")?;
+    let exact_power = design_power("exact8x8");
+    let mut cands: Vec<(&str, Arc<Lut>, f64)> = Vec::with_capacity(candidates.len());
+    for &name in candidates {
+        let lut = ev
+            .cache
+            .get(name)
+            .with_context(|| format!("candidate design {name}"))?;
+        cands.push((name, lut, design_power(name)));
+    }
+    // Cheapest silicon first: the greedy accept below takes the first
+    // candidate that fits the budget.
+    cands.sort_by(|a, b| a.2.total_cmp(&b.2));
+
+    let mut luts = vec![Arc::clone(&exact); n_layers];
+    let exact_accuracy = qnet.accuracy_luts(xs, ys, &luts, None);
+    let floor = exact_accuracy - budget;
+
+    // Drop-one sensitivity probe with the cheapest candidate: layers
+    // that shrug it off are where approximation is nearly free.
+    let probe = Arc::clone(&cands[0].1);
+    let mut sensitivity = vec![0.0f64; n_layers];
+    for (li, s) in sensitivity.iter_mut().enumerate() {
+        let kept = std::mem::replace(&mut luts[li], Arc::clone(&probe));
+        *s = exact_accuracy - qnet.accuracy_luts(xs, ys, &luts, None);
+        luts[li] = kept;
+    }
+
+    let mut order: Vec<usize> = (0..n_layers).collect();
+    order.sort_by(|&a, &b| sensitivity[a].total_cmp(&sensitivity[b]));
+
+    let mut names = vec!["exact8x8".to_string(); n_layers];
+    let mut accuracy = exact_accuracy;
+    for &li in &order {
+        for (name, lut, power) in &cands {
+            if *power >= exact_power {
+                continue; // no silicon win over keeping the layer exact
+            }
+            let kept = std::mem::replace(&mut luts[li], Arc::clone(lut));
+            let acc = qnet.accuracy_luts(xs, ys, &luts, None);
+            if acc >= floor {
+                names[li] = name.to_string();
+                accuracy = acc;
+                break;
+            }
+            luts[li] = kept;
+        }
+    }
+
+    let plan = DesignPlan::new(names)?;
+    let manifest = plan.to_toml();
+    Ok(PlanAssignment {
+        plan,
+        accuracy,
+        exact_accuracy,
+        sensitivity,
+        manifest,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::{LutCache, ModelHub};
 
     #[test]
     fn table5_renders() {
@@ -266,5 +387,65 @@ mod tests {
         };
         assert!(area_of("mul8x8_3") < area_of("mul8x8_2"));
         assert!(area_of("mul8x8_1") < area_of("mul8x8_2"));
+    }
+
+    #[test]
+    fn design_power_strips_partner_suffix() {
+        assert_eq!(design_power("pkm"), 37.87);
+        assert_eq!(design_power("pkm~neg"), 37.87, "partner priced as base");
+        assert_eq!(design_power("exact8x8"), 58.12);
+        assert_eq!(design_power("made_up"), 58.12, "unknown = no win");
+    }
+
+    #[test]
+    fn assigner_emits_budget_respecting_roundtrippable_plan() {
+        let fnet = crate::testutil::tiny_lenet(33);
+        let data = Dataset::synth_mnist(32, 3);
+        let ev = Evaluator::with_cache(Arc::new(LutCache::new()));
+        let budget = 0.25;
+        let out = assign_plan(&ev, &fnet, &data, 16, &["mul8x8_2", "pkm"], budget).unwrap();
+        assert!(
+            out.accuracy >= out.exact_accuracy - budget,
+            "plan acc {} vs exact {} blew budget {budget}",
+            out.accuracy,
+            out.exact_accuracy
+        );
+        assert_eq!(out.sensitivity.len(), out.plan.len());
+        assert_eq!(out.plan.len(), 5, "one design per tiny-lenet layer");
+        // The manifest round-trips through the parser and binds as a
+        // serving session — the fleet-handoff contract.
+        let parsed = DesignPlan::parse_toml(&out.manifest).unwrap();
+        assert_eq!(parsed.designs(), out.plan.designs());
+        let hub = ModelHub::new(ev.cache.clone());
+        let qnet = Arc::new(ev.quantize(&fnet, &data));
+        let sess = hub.register_plan("tiny", parsed, qnet).unwrap();
+        assert_eq!(sess.key.design, out.plan.id());
+    }
+
+    #[test]
+    fn assigner_unbounded_budget_takes_cheapest_everywhere() {
+        // With a budget no accuracy drop can exceed, every layer gets
+        // the lowest-power candidate (pkm per Table VII).
+        let fnet = crate::testutil::tiny_lenet(33);
+        let data = Dataset::synth_mnist(16, 3);
+        let ev = Evaluator::with_cache(Arc::new(LutCache::new()));
+        let out = assign_plan(&ev, &fnet, &data, 8, &["mul8x8_2", "pkm"], 1.0).unwrap();
+        assert!(
+            out.plan.designs().iter().all(|d| d == "pkm"),
+            "expected all-pkm, got {:?}",
+            out.plan.designs()
+        );
+    }
+
+    #[test]
+    fn assigner_rejects_unknown_candidate_with_context() {
+        let fnet = crate::testutil::tiny_lenet(33);
+        let data = Dataset::synth_mnist(8, 3);
+        let ev = Evaluator::with_cache(Arc::new(LutCache::new()));
+        let err = format!(
+            "{:#}",
+            assign_plan(&ev, &fnet, &data, 4, &["ghost"], 0.1).unwrap_err()
+        );
+        assert!(err.contains("candidate design ghost"), "{err}");
     }
 }

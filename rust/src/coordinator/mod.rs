@@ -13,5 +13,8 @@ pub mod trainer;
 pub use config::resolve_table8;
 pub use coopt::{co_optimize, CooptConfig, CooptOutcome};
 pub use evaluator::{EvalReport, Evaluator};
-pub use experiments::{table5, table6, table7, table8, weights_hist, Table8Config};
+pub use experiments::{
+    assign_plan, design_power, table5, table6, table7, table8, weights_hist, PlanAssignment,
+    Table8Config,
+};
 pub use trainer::Trainer;

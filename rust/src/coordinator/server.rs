@@ -1,11 +1,16 @@
 //! Batched inference service: the deployment-shaped face of the
 //! platform.
 //!
-//! Clients submit single images addressed to a `(model, design)` session;
-//! each session has its own request lane with dynamic batching (size- or
+//! Clients submit single images addressed to a `(model, design)` session,
+//! where `design` is a plan id — a bare design name for classic
+//! single-design sessions, or `plan{d1,d2,…}` for per-layer heterogeneous
+//! plans (see [`crate::engine::DesignPlan`]); routing is string-keyed
+//! either way, so plan lanes need no new submit surface.  Each session
+//! has its own request lane with dynamic batching (size- or
 //! deadline-triggered) and worker pool, so one server instance serves
-//! several approximate-silicon designs side by side — the A/B
-//! accuracy-vs-power routing the paper's multiplier family is for.
+//! several approximate-silicon designs (and plans) side by side — the
+//! A/B accuracy-vs-power routing the paper's multiplier family is for,
+//! at layer granularity.
 //!
 //! A collected batch is executed as a *batch*: the worker stacks the
 //! images and makes exactly one [`crate::engine::Session::infer_batch_with`]
@@ -158,8 +163,10 @@ impl InferServer {
         }
     }
 
-    /// Submit one image to a (model, design) session; returns a receiver
-    /// for the response, or why the request cannot be queued.
+    /// Submit one image to a (model, design) session — `design` being
+    /// the session's plan id (bare design name for singleton plans);
+    /// returns a receiver for the response, or why the request cannot
+    /// be queued.
     pub fn submit(
         &self,
         model: &str,
@@ -396,6 +403,56 @@ mod tests {
         // serving never rebuilt a table: misses froze at registration time
         assert_eq!(cache.misses(), 2, "serving path must be rebuild-free");
         assert!(cache.hits() >= 16, "direct reference answers were cache hits");
+        server.shutdown();
+    }
+
+    #[test]
+    fn serves_heterogeneous_plan_lane() {
+        // A per-layer plan session is just another lane: its plan id is
+        // the routing string, submit/infer need no new surface, and the
+        // served logits must equal the generic per-layer forward with
+        // the session's own resolved tables.
+        use crate::engine::DesignPlan;
+        let cache = Arc::new(LutCache::new());
+        let hub = ModelHub::new(cache.clone());
+        let qnet = tiny_qnet();
+        hub.register("lenet", "exact8x8", qnet.clone()).unwrap();
+        let n = qnet.num_layers();
+        let designs: Vec<String> = (0..n)
+            .map(|i| {
+                if i % 2 == 0 { "exact8x8" } else { "mul8x8_2" }.to_string()
+            })
+            .collect();
+        let plan = DesignPlan::new(designs).unwrap();
+        let plan_id = plan.id();
+        let sess = hub.register_plan("lenet", plan, qnet.clone()).unwrap();
+
+        let data = Dataset::synth_mnist(8, 7);
+        let mut ws = Workspace::new();
+        let direct: Vec<Vec<f32>> = (0..8)
+            .map(|i| qnet.forward_batch_luts(data.image(i), 1, &sess.luts, None, &mut ws))
+            .collect();
+
+        let server = InferServer::start(&hub, BatchPolicy::default(), 2);
+        assert_eq!(server.keys().len(), 2, "singleton + plan lanes");
+        let rxs: Vec<_> = (0..8)
+            .map(|i| {
+                server
+                    .submit("lenet", &plan_id, data.image(i).to_vec())
+                    .unwrap()
+            })
+            .collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.key.design, plan_id, "routed to wrong lane");
+            assert_eq!(resp.logits, direct[i], "request {i} logits drifted");
+        }
+        // The classic singleton lane serves unchanged next to the plan.
+        let lut = cache.get("exact8x8").unwrap();
+        let resp = server
+            .infer("lenet", "exact8x8", data.image(0).to_vec())
+            .unwrap();
+        assert_eq!(resp.logits, qnet.forward_one(data.image(0), &lut));
         server.shutdown();
     }
 

@@ -182,6 +182,20 @@ impl QNet {
         self.forward_batch_with(xs, batch, lut, &mut ws)
     }
 
+    /// The historical one-LUT-everywhere batched forward: the singleton
+    /// case of [`QNet::forward_batch_luts`], kept as the convenience
+    /// entry point (benches, tests, ad-hoc evaluation) and bit-identical
+    /// to it by construction.
+    pub fn forward_batch_with(
+        &self,
+        xs: &[f32],
+        batch: usize,
+        lut: &Lut,
+        ws: &mut Workspace,
+    ) -> Vec<f32> {
+        self.forward_batch_luts(xs, batch, std::slice::from_ref(lut), None, ws)
+    }
+
     /// Forward `batch` images at once through the approximate silicon.
     ///
     /// This is the throughput path: every conv layer runs the
@@ -204,15 +218,46 @@ impl QNet {
     /// Workspace buffers grow to `batch`-sized high-water marks during
     /// warmup and are then reused allocation-free, exactly as in the
     /// single-image path (smaller batches shrink within capacity).
-    pub fn forward_batch_with(
+    ///
+    /// `luts` binds the silicon **per quantizable layer**: either one
+    /// entry (broadcast to every layer — exactly the historical session
+    /// binding) or one per weighted layer in forward order (ResBlocks
+    /// contribute conv1, conv2, then the optional 1×1 projection).  The
+    /// generic bound accepts both `&[Lut]` and `&[Arc<Lut>]`, so
+    /// sessions pass their resolved plan with zero per-call staging.
+    /// SIMD dispatch and the zero-row/col skip flags already live on
+    /// each `Lut`, so a heterogeneous plan mixes kernel paths per layer
+    /// for free.  `comp`, when present, is the per-layer control-variate
+    /// compensation ([`QNet::compensation_for`]) subtracted inside the
+    /// fused dequant pass.
+    pub fn forward_batch_luts<L: AsRef<Lut>>(
         &self,
         xs: &[f32],
         batch: usize,
-        lut: &Lut,
+        luts: &[L],
+        comp: Option<&[Vec<i32>]>,
         ws: &mut Workspace,
     ) -> Vec<f32> {
         let (c0, h0, w0) = self.image_shape;
         assert!(batch > 0, "{}: empty batch", self.net);
+        assert!(
+            luts.len() == 1 || luts.len() == self.layers.len(),
+            "{}: {} LUTs for {} weighted layers (want 1 or exactly one per layer)",
+            self.net,
+            luts.len(),
+            self.layers.len()
+        );
+        if let Some(c) = comp {
+            assert_eq!(
+                c.len(),
+                self.layers.len(),
+                "{}: compensation must cover every weighted layer",
+                self.net
+            );
+        }
+        // Per-layer bindings: singleton plans broadcast index 0.
+        let lut_for = |li: usize| -> &Lut { luts[if luts.len() == 1 { 0 } else { li }].as_ref() };
+        let comp_for = |li: usize| -> Option<&[i32]> { comp.map(|c| c[li].as_slice()) };
         assert_eq!(
             xs.len(),
             batch * c0 * h0 * w0,
@@ -260,7 +305,17 @@ impl QNet {
                         // batch: M = batch × OH·OW, codes gathered in
                         // place, row sums fused.
                         self.conv_fused(
-                            li, codes, batch, s_in, lut, padded, acc, rowsum, real_a, grows,
+                            li,
+                            codes,
+                            batch,
+                            s_in,
+                            lut_for(li),
+                            comp_for(li),
+                            padded,
+                            acc,
+                            rowsum,
+                            real_a,
+                            grows,
                         );
                         // per image: [m, cout] -> [cout, m]
                         prep_f32(real_b, batch * m * cout, grows);
@@ -294,10 +349,32 @@ impl QNet {
                         for (dst, &v) in codes_alt.iter_mut().zip(real_a.iter()) {
                             *dst = (v / s).round().clamp(0.0, 255.0) as u8;
                         }
-                        self.fc_fused(li, codes_alt, batch, s_in, lut, acc, rowsum, real_a, grows);
+                        self.fc_fused(
+                            li,
+                            codes_alt,
+                            batch,
+                            s_in,
+                            lut_for(li),
+                            comp_for(li),
+                            acc,
+                            rowsum,
+                            real_a,
+                            grows,
+                        );
                     } else {
                         // codes feed the GEMM directly — no staging copy
-                        self.fc_fused(li, codes, batch, s_in, lut, acc, rowsum, real_a, grows);
+                        self.fc_fused(
+                            li,
+                            codes,
+                            batch,
+                            s_in,
+                            lut_for(li),
+                            comp_for(li),
+                            acc,
+                            rowsum,
+                            real_a,
+                            grows,
+                        );
                     }
                     li += 1;
                     c = cout;
@@ -391,7 +468,17 @@ impl QNet {
                     let (oh, ow) = conv_out_dims(h, w, k, stride, 1);
                     let m1 = oh * ow;
                     self.conv_fused(
-                        li, codes, batch, s_in, lut, padded, acc, rowsum, real_a, grows,
+                        li,
+                        codes,
+                        batch,
+                        s_in,
+                        lut_for(li),
+                        comp_for(li),
+                        padded,
+                        acc,
+                        rowsum,
+                        real_a,
+                        grows,
                     );
                     prep_f32(real_b, batch * m1 * cout, grows);
                     transpose_pm_batch_into(real_a, batch, m1, cout, real_b);
@@ -410,7 +497,8 @@ impl QNet {
                         codes_alt,
                         batch,
                         s_mid,
-                        lut,
+                        lut_for(li + 1),
+                        comp_for(li + 1),
                         padded,
                         acc,
                         rowsum,
@@ -431,7 +519,8 @@ impl QNet {
                             codes,
                             batch,
                             id_scale,
-                            lut,
+                            lut_for(li + 2),
+                            comp_for(li + 2),
                             padded,
                             acc,
                             rowsum,
@@ -489,6 +578,7 @@ impl QNet {
         batch: usize,
         s_in: f32,
         lut: &Lut,
+        comp: Option<&[i32]>,
         padded: &mut Vec<u8>,
         acc: &mut Vec<i32>,
         rowsum: &mut Vec<i32>,
@@ -510,7 +600,7 @@ impl QNet {
         } else {
             lut_conv_packed(input, batch, plan, &l.packed, acc, rowsum, lut);
         }
-        dequant_into(l, m, s_in, acc, rowsum, real);
+        dequant_into(l, m, s_in, acc, rowsum, comp, real);
     }
 
     /// Run fc layer `li` over `m` rows of `input` codes (one image's
@@ -525,6 +615,7 @@ impl QNet {
         m: usize,
         s_in: f32,
         lut: &Lut,
+        comp: Option<&[i32]>,
         acc: &mut Vec<i32>,
         rowsum: &mut Vec<i32>,
         real: &mut Vec<f32>,
@@ -536,7 +627,7 @@ impl QNet {
         prep_i32(rowsum, m, grows);
         prep_f32(real, m * l.cout, grows);
         lut_gemm_packed_fused(input, &l.packed, acc, rowsum, m, lut);
-        dequant_into(l, m, s_in, acc, rowsum, real);
+        dequant_into(l, m, s_in, acc, rowsum, comp, real);
     }
 
     /// Batched accuracy evaluation: fraction of argmax(logits) == label.
@@ -550,6 +641,19 @@ impl QNet {
     /// allocation-free after warmup, and results stay deterministic and
     /// bit-identical to per-image evaluation.
     pub fn accuracy(&self, xs: &[f32], labels: &[i32], lut: &Lut) -> f64 {
+        self.accuracy_luts(xs, labels, std::slice::from_ref(lut), None)
+    }
+
+    /// [`QNet::accuracy`] under a per-layer LUT binding (plus optional
+    /// control-variate compensation) — the evaluator and the greedy plan
+    /// assigner sweep candidate plans through this.
+    pub fn accuracy_luts<L: AsRef<Lut>>(
+        &self,
+        xs: &[f32],
+        labels: &[i32],
+        luts: &[L],
+        comp: Option<&[Vec<i32>]>,
+    ) -> f64 {
         let stride = self.image_len();
         let n = labels.len();
         if n == 0 {
@@ -560,7 +664,8 @@ impl QNet {
         let mut i = 0;
         while i < n {
             let b = ACCURACY_BATCH.min(n - i);
-            let logits = self.forward_batch_with(&xs[i * stride..(i + b) * stride], b, lut, &mut ws);
+            let logits =
+                self.forward_batch_luts(&xs[i * stride..(i + b) * stride], b, luts, comp, &mut ws);
             let nl = logits.len() / b;
             for (j, &y) in labels[i..i + b].iter().enumerate() {
                 correct += usize::from(argmax(&logits[j * nl..(j + 1) * nl]) == y as usize);
@@ -621,6 +726,42 @@ impl QNet {
         self.layers.len()
     }
 
+    /// The control-variate compensation term of weighted layer `li`
+    /// under `lut` (Zervakis et al., arXiv 2412.16757): for each output
+    /// column `o`, the expected accumulated LUT error
+    /// `Σ_k E_a[lut(a, w_ko) − a·w_ko]` under a uniform activation-code
+    /// model, rounded once per column.  Weights are static per layer, so
+    /// a session computes this once at bind time from the packed codes;
+    /// serving subtracts it inside the fused dequant pass next to the
+    /// zero-point correction — no extra operand read, no extra scratch.
+    /// Exact LUTs yield all zeros.
+    pub fn compensation_for(&self, li: usize, lut: &Lut) -> Vec<i32> {
+        let l = &self.layers[li];
+        // Mean signed LUT error per weight code, over all 256 activation
+        // codes (f64: the later per-column sum must round once, not 256
+        // times).
+        let mut rowbias = [0f64; 256];
+        for (w, rb) in rowbias.iter_mut().enumerate() {
+            let mut sum = 0i64;
+            for a in 0..256usize {
+                sum += (lut.table[(a << 8) | w] - (a * w) as i32) as i64;
+            }
+            *rb = sum as f64 / 256.0;
+        }
+        // unpack() recovers the row-major [k, cout] codes (bind-time
+        // only — the hot path never sees this allocation).
+        let codes = l.packed.unpack();
+        let mut comp = vec![0i32; l.cout];
+        for (o, cv) in comp.iter_mut().enumerate() {
+            let mut acc = 0f64;
+            for j in 0..l.k {
+                acc += rowbias[codes[j * l.cout + o] as usize];
+            }
+            *cv = acc.round() as i32;
+        }
+        comp
+    }
+
     /// Calibrated activation scale `i` (0 = input, i = after ReLU i).
     pub fn act_scale(&self, i: usize) -> f32 {
         self.act_scales[i.min(self.act_scales.len() - 1)]
@@ -671,15 +812,45 @@ fn make_qlayer(w: &Tensor, b: &Tensor) -> QLayer {
 /// `real[p, o] = s_in · w_scale · (acc[p, o] − z_w · rowsum[p]) + bias[o]`.
 /// `m` may be a whole batch's stacked rows: the correction is row-local,
 /// so batching changes nothing but M.
-fn dequant_into(l: &QLayer, m: usize, s_in: f32, acc: &[i32], rowsum: &[i32], real: &mut [f32]) {
+///
+/// With `comp` (the per-column control-variate term), the expected LUT
+/// error is subtracted in the same pass:
+/// `real[p, o] = sc · (acc[p, o] − z_w · rowsum[p] − comp[o]) + bias[o]`
+/// — one extra i32 per element inside the existing correction sweep,
+/// touching no operand a second time and no new scratch.  The `None`
+/// branch is byte-for-byte the historical loop, which is what keeps
+/// uncompensated plans bit-identical to the pre-plan engine.
+fn dequant_into(
+    l: &QLayer,
+    m: usize,
+    s_in: f32,
+    acc: &[i32],
+    rowsum: &[i32],
+    comp: Option<&[i32]>,
+    real: &mut [f32],
+) {
     debug_assert_eq!(acc.len(), m * l.cout);
     debug_assert_eq!(rowsum.len(), m);
     debug_assert_eq!(real.len(), m * l.cout);
     let sc = s_in * l.w_scale;
-    for p in 0..m {
-        let corr = l.w_zp * rowsum[p];
-        for o in 0..l.cout {
-            real[p * l.cout + o] = sc * (acc[p * l.cout + o] - corr) as f32 + l.bias[o];
+    match comp {
+        None => {
+            for p in 0..m {
+                let corr = l.w_zp * rowsum[p];
+                for o in 0..l.cout {
+                    real[p * l.cout + o] = sc * (acc[p * l.cout + o] - corr) as f32 + l.bias[o];
+                }
+            }
+        }
+        Some(cv) => {
+            debug_assert_eq!(cv.len(), l.cout);
+            for p in 0..m {
+                let corr = l.w_zp * rowsum[p];
+                for o in 0..l.cout {
+                    real[p * l.cout + o] =
+                        sc * (acc[p * l.cout + o] - corr - cv[o]) as f32 + l.bias[o];
+                }
+            }
         }
     }
 }
@@ -1004,6 +1175,126 @@ mod tests {
         let le = qnet.forward_one(&xs, &exact);
         let lp = qnet.forward_one(&xs, &pkm);
         assert_ne!(le, lp);
+    }
+
+    #[test]
+    fn forward_batch_luts_singleton_broadcast_is_identical() {
+        // A one-entry slice and an explicit per-layer list of the same
+        // table must both reproduce forward_batch_with bit-for-bit —
+        // the plan refactor's ground invariant.
+        use std::sync::Arc;
+        let lut = Lut::build(&ExactMul::new(8, 8));
+        let fnet = toy_fnet("lenet", (1, 28, 28), 1);
+        let mut rng = Pcg32::new(11);
+        let xs: Vec<f32> = (0..2 * 784).map(|_| rng.next_f32()).collect();
+        let qnet = QNet::quantize(&fnet, &xs, 2, 8.0);
+        let mut ws = Workspace::new();
+        let want = qnet.forward_batch_with(&xs, 2, &lut, &mut ws);
+        let got1 = qnet.forward_batch_luts(&xs, 2, std::slice::from_ref(&lut), None, &mut ws);
+        let shared = Arc::new(lut.clone());
+        let luts: Vec<Arc<Lut>> = (0..qnet.num_layers()).map(|_| shared.clone()).collect();
+        let got2 = qnet.forward_batch_luts(&xs, 2, &luts, None, &mut ws);
+        assert_eq!(want, got1, "singleton slice must broadcast");
+        assert_eq!(want, got2, "explicit per-layer list of one table");
+    }
+
+    #[test]
+    fn mixed_luts_route_per_layer() {
+        // Substituting an approximate table at exactly one layer must
+        // change the logits, and WHICH layer it lands on must matter.
+        use crate::mult::by_name;
+        use std::sync::Arc;
+        let fnet = toy_fnet("lenet", (1, 28, 28), 1);
+        let mut rng = Pcg32::new(9);
+        let xs: Vec<f32> = (0..784).map(|_| rng.next_f32()).collect();
+        let qnet = QNet::quantize(&fnet, &xs, 1, 1.0); // no headroom: codes span the table
+        let n = qnet.num_layers();
+        let exact = Arc::new(Lut::build(&ExactMul::new(8, 8)));
+        let pkm = Arc::new(Lut::build(by_name("pkm").unwrap().as_ref()));
+        let all_exact = qnet.forward_one(&xs, &exact);
+        let mut ws = Workspace::new();
+        let outs: Vec<Vec<f32>> = (0..n)
+            .map(|j| {
+                let luts: Vec<Arc<Lut>> = (0..n)
+                    .map(|i| if i == j { pkm.clone() } else { exact.clone() })
+                    .collect();
+                qnet.forward_batch_luts(&xs, 1, &luts, None, &mut ws)
+            })
+            .collect();
+        for (j, o) in outs.iter().enumerate() {
+            assert_ne!(o, &all_exact, "substitution at layer {j} must bite");
+        }
+        for j in 0..n {
+            for i in 0..j {
+                assert_ne!(outs[i], outs[j], "layers {i} and {j} must route separately");
+            }
+        }
+    }
+
+    #[test]
+    fn compensation_is_zero_for_exact_lut() {
+        let fnet = toy_fnet("lenet", (1, 28, 28), 1);
+        let qnet = QNet::quantize(&fnet, &vec![0.5; 784], 1, 8.0);
+        let exact = Lut::build(&ExactMul::new(8, 8));
+        for li in 0..qnet.num_layers() {
+            let comp = qnet.compensation_for(li, &exact);
+            assert_eq!(comp.len(), qnet.layers[li].cout);
+            assert!(comp.iter().all(|&c| c == 0), "layer {li}");
+        }
+    }
+
+    #[test]
+    fn compensation_subtracts_inside_the_fused_dequant() {
+        use crate::mult::by_name;
+        let fnet = toy_fnet("lenet", (1, 28, 28), 1);
+        let mut rng = Pcg32::new(10);
+        let xs: Vec<f32> = (0..784).map(|_| rng.next_f32()).collect();
+        let qnet = QNet::quantize(&fnet, &xs, 1, 1.0);
+        let n = qnet.num_layers();
+        let lut = Lut::build(by_name("siei").unwrap().as_ref());
+        let exact = Lut::build(&ExactMul::new(8, 8));
+        let luts = std::slice::from_ref(&lut);
+        let comp: Vec<Vec<i32>> = (0..n).map(|li| qnet.compensation_for(li, &lut)).collect();
+        assert!(
+            comp.iter().flatten().any(|&c| c != 0),
+            "siei is biased — its compensation term must be nonzero"
+        );
+        // All-zero compensation (exact LUT's term has the right shapes)
+        // is the identity; the real term must move the logits.
+        let zeros: Vec<Vec<i32>> = (0..n).map(|li| qnet.compensation_for(li, &exact)).collect();
+        let mut ws = Workspace::new();
+        let base = qnet.forward_batch_luts(&xs, 1, luts, None, &mut ws);
+        let with_zeros = qnet.forward_batch_luts(&xs, 1, luts, Some(&zeros), &mut ws);
+        assert_eq!(base, with_zeros, "zero compensation must be a no-op");
+        let comped = qnet.forward_batch_luts(&xs, 1, luts, Some(&comp), &mut ws);
+        assert_ne!(base, comped, "nonzero compensation must move the logits");
+    }
+
+    #[test]
+    fn compensation_adds_no_scratch() {
+        // The term rides inside the existing dequant sweep: switching it
+        // on must not grow the workspace (the "zero extra memory
+        // traffic" claim, pinned).
+        use crate::mult::by_name;
+        let fnet = toy_fnet("lenet", (1, 28, 28), 1);
+        let mut rng = Pcg32::new(12);
+        let xs: Vec<f32> = (0..784).map(|_| rng.next_f32()).collect();
+        let qnet = QNet::quantize(&fnet, &xs, 1, 8.0);
+        let lut = Lut::build(by_name("mul8x8_2").unwrap().as_ref());
+        let comp: Vec<Vec<i32>> = (0..qnet.num_layers())
+            .map(|li| qnet.compensation_for(li, &lut))
+            .collect();
+        let mut ws = Workspace::new();
+        for _ in 0..3 {
+            qnet.forward_batch_luts(&xs, 1, std::slice::from_ref(&lut), None, &mut ws);
+        }
+        let grows = ws.grow_events();
+        let caps = ws.capacity_bytes();
+        for _ in 0..3 {
+            qnet.forward_batch_luts(&xs, 1, std::slice::from_ref(&lut), Some(&comp), &mut ws);
+        }
+        assert_eq!(ws.grow_events(), grows, "compensation grew scratch");
+        assert_eq!(ws.capacity_bytes(), caps);
     }
 
     fn correlation(a: &[f32], b: &[f32]) -> f64 {

@@ -8,9 +8,9 @@
 //! the same `Arc<Lut>`, and the hit/miss counters make the invariant
 //! testable.
 
-use crate::metrics::Lut;
+use crate::metrics::{Lut, NEG_SUFFIX};
 use crate::mult::by_name;
-use anyhow::{anyhow, ensure, Result};
+use anyhow::{anyhow, ensure, Context, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
@@ -37,7 +37,10 @@ impl LutCache {
     }
 
     /// Look up (building at most once per cache) the LUT of a registered
-    /// 8×8 design.  Errors on unknown names and non-8×8 designs.
+    /// 8×8 design, or — for a `"{base}~neg"` name — the error-mirrored
+    /// partner of a resolvable base (see [`Lut::mirrored`]; the base is
+    /// resolved recursively, so it lands in the cache too).  Errors on
+    /// unknown names and non-8×8 designs.
     pub fn get(&self, design: &str) -> Result<Arc<Lut>> {
         if let Some(lut) = self.luts.lock().unwrap().get(design) {
             self.hits.fetch_add(1, Ordering::Relaxed);
@@ -45,14 +48,21 @@ impl LutCache {
         }
         // Build outside the lock: tabulation is the slow part (it
         // parallelizes internally) and must not serialize other designs.
-        let m = by_name(design).ok_or_else(|| anyhow!("unknown design {design}"))?;
-        ensure!(
-            (m.a_bits(), m.b_bits()) == (8, 8),
-            "design {design} is {}x{}, LUTs are for 8x8 designs",
-            m.a_bits(),
-            m.b_bits()
-        );
-        let built = Arc::new(Lut::build(m.as_ref()));
+        let built = if let Some(base) = design.strip_suffix(NEG_SUFFIX) {
+            let base_lut = self
+                .get(base)
+                .with_context(|| format!("partner {design}: base design failed to resolve"))?;
+            Arc::new(base_lut.mirrored())
+        } else {
+            let m = by_name(design).ok_or_else(|| anyhow!("unknown design {design}"))?;
+            ensure!(
+                (m.a_bits(), m.b_bits()) == (8, 8),
+                "design {design} is {}x{}, LUTs are for 8x8 designs",
+                m.a_bits(),
+                m.b_bits()
+            );
+            Arc::new(Lut::build(m.as_ref()))
+        };
         self.misses.fetch_add(1, Ordering::Relaxed);
         let mut guard = self.luts.lock().unwrap();
         // A racing builder may have inserted first; keep the incumbent so
@@ -69,6 +79,15 @@ impl LutCache {
 
     pub fn contains(&self, design: &str) -> bool {
         self.luts.lock().unwrap().contains_key(design)
+    }
+
+    /// Sorted names of every cached design — embedded in plan-resolution
+    /// errors so a failure report shows both the unknown name and what
+    /// *is* loadable, and listed by the serve example's cache report.
+    pub fn designs(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.luts.lock().unwrap().keys().cloned().collect();
+        names.sort();
+        names
     }
 
     /// Number of distinct LUTs currently held.
@@ -148,6 +167,40 @@ mod tests {
         let a = LutCache::global();
         let b = LutCache::global();
         assert!(Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn neg_partner_builds_from_cached_base() {
+        let cache = LutCache::new();
+        let neg = cache.get("mul8x8_2~neg").unwrap();
+        // Resolving the partner pulled the base into the cache too.
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.misses(), 2, "base + partner each tabulate once");
+        let base = cache.get("mul8x8_2").unwrap();
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(neg.table, base.mirrored().table);
+        // Second partner lookup is a pure hit.
+        let again = cache.get("mul8x8_2~neg").unwrap();
+        assert!(Arc::ptr_eq(&neg, &again));
+        assert_eq!(cache.misses(), 2);
+    }
+
+    #[test]
+    fn neg_of_unknown_base_errors_with_context() {
+        let cache = LutCache::new();
+        let err = format!("{:#}", cache.get("bogus~neg").unwrap_err());
+        assert!(err.contains("bogus~neg"), "{err}");
+        assert!(err.contains("unknown design bogus"), "{err}");
+        assert_eq!(cache.misses(), 0);
+    }
+
+    #[test]
+    fn designs_listing_is_sorted() {
+        let cache = LutCache::new();
+        assert!(cache.designs().is_empty());
+        cache.get("pkm").unwrap();
+        cache.get("exact8x8").unwrap();
+        assert_eq!(cache.designs(), vec!["exact8x8", "pkm"]);
     }
 
     #[test]

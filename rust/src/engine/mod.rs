@@ -8,20 +8,24 @@
 //!   64K-entry product table is tabulated at most once per process, no
 //!   matter how many consumers (server lanes, evaluator sweeps, benches)
 //!   ask for it.
-//! * [`Session`] / [`ModelHub`] — a quantized model bound to one
-//!   approximate-silicon design, registered under a `(model, design)`
-//!   key.  One hub can hold the same model under several designs, which
-//!   is what lets a single server A/B-route traffic across
-//!   accuracy/power points (the paper's whole deployment story).
+//! * [`Session`] / [`ModelHub`] — a quantized model bound to a
+//!   [`DesignPlan`] (one design per quantizable layer; a singleton plan
+//!   broadcasts and reproduces the classic one-design session
+//!   bit-for-bit), registered under a `(model, plan-id)` key.  One hub
+//!   can hold the same model under several plans, which is what lets a
+//!   single server A/B-route traffic across accuracy/power points (the
+//!   paper's whole deployment story) at layer granularity.
 //! * [`Workspace`] — reusable GEMM/accumulator/code-plane scratch
 //!   threaded through `QNet::forward_with`, so steady-state serving
 //!   performs no per-batch heap allocation on the hot path (and, since
 //!   the implicit-im2col conv kernel, never stages a patch matrix).
 
 pub mod lut_cache;
+pub mod plan;
 pub mod session;
 pub mod workspace;
 
 pub use lut_cache::LutCache;
+pub use plan::DesignPlan;
 pub use session::{ModelHub, Session, SessionKey};
 pub use workspace::Workspace;

@@ -1,0 +1,369 @@
+//! Per-layer design plans.
+//!
+//! A [`DesignPlan`] is an ordered list of design names — one per
+//! quantizable layer — plus two knobs layered on top of the raw list:
+//!
+//! * **positive/negative pairing** (Spantidi et al., arXiv 2107.09366):
+//!   every design has an error-mirrored partner (`"{name}~neg"`, see
+//!   [`Lut::mirrored`]) whose signed error is the exact negation of the
+//!   original's.  [`DesignPlan::paired_alternating`] assigns the partner
+//!   on alternating layers so the biases cancel across depth instead of
+//!   compounding.
+//! * **control-variate compensation** (Zervakis et al., arXiv
+//!   2412.16757): each layer's expected LUT error `Σ_k E[lut(w,a) − w·a]`
+//!   is precomputed from the *static* weight codes at session-bind time
+//!   and folded into the zero-point correction of the already-fused
+//!   row-sum pass — one extra `i32` subtraction per output element,
+//!   zero extra memory traffic at serving time.
+//!
+//! A singleton plan broadcasts its one design to every layer and is
+//! **bit-identical** to the historical session-wide binding (the
+//! property suite pins this across every registry design).  Plans
+//! serialize through the same hand-rolled TOML machinery as the
+//! coordinator configs, so a greedy-assigned plan can be shipped as a
+//! manifest and cold-started by a fleet (`axmul export-luts --plan`).
+
+use crate::engine::LutCache;
+use crate::metrics::lut::NEG_SUFFIX;
+use crate::metrics::Lut;
+use anyhow::{bail, ensure, Context, Result};
+use std::sync::Arc;
+
+/// An ordered per-layer assignment of multiplier designs.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DesignPlan {
+    designs: Vec<String>,
+    paired: bool,
+    compensated: bool,
+}
+
+impl DesignPlan {
+    /// The classic one-design-everywhere plan (broadcasts to any layer
+    /// count; bit-identical to the pre-plan engine).
+    pub fn single(design: &str) -> DesignPlan {
+        DesignPlan {
+            designs: vec![design.to_string()],
+            paired: false,
+            compensated: false,
+        }
+    }
+
+    /// An explicit per-layer list: either exactly one entry (broadcast)
+    /// or one entry per quantizable layer of the net it will bind to.
+    pub fn new(designs: Vec<String>) -> Result<DesignPlan> {
+        ensure!(!designs.is_empty(), "a design plan needs at least one design");
+        for (li, d) in designs.iter().enumerate() {
+            ensure!(!d.trim().is_empty(), "plan layer {li} has an empty design name");
+        }
+        Ok(DesignPlan {
+            designs,
+            paired: false,
+            compensated: false,
+        })
+    }
+
+    /// The positive/negative pairing of arXiv 2107.09366: `design` on
+    /// even layers, its error-mirrored partner `design~neg` on odd ones,
+    /// so the signed error introduced at depth *i* is cancelled at
+    /// depth *i+1* instead of accumulating.
+    pub fn paired_alternating(design: &str, n_layers: usize) -> Result<DesignPlan> {
+        ensure!(n_layers > 0, "paired plan needs at least one layer");
+        ensure!(!design.trim().is_empty(), "empty design name");
+        let designs = (0..n_layers)
+            .map(|li| {
+                if li % 2 == 0 {
+                    design.to_string()
+                } else {
+                    format!("{design}{NEG_SUFFIX}")
+                }
+            })
+            .collect();
+        Ok(DesignPlan {
+            designs,
+            paired: true,
+            compensated: false,
+        })
+    }
+
+    /// Toggle control-variate compensation (arXiv 2412.16757).  Off by
+    /// default — compensation changes the numerics, and singleton plans
+    /// must stay bit-identical to the historical path.
+    pub fn with_compensation(mut self, on: bool) -> DesignPlan {
+        self.compensated = on;
+        self
+    }
+
+    pub fn designs(&self) -> &[String] {
+        &self.designs
+    }
+
+    pub fn len(&self) -> usize {
+        self.designs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.designs.is_empty()
+    }
+
+    pub fn is_singleton(&self) -> bool {
+        self.designs.len() == 1
+    }
+
+    pub fn paired(&self) -> bool {
+        self.paired
+    }
+
+    pub fn compensated(&self) -> bool {
+        self.compensated
+    }
+
+    /// The design bound to quantizable layer `li` (singleton plans
+    /// broadcast).
+    pub fn design_for(&self, li: usize) -> &str {
+        if self.designs.len() == 1 {
+            &self.designs[0]
+        } else {
+            &self.designs[li]
+        }
+    }
+
+    /// The session-key id of this plan.  A plain (uncompensated)
+    /// singleton keeps the bare design name — `lenet@mul8x8_2` logs,
+    /// keys and scrapers all keep working — while anything richer gets
+    /// the unambiguous `plan{d1,d2,…}` form, with `+cv` marking
+    /// compensated numerics (a compensated session must never collide
+    /// with an uncompensated one under the same `(model, design)` key).
+    pub fn id(&self) -> String {
+        if self.is_singleton() && !self.compensated {
+            return self.designs[0].clone();
+        }
+        let mut id = format!("plan{{{}}}", self.designs.join(","));
+        if self.compensated {
+            id.push_str("+cv");
+        }
+        id
+    }
+
+    /// Serialize as a `[plan]` manifest (the format `parse_toml` reads
+    /// back and `axmul export-luts --plan` ships next to the `.npy`
+    /// tables).
+    pub fn to_toml(&self) -> String {
+        let designs = self
+            .designs
+            .iter()
+            .map(|d| format!("\"{d}\""))
+            .collect::<Vec<_>>()
+            .join(", ");
+        format!(
+            "# axmul per-layer design plan\n[plan]\ndesigns = [{designs}]\npaired = {}\ncompensated = {}\n",
+            self.paired, self.compensated
+        )
+    }
+
+    /// Parse a `[plan]` manifest produced by [`DesignPlan::to_toml`] (or
+    /// written by hand — only `plan.designs` is required).
+    pub fn parse_toml(src: &str) -> Result<DesignPlan> {
+        let doc = crate::util::TomlDoc::parse(src).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let arr = doc
+            .get("plan.designs")
+            .context("plan manifest is missing `plan.designs`")?
+            .as_arr()
+            .context("`plan.designs` must be an array of design-name strings")?;
+        let mut designs = Vec::with_capacity(arr.len());
+        for (li, v) in arr.iter().enumerate() {
+            let name = v
+                .as_str()
+                .with_context(|| format!("`plan.designs[{li}]` is not a string"))?;
+            designs.push(name.to_string());
+        }
+        let mut plan = DesignPlan::new(designs)?;
+        plan.paired = doc.bool_or("plan.paired", false);
+        plan.compensated = doc.bool_or("plan.compensated", false);
+        Ok(plan)
+    }
+
+    /// Resolve every layer's LUT through the cache.  Errors carry the
+    /// failing *layer index* and the cache's current design listing —
+    /// a fleet operator reading the log must see which layer of which
+    /// plan named the unknown design.
+    pub fn resolve(&self, n_layers: usize, cache: &LutCache) -> Result<Vec<Arc<Lut>>> {
+        ensure!(n_layers > 0, "cannot resolve a plan for a zero-layer net");
+        if self.designs.len() != 1 && self.designs.len() != n_layers {
+            bail!(
+                "plan {} has {} designs but the net has {n_layers} quantizable layers",
+                self.id(),
+                self.designs.len()
+            );
+        }
+        (0..n_layers)
+            .map(|li| {
+                let name = self.design_for(li);
+                cache.get(name).with_context(|| {
+                    format!(
+                        "plan {}: layer {li} design {name:?} (cached designs: [{}])",
+                        self.id(),
+                        cache.designs().join(", ")
+                    )
+                })
+            })
+            .collect()
+    }
+}
+
+/// Render a session-key design id for logs: plan ids keep their first 3
+/// designs and elide the rest (`plan{d1,d2,d3,…}`); everything else —
+/// bare design names, short plans — passes through untouched.
+pub fn display_design(id: &str) -> String {
+    let Some(body) = id.strip_prefix("plan{").and_then(|r| r.split_once('}')) else {
+        return id.to_string();
+    };
+    let (inner, tail) = body;
+    let names: Vec<&str> = inner.split(',').collect();
+    if names.len() <= 3 {
+        return id.to_string();
+    }
+    format!("plan{{{},…}}{tail}", names[..3].join(","))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mult::registry::DNN_DESIGNS;
+
+    #[test]
+    fn singleton_id_is_bare_name() {
+        let p = DesignPlan::single("mul8x8_2");
+        assert_eq!(p.id(), "mul8x8_2");
+        assert!(p.is_singleton());
+        assert_eq!(p.design_for(0), "mul8x8_2");
+        assert_eq!(p.design_for(4), "mul8x8_2", "singleton broadcasts");
+    }
+
+    #[test]
+    fn multi_and_compensated_ids() {
+        let p = DesignPlan::new(vec!["a".into(), "b".into()]).unwrap();
+        assert_eq!(p.id(), "plan{a,b}");
+        assert_eq!(p.clone().with_compensation(true).id(), "plan{a,b}+cv");
+        // A compensated singleton cannot masquerade as the plain design.
+        let s = DesignPlan::single("pkm").with_compensation(true);
+        assert_eq!(s.id(), "plan{pkm}+cv");
+    }
+
+    #[test]
+    fn paired_alternating_pattern() {
+        let p = DesignPlan::paired_alternating("siei", 5).unwrap();
+        assert!(p.paired());
+        assert_eq!(
+            p.designs(),
+            &["siei", "siei~neg", "siei", "siei~neg", "siei"]
+        );
+        assert_eq!(p.id(), "plan{siei,siei~neg,siei,siei~neg,siei}");
+    }
+
+    #[test]
+    fn rejects_empty() {
+        assert!(DesignPlan::new(vec![]).is_err());
+        assert!(DesignPlan::new(vec!["ok".into(), "  ".into()]).is_err());
+        assert!(DesignPlan::paired_alternating("x", 0).is_err());
+    }
+
+    #[test]
+    fn toml_round_trip() {
+        for plan in [
+            DesignPlan::single("exact8x8"),
+            DesignPlan::new(vec!["mul8x8_1".into(), "pkm~neg".into(), "siei".into()]).unwrap(),
+            DesignPlan::paired_alternating("mul8x8_3", 4)
+                .unwrap()
+                .with_compensation(true),
+        ] {
+            let toml = plan.to_toml();
+            let back = DesignPlan::parse_toml(&toml).unwrap();
+            assert_eq!(back, plan, "round-trip failed for {toml}");
+        }
+    }
+
+    #[test]
+    fn parse_rejects_malformed_manifests() {
+        assert!(DesignPlan::parse_toml("[plan]\npaired = true\n").is_err());
+        assert!(DesignPlan::parse_toml("[plan]\ndesigns = [1, 2]\n").is_err());
+        assert!(DesignPlan::parse_toml("[plan]\ndesigns = []\n").is_err());
+        assert!(DesignPlan::parse_toml("designs = not toml").is_err());
+    }
+
+    #[test]
+    fn resolve_singleton_shares_one_arc() {
+        let cache = LutCache::new();
+        let luts = DesignPlan::single("mul8x8_2").resolve(5, &cache).unwrap();
+        assert_eq!(luts.len(), 5);
+        for l in &luts[1..] {
+            assert!(Arc::ptr_eq(&luts[0], l), "broadcast must share one table");
+        }
+        assert_eq!(cache.misses(), 1);
+    }
+
+    #[test]
+    fn resolve_length_mismatch_errors() {
+        let cache = LutCache::new();
+        let p = DesignPlan::new(vec!["exact8x8".into(), "pkm".into()]).unwrap();
+        let err = p.resolve(5, &cache).unwrap_err().to_string();
+        assert!(err.contains("2 designs"), "{err}");
+        assert!(err.contains("5 quantizable layers"), "{err}");
+    }
+
+    #[test]
+    fn resolve_unknown_design_names_the_layer() {
+        let cache = LutCache::new();
+        cache.get("exact8x8").unwrap();
+        let p = DesignPlan::new(vec![
+            "exact8x8".into(),
+            "no_such_design".into(),
+            "pkm".into(),
+        ])
+        .unwrap();
+        let err = format!("{:#}", p.resolve(3, &cache).unwrap_err());
+        assert!(err.contains("layer 1"), "must name the failing layer: {err}");
+        assert!(err.contains("no_such_design"), "{err}");
+        assert!(err.contains("exact8x8"), "must list cached designs: {err}");
+    }
+
+    #[test]
+    fn resolve_paired_plan_uses_mirrored_partners() {
+        let cache = LutCache::new();
+        let luts = DesignPlan::paired_alternating("mul8x8_2", 4)
+            .unwrap()
+            .resolve(4, &cache)
+            .unwrap();
+        assert!(Arc::ptr_eq(&luts[0], &luts[2]));
+        assert!(Arc::ptr_eq(&luts[1], &luts[3]));
+        let base = &luts[0];
+        let neg = &luts[1];
+        assert_eq!(neg.name, "mul8x8_2~neg");
+        for a in (0..256usize).step_by(17) {
+            for b in (0..256usize).step_by(13) {
+                assert_eq!(
+                    base.mul(a as u8, b as u8) + neg.mul(a as u8, b as u8),
+                    2 * (a * b) as i32,
+                    "errors must mirror at ({a},{b})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn display_design_truncates_long_plans() {
+        assert_eq!(display_design("mul8x8_2"), "mul8x8_2");
+        assert_eq!(display_design("plan{a,b,c}"), "plan{a,b,c}");
+        assert_eq!(display_design("plan{a,b,c,d,e}"), "plan{a,b,c,…}");
+        assert_eq!(display_design("plan{a,b,c,d}+cv"), "plan{a,b,c,…}+cv");
+    }
+
+    #[test]
+    fn all_registry_designs_have_resolvable_partners() {
+        let cache = LutCache::new();
+        for d in DNN_DESIGNS {
+            let p = DesignPlan::paired_alternating(d, 2).unwrap();
+            let luts = p.resolve(2, &cache).unwrap();
+            assert_eq!(luts[1].name, format!("{d}{NEG_SUFFIX}"));
+        }
+    }
+}

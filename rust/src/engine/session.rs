@@ -1,14 +1,19 @@
 //! Sessions and the model hub: the unit of routing for multi-design
 //! serving.
 //!
-//! A `Session` bundles a quantized model with one design's cached LUT —
-//! everything a worker needs to run inference.  The `ModelHub` registers
-//! sessions under `(model, design)` keys; registering the same `QNet`
-//! under several designs is how one server instance serves e.g.
-//! `mul8x8_2` and `exact8x8` traffic side by side for accuracy-vs-power
-//! A/B routing.
+//! A `Session` bundles a quantized model with a resolved [`DesignPlan`]
+//! — one cached LUT per quantizable layer, plus the optional
+//! control-variate compensation terms — everything a worker needs to
+//! run inference.  The `ModelHub` registers sessions under
+//! `(model, plan-id)` keys; a singleton plan's id is the bare design
+//! name, so the classic `(model, design)` routing (and every log line
+//! built on it) is unchanged.  Registering the same `QNet` under
+//! several plans is how one server instance serves e.g. `mul8x8_2` and
+//! `exact8x8` traffic side by side for accuracy-vs-power A/B routing —
+//! now at layer granularity.
 
 use crate::dnn::{argmax, QNet};
+use crate::engine::plan::{display_design, DesignPlan};
 use crate::engine::{LutCache, Workspace};
 use crate::metrics::Lut;
 use anyhow::Result;
@@ -16,7 +21,9 @@ use std::collections::BTreeMap;
 use std::fmt;
 use std::sync::{Arc, RwLock};
 
-/// Identity of a servable (model, design) pair.
+/// Identity of a servable (model, design-plan) pair.  `design` is a
+/// plan id: a bare design name for singleton plans, `plan{d1,d2,…}`
+/// (with a `+cv` suffix when compensated) otherwise.
 #[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct SessionKey {
     pub model: String,
@@ -33,52 +40,88 @@ impl SessionKey {
 }
 
 impl fmt::Display for SessionKey {
+    /// `model@design` for singleton plans (log scrapers depend on it);
+    /// plan ids past 3 designs render truncated (`model@plan{a,b,c,…}`)
+    /// — the full id stays in the key itself.
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        write!(f, "{}@{}", self.model, self.design)
+        write!(f, "{}@{}", self.model, display_design(&self.design))
     }
 }
 
-/// A quantized model bound to one approximate-silicon design.
+/// A quantized model bound to a per-layer design plan.
 pub struct Session {
     pub key: SessionKey,
     pub qnet: Arc<QNet>,
-    pub lut: Arc<Lut>,
+    pub plan: DesignPlan,
+    /// One resolved LUT per quantizable layer, in forward order.  A
+    /// singleton plan holds `num_layers` clones of one `Arc`, so the
+    /// broadcast costs pointers, not tables.
+    pub luts: Vec<Arc<Lut>>,
+    /// Per-layer control-variate terms (arXiv 2412.16757), computed at
+    /// bind time from the static weight codes; present iff the plan is
+    /// compensated.  Subtracted inside the fused dequant pass.
+    comp: Option<Vec<Vec<i32>>>,
 }
 
 impl Session {
-    pub fn new(key: SessionKey, qnet: Arc<QNet>, lut: Arc<Lut>) -> Session {
-        // Warm the b-major transposed store now (u16 where products fit):
-        // the weight-stationary forward path gathers through it, and the
-        // build must be paid at registration, not on the first request.
-        // It is cached inside the `Arc<Lut>`, i.e. once per design per
-        // process via the shared LutCache.  (The other static halves of
-        // the serving path — packed weight panels and the per-conv
-        // implicit-im2col gather plans — were already built inside the
-        // `QNet` at quantization time, so after this call a session's
-        // first request runs the same allocation profile as its
-        // thousandth.)
-        lut.transposed();
-        // Warm the AXMUL_SIMD dispatch OnceLock too: kernel-path
-        // selection is resolved config, decided at registration like the
-        // thread count, never re-read from the environment mid-serve.
+    /// Resolve `plan` against the cache and bind it to `qnet`.  All
+    /// bind-time costs are paid here, not on the first request: every
+    /// distinct LUT's b-major transposed store is warmed (cached inside
+    /// the `Arc<Lut>`, i.e. once per design per process), the
+    /// AXMUL_SIMD dispatch OnceLock is resolved (kernel-path selection
+    /// is configuration, decided at registration like the thread
+    /// count), and — for compensated plans — each layer's expected-error
+    /// term is computed from its packed weight codes.  (The other
+    /// static halves of the serving path, packed weight panels and the
+    /// per-conv implicit-im2col gather plans, were already built inside
+    /// the `QNet` at quantization time, so after this call a session's
+    /// first request runs the same allocation profile as its
+    /// thousandth.)
+    pub fn bind(
+        model: &str,
+        plan: DesignPlan,
+        qnet: Arc<QNet>,
+        cache: &LutCache,
+    ) -> Result<Session> {
+        let luts = plan.resolve(qnet.num_layers(), cache)?;
+        for lut in &luts {
+            lut.transposed();
+        }
         crate::dnn::simd::simd_mode();
-        Session { key, qnet, lut }
+        let comp = plan.compensated().then(|| {
+            luts.iter()
+                .enumerate()
+                .map(|(li, lut)| qnet.compensation_for(li, lut))
+                .collect()
+        });
+        let key = SessionKey::new(model, &plan.id());
+        Ok(Session {
+            key,
+            qnet,
+            plan,
+            luts,
+            comp,
+        })
     }
 
     /// Forward one image through this session's silicon, reusing the
     /// caller's scratch (allocation-free in steady state).
     pub fn infer_with(&self, image: &[f32], ws: &mut Workspace) -> Vec<f32> {
-        self.qnet.forward_with(image, &self.lut, ws)
+        self.infer_batch_with(image, 1, ws)
     }
 
     /// Forward a whole batch (`images` = `batch` images back to back)
     /// through this session's silicon with ONE fused LUT-GEMM per layer
     /// (implicit-im2col for convs: codes gathered in place, row sums
     /// accumulated in the same pass, no patch matrix staged) — the
-    /// server lanes' execution path.  Returns the concatenated logits;
-    /// bit-identical to `batch` [`Session::infer_with`] calls.
+    /// server lanes' execution path.  Each layer gathers through its
+    /// own plan-bound LUT; SIMD dispatch and the sparsity skips resolve
+    /// per layer because they live on the `Lut`.  Returns the
+    /// concatenated logits; bit-identical to `batch`
+    /// [`Session::infer_with`] calls.
     pub fn infer_batch_with(&self, images: &[f32], batch: usize, ws: &mut Workspace) -> Vec<f32> {
-        self.qnet.forward_batch_with(images, batch, &self.lut, ws)
+        self.qnet
+            .forward_batch_luts(images, batch, &self.luts, self.comp.as_deref(), ws)
     }
 
     /// Floats per image this session expects (`C*H*W` of its model).
@@ -88,13 +131,14 @@ impl Session {
 
     /// Convenience single-shot inference: returns (logits, argmax).
     pub fn infer_one(&self, image: &[f32]) -> (Vec<f32>, usize) {
-        let logits = self.qnet.forward_one(image, &self.lut);
+        let mut ws = Workspace::new();
+        let logits = self.infer_with(image, &mut ws);
         let pred = argmax(&logits);
         (logits, pred)
     }
 }
 
-/// Registry of live sessions keyed by (model, design), sharing one
+/// Registry of live sessions keyed by (model, plan-id), sharing one
 /// [`LutCache`] so every design's table is built at most once.
 pub struct ModelHub {
     cache: Arc<LutCache>,
@@ -115,12 +159,27 @@ impl ModelHub {
     }
 
     /// Bind `qnet` to `design` (building or reusing its LUT) and register
-    /// the session.  Re-registering a key replaces the session.
+    /// the session — the singleton-plan case of
+    /// [`ModelHub::register_plan`], key and behavior unchanged from the
+    /// one-design engine.
     pub fn register(&self, model: &str, design: &str, qnet: Arc<QNet>) -> Result<Arc<Session>> {
-        let lut = self.cache.get(design)?;
-        let key = SessionKey::new(model, design);
-        let sess = Arc::new(Session::new(key.clone(), qnet, lut));
-        self.sessions.write().unwrap().insert(key, sess.clone());
+        self.register_plan(model, DesignPlan::single(design), qnet)
+    }
+
+    /// Bind `qnet` to a per-layer design plan and register the session
+    /// under `(model, plan.id())`.  Re-registering a key replaces the
+    /// session.
+    pub fn register_plan(
+        &self,
+        model: &str,
+        plan: DesignPlan,
+        qnet: Arc<QNet>,
+    ) -> Result<Arc<Session>> {
+        let sess = Arc::new(Session::bind(model, plan, qnet, &self.cache)?);
+        self.sessions
+            .write()
+            .unwrap()
+            .insert(sess.key.clone(), sess.clone());
         Ok(sess)
     }
 
@@ -173,8 +232,16 @@ mod tests {
         let a = hub.register("lenet", "exact8x8", qnet.clone()).unwrap();
         let b = hub.register("lenet_v2", "exact8x8", qnet.clone()).unwrap();
         let c = hub.register("lenet", "mul8x8_2", qnet).unwrap();
-        assert!(Arc::ptr_eq(&a.lut, &b.lut), "same design = same table");
-        assert!(!Arc::ptr_eq(&a.lut, &c.lut));
+        assert_eq!(a.luts.len(), a.qnet.num_layers(), "one LUT per layer");
+        assert!(
+            Arc::ptr_eq(&a.luts[0], &b.luts[0]),
+            "same design = same table"
+        );
+        assert!(
+            Arc::ptr_eq(&a.luts[0], a.luts.last().unwrap()),
+            "singleton plan broadcasts one Arc"
+        );
+        assert!(!Arc::ptr_eq(&a.luts[0], &c.luts[0]));
         assert_eq!(cache.misses(), 2, "two distinct designs, two builds");
         assert_eq!(hub.len(), 3);
         assert_eq!(
@@ -201,7 +268,7 @@ mod tests {
         let sess = hub.register("m", "mul8x8_2", qnet.clone()).unwrap();
         let image: Vec<f32> = (0..784).map(|i| (i % 7) as f32 / 7.0).collect();
         let (logits, pred) = sess.infer_one(&image);
-        let direct = qnet.forward_one(&image, &sess.lut);
+        let direct = qnet.forward_one(&image, &sess.luts[0]);
         assert_eq!(logits, direct);
         assert_eq!(pred, argmax(&direct));
         let mut ws = Workspace::new();
@@ -232,7 +299,77 @@ mod tests {
     }
 
     #[test]
+    fn plan_session_binds_per_layer_tables() {
+        let cache = Arc::new(LutCache::new());
+        let hub = ModelHub::new(cache.clone());
+        let qnet = tiny_qnet();
+        let n = qnet.num_layers();
+        let designs: Vec<String> = (0..n)
+            .map(|i| if i == 1 { "pkm" } else { "exact8x8" }.to_string())
+            .collect();
+        let plan = DesignPlan::new(designs).unwrap();
+        let sess = hub.register_plan("lenet", plan.clone(), qnet.clone()).unwrap();
+        assert_eq!(sess.key, SessionKey::new("lenet", &plan.id()));
+        assert_eq!(sess.luts.len(), n);
+        assert_eq!(sess.luts[1].name, "pkm");
+        assert_eq!(sess.luts[0].name, "exact8x8");
+        assert_eq!(cache.misses(), 2, "two distinct designs across the plan");
+        // The session is reachable under its plan id.
+        assert!(hub.session("lenet", &plan.id()).is_some());
+        // And the forward routes per layer: identical to calling the
+        // generic path directly with the same tables.
+        let image: Vec<f32> = (0..784).map(|i| (i % 13) as f32 / 13.0).collect();
+        let mut ws = Workspace::new();
+        let want = qnet.forward_batch_luts(&image, 1, &sess.luts, None, &mut ws);
+        assert_eq!(sess.infer_one(&image).0, want);
+    }
+
+    #[test]
+    fn singleton_plan_session_is_bit_identical_to_register() {
+        let hub = ModelHub::new(Arc::new(LutCache::new()));
+        let qnet = tiny_qnet();
+        let a = hub.register("m", "mul8x8_2", qnet.clone()).unwrap();
+        let b = hub
+            .register_plan("m2", DesignPlan::single("mul8x8_2"), qnet)
+            .unwrap();
+        let image: Vec<f32> = (0..784).map(|i| (i % 5) as f32 / 5.0).collect();
+        assert_eq!(a.infer_one(&image), b.infer_one(&image));
+        assert_eq!(a.key.design, b.key.design, "singleton id = bare name");
+    }
+
+    #[test]
+    fn compensated_plan_gets_distinct_key_and_numerics() {
+        let hub = ModelHub::new(Arc::new(LutCache::new()));
+        let qnet = tiny_qnet();
+        let plain = hub.register("m", "siei", qnet.clone()).unwrap();
+        let comped = hub
+            .register_plan("m", DesignPlan::single("siei").with_compensation(true), qnet)
+            .unwrap();
+        assert_ne!(
+            plain.key, comped.key,
+            "compensated numerics must not collide with the plain session"
+        );
+        assert_eq!(comped.key.design, "plan{siei}+cv");
+        assert_eq!(hub.len(), 2);
+        let image: Vec<f32> = (0..784).map(|i| (i % 9) as f32).collect();
+        assert_ne!(
+            plain.infer_one(&image).0,
+            comped.infer_one(&image).0,
+            "siei is biased — compensation must move the logits"
+        );
+    }
+
+    #[test]
     fn key_display() {
         assert_eq!(SessionKey::new("lenet", "pkm").to_string(), "lenet@pkm");
+        assert_eq!(
+            SessionKey::new("lenet", "plan{a,b,c}").to_string(),
+            "lenet@plan{a,b,c}"
+        );
+        assert_eq!(
+            SessionKey::new("lenet", "plan{a,b,c,d,e}").to_string(),
+            "lenet@plan{a,b,c,…}",
+            "long plans truncate in logs, not in keys"
+        );
     }
 }

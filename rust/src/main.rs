@@ -7,9 +7,11 @@
 //!   table8           DNN accuracy sweep (needs `make artifacts`)
 //!   weights-hist     §II-B weight-code distribution (needs artifacts)
 //!   train            train one network, print the loss curve
+//!   export-luts      dump product LUTs as .npy (optionally one plan's set)
 //!   designs          list registered multiplier designs
 //!   mul              evaluate one product: `axmul mul mul8x8_2 100 200`
 
+use anyhow::Context;
 use axmul::coordinator::{self, resolve_table8};
 use axmul::mult::{all_names, by_name, DESIGNS_8X8};
 use axmul::runtime::Engine;
@@ -86,25 +88,52 @@ fn run(args: &Args) -> anyhow::Result<()> {
             println!("[train {tag}] float accuracy: {:.2}%", acc * 100.0);
         }
         Some("export-luts") => {
-            // Tabulate every 8×8 design as a .npy product LUT — the
-            // artifact any external runtime (incl. the python tests)
-            // consumes as "silicon".  Tables come from the process-wide
-            // cache, so an exporter embedded in a serving process reuses
-            // whatever the server already built.
+            // Tabulate product LUTs as .npy — the artifact any external
+            // runtime (incl. the python tests) consumes as "silicon".
+            // Tables come from the process-wide cache, so an exporter
+            // embedded in a serving process reuses whatever the server
+            // already built.  With `--plan FILE`, export exactly the
+            // designs a per-layer plan manifest names (the cache derives
+            // `~neg` error-mirrored partners on the fly) and re-emit the
+            // manifest alongside the tables, so a fleet cold-starts the
+            // plan from the directory without re-deriving anything.
             let out = std::path::PathBuf::from(args.opt_or("out", "artifacts/luts"));
             std::fs::create_dir_all(&out)?;
             let cache = axmul::engine::LutCache::global();
-            let mut n = 0;
-            for name in all_names() {
-                let m = by_name(name).unwrap();
-                if (m.a_bits(), m.b_bits()) != (8, 8) {
-                    continue;
+            if let Some(plan_file) = args.opt("plan") {
+                let src = std::fs::read_to_string(plan_file)
+                    .with_context(|| format!("plan manifest {plan_file}"))?;
+                let plan = axmul::engine::DesignPlan::parse_toml(&src)?;
+                let mut seen = std::collections::BTreeSet::new();
+                for name in plan.designs() {
+                    if !seen.insert(name.clone()) {
+                        continue;
+                    }
+                    let lut = cache
+                        .get(name)
+                        .with_context(|| format!("plan design {name}"))?;
+                    lut.write_npy(&out.join(format!("{name}.npy")))?;
                 }
-                let lut = cache.get(name)?;
-                lut.write_npy(&out.join(format!("{name}.npy")))?;
-                n += 1;
+                std::fs::write(out.join("plan.toml"), plan.to_toml())?;
+                println!(
+                    "wrote {} LUT(s) + plan.toml ({}) to {}",
+                    seen.len(),
+                    plan.id(),
+                    out.display()
+                );
+            } else {
+                let mut n = 0;
+                for name in all_names() {
+                    let m = by_name(name).unwrap();
+                    if (m.a_bits(), m.b_bits()) != (8, 8) {
+                        continue;
+                    }
+                    let lut = cache.get(name)?;
+                    lut.write_npy(&out.join(format!("{name}.npy")))?;
+                    n += 1;
+                }
+                println!("wrote {n} LUTs to {}", out.display());
             }
-            println!("wrote {n} LUTs to {}", out.display());
         }
         Some("designs") => {
             println!("registered multiplier designs:");
@@ -138,9 +167,10 @@ fn run(args: &Args) -> anyhow::Result<()> {
         _ => {
             println!(
                 "axmul — approximate multiplier co-design (ISCAS'22 reproduction)\n\
-                 usage: axmul <table5|table6|table7|table8|weights-hist|train|designs|mul> [options]\n\
+                 usage: axmul <table5|table6|table7|table8|weights-hist|train|export-luts|designs|mul> [options]\n\
                  common options: --artifacts DIR --quick --verbose\n\
-                 table8: --nets a,b --designs x,y --steps N --eval N --config FILE"
+                 table8: --nets a,b --designs x,y --steps N --eval N --config FILE\n\
+                 export-luts: --out DIR --plan FILE (per-layer plan manifest)"
             );
         }
     }

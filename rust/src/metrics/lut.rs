@@ -19,6 +19,12 @@ use crate::mult::Multiplier;
 use crate::util::parallel_map;
 use std::sync::OnceLock;
 
+/// Name suffix of a design's error-mirrored partner table (see
+/// [`Lut::mirrored`]).  `LutCache::get` resolves `"{design}~neg"` by
+/// mirroring the cached base design, so plan manifests can name partners
+/// without registering them.
+pub const NEG_SUFFIX: &str = "~neg";
+
 /// The b-major transposed product store: `[b * 256 + a]`, one contiguous
 /// 256-entry row per weight code.  `U16` when every table value fits
 /// (512 B per row), `I32` otherwise (doctored/test tables with negative
@@ -169,6 +175,26 @@ impl Lut {
         })
     }
 
+    /// The error-mirrored partner table of Spantidi et al. (arXiv
+    /// 2107.09366): `T'[a,b] = 2·a·b − T[a,b]`, so the partner's signed
+    /// error `T'[a,b] − a·b` is the exact negation of this table's.
+    /// Assigning a design and its partner on alternating layers lets the
+    /// biases cancel across depth instead of compounding.  Mirrors of
+    /// exact tables are exact; over-estimating designs mirror to tables
+    /// with negative entries (and under-estimating ones may exceed
+    /// 65535), so partner stores routinely take the `I32` fallback —
+    /// heterogeneous u16+i32 stores inside one plan are the norm, not an
+    /// edge case.
+    pub fn mirrored(&self) -> Lut {
+        let table = (0..65536usize)
+            .map(|i| {
+                let (a, b) = (i >> 8, i & 0xff);
+                2 * (a * b) as i32 - self.table[i]
+            })
+            .collect();
+        Lut::from_table(&format!("{}{NEG_SUFFIX}", self.name), table)
+    }
+
     /// Signed multiply for zero-point-adjusted quantized values: both
     /// operands are u8 magnitudes here; the DNN engine handles sign by
     /// operating in the unsigned domain (Jacob-style affine quantization
@@ -195,6 +221,15 @@ impl Lut {
             &[256, 256],
             crate::data::npy::NpyView::I32(&self.table),
         )
+    }
+}
+
+/// Lets the per-layer forward take `&[Arc<Lut>]` and `&[Lut]` through
+/// one generic bound (`L: AsRef<Lut>`); `Arc<Lut>` gets its impl from
+/// std.
+impl AsRef<Lut> for Lut {
+    fn as_ref(&self) -> &Lut {
+        self
     }
 }
 
@@ -280,6 +315,52 @@ mod tests {
         doctored.zero_col_zero = false; // entry (0,0) sits in both
         assert_eq!(doctored.transposed().get(0, 0), -1, "rebuilt, not stale");
         assert!(matches!(doctored.transposed(), LutTStore::I32(_)));
+    }
+
+    #[test]
+    fn mirrored_negates_error_exactly() {
+        let m = by_name("mul8x8_2").unwrap();
+        let lut = Lut::build(m.as_ref());
+        let neg = lut.mirrored();
+        assert_eq!(neg.name, "mul8x8_2~neg");
+        let mut saw_error = false;
+        for a in 0..256usize {
+            for b in 0..256usize {
+                let exact = (a * b) as i32;
+                let e = lut.mul(a as u8, b as u8) - exact;
+                let e_neg = neg.mul(a as u8, b as u8) - exact;
+                assert_eq!(e_neg, -e, "error must mirror at ({a},{b})");
+                saw_error |= e != 0;
+            }
+        }
+        assert!(saw_error, "mul8x8_2 is approximate; the test must bite");
+        // Mirroring is an involution.
+        assert_eq!(neg.mirrored().table, lut.table);
+    }
+
+    #[test]
+    fn mirrored_exact_is_exact() {
+        let lut = Lut::build(&ExactMul::new(8, 8));
+        let neg = lut.mirrored();
+        assert!(neg.is_exact());
+        assert!(neg.zero_row_zero && neg.zero_col_zero);
+    }
+
+    #[test]
+    fn mirrored_overestimator_takes_i32_store() {
+        // A table that over-estimates everywhere mirrors to negative
+        // entries — the partner store must fall back to I32 while the
+        // zero row/col flags survive (0·b and a·0 mirror to 0).
+        let mut table = vec![0i32; 65536];
+        for a in 1..256usize {
+            for b in 1..256usize {
+                table[(a << 8) | b] = (a * b) as i32 + 3;
+            }
+        }
+        let neg = Lut::from_table("over", table).mirrored();
+        assert!(matches!(neg.transposed(), LutTStore::I32(_)));
+        assert_eq!(neg.mul(1, 1), -2);
+        assert!(neg.zero_row_zero && neg.zero_col_zero);
     }
 
     #[test]

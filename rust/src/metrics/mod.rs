@@ -4,7 +4,7 @@
 
 pub mod lut;
 
-pub use lut::{Lut, LutTStore};
+pub use lut::{Lut, LutTStore, NEG_SUFFIX};
 
 use crate::mult::Multiplier;
 use crate::util::parallel_map;

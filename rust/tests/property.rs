@@ -602,6 +602,100 @@ fn prop_forward_batch_bit_identical_for_all_designs_and_odd_batches() {
 }
 
 #[test]
+fn prop_singleton_plan_forward_bit_identical_for_all_designs() {
+    // PR-7 tentpole invariant: a singleton DesignPlan resolved through
+    // the cache and run through the per-layer forward path must
+    // reproduce the classic single-LUT forward bit for bit, for EVERY
+    // Table VIII design, at batch 1 and an odd batch.  (The workers
+    // axis lives in the environment, not in a loop here: AXMUL_THREADS
+    // is parsed once per process, and the CI property-suite legs run
+    // this test at 1 and 16 workers.)
+    use axmul::dnn::{FloatNet, QNet};
+    use axmul::engine::{DesignPlan, LutCache, Workspace};
+
+    let stride = 784;
+    let fnet = FloatNet::random("lenet", (1, 28, 28), 13);
+    let mut rng = Pcg32::new(131);
+    let xs: Vec<f32> = (0..7 * stride).map(|_| rng.next_f32()).collect();
+    // headroom 1.0: codes span the full 0..=255 band, so approximate
+    // rows of every design's table actually participate.
+    let qnet = QNet::quantize(&fnet, &xs, 4, 1.0);
+    let cache = LutCache::new();
+    for name in axmul::mult::DNN_DESIGNS {
+        let lut = cache.get(name).unwrap();
+        let plan = DesignPlan::single(name);
+        assert_eq!(plan.id(), *name, "singleton id is the bare name");
+        let luts = plan.resolve(qnet.num_layers(), &cache).unwrap();
+        let mut ws = Workspace::new();
+        let mut ws2 = Workspace::new();
+        for batch in [1usize, 7] {
+            let want = qnet.forward_batch_with(&xs[..batch * stride], batch, &lut, &mut ws);
+            let got = qnet.forward_batch_luts(&xs[..batch * stride], batch, &luts, None, &mut ws2);
+            assert_eq!(got, want, "{name} batch {batch}");
+        }
+    }
+}
+
+#[test]
+fn prop_mixed_plan_routes_each_layer_through_its_own_lut() {
+    // PR-7 tentpole invariant, positional routing: in a heterogeneous
+    // per-layer LUT list, layer i must gather through exactly LUT i.
+    // Doctor layer j (and only j) with a scaled-product table
+    // ((j+2)·a·b — values past u16::MAX, so the doctored entry takes
+    // the i32 store while the exact entries stay u16: the list mixes
+    // store widths and per-layer dispatch is exercised for free).  The
+    // logits must differ from all-exact AND from every other doctored
+    // position — any off-by-one in the layer→LUT mapping collapses two
+    // of these to the same bits.  A renamed exact clone at one position
+    // is the control: content, not name or allocation, drives compute.
+    use axmul::dnn::{FloatNet, QNet};
+    use axmul::engine::Workspace;
+    use axmul::metrics::LutTStore;
+
+    let stride = 784;
+    let fnet = FloatNet::random("lenet", (1, 28, 28), 47);
+    let mut rng = Pcg32::new(137);
+    let xs: Vec<f32> = (0..3 * stride).map(|_| rng.next_f32()).collect();
+    let qnet = QNet::quantize(&fnet, &xs, 3, 1.0);
+    let n_layers = qnet.num_layers();
+    let exact = Lut::build(by_name("exact8x8").unwrap().as_ref());
+    assert!(matches!(exact.transposed(), LutTStore::U16(_)));
+    let mut ws = Workspace::new();
+    let base_luts: Vec<Lut> = (0..n_layers).map(|_| exact.clone()).collect();
+    let want = qnet.forward_batch_luts(&xs, 3, &base_luts, None, &mut ws);
+
+    let mut per_position: Vec<Vec<f32>> = Vec::new();
+    for j in 0..n_layers {
+        let mut table = vec![0i32; 65536];
+        for a in 0..256usize {
+            for b in 0..256usize {
+                table[(a << 8) | b] = ((j + 2) * a * b) as i32;
+            }
+        }
+        let doctored = Lut::from_table(&format!("scaled{j}"), table);
+        assert!(matches!(doctored.transposed(), LutTStore::I32(_)));
+        let mut luts = base_luts.clone();
+        luts[j] = doctored;
+        let got = qnet.forward_batch_luts(&xs, 3, &luts, None, &mut ws);
+        assert_ne!(got, want, "doctoring layer {j} must move the logits");
+        per_position.push(got);
+    }
+    for i in 0..n_layers {
+        for j in (i + 1)..n_layers {
+            assert_ne!(
+                per_position[i], per_position[j],
+                "doctored layers {i} and {j} must be distinguishable"
+            );
+        }
+    }
+    // Control: the same table under a different name and allocation at
+    // one position is a bit-for-bit no-op.
+    let mut luts = base_luts.clone();
+    luts[2] = Lut::from_table("exact_clone", exact.table.clone());
+    assert_eq!(qnet.forward_batch_luts(&xs, 3, &luts, None, &mut ws), want);
+}
+
+#[test]
 fn prop_cached_luts_are_identical_to_fresh_builds() {
     // The engine cache must hand out tables indistinguishable from a
     // direct Lut::build for every DNN design.
