@@ -289,6 +289,75 @@ fn main() {
         b.note_workspace_peak(ws.bytes());
     }
 
+    // --- serve under load: the overload-safe control plane (PR 8) --------
+    // A real `InferServer` over two design lanes driven two ways: a
+    // closed-loop bench row (per-request e2e through submit → lane →
+    // batched forward → response, the serving plane's overhead story)
+    // and an open-loop burst that intentionally overruns a small queue
+    // so the snapshot carries non-trivial histograms plus rejected
+    // counts.  The whole `StatsSnapshot` (queue-wait + e2e log2
+    // histograms) lands in BENCH_table8.json under `serve_under_load` —
+    // quantile trajectories, not just a mean.
+    {
+        use axmul::coordinator::server::{BatchPolicy, InferServer, SubmitError};
+        use std::time::Duration;
+        let fnet = FloatNet::random("lenet", (1, 28, 28), 23);
+        let data = Dataset::synth_mnist(64, 13);
+        let qnet = std::sync::Arc::new(QNet::quantize(&fnet, &data.images, 16, 8.0));
+        let hub = axmul::engine::ModelHub::new(cache.clone());
+        let designs = ["mul8x8_2", "exact8x8"];
+        for d in designs {
+            hub.register("lenet", d, qnet.clone()).unwrap();
+        }
+        let server = InferServer::start(
+            &hub,
+            BatchPolicy {
+                max_batch: 16,
+                max_wait: Duration::from_millis(1),
+                queue_cap: 64, // small on purpose: the burst must overrun it
+                slo: Some(Duration::from_millis(5)),
+            },
+            2,
+        );
+        let mut di = 0usize;
+        b.bench("serve/closed-loop infer (2 lanes, adaptive policy)", || {
+            let d = designs[di % designs.len()];
+            di += 1;
+            std::hint::black_box(
+                server
+                    .infer("lenet", d, data.image(di % data.n).to_vec())
+                    .expect("closed-loop request"),
+            );
+        });
+        // Open-loop burst: 4 clients firing as fast as they can submit.
+        let burst_per_client = 256usize;
+        std::thread::scope(|s| {
+            for c in 0..4usize {
+                let server = &server;
+                let data = &data;
+                s.spawn(move || {
+                    let mut handles = Vec::with_capacity(burst_per_client);
+                    for i in 0..burst_per_client {
+                        let d = designs[(i + c) % designs.len()];
+                        let img = data.image((i * 4 + c) % data.n).to_vec();
+                        match server.submit("lenet", d, img) {
+                            Ok(h) => handles.push(h),
+                            Err(SubmitError::QueueFull { .. }) => {} // counted by the lane
+                            Err(e) => panic!("burst submit failed: {e}"),
+                        }
+                    }
+                    for h in handles {
+                        h.recv().expect("admitted burst request");
+                    }
+                });
+            }
+        });
+        let snap = server.stats.snapshot();
+        println!("[serve under load] {snap}");
+        b.note_json("serve_under_load", snap.to_json());
+        server.shutdown();
+    }
+
     // --- quantized single-image inference latency ------------------------
     // (native engine; trained weights unnecessary for timing purposes)
     let data = Dataset::synth_mnist(64, 3);

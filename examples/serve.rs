@@ -10,13 +10,23 @@
 //!
 //! Run: `cargo run --release --example serve --
 //!       [--designs mul8x8_2,exact8x8] [--plan d1,d2,…] [--requests 2000]
-//!       [--workers 4] [--max-batch 16] [--max-wait-ms 2]`
+//!       [--workers 4] [--max-batch 16] [--max-wait-ms 2]
+//!       [--queue-cap 1024] [--slo-ms 0] [--deadline-ms 0] [--drain]`
 //!
 //! `--plan d1,d2,…` adds one heterogeneous per-layer lane (design i on
 //! quantizable layer i, `~neg` error-mirrored partner names allowed);
 //! its plan id joins the A/B rotation like any design.
+//!
+//! Overload knobs: `--queue-cap` bounds each lane's queue (past it,
+//! submissions come back `QueueFull` and the clients count them instead
+//! of buffering), `--slo-ms` turns on SLO-aware adaptive batching,
+//! `--deadline-ms` attaches a client deadline to every request (expired
+//! requests are shed before compute), and `--drain` ends the run with
+//! `shutdown_drain()` (answer the backlog) instead of a prompt stop.
+//! The report prints each lane's `StatsSnapshot` — queue-wait and
+//! end-to-end latency histograms included.
 
-use axmul::coordinator::server::{BatchPolicy, InferServer};
+use axmul::coordinator::server::{BatchPolicy, InferServer, SubmitError};
 use axmul::coordinator::{Evaluator, Trainer};
 use axmul::data::Dataset;
 use axmul::engine::ModelHub;
@@ -42,9 +52,14 @@ fn main() -> anyhow::Result<()> {
     anyhow::ensure!(!designs.is_empty(), "no designs given");
     let n_requests = args.opt_usize("requests", 2000);
     let workers = args.opt_usize("workers", 4);
+    let slo_ms = args.opt_usize("slo-ms", 0);
+    let deadline_ms = args.opt_usize("deadline-ms", 0);
+    let drain = args.flag("drain");
     let policy = BatchPolicy {
         max_batch: args.opt_usize("max-batch", 16),
         max_wait: Duration::from_millis(args.opt_usize("max-wait-ms", 2) as u64),
+        queue_cap: args.opt_usize("queue-cap", 1024),
+        slo: (slo_ms > 0).then(|| Duration::from_millis(slo_ms as u64)),
     };
 
     // Model: train briefly if artifacts exist, otherwise bail with advice.
@@ -79,9 +94,11 @@ fn main() -> anyhow::Result<()> {
     }
     println!(
         "serving synth-MNIST through {routes:?} | workers/lane={workers} \
-         max_batch={} max_wait={:?} | {} LUT(s) cached",
+         max_batch={} max_wait={:?} queue_cap={} slo={:?} | {} LUT(s) cached",
         policy.max_batch,
         policy.max_wait,
+        policy.queue_cap,
+        policy.slo,
         hub.cache().len()
     );
     let server = InferServer::start(&hub, policy, workers);
@@ -104,9 +121,21 @@ fn main() -> anyhow::Result<()> {
                 for i in 0..n_requests / 4 {
                     let idx = (i * 4 + c) % trace.n;
                     let di = (i * 4 + c) % routes.len();
-                    let resp = server
-                        .infer(MODEL, &routes[di], trace.image(idx).to_vec())
-                        .expect("server alive");
+                    let deadline = (deadline_ms > 0)
+                        .then(|| Instant::now() + Duration::from_millis(deadline_ms as u64));
+                    // Overload is a *response*, not a crash: a rejected
+                    // or shed request is dropped here and shows up in the
+                    // lane's rejected/shed counters below.
+                    let resp = match server
+                        .submit_deadline(MODEL, &routes[di], trace.image(idx).to_vec(), deadline)
+                        .and_then(|h| h.recv())
+                    {
+                        Ok(resp) => resp,
+                        Err(SubmitError::QueueFull { .. }) | Err(SubmitError::Shed { .. }) => {
+                            continue
+                        }
+                        Err(e) => panic!("serving failed: {e}"),
+                    };
                     let ok = resp.pred == trace.labels[idx] as usize;
                     tx.send((di, resp.latency, ok)).unwrap();
                     // jittered pacing ~open-loop arrivals
@@ -136,22 +165,19 @@ fn main() -> anyhow::Result<()> {
         lats.sort();
         served += *n;
         let pct = |p: f64| lats[((lats.len() - 1) as f64 * p) as usize];
-        let stats = server.session_stats(MODEL, design).unwrap();
-        let batches = stats.batches.load(std::sync::atomic::Ordering::Relaxed);
-        let breqs = stats
-            .batched_requests
-            .load(std::sync::atomic::Ordering::Relaxed);
         println!(
-            "[{design:<10}] served {n:>6}  acc {:>6.2}%  p50 {:?}  p95 {:?}  p99 {:?}  \
-             mean batch {:.2}",
+            "[{design:<10}] served {n:>6}  acc {:>6.2}%  client p50 {:?}  p95 {:?}  p99 {:?}",
             *correct as f64 / *n as f64 * 100.0,
             pct(0.50),
             pct(0.95),
             pct(0.99),
-            breqs as f64 / batches.max(1) as f64,
         );
+        // The lane's own view: counters + queue-wait/e2e histograms.
+        let snap = server.session_stats(MODEL, design).unwrap().snapshot();
+        println!("             {snap}");
     }
     println!("requests        {served}");
+    println!("global          {}", server.stats.snapshot());
     println!(
         "throughput      {:.0} req/s",
         served as f64 / wall.as_secs_f64()
@@ -163,6 +189,10 @@ fn main() -> anyhow::Result<()> {
         hub.cache().hits(),
         hub.cache().misses()
     );
-    server.shutdown();
+    if drain {
+        server.shutdown_drain();
+    } else {
+        server.shutdown();
+    }
     Ok(())
 }

@@ -21,19 +21,67 @@
 //! buffer), so the steady-state hot path performs no scratch allocation,
 //! and all LUTs come from the hub's shared [`crate::engine::LutCache`]
 //! (built at most once per process).
+//!
+//! ## The overload model
+//!
+//! The control plane is built to degrade *visibly* instead of buffering
+//! without bound or hiding failures:
+//!
+//! * **Bounded admission.** Every lane queue has a hard capacity
+//!   ([`BatchPolicy::queue_cap`]).  `submit` on a full lane returns
+//!   [`SubmitError::QueueFull`] immediately — backpressure at the call
+//!   site, never an unbounded buffer — and bumps per-lane and global
+//!   `rejected` counters.
+//! * **Deadline shedding.**  A request may carry a client deadline
+//!   ([`InferServer::submit_deadline`]).  The collect loop drops
+//!   requests that are already expired *before* spending compute on
+//!   them; the client's receiver gets a `Shed` outcome (surfaced as
+//!   [`SubmitError::Shed`]), not a hung channel, and `shed` counters
+//!   record it.
+//! * **SLO-aware batching.**  With [`BatchPolicy::slo`] set, the
+//!   collect loop adaptively shrinks its batching wait as the lane's
+//!   observed queue wait (a worker-maintained EWMA) approaches the SLO
+//!   target — under pressure the lane stops trading latency for batch
+//!   size.  Unset (the default), the fixed `max_batch`/`max_wait`
+//!   policy is bit-for-bit the legacy behavior.
+//! * **Panic isolation + supervision.**  Batch execution runs under
+//!   `catch_unwind`: a poisoned batch answers *every* member with a
+//!   `Failed` outcome ([`SubmitError::Compute`]) instead of dropping
+//!   their senders, bumps `worker_panics`, and the worker's supervision
+//!   loop respawns a fresh incarnation (new `Workspace`, new staging
+//!   buffer — nothing the unwound batch touched survives), so the lane
+//!   never silently loses capacity (`worker_respawns` observes it).
+//! * **Drain shutdown.**  [`InferServer::shutdown`] stops promptly
+//!   (queued-but-unserved requests see `Closed`);
+//!   [`InferServer::shutdown_drain`] first answers everything already
+//!   admitted, then joins.
+//! * **Observability.**  [`ServerStats`] carries queue-wait and
+//!   end-to-end [`LatencyHistogram`]s plus a queue-depth [`Gauge`] per
+//!   lane (and globally); [`ServerStats::snapshot`] renders the whole
+//!   picture as one [`StatsSnapshot`] (Display + JSON) so callers stop
+//!   hand-formatting counters.
+//!
+//! Idle lanes burn no CPU: workers park on the lane queue's condvar and
+//! are only woken by a submission or by shutdown (no poll interval).
 
 use crate::dnn::argmax;
 use crate::engine::{ModelHub, Session, SessionKey, Workspace};
-use std::collections::BTreeMap;
+use crate::metrics::{Gauge, HistSnapshot, LatencyHistogram};
+use crate::util::json::Json;
+use std::collections::{BTreeMap, VecDeque};
 use std::fmt;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 pub struct InferRequest {
     pub image: Vec<f32>,
     pub submitted: Instant,
-    respond: mpsc::Sender<InferResponse>,
+    /// Client deadline: if the request is still queued past this
+    /// instant, it is shed before compute instead of served late.
+    pub deadline: Option<Instant>,
+    respond: mpsc::Sender<ServeOutcome>,
 }
 
 #[derive(Clone, Debug)]
@@ -44,8 +92,75 @@ pub struct InferResponse {
     pub key: SessionKey,
     /// Total time from submit to completion.
     pub latency: Duration,
+    /// Time the request sat in the lane queue before a worker picked it.
+    pub queued: Duration,
+    /// Time its batch spent inside the forward pass.
+    pub compute: Duration,
     /// How many requests shared the batch.
     pub batch_size: usize,
+}
+
+/// What a lane sends back on a request's response channel.  Private:
+/// clients read it through [`ResponseHandle`], which maps the non-Ok
+/// arms onto [`SubmitError`].
+enum ServeOutcome {
+    Ok(InferResponse),
+    /// Dropped before compute: the client deadline had already expired
+    /// after `waited` in the queue.
+    Shed { waited: Duration },
+    /// The batch this request was part of panicked inside compute.
+    Failed { reason: String },
+}
+
+/// Client end of one submitted request: a receiver whose non-Ok
+/// outcomes (shed, compute failure, lane teardown) surface as typed
+/// [`SubmitError`]s instead of a hung or mysteriously-dropped channel.
+pub struct ResponseHandle {
+    key: SessionKey,
+    rx: mpsc::Receiver<ServeOutcome>,
+}
+
+impl ResponseHandle {
+    fn map(
+        &self,
+        out: Result<ServeOutcome, mpsc::RecvError>,
+    ) -> Result<InferResponse, SubmitError> {
+        match out {
+            Ok(ServeOutcome::Ok(resp)) => Ok(resp),
+            Ok(ServeOutcome::Shed { waited }) => Err(SubmitError::Shed {
+                key: self.key.clone(),
+                waited,
+            }),
+            Ok(ServeOutcome::Failed { reason }) => Err(SubmitError::Compute {
+                key: self.key.clone(),
+                reason,
+            }),
+            // Sender dropped without an outcome: lane torn down
+            // (shutdown without drain) — distinct from a compute panic,
+            // which always answers Failed first.
+            Err(_) => Err(SubmitError::Closed(self.key.clone())),
+        }
+    }
+
+    /// Block until the request resolves.
+    pub fn recv(&self) -> Result<InferResponse, SubmitError> {
+        self.map(self.rx.recv())
+    }
+
+    /// Block up to `timeout`; `None` if the request is still in flight.
+    pub fn recv_timeout(&self, timeout: Duration) -> Option<Result<InferResponse, SubmitError>> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(out) => Some(self.map(Ok(out))),
+            Err(mpsc::RecvTimeoutError::Timeout) => None,
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                Some(Err(SubmitError::Closed(self.key.clone())))
+            }
+        }
+    }
+
+    pub fn key(&self) -> &SessionKey {
+        &self.key
+    }
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -54,6 +169,14 @@ pub struct BatchPolicy {
     pub max_batch: usize,
     /// …or when the oldest queued request has waited this long.
     pub max_wait: Duration,
+    /// Bounded lane queue capacity: submissions past this depth are
+    /// rejected with [`SubmitError::QueueFull`] instead of buffered.
+    pub queue_cap: usize,
+    /// Optional per-lane queue-wait SLO target.  When set, the collect
+    /// loop shrinks its batching wait as the observed queue wait
+    /// approaches the target (see [`effective_wait`]); when `None`, the
+    /// fixed `max_batch`/`max_wait` policy applies unchanged.
+    pub slo: Option<Duration>,
 }
 
 impl Default for BatchPolicy {
@@ -61,24 +184,168 @@ impl Default for BatchPolicy {
         Self {
             max_batch: 16,
             max_wait: Duration::from_millis(2),
+            queue_cap: 1024,
+            slo: None,
         }
     }
 }
 
+/// How long a collect loop may wait for more requests, given the lane's
+/// recently observed queue wait.  Pure so the adaptive rule is unit
+/// testable:
+///
+/// * no SLO → always `max_wait` (the fixed legacy policy);
+/// * SLO set → at most half the *remaining* headroom
+///   (`slo − observed_wait`), never more than `max_wait`.  A healthy
+///   lane (observed ≪ slo) batches exactly like the fixed policy; a
+///   lane whose queue wait is eating the SLO dispatches immediately
+///   (zero wait at/past the target), shedding batching latency first.
+pub fn effective_wait(policy: &BatchPolicy, observed_wait_ns: u64) -> Duration {
+    match policy.slo {
+        None => policy.max_wait,
+        Some(slo) => {
+            let slo_ns = slo.as_nanos().min(u64::MAX as u128) as u64;
+            let headroom = slo_ns.saturating_sub(observed_wait_ns);
+            policy.max_wait.min(Duration::from_nanos(headroom / 2))
+        }
+    }
+}
+
+/// Lock-free counters + histograms for one lane (or the global
+/// aggregate).  Everything is relaxed atomics: cheap on the request
+/// path, racy-consistent on read, never used for numerics.
 #[derive(Default, Debug)]
 pub struct ServerStats {
     pub served: AtomicU64,
     pub batches: AtomicU64,
     pub batched_requests: AtomicU64,
+    /// Submissions bounced on a full lane queue.
+    pub rejected: AtomicU64,
+    /// Requests dropped before compute because their deadline expired.
+    pub shed: AtomicU64,
+    /// Batches that panicked inside compute (every member answered
+    /// `Failed`).
+    pub worker_panics: AtomicU64,
+    /// Worker incarnations respawned by the supervision loop after a
+    /// panic — the lane's capacity never silently shrank.
+    pub worker_respawns: AtomicU64,
+    /// Time from submit to a worker dequeuing the request.
+    pub queue_wait: LatencyHistogram,
+    /// Time from submit to the response being sent.
+    pub e2e: LatencyHistogram,
+    /// Lane queue depth observed at submissions and collections.
+    pub queue_depth: Gauge,
+    /// EWMA of recent queue waits (ns), the signal [`effective_wait`]
+    /// steers on.  Updated by workers with a relaxed load/store — an
+    /// occasionally lost update only delays the heuristic one sample.
+    pub ewma_queue_wait_ns: AtomicU64,
 }
 
-/// Why a submission was rejected.
+impl ServerStats {
+    fn note_queue_wait(&self, waited: Duration) {
+        let ns = waited.as_nanos().min(u64::MAX as u128) as u64;
+        self.queue_wait.record_ns(ns);
+        // EWMA with α = 1/8: new = old + (sample − old)/8.
+        let old = self.ewma_queue_wait_ns.load(Ordering::Relaxed) as i64;
+        let new = old + (ns.min(i64::MAX as u64) as i64 - old) / 8;
+        self.ewma_queue_wait_ns
+            .store(new.max(0) as u64, Ordering::Relaxed);
+    }
+
+    /// Point-in-time copy of every counter and histogram.
+    pub fn snapshot(&self) -> StatsSnapshot {
+        let batches = self.batches.load(Ordering::Relaxed);
+        let batched = self.batched_requests.load(Ordering::Relaxed);
+        StatsSnapshot {
+            served: self.served.load(Ordering::Relaxed),
+            batches,
+            batched_requests: batched,
+            mean_batch: batched as f64 / batches.max(1) as f64,
+            rejected: self.rejected.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            worker_panics: self.worker_panics.load(Ordering::Relaxed),
+            worker_respawns: self.worker_respawns.load(Ordering::Relaxed),
+            queue_depth: self.queue_depth.get(),
+            queue_depth_max: self.queue_depth.high_water(),
+            queue_wait: self.queue_wait.snapshot(),
+            e2e: self.e2e.snapshot(),
+        }
+    }
+}
+
+/// Plain-data copy of [`ServerStats`], with Display and JSON renderings
+/// so `examples/serve.rs`, the CLI and the bench stop hand-formatting
+/// counters.
+#[derive(Clone, Debug)]
+pub struct StatsSnapshot {
+    pub served: u64,
+    pub batches: u64,
+    pub batched_requests: u64,
+    pub mean_batch: f64,
+    pub rejected: u64,
+    pub shed: u64,
+    pub worker_panics: u64,
+    pub worker_respawns: u64,
+    pub queue_depth: u64,
+    pub queue_depth_max: u64,
+    pub queue_wait: HistSnapshot,
+    pub e2e: HistSnapshot,
+}
+
+impl StatsSnapshot {
+    pub fn to_json(&self) -> Json {
+        let mut o = std::collections::BTreeMap::new();
+        o.insert("served".into(), Json::Num(self.served as f64));
+        o.insert("batches".into(), Json::Num(self.batches as f64));
+        o.insert("mean_batch".into(), Json::Num(self.mean_batch));
+        o.insert("rejected".into(), Json::Num(self.rejected as f64));
+        o.insert("shed".into(), Json::Num(self.shed as f64));
+        o.insert("worker_panics".into(), Json::Num(self.worker_panics as f64));
+        o.insert(
+            "worker_respawns".into(),
+            Json::Num(self.worker_respawns as f64),
+        );
+        o.insert(
+            "queue_depth_max".into(),
+            Json::Num(self.queue_depth_max as f64),
+        );
+        o.insert("queue_wait".into(), self.queue_wait.to_json());
+        o.insert("e2e".into(), self.e2e.to_json());
+        Json::Obj(o)
+    }
+}
+
+impl fmt::Display for StatsSnapshot {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "served {} in {} batches (mean {:.2}/batch) | rejected {} shed {} \
+             panics {} respawns {} | depth {} (max {}) | queue [{}] | e2e [{}]",
+            self.served,
+            self.batches,
+            self.mean_batch,
+            self.rejected,
+            self.shed,
+            self.worker_panics,
+            self.worker_respawns,
+            self.queue_depth,
+            self.queue_depth_max,
+            self.queue_wait,
+            self.e2e,
+        )
+    }
+}
+
+/// Why a request was rejected at submit time or failed to resolve.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum SubmitError {
     /// No session registered under this (model, design).
     UnknownSession(SessionKey),
-    /// The session's queue no longer accepts work (server shutting down
-    /// or its workers are gone).
+    /// The session's queue no longer accepts work (server shutting down),
+    /// or the lane was torn down before answering (shutdown without
+    /// drain).  A worker panic is NOT reported here — that surfaces as
+    /// [`SubmitError::Compute`], because panic isolation answers every
+    /// batch member before the worker respawns.
     Closed(SessionKey),
     /// The image has the wrong number of floats for the session's model.
     /// Checked at submit time: a mis-sized image inside a stacked batch
@@ -88,6 +355,19 @@ pub enum SubmitError {
         want: usize,
         got: usize,
     },
+    /// The lane queue is at capacity: admission refused, nothing queued.
+    QueueFull {
+        key: SessionKey,
+        depth: usize,
+        capacity: usize,
+    },
+    /// The request's deadline expired while it was still queued; it was
+    /// dropped before compute.
+    Shed { key: SessionKey, waited: Duration },
+    /// The batch this request was stacked into panicked inside the
+    /// forward pass.  The lane survives (the worker respawned); the
+    /// request was not served.
+    Compute { key: SessionKey, reason: String },
 }
 
 impl fmt::Display for SubmitError {
@@ -98,14 +378,158 @@ impl fmt::Display for SubmitError {
             SubmitError::ImageSize { key, want, got } => {
                 write!(f, "session {key} expects {want} floats per image, got {got}")
             }
+            SubmitError::QueueFull {
+                key,
+                depth,
+                capacity,
+            } => write!(
+                f,
+                "session {key} queue full ({depth}/{capacity}); request rejected"
+            ),
+            SubmitError::Shed { key, waited } => write!(
+                f,
+                "session {key} shed the request after {waited:?} queued (deadline expired)"
+            ),
+            SubmitError::Compute { key, reason } => {
+                write!(f, "session {key} compute failed: {reason}")
+            }
         }
     }
 }
 
 impl std::error::Error for SubmitError {}
 
+/// Bounded MPMC lane queue: a `Mutex<VecDeque>` + `Condvar`, so idle
+/// workers *park* (no poll loop) and shutdown/drain are first-class
+/// states instead of sender-drop side effects.
+///
+/// Locking is poison-tolerant on purpose: every critical section is a
+/// small push/pop that preserves the deque's invariants, and the whole
+/// point of lane supervision is that a panicking worker must not take
+/// the lane's queue down with it.
+struct LaneQueue {
+    state: Mutex<LaneQueueState>,
+    cv: Condvar,
+    cap: usize,
+}
+
+struct LaneQueueState {
+    queue: VecDeque<InferRequest>,
+    /// No new submissions (set by shutdown and drain alike).
+    closed: bool,
+    /// Shutdown without drain: workers stop popping; whatever is still
+    /// queued is dropped (clients see `Closed`).
+    abandon: bool,
+}
+
+enum PushError {
+    Full { depth: usize },
+    Closed,
+}
+
+impl LaneQueue {
+    fn new(cap: usize) -> Self {
+        LaneQueue {
+            state: Mutex::new(LaneQueueState {
+                queue: VecDeque::new(),
+                closed: false,
+                abandon: false,
+            }),
+            cv: Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, LaneQueueState> {
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Admit one request; `Ok(depth_after_push)` or why not.
+    fn push(&self, req: InferRequest) -> Result<usize, PushError> {
+        let mut st = self.lock();
+        if st.closed {
+            return Err(PushError::Closed);
+        }
+        if st.queue.len() >= self.cap {
+            return Err(PushError::Full {
+                depth: st.queue.len(),
+            });
+        }
+        st.queue.push_back(req);
+        let depth = st.queue.len();
+        drop(st);
+        self.cv.notify_one();
+        Ok(depth)
+    }
+
+    /// Park until a request is available (or the lane stops).  `None`
+    /// means this worker should exit: the queue is closed and either
+    /// drained empty or abandoned.
+    fn pop_first(&self) -> Option<InferRequest> {
+        let mut st = self.lock();
+        loop {
+            if st.closed && st.abandon {
+                return None;
+            }
+            if let Some(req) = st.queue.pop_front() {
+                return Some(req);
+            }
+            if st.closed {
+                return None; // drained
+            }
+            st = self.cv.wait(st).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+
+    /// Pop another request for the current batch, waiting up to
+    /// `deadline`.  `None` on timeout or lane stop.
+    fn pop_more(&self, deadline: Instant) -> Option<InferRequest> {
+        let mut st = self.lock();
+        loop {
+            if st.closed && st.abandon {
+                return None;
+            }
+            if let Some(req) = st.queue.pop_front() {
+                return Some(req);
+            }
+            if st.closed {
+                return None;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (g, timeout) = self
+                .cv
+                .wait_timeout(st, deadline - now)
+                .unwrap_or_else(|p| p.into_inner());
+            st = g;
+            if timeout.timed_out() && st.queue.is_empty() {
+                return None;
+            }
+        }
+    }
+
+    fn depth(&self) -> usize {
+        self.lock().queue.len()
+    }
+
+    /// Stop the lane: no new submissions; `drain: true` lets workers
+    /// finish everything already admitted, `false` abandons the backlog
+    /// (dropped senders → clients see `Closed`).
+    fn close(&self, drain: bool) {
+        let mut st = self.lock();
+        st.closed = true;
+        if !drain {
+            st.abandon = true;
+        }
+        drop(st);
+        self.cv.notify_all();
+    }
+}
+
 struct SessionLane {
-    tx: mpsc::Sender<InferRequest>,
+    queue: Arc<LaneQueue>,
     stats: Arc<ServerStats>,
     /// Floats per image of this lane's model (submit-time validation).
     image_len: usize,
@@ -116,40 +540,36 @@ pub struct InferServer {
     lanes: BTreeMap<SessionKey, SessionLane>,
     /// Aggregate stats across all sessions.
     pub stats: Arc<ServerStats>,
-    stop: Arc<AtomicBool>,
     workers: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl InferServer {
     /// Start serving every session currently registered in `hub`, with an
-    /// independent dynamic-batching lane and `workers` worker threads per
-    /// session.
+    /// independent dynamic-batching lane and `workers` supervised worker
+    /// threads per session.
     pub fn start(hub: &ModelHub, policy: BatchPolicy, workers: usize) -> Self {
         let sessions = hub.sessions();
         assert!(!sessions.is_empty(), "hub has no sessions to serve");
-        let stop = Arc::new(AtomicBool::new(false));
         let global = Arc::new(ServerStats::default());
         let mut lanes = BTreeMap::new();
         let mut handles = Vec::new();
         for sess in sessions {
-            let (tx, rx) = mpsc::channel::<InferRequest>();
-            let rx = Arc::new(Mutex::new(rx));
+            let queue = Arc::new(LaneQueue::new(policy.queue_cap));
             let stats = Arc::new(ServerStats::default());
             for _ in 0..workers.max(1) {
-                let rx = rx.clone();
+                let queue = queue.clone();
                 let sess = sess.clone();
                 let stats = stats.clone();
                 let global = global.clone();
-                let stop = stop.clone();
                 handles.push(std::thread::spawn(move || {
-                    worker_loop(&rx, &sess, policy, &stats, &global, &stop);
+                    supervised_worker(&queue, &sess, policy, &stats, &global);
                 }));
             }
             let image_len = sess.image_len();
             lanes.insert(
                 sess.key.clone(),
                 SessionLane {
-                    tx,
+                    queue,
                     stats,
                     image_len,
                 },
@@ -158,21 +578,33 @@ impl InferServer {
         InferServer {
             lanes,
             stats: global,
-            stop,
             workers: handles,
         }
     }
 
     /// Submit one image to a (model, design) session — `design` being
     /// the session's plan id (bare design name for singleton plans);
-    /// returns a receiver for the response, or why the request cannot
-    /// be queued.
+    /// returns a handle for the response, or why the request cannot be
+    /// queued.
     pub fn submit(
         &self,
         model: &str,
         design: &str,
         image: Vec<f32>,
-    ) -> Result<mpsc::Receiver<InferResponse>, SubmitError> {
+    ) -> Result<ResponseHandle, SubmitError> {
+        self.submit_deadline(model, design, image, None)
+    }
+
+    /// [`InferServer::submit`] with a client deadline: if the request is
+    /// still queued past `deadline`, it is shed before compute and the
+    /// handle resolves to [`SubmitError::Shed`].
+    pub fn submit_deadline(
+        &self,
+        model: &str,
+        design: &str,
+        image: Vec<f32>,
+        deadline: Option<Instant>,
+    ) -> Result<ResponseHandle, SubmitError> {
         let key = SessionKey::new(model, design);
         let lane = self
             .lanes
@@ -186,27 +618,41 @@ impl InferServer {
             });
         }
         let (tx, rx) = mpsc::channel();
-        lane.tx
-            .send(InferRequest {
-                image,
-                submitted: Instant::now(),
-                respond: tx,
-            })
-            .map_err(|_| SubmitError::Closed(key))?;
-        Ok(rx)
+        let req = InferRequest {
+            image,
+            submitted: Instant::now(),
+            deadline,
+            respond: tx,
+        };
+        match lane.queue.push(req) {
+            Ok(depth) => {
+                lane.stats.queue_depth.observe(depth as u64);
+                self.stats.queue_depth.observe(depth as u64);
+                Ok(ResponseHandle { key, rx })
+            }
+            Err(PushError::Full { depth }) => {
+                lane.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(SubmitError::QueueFull {
+                    key,
+                    depth,
+                    capacity: lane.queue.cap,
+                })
+            }
+            Err(PushError::Closed) => Err(SubmitError::Closed(key)),
+        }
     }
 
-    /// Blocking convenience wrapper.
+    /// Blocking convenience wrapper.  Distinguishes how a request died:
+    /// `QueueFull` (overload), `Shed` (deadline), `Compute` (the batch
+    /// panicked — lane survived), `Closed` (shutdown).
     pub fn infer(
         &self,
         model: &str,
         design: &str,
         image: Vec<f32>,
     ) -> Result<InferResponse, SubmitError> {
-        let key = SessionKey::new(model, design);
-        self.submit(model, design, image)?
-            .recv()
-            .map_err(|_| SubmitError::Closed(key))
+        self.submit(model, design, image)?.recv()
     }
 
     /// Per-session stats, if the session is being served.
@@ -216,96 +662,257 @@ impl InferServer {
             .map(|l| l.stats.clone())
     }
 
+    /// Current queue depth of a lane — the load-shedding signal an
+    /// external balancer would route on.
+    pub fn queue_depth(&self, model: &str, design: &str) -> Option<usize> {
+        self.lanes
+            .get(&SessionKey::new(model, design))
+            .map(|l| l.queue.depth())
+    }
+
     /// The sessions this server routes to, in key order.
     pub fn keys(&self) -> Vec<SessionKey> {
         self.lanes.keys().cloned().collect()
     }
 
-    pub fn shutdown(mut self) {
-        self.stop.store(true, Ordering::SeqCst);
-        // Drop the lane senders so any worker parked in recv sees a
-        // disconnect immediately.
-        self.lanes.clear();
+    /// Stop promptly: no new submissions, workers finish the batch they
+    /// are executing, queued-but-unserved requests resolve `Closed`.
+    pub fn shutdown(self) {
+        self.stop(false);
+    }
+
+    /// Drain mode: no new submissions, but everything already admitted
+    /// is answered before the workers join.
+    pub fn shutdown_drain(self) {
+        self.stop(true);
+    }
+
+    fn stop(mut self, drain: bool) {
+        for lane in self.lanes.values() {
+            lane.queue.close(drain);
+        }
         for h in self.workers.drain(..) {
             let _ = h.join();
         }
+        // Dropping the lanes now drops any abandoned requests, whose
+        // dangling senders resolve waiting clients to `Closed`.
+        self.lanes.clear();
     }
 }
 
 impl Drop for InferServer {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::SeqCst);
+        // Wake every parked worker so dropping a server (without an
+        // explicit shutdown) cannot leave threads parked forever.
+        for lane in self.lanes.values() {
+            lane.queue.close(false);
+        }
     }
 }
 
-fn worker_loop(
-    rx: &Mutex<mpsc::Receiver<InferRequest>>,
+/// Test-only fault injection: lets the robustness tests deterministically
+/// wedge or poison a lane's compute from request *data*, standing in for
+/// a corrupted LUT/QNet.  Compiled out of non-test builds entirely.
+#[cfg(test)]
+pub(crate) mod chaos {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    /// An image whose first float is this marker panics inside the
+    /// compute region (after batch collection, before the response).
+    pub const PANIC_PIXEL: f32 = 1.0e30;
+    /// An image whose first float is this marker spins inside compute
+    /// while [`STALL_GATE`] is high — tests use it to back a queue up.
+    pub const STALL_PIXEL: f32 = -1.0e30;
+    pub static STALL_GATE: AtomicBool = AtomicBool::new(false);
+
+    pub fn maybe_trip_entries(batch: &[(super::InferRequest, std::time::Duration)]) {
+        for (r, _) in batch {
+            match r.image.first() {
+                Some(&p) if p == PANIC_PIXEL => panic!("chaos: injected compute panic"),
+                Some(&p) if p == STALL_PIXEL => {
+                    while STALL_GATE.load(Ordering::Acquire) {
+                        std::thread::sleep(std::time::Duration::from_millis(1));
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+}
+
+enum WorkerExit {
+    /// Lane closed (shutdown/drain complete): do not respawn.
+    Stopped,
+    /// A batch panicked inside compute (members were answered): respawn
+    /// a fresh incarnation.
+    Panicked,
+}
+
+/// Supervision loop: each incarnation of the worker owns a fresh
+/// `Workspace` and staging buffer; when a batch panics, nothing the
+/// unwound code touched is reused — the incarnation is discarded and a
+/// new one spawned in its place, so the lane never loses capacity.
+fn supervised_worker(
+    queue: &LaneQueue,
     sess: &Session,
     policy: BatchPolicy,
     stats: &ServerStats,
     global: &ServerStats,
-    stop: &AtomicBool,
 ) {
-    // One workspace per worker: after warming up to (network, max_batch)
-    // high-water shapes, batch execution does not touch the allocator.
+    loop {
+        // The catch_unwind is belt-and-braces for panics *outside* the
+        // per-batch catch (collect-loop bugs): members of a batch that
+        // panicked inside compute are answered by worker_incarnation
+        // itself before it returns Panicked.
+        let exit = catch_unwind(AssertUnwindSafe(|| {
+            worker_incarnation(queue, sess, policy, stats, global)
+        }));
+        match exit {
+            Ok(WorkerExit::Stopped) => return,
+            Ok(WorkerExit::Panicked) | Err(_) => {
+                stats.worker_respawns.fetch_add(1, Ordering::Relaxed);
+                global.worker_respawns.fetch_add(1, Ordering::Relaxed);
+                // loop: next incarnation starts with fresh state
+            }
+        }
+    }
+}
+
+/// Render a panic payload for the `Failed` outcome / `Compute` error.
+fn panic_reason(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "worker panicked".to_string()
+    }
+}
+
+/// Record a just-dequeued request's queue wait and either admit it
+/// (returning it with the wait it accrued) or shed it when its client
+/// deadline already expired — the answer goes out *before* any compute
+/// is spent on it.
+fn admit_or_shed(
+    req: InferRequest,
+    stats: &ServerStats,
+    global: &ServerStats,
+) -> Option<(InferRequest, Duration)> {
+    let waited = req.submitted.elapsed();
+    stats.note_queue_wait(waited);
+    global.queue_wait.record(waited);
+    if req.deadline.is_some_and(|d| Instant::now() >= d) {
+        stats.shed.fetch_add(1, Ordering::Relaxed);
+        global.shed.fetch_add(1, Ordering::Relaxed);
+        let _ = req.respond.send(ServeOutcome::Shed { waited });
+        None
+    } else {
+        Some((req, waited))
+    }
+}
+
+fn worker_incarnation(
+    queue: &LaneQueue,
+    sess: &Session,
+    policy: BatchPolicy,
+    stats: &ServerStats,
+    global: &ServerStats,
+) -> WorkerExit {
+    // One workspace per incarnation: after warming up to (network,
+    // max_batch) high-water shapes, batch execution does not touch the
+    // allocator.
     let mut ws = Workspace::new();
     // Reused staging buffer: the collected batch is stacked here so the
     // whole batch runs through ONE infer_batch_with call (one lut_gemm
     // with M = batch × patches per layer) instead of per-image forwards.
     let mut stacked: Vec<f32> = Vec::new();
     loop {
-        if stop.load(Ordering::Relaxed) {
-            return;
+        // ---- collect a batch under the (possibly adaptive) policy ----
+        // Each admitted entry carries the queue wait it accrued.
+        let mut batch: Vec<(InferRequest, Duration)> = Vec::with_capacity(policy.max_batch);
+        let first = match queue.pop_first() {
+            Some(req) => req,
+            None => return WorkerExit::Stopped,
+        };
+        let first = match admit_or_shed(first, stats, global) {
+            Some(entry) => entry,
+            None => continue, // shed before compute; go park again
+        };
+        let wait = effective_wait(&policy, stats.ewma_queue_wait_ns.load(Ordering::Relaxed));
+        // The batching window is anchored at the oldest request's submit
+        // time, exactly like the fixed legacy policy.
+        let deadline = first.0.submitted + wait;
+        batch.push(first);
+        while batch.len() < policy.max_batch {
+            let req = match queue.pop_more(deadline) {
+                Some(req) => req,
+                None => break,
+            };
+            if let Some(entry) = admit_or_shed(req, stats, global) {
+                batch.push(entry);
+            }
         }
-        // Collect a batch under the dynamic-batching policy.
-        let mut batch: Vec<InferRequest> = Vec::with_capacity(policy.max_batch);
-        {
-            let guard = rx.lock().unwrap();
-            match guard.recv_timeout(Duration::from_millis(20)) {
-                Ok(first) => batch.push(first),
-                Err(mpsc::RecvTimeoutError::Timeout) => continue,
-                Err(mpsc::RecvTimeoutError::Disconnected) => return,
-            }
-            let deadline = batch[0].submitted + policy.max_wait;
-            while batch.len() < policy.max_batch {
-                let now = Instant::now();
-                if now >= deadline {
-                    break;
-                }
-                match guard.recv_timeout(deadline - now) {
-                    Ok(req) => batch.push(req),
-                    Err(_) => break,
-                }
-            }
-        } // release the queue lock before compute
+        stats.queue_depth.observe(queue.depth() as u64);
 
+        // ---- execute the batch (panic-isolated) ----------------------
         let bsize = batch.len();
         stats.batches.fetch_add(1, Ordering::Relaxed);
-        stats.batched_requests.fetch_add(bsize as u64, Ordering::Relaxed);
+        stats
+            .batched_requests
+            .fetch_add(bsize as u64, Ordering::Relaxed);
         global.batches.fetch_add(1, Ordering::Relaxed);
-        global.batched_requests.fetch_add(bsize as u64, Ordering::Relaxed);
-        // Execute the collected batch as a batch: stack, one batched
-        // forward, split the logits back per request.  (Image lengths
-        // were validated at submit time.)
+        global
+            .batched_requests
+            .fetch_add(bsize as u64, Ordering::Relaxed);
+        // Stack, one batched forward, split the logits back per request.
+        // (Image lengths were validated at submit time.)
         stacked.clear();
-        for req in &batch {
+        for (req, _) in &batch {
             stacked.extend_from_slice(&req.image);
         }
-        let all_logits = sess.infer_batch_with(&stacked, bsize, &mut ws);
-        let n_logits = all_logits.len() / bsize;
-        for (i, req) in batch.into_iter().enumerate() {
-            let logits = all_logits[i * n_logits..(i + 1) * n_logits].to_vec();
-            let pred = argmax(&logits);
-            let resp = InferResponse {
-                latency: req.submitted.elapsed(),
-                pred,
-                logits,
-                key: sess.key.clone(),
-                batch_size: bsize,
-            };
-            stats.served.fetch_add(1, Ordering::Relaxed);
-            global.served.fetch_add(1, Ordering::Relaxed);
-            let _ = req.respond.send(resp);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            #[cfg(test)]
+            chaos::maybe_trip_entries(&batch);
+            sess.infer_batch_timed(&stacked, bsize, &mut ws)
+        }));
+        match result {
+            Ok((all_logits, compute)) => {
+                let n_logits = all_logits.len() / bsize;
+                for (i, (req, queued)) in batch.into_iter().enumerate() {
+                    let logits = all_logits[i * n_logits..(i + 1) * n_logits].to_vec();
+                    let pred = argmax(&logits);
+                    let latency = req.submitted.elapsed();
+                    let resp = InferResponse {
+                        latency,
+                        queued,
+                        compute,
+                        pred,
+                        logits,
+                        key: sess.key.clone(),
+                        batch_size: bsize,
+                    };
+                    stats.served.fetch_add(1, Ordering::Relaxed);
+                    global.served.fetch_add(1, Ordering::Relaxed);
+                    stats.e2e.record(latency);
+                    global.e2e.record(latency);
+                    let _ = req.respond.send(ServeOutcome::Ok(resp));
+                }
+            }
+            Err(payload) => {
+                // Panic isolation: every member gets an answer, the
+                // counters record it, and the supervisor respawns us —
+                // the poisoned workspace/staging buffer die with this
+                // incarnation.
+                let reason = panic_reason(payload);
+                stats.worker_panics.fetch_add(1, Ordering::Relaxed);
+                global.worker_panics.fetch_add(1, Ordering::Relaxed);
+                for (req, _) in batch {
+                    let _ = req.respond.send(ServeOutcome::Failed {
+                        reason: reason.clone(),
+                    });
+                }
+                return WorkerExit::Panicked;
+            }
         }
     }
 }
@@ -316,6 +923,27 @@ mod tests {
     use crate::data::Dataset;
     use crate::dnn::QNet;
     use crate::engine::LutCache;
+
+    /// Chaos tests share the global STALL_GATE; serialize them so one
+    /// test's release can't free another test's stalled worker.
+    static CHAOS_LOCK: Mutex<()> = Mutex::new(());
+
+    /// Raises the stall gate; lowers it on drop even if the test panics.
+    struct StallGuard;
+    impl StallGuard {
+        fn raise() -> StallGuard {
+            chaos::STALL_GATE.store(true, Ordering::Release);
+            StallGuard
+        }
+        fn release(&self) {
+            chaos::STALL_GATE.store(false, Ordering::Release);
+        }
+    }
+    impl Drop for StallGuard {
+        fn drop(&mut self) {
+            chaos::STALL_GATE.store(false, Ordering::Release);
+        }
+    }
 
     fn tiny_qnet() -> Arc<QNet> {
         // a small random lenet over synth-mnist
@@ -329,6 +957,19 @@ mod tests {
         let qnet = tiny_qnet();
         hub.register("lenet", design, qnet.clone()).unwrap();
         (hub, qnet)
+    }
+
+    /// Park the test until the lane's 1 worker has pulled the stalled
+    /// request out of the queue (i.e. is wedged inside compute).
+    fn wait_for_empty_queue(server: &InferServer, model: &str, design: &str) {
+        let t0 = Instant::now();
+        while server.queue_depth(model, design).unwrap() > 0 {
+            assert!(
+                t0.elapsed() < Duration::from_secs(5),
+                "worker never picked up the stalled request"
+            );
+            std::thread::sleep(Duration::from_millis(1));
+        }
     }
 
     #[test]
@@ -355,6 +996,9 @@ mod tests {
             assert_eq!(resp.key, SessionKey::new("lenet", "exact8x8"));
         }
         assert_eq!(server.stats.served.load(Ordering::Relaxed), 12);
+        // the observability plane saw every request
+        assert_eq!(server.stats.e2e.count(), 12);
+        assert_eq!(server.stats.queue_wait.count(), 12);
         server.shutdown();
     }
 
@@ -473,6 +1117,7 @@ mod tests {
             BatchPolicy {
                 max_batch: 8,
                 max_wait: Duration::from_millis(50),
+                ..BatchPolicy::default()
             },
             1,
         );
@@ -544,6 +1189,7 @@ mod tests {
             BatchPolicy {
                 max_batch: 8,
                 max_wait: Duration::from_millis(20),
+                ..BatchPolicy::default()
             },
             1, // single worker so the queue backs up
         );
@@ -572,6 +1218,317 @@ mod tests {
         hub.register("lenet", "exact8x8", qnet.clone()).unwrap();
         hub.register("lenet", "mul8x8_2", qnet).unwrap();
         let server = InferServer::start(&hub, BatchPolicy::default(), 3);
-        server.shutdown(); // must not hang
+        server.shutdown(); // must not hang — workers park on the condvar
+    }
+
+    // ---------------- overload / robustness suite ----------------------
+
+    #[test]
+    fn queue_full_rejections_match_counters() {
+        let _serial = CHAOS_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        let gate = StallGuard::raise();
+        let (hub, _) = single_session_hub("exact8x8");
+        let cap = 4usize;
+        let server = InferServer::start(
+            &hub,
+            BatchPolicy {
+                max_batch: 1, // the stalled batch holds exactly one request
+                max_wait: Duration::ZERO,
+                queue_cap: cap,
+                slo: None,
+            },
+            1,
+        );
+        // Wedge the single worker inside compute so the queue can only
+        // fill, never drain.
+        let stalled = server
+            .submit("lenet", "exact8x8", vec![chaos::STALL_PIXEL; 784])
+            .unwrap();
+        wait_for_empty_queue(&server, "lenet", "exact8x8");
+        // Fill the lane to capacity K…
+        let fills: Vec<_> = (0..cap)
+            .map(|_| server.submit("lenet", "exact8x8", vec![0.5; 784]).unwrap())
+            .collect();
+        // …then K+N: exactly N rejections, admission refused at the door.
+        let n_over = 3usize;
+        for i in 0..n_over {
+            match server.submit("lenet", "exact8x8", vec![0.5; 784]) {
+                Err(SubmitError::QueueFull {
+                    key,
+                    depth,
+                    capacity,
+                }) => {
+                    assert_eq!(key, SessionKey::new("lenet", "exact8x8"));
+                    assert_eq!(depth, cap, "overflow submit {i} saw a full queue");
+                    assert_eq!(capacity, cap);
+                }
+                other => panic!("overflow submit {i}: expected QueueFull, got {other:?}"),
+            }
+        }
+        let lane = server.session_stats("lenet", "exact8x8").unwrap();
+        assert_eq!(lane.rejected.load(Ordering::Relaxed), n_over as u64);
+        assert_eq!(server.stats.rejected.load(Ordering::Relaxed), n_over as u64);
+        assert_eq!(lane.queue_depth.high_water(), cap as u64);
+        // Release the worker: everything admitted is served, nothing more.
+        gate.release();
+        assert!(stalled.recv().is_ok(), "stalled request must still serve");
+        for (i, h) in fills.into_iter().enumerate() {
+            assert!(h.recv().is_ok(), "admitted request {i} must serve");
+        }
+        assert_eq!(
+            lane.served.load(Ordering::Relaxed),
+            (cap + 1) as u64,
+            "served = stalled + admitted, rejected ones never ran"
+        );
+        server.shutdown();
+    }
+
+    #[test]
+    fn panicked_batch_answers_every_peer_and_lane_survives() {
+        let _serial = CHAOS_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        let (hub, _) = single_session_hub("exact8x8");
+        let server = InferServer::start(
+            &hub,
+            BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_millis(200),
+                ..BatchPolicy::default()
+            },
+            1,
+        );
+        // One poisoned request plus two healthy peers, submitted within
+        // the batching window of a single worker: one batch, one panic.
+        let poisoned = server
+            .submit("lenet", "exact8x8", vec![chaos::PANIC_PIXEL; 784])
+            .unwrap();
+        let peers: Vec<_> = (0..2)
+            .map(|_| server.submit("lenet", "exact8x8", vec![0.25; 784]).unwrap())
+            .collect();
+        // Every batch member gets a typed error — no hung receivers.
+        for (i, h) in std::iter::once(poisoned).chain(peers).enumerate() {
+            match h.recv() {
+                Err(SubmitError::Compute { key, reason }) => {
+                    assert_eq!(key, SessionKey::new("lenet", "exact8x8"));
+                    assert!(reason.contains("chaos"), "member {i} reason: {reason}");
+                }
+                other => panic!("batch member {i}: expected Compute error, got {other:?}"),
+            }
+        }
+        let lane = server.session_stats("lenet", "exact8x8").unwrap();
+        assert_eq!(lane.worker_panics.load(Ordering::Relaxed), 1);
+        assert_eq!(server.stats.worker_panics.load(Ordering::Relaxed), 1);
+        // Supervisor respawn observed: the lane still serves afterwards.
+        let resp = server.infer("lenet", "exact8x8", vec![0.5; 784]).unwrap();
+        assert_eq!(resp.logits.len(), 10);
+        assert_eq!(lane.worker_respawns.load(Ordering::Relaxed), 1);
+        assert_eq!(lane.served.load(Ordering::Relaxed), 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn expired_deadline_is_shed_before_compute() {
+        let _serial = CHAOS_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        let gate = StallGuard::raise();
+        let (hub, _) = single_session_hub("exact8x8");
+        let server = InferServer::start(
+            &hub,
+            BatchPolicy {
+                max_batch: 1,
+                max_wait: Duration::ZERO,
+                ..BatchPolicy::default()
+            },
+            1,
+        );
+        let stalled = server
+            .submit("lenet", "exact8x8", vec![chaos::STALL_PIXEL; 784])
+            .unwrap();
+        wait_for_empty_queue(&server, "lenet", "exact8x8");
+        // This deadline is already unmeetable; the worker is wedged, so
+        // by the time it dequeues the request the deadline has passed.
+        let doomed = server
+            .submit_deadline("lenet", "exact8x8", vec![0.5; 784], Some(Instant::now()))
+            .unwrap();
+        // A generous deadline on the same backlog must still be served.
+        let fine = server
+            .submit_deadline(
+                "lenet",
+                "exact8x8",
+                vec![0.5; 784],
+                Some(Instant::now() + Duration::from_secs(60)),
+            )
+            .unwrap();
+        std::thread::sleep(Duration::from_millis(5));
+        gate.release();
+        match doomed.recv() {
+            Err(SubmitError::Shed { key, waited }) => {
+                assert_eq!(key, SessionKey::new("lenet", "exact8x8"));
+                assert!(waited > Duration::ZERO);
+            }
+            other => panic!("expected Shed, got {other:?}"),
+        }
+        assert!(fine.recv().is_ok(), "unexpired deadline must serve");
+        assert!(stalled.recv().is_ok());
+        let lane = server.session_stats("lenet", "exact8x8").unwrap();
+        assert_eq!(lane.shed.load(Ordering::Relaxed), 1);
+        assert_eq!(server.stats.shed.load(Ordering::Relaxed), 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_without_drain_closes_queued_requests() {
+        let _serial = CHAOS_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        let _gate = StallGuard::raise();
+        let (hub, _) = single_session_hub("exact8x8");
+        let server = InferServer::start(
+            &hub,
+            BatchPolicy {
+                max_batch: 1,
+                max_wait: Duration::ZERO,
+                ..BatchPolicy::default()
+            },
+            1,
+        );
+        let stalled = server
+            .submit("lenet", "exact8x8", vec![chaos::STALL_PIXEL; 784])
+            .unwrap();
+        wait_for_empty_queue(&server, "lenet", "exact8x8");
+        let victim = server.submit("lenet", "exact8x8", vec![0.5; 784]).unwrap();
+        // shutdown() closes the queue (abandoning the backlog) before it
+        // joins; free the wedged worker shortly after so the join can
+        // complete.
+        let releaser = std::thread::spawn(|| {
+            std::thread::sleep(Duration::from_millis(100));
+            chaos::STALL_GATE.store(false, Ordering::Release);
+        });
+        server.shutdown();
+        releaser.join().unwrap();
+        // The in-flight batch was answered; the queued victim was not
+        // served, and its handle resolves Closed — NOT Compute (that is
+        // reserved for panic isolation) and NOT a hang.
+        assert!(stalled.recv().is_ok(), "in-flight batch finishes on shutdown");
+        match victim.recv() {
+            Err(SubmitError::Closed(key)) => {
+                assert_eq!(key, SessionKey::new("lenet", "exact8x8"));
+            }
+            other => panic!("expected Closed for abandoned request, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn shutdown_drain_answers_backlog() {
+        let _serial = CHAOS_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        let _gate = StallGuard::raise();
+        let (hub, _) = single_session_hub("exact8x8");
+        let server = InferServer::start(
+            &hub,
+            BatchPolicy {
+                max_batch: 1,
+                max_wait: Duration::ZERO,
+                ..BatchPolicy::default()
+            },
+            1,
+        );
+        let stalled = server
+            .submit("lenet", "exact8x8", vec![chaos::STALL_PIXEL; 784])
+            .unwrap();
+        wait_for_empty_queue(&server, "lenet", "exact8x8");
+        let backlog: Vec<_> = (0..3)
+            .map(|_| server.submit("lenet", "exact8x8", vec![0.5; 784]).unwrap())
+            .collect();
+        let stats = server.session_stats("lenet", "exact8x8").unwrap();
+        let releaser = std::thread::spawn(|| {
+            std::thread::sleep(Duration::from_millis(100));
+            chaos::STALL_GATE.store(false, Ordering::Release);
+        });
+        server.shutdown_drain();
+        releaser.join().unwrap();
+        // Drain mode: everything admitted before the close was answered.
+        assert!(stalled.recv().is_ok());
+        for (i, h) in backlog.into_iter().enumerate() {
+            assert!(h.recv().is_ok(), "drained request {i} must be served");
+        }
+        assert_eq!(stats.served.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn adaptive_wait_shrinks_toward_the_slo() {
+        // Pure-rule tests: the fixed policy is untouched, and under an
+        // SLO the batching wait gives up headroom monotonically.
+        let fixed = BatchPolicy::default();
+        assert_eq!(effective_wait(&fixed, 0), fixed.max_wait);
+        assert_eq!(
+            effective_wait(&fixed, 1_000_000_000),
+            fixed.max_wait,
+            "no SLO → observed wait is ignored (legacy fixed policy)"
+        );
+        let slo = BatchPolicy {
+            slo: Some(Duration::from_millis(10)),
+            ..BatchPolicy::default()
+        };
+        // Healthy lane: plenty of headroom, batches exactly like fixed.
+        assert_eq!(effective_wait(&slo, 0), slo.max_wait);
+        // Wait eating the SLO: 8 ms observed of a 10 ms target leaves
+        // 2 ms headroom → wait at most 1 ms.
+        assert_eq!(effective_wait(&slo, 8_000_000), Duration::from_millis(1));
+        // At/past the target: dispatch immediately.
+        assert_eq!(effective_wait(&slo, 10_000_000), Duration::ZERO);
+        assert_eq!(effective_wait(&slo, 25_000_000), Duration::ZERO);
+        // Monotone non-increasing in observed wait.
+        let mut prev = effective_wait(&slo, 0);
+        for ns in (0..=12_000_000u64).step_by(500_000) {
+            let w = effective_wait(&slo, ns);
+            assert!(w <= prev, "wait grew as the lane got slower");
+            prev = w;
+        }
+    }
+
+    #[test]
+    fn slo_lane_serves_bit_identical_logits() {
+        // The adaptive policy only moves the batching window — numerics
+        // must match the direct forward exactly.
+        let (hub, qnet) = single_session_hub("mul8x8_2");
+        let lut = hub.cache().get("mul8x8_2").unwrap();
+        let data = Dataset::synth_mnist(8, 9);
+        let server = InferServer::start(
+            &hub,
+            BatchPolicy {
+                slo: Some(Duration::from_millis(20)),
+                ..BatchPolicy::default()
+            },
+            2,
+        );
+        for i in 0..8 {
+            let resp = server
+                .infer("lenet", "mul8x8_2", data.image(i).to_vec())
+                .unwrap();
+            assert_eq!(resp.logits, qnet.forward_one(data.image(i), &lut));
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn snapshot_aggregates_the_counters() {
+        let (hub, _) = single_session_hub("exact8x8");
+        let data = Dataset::synth_mnist(8, 11);
+        let server = InferServer::start(&hub, BatchPolicy::default(), 1);
+        for i in 0..8 {
+            server
+                .infer("lenet", "exact8x8", data.image(i).to_vec())
+                .unwrap();
+        }
+        let snap = server.stats.snapshot();
+        assert_eq!(snap.served, 8);
+        assert_eq!(snap.e2e.count, 8);
+        assert_eq!(snap.queue_wait.count, 8);
+        assert!(snap.mean_batch >= 1.0);
+        assert_eq!(snap.rejected + snap.shed + snap.worker_panics, 0);
+        // Display and JSON render without panicking and carry the counts.
+        let line = snap.to_string();
+        assert!(line.contains("served 8"), "{line}");
+        let json = snap.to_json().to_string();
+        let parsed = Json::parse(&json).unwrap();
+        assert_eq!(parsed.get("served").and_then(Json::as_f64), Some(8.0));
+        assert!(parsed.get("e2e").and_then(|e| e.get("p99_ns")).is_some());
+        server.shutdown();
     }
 }

@@ -20,6 +20,7 @@ use anyhow::Result;
 use std::collections::BTreeMap;
 use std::fmt;
 use std::sync::{Arc, RwLock};
+use std::time::{Duration, Instant};
 
 /// Identity of a servable (model, design-plan) pair.  `design` is a
 /// plan id: a bare design name for singleton plans, `plan{d1,d2,…}`
@@ -122,6 +123,21 @@ impl Session {
     pub fn infer_batch_with(&self, images: &[f32], batch: usize, ws: &mut Workspace) -> Vec<f32> {
         self.qnet
             .forward_batch_luts(images, batch, &self.luts, self.comp.as_deref(), ws)
+    }
+
+    /// [`Session::infer_batch_with`] plus a wall-clock measurement of
+    /// the forward pass itself — the serving lanes' execution call, so
+    /// per-batch compute time reaches the latency histograms without a
+    /// second timestamp read on the hot path.
+    pub fn infer_batch_timed(
+        &self,
+        images: &[f32],
+        batch: usize,
+        ws: &mut Workspace,
+    ) -> (Vec<f32>, Duration) {
+        let t0 = Instant::now();
+        let logits = self.infer_batch_with(images, batch, ws);
+        (logits, t0.elapsed())
     }
 
     /// Floats per image this session expects (`C*H*W` of its model).

@@ -7,6 +7,7 @@
 //!   table8           DNN accuracy sweep (needs `make artifacts`)
 //!   weights-hist     §II-B weight-code distribution (needs artifacts)
 //!   train            train one network, print the loss curve
+//!   serve            artifact-free serving load run (overload knobs + snapshots)
 //!   export-luts      dump product LUTs as .npy (optionally one plan's set)
 //!   designs          list registered multiplier designs
 //!   mul              evaluate one product: `axmul mul mul8x8_2 100 200`
@@ -135,6 +136,91 @@ fn run(args: &Args) -> anyhow::Result<()> {
                 println!("wrote {n} LUTs to {}", out.display());
             }
         }
+        Some("serve") => {
+            // Artifact-free serving smoke/load run: a random (untrained)
+            // LeNet quantized over synth-MNIST, registered under each
+            // requested design, then a closed-loop client fleet drives
+            // the overload-safe server and the per-lane StatsSnapshots
+            // are printed.  For the trained-model demo with accuracy
+            // numbers, see `cargo run --release --example serve`.
+            use axmul::coordinator::server::{BatchPolicy, InferServer, SubmitError};
+            use std::sync::Arc;
+            use std::time::{Duration, Instant};
+            let designs: Vec<String> = args
+                .opt_or("designs", "mul8x8_2,exact8x8")
+                .split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect();
+            anyhow::ensure!(!designs.is_empty(), "no designs given");
+            let n_requests = args.opt_usize("requests", 512);
+            let workers = args.opt_usize("workers", 2);
+            let clients = args.opt_usize("clients", 4).max(1);
+            let slo_ms = args.opt_usize("slo-ms", 0);
+            let deadline_ms = args.opt_usize("deadline-ms", 0);
+            let drain = args.flag("drain");
+            let policy = BatchPolicy {
+                max_batch: args.opt_usize("max-batch", 16),
+                max_wait: Duration::from_millis(args.opt_usize("max-wait-ms", 2) as u64),
+                queue_cap: args.opt_usize("queue-cap", 1024),
+                slo: (slo_ms > 0).then(|| Duration::from_millis(slo_ms as u64)),
+            };
+            let data = axmul::data::Dataset::synth_mnist(256, 42);
+            let fnet = axmul::dnn::FloatNet::random("lenet", (1, 28, 28), 1);
+            let qnet = Arc::new(axmul::dnn::QNet::quantize(&fnet, &data.images, 32, 8.0));
+            let hub = axmul::engine::ModelHub::with_global_cache();
+            for d in &designs {
+                hub.register("lenet", d, qnet.clone())?;
+            }
+            println!(
+                "serve: {designs:?} | workers/lane={workers} clients={clients} \
+                 max_batch={} max_wait={:?} queue_cap={} slo={:?} deadline_ms={deadline_ms}",
+                policy.max_batch, policy.max_wait, policy.queue_cap, policy.slo
+            );
+            let server = InferServer::start(&hub, policy, workers);
+            let t0 = Instant::now();
+            std::thread::scope(|s| {
+                for c in 0..clients {
+                    let server = &server;
+                    let data = &data;
+                    let designs = &designs;
+                    s.spawn(move || {
+                        for i in 0..n_requests / clients {
+                            let idx = (i * clients + c) % data.n;
+                            let d = &designs[(i * clients + c) % designs.len()];
+                            let deadline = (deadline_ms > 0).then(|| {
+                                Instant::now() + Duration::from_millis(deadline_ms as u64)
+                            });
+                            match server
+                                .submit_deadline("lenet", d, data.image(idx).to_vec(), deadline)
+                                .and_then(|h| h.recv())
+                            {
+                                Ok(_)
+                                | Err(SubmitError::QueueFull { .. })
+                                | Err(SubmitError::Shed { .. }) => {}
+                                Err(e) => panic!("serving failed: {e}"),
+                            }
+                        }
+                    });
+                }
+            });
+            let wall = t0.elapsed();
+            for d in &designs {
+                let snap = server.session_stats("lenet", d).unwrap().snapshot();
+                println!("[{d:<10}] {snap}");
+            }
+            let snap = server.stats.snapshot();
+            println!("[global    ] {snap}");
+            println!(
+                "throughput      {:.0} req/s over {wall:?}",
+                snap.served as f64 / wall.as_secs_f64()
+            );
+            if drain {
+                server.shutdown_drain();
+            } else {
+                server.shutdown();
+            }
+        }
         Some("designs") => {
             println!("registered multiplier designs:");
             for name in all_names() {
@@ -167,9 +253,11 @@ fn run(args: &Args) -> anyhow::Result<()> {
         _ => {
             println!(
                 "axmul — approximate multiplier co-design (ISCAS'22 reproduction)\n\
-                 usage: axmul <table5|table6|table7|table8|weights-hist|train|export-luts|designs|mul> [options]\n\
+                 usage: axmul <table5|table6|table7|table8|weights-hist|train|serve|export-luts|designs|mul> [options]\n\
                  common options: --artifacts DIR --quick --verbose\n\
                  table8: --nets a,b --designs x,y --steps N --eval N --config FILE\n\
+                 serve: --designs x,y --requests N --workers N --max-batch N --max-wait-ms N\n\
+                        --queue-cap N --slo-ms N --deadline-ms N --drain (artifact-free load run)\n\
                  export-luts: --out DIR --plan FILE (per-layer plan manifest)"
             );
         }

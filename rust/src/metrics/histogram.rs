@@ -1,0 +1,282 @@
+//! Lock-free latency histograms and gauges for the serving plane.
+//!
+//! A [`LatencyHistogram`] is a fixed array of `AtomicU64` buckets over
+//! log2-spaced nanosecond ranges — bucket `i` counts samples in
+//! `[2^i, 2^(i+1))` ns (bucket 0 also holds 0) — in the same
+//! relaxed-atomics style as the server's counters: `record` is a couple
+//! of `fetch_add`s on the hot path, no locks, no allocation, and reads
+//! are racy-consistent (good enough for operational quantiles; never
+//! used for numerics).  40 buckets span 1 ns to ~18 minutes, which
+//! covers everything from a queue wait to a wedged drain.
+//!
+//! Quantiles are bucket-resolution upper bounds: `quantile_ns(0.99)`
+//! answers "99% of samples finished within this", rounded up to the
+//! containing bucket's upper edge (and clipped to the true observed
+//! max).  That ±2× resolution is the deliberate price of a fixed
+//! 320-byte, wait-free recorder on the per-request path.
+
+use crate::util::fmt_ns;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Number of log2 buckets: 2^40 ns ≈ 18.3 minutes at the top.
+pub const HIST_BUCKETS: usize = 40;
+
+/// Wait-free fixed-bucket log2 histogram of nanosecond durations.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Bucket index for a nanosecond value: floor(log2(ns)), clamped.
+fn bucket_idx(ns: u64) -> usize {
+    (64 - ns.leading_zeros() as usize)
+        .saturating_sub(1)
+        .min(HIST_BUCKETS - 1)
+}
+
+/// Inclusive upper edge of bucket `i` in nanoseconds.
+fn bucket_edge(i: usize) -> u64 {
+    if i + 1 >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << (i + 1)) - 1
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, d: Duration) {
+        self.record_ns(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    pub fn record_ns(&self, ns: u64) {
+        self.buckets[bucket_idx(ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_ns.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    /// Upper bound on the `q`-quantile (bucket resolution, clipped to
+    /// the observed max).  `q` in [0, 1]; 0 samples → 0.
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let rank = ((q * n as f64).ceil() as u64).clamp(1, n);
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            cum += b.load(Ordering::Relaxed);
+            if cum >= rank {
+                return bucket_edge(i).min(self.max_ns());
+            }
+        }
+        self.max_ns()
+    }
+
+    pub fn quantile(&self, q: f64) -> Duration {
+        Duration::from_nanos(self.quantile_ns(q))
+    }
+
+    /// A point-in-time copy for reporting (counters keep running).
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            count: self.count(),
+            mean_ns: self.mean_ns(),
+            p50_ns: self.quantile_ns(0.50),
+            p90_ns: self.quantile_ns(0.90),
+            p99_ns: self.quantile_ns(0.99),
+            max_ns: self.max_ns(),
+            buckets: self
+                .buckets
+                .iter()
+                .map(|b| b.load(Ordering::Relaxed))
+                .collect(),
+        }
+    }
+}
+
+/// Plain-data copy of a [`LatencyHistogram`], for Display/JSON.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HistSnapshot {
+    pub count: u64,
+    pub mean_ns: f64,
+    pub p50_ns: u64,
+    pub p90_ns: u64,
+    pub p99_ns: u64,
+    pub max_ns: u64,
+    /// Raw log2 bucket counts (len [`HIST_BUCKETS`]); bucket `i` holds
+    /// samples in `[2^i, 2^(i+1))` ns.
+    pub buckets: Vec<u64>,
+}
+
+impl HistSnapshot {
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("count".to_string(), Json::Num(self.count as f64));
+        o.insert("mean_ns".to_string(), Json::Num(self.mean_ns));
+        o.insert("p50_ns".to_string(), Json::Num(self.p50_ns as f64));
+        o.insert("p90_ns".to_string(), Json::Num(self.p90_ns as f64));
+        o.insert("p99_ns".to_string(), Json::Num(self.p99_ns as f64));
+        o.insert("max_ns".to_string(), Json::Num(self.max_ns as f64));
+        o.insert(
+            "log2_buckets".to_string(),
+            Json::Arr(self.buckets.iter().map(|&b| Json::Num(b as f64)).collect()),
+        );
+        Json::Obj(o)
+    }
+}
+
+impl fmt::Display for HistSnapshot {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "n={} mean {} p50 {} p90 {} p99 {} max {}",
+            self.count,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns as f64),
+            fmt_ns(self.p90_ns as f64),
+            fmt_ns(self.p99_ns as f64),
+            fmt_ns(self.max_ns as f64),
+        )
+    }
+}
+
+/// Last-value gauge with a high-water mark (e.g. lane queue depth).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    cur: AtomicU64,
+    hi: AtomicU64,
+}
+
+impl Gauge {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn observe(&self, v: u64) {
+        self.cur.store(v, Ordering::Relaxed);
+        self.hi.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.cur.load(Ordering::Relaxed)
+    }
+
+    pub fn high_water(&self) -> u64 {
+        self.hi.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_indexing_is_log2() {
+        assert_eq!(bucket_idx(0), 0);
+        assert_eq!(bucket_idx(1), 0);
+        assert_eq!(bucket_idx(2), 1);
+        assert_eq!(bucket_idx(3), 1);
+        assert_eq!(bucket_idx(4), 2);
+        assert_eq!(bucket_idx(1023), 9);
+        assert_eq!(bucket_idx(1024), 10);
+        assert_eq!(bucket_idx(u64::MAX), HIST_BUCKETS - 1);
+        assert_eq!(bucket_edge(0), 1);
+        assert_eq!(bucket_edge(9), 1023);
+    }
+
+    #[test]
+    fn quantiles_bound_the_samples() {
+        let h = LatencyHistogram::new();
+        // 99 fast samples and one slow outlier.
+        for _ in 0..99 {
+            h.record_ns(1_000); // 1 µs → bucket 9, edge 1023
+        }
+        h.record_ns(1_000_000); // 1 ms
+        assert_eq!(h.count(), 100);
+        // p50/p90 land in the fast bucket: upper edge 1023 ≥ 1000.
+        assert_eq!(h.quantile_ns(0.50), 1023);
+        assert_eq!(h.quantile_ns(0.90), 1023);
+        // p100 is clipped to the true max, not the bucket edge.
+        assert_eq!(h.quantile_ns(1.0), 1_000_000);
+        // p99 covers exactly the 99 fast samples.
+        assert_eq!(h.quantile_ns(0.99), 1023);
+        assert!((h.mean_ns() - (99.0 * 1_000.0 + 1_000_000.0) / 100.0).abs() < 1e-9);
+        let s = h.snapshot();
+        assert_eq!(s.count, 100);
+        assert_eq!(s.buckets.iter().sum::<u64>(), 100);
+        assert_eq!(s.p99_ns, 1023);
+        // Display renders without panicking and carries the count.
+        assert!(s.to_string().contains("n=100"));
+    }
+
+    #[test]
+    fn empty_histogram_is_all_zero() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.quantile_ns(0.99), 0);
+        assert_eq!(h.mean_ns(), 0.0);
+        assert_eq!(h.snapshot().max_ns, 0);
+    }
+
+    #[test]
+    fn snapshot_round_trips_to_json() {
+        let h = LatencyHistogram::new();
+        h.record(Duration::from_micros(5));
+        let j = h.snapshot().to_json();
+        assert_eq!(j.get("count").and_then(Json::as_f64), Some(1.0));
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(
+            parsed.get("log2_buckets").and_then(Json::as_arr).map(|a| a.len()),
+            Some(HIST_BUCKETS)
+        );
+    }
+
+    #[test]
+    fn gauge_tracks_current_and_high_water() {
+        let g = Gauge::new();
+        g.observe(3);
+        g.observe(7);
+        g.observe(2);
+        assert_eq!(g.get(), 2);
+        assert_eq!(g.high_water(), 7);
+    }
+}

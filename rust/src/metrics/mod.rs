@@ -2,8 +2,10 @@
 //! (1)–(3), (10), (11)) and the product-LUT builder shared with the DNN
 //! engine and the Pallas kernel.
 
+pub mod histogram;
 pub mod lut;
 
+pub use histogram::{Gauge, HistSnapshot, LatencyHistogram, HIST_BUCKETS};
 pub use lut::{Lut, LutTStore, NEG_SUFFIX};
 
 use crate::mult::Multiplier;

@@ -4,6 +4,8 @@
 //! (mean / stddev / median / p95) and an aligned text report.  Used by all
 //! `benches/*.rs` targets (declared with `harness = false`).
 
+use super::json::Json;
+use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
 #[derive(Clone, Debug)]
@@ -36,6 +38,10 @@ pub struct Bencher {
     target: Duration,
     samples: usize,
     results: Vec<BenchStats>,
+    /// Free-form JSON blocks merged into the top level of `write_json`
+    /// next to `meta`/`results` — e.g. the serving scenario's
+    /// `StatsSnapshot` (histograms don't fit the ns/iter row schema).
+    extras: BTreeMap<String, Json>,
 }
 
 impl Default for Bencher {
@@ -62,6 +68,7 @@ impl Bencher {
             },
             samples: if fast { 11 } else { 31 },
             results: Vec::new(),
+            extras: BTreeMap::new(),
         }
     }
 
@@ -170,6 +177,19 @@ impl Bencher {
         &self.results
     }
 
+    /// Attach a free-form JSON value under `key` at the top level of the
+    /// next `write_json` (reserved keys `meta`/`results` are refused).
+    /// Used by scenario-shaped benches — the serve-under-load scenario
+    /// stores a whole `StatsSnapshot` (latency histograms included) that
+    /// a ns/iter results row cannot carry.
+    pub fn note_json(&mut self, key: &str, value: Json) {
+        assert!(
+            key != "meta" && key != "results",
+            "note_json key {key:?} collides with the report schema"
+        );
+        self.extras.insert(key.to_string(), value);
+    }
+
     /// Machine-readable dump of everything benchmarked so far: an object
     /// with a `meta` block (git SHA, thread count, SIMD mode/backend/
     /// lanes — the provenance a number is meaningless without) and a
@@ -179,8 +199,6 @@ impl Bencher {
     /// artifact (`BENCH_table8.json`) future PRs diff against — text
     /// reports don't survive CI, committed JSON does.
     pub fn write_json(&self, path: &std::path::Path) -> std::io::Result<()> {
-        use super::json::Json;
-        use std::collections::BTreeMap;
         let results = Json::Arr(
             self.results
                 .iter()
@@ -217,6 +235,9 @@ impl Bencher {
         let mut top = BTreeMap::new();
         top.insert("meta".to_string(), Json::Obj(meta));
         top.insert("results".to_string(), results);
+        for (k, v) in &self.extras {
+            top.insert(k.clone(), v.clone());
+        }
         std::fs::write(path, Json::Obj(top).to_string())
     }
 }
@@ -313,6 +334,40 @@ mod tests {
             arr[1].get("workspace_peak_bytes").unwrap().as_f64(),
             Some(12_345.0)
         );
+    }
+
+    #[test]
+    fn note_json_extras_land_at_top_level() {
+        std::env::set_var("AXMUL_BENCH_FAST", "1");
+        let mut b = Bencher::new();
+        b.bench("x", || {
+            std::hint::black_box(1 + 1);
+        });
+        let mut o = BTreeMap::new();
+        o.insert("served".to_string(), Json::Num(7.0));
+        b.note_json("serve_under_load", Json::Obj(o));
+        let dir = std::env::temp_dir().join("axmul_bench_json_extras");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("out.json");
+        b.write_json(&p).unwrap();
+        let parsed = crate::util::Json::parse(&std::fs::read_to_string(&p).unwrap()).unwrap();
+        assert_eq!(
+            parsed
+                .get("serve_under_load")
+                .and_then(|s| s.get("served"))
+                .and_then(Json::as_f64),
+            Some(7.0)
+        );
+        // schema blocks survive next to the extra
+        assert!(parsed.get("meta").is_some());
+        assert!(parsed.get("results").is_some());
+    }
+
+    #[test]
+    #[should_panic(expected = "collides")]
+    fn note_json_refuses_reserved_keys() {
+        let mut b = Bencher::new();
+        b.note_json("results", Json::Null);
     }
 
     #[test]
