@@ -1,0 +1,874 @@
+//! The in-repo invariant linter behind `axmul lint`.
+//!
+//! Dependency-free source scanning (the registry carries no syn/clippy):
+//! each rule is a line-oriented check over a comment- and
+//! string-stripped view of the tree, precise enough to hold the repo's
+//! concurrency and kernel invariants as *machine-checked* facts rather
+//! than review lore.  Tier-1 CI runs `cargo run --release -- lint` on
+//! every push, so a violation is a red build, not a note.
+//!
+//! The rules (also printed by `axmul lint --list`):
+//!
+//! | rule | invariant |
+//! |------|-----------|
+//! | `forbid-unsafe-kernels` | `dnn/gemm.rs` and `dnn/simd.rs` carry `#![forbid(unsafe_code)]`; no `unsafe` token anywhere under `dnn/` |
+//! | `safety-comment` | every `unsafe` token is covered by a `SAFETY` comment on the same or one of the 8 preceding lines |
+//! | `std-sync-outside-shim` | no `std::sync` outside `util/sync.rs` (the loom seam), absent an inline `lint:allow(std_sync)` marker |
+//! | `kernel-hot-loop` | kernel-named fns in `gemm.rs`/`simd.rs` (`lut_gemm*`, `lut_conv*`, `gather_*`, `vector_tile*`, `tile16*`) neither read clocks nor allocate |
+//! | `lock-unwrap` | no `.unwrap()`/`.expect()` on lock results outside the poison-tolerant helpers in `util/sync.rs` |
+//! | `registry-table7-drift` | Table VII names ⊆ `DESIGNS_8X8`; registry consts ⊆ `by_name` arms ∩ `all_names`; `DNN_DESIGNS` ⊆ `DESIGNS_8X8` |
+//!
+//! ## Honesty about the heuristics
+//!
+//! The stripper is per-line: `//` comments, `/* */` blocks (tracked
+//! across lines) and the *contents* of single-line string and char
+//! literals are removed before matching, so a rule name quoted in a doc
+//! comment or an error message cannot trip it.  Multi-line string
+//! literals leak their continuation lines into the stripped view — the
+//! repo style (and the fixtures in the self-tests below) avoids putting
+//! rule-shaped text inside them.  Likewise, a multi-line
+//! `.lock()\n.unwrap()` chain escapes the line-based `lock-unwrap`
+//! pattern; the rule is a tripwire for the common form, the sync-shim
+//! refactor is what actually removed the call sites.
+
+use std::fmt;
+use std::path::Path;
+
+/// One source file under lint, with a root-relative `/`-separated path
+/// (e.g. `rust/src/dnn/gemm.rs`) — rules match on path suffixes.
+#[derive(Clone, Debug)]
+pub struct SourceFile {
+    pub path: String,
+    pub text: String,
+}
+
+impl SourceFile {
+    pub fn new(path: &str, text: &str) -> SourceFile {
+        SourceFile {
+            path: path.to_string(),
+            text: text.to_string(),
+        }
+    }
+}
+
+/// One rule violation; `line` is 1-indexed.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Violation {
+    pub rule: &'static str,
+    pub path: String,
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.path, self.line, self.rule, self.msg)
+    }
+}
+
+/// A lint rule's identity, for `axmul lint --list`.
+pub struct Rule {
+    pub name: &'static str,
+    pub what: &'static str,
+}
+
+// NOTE: `what` strings stay single-line — a `\`-continued literal would
+// leak its continuation lines into this file's own stripped view when
+// the repo lints itself (see the module docs on the stripper).
+#[rustfmt::skip]
+pub const RULES: [Rule; 6] = [
+    Rule {
+        name: "forbid-unsafe-kernels",
+        what: "dnn/gemm.rs and dnn/simd.rs must carry #![forbid(unsafe_code)]; no unsafe token anywhere under dnn/",
+    },
+    Rule {
+        name: "safety-comment",
+        what: "every unsafe token needs a SAFETY comment on the same or one of the 8 preceding lines",
+    },
+    Rule {
+        name: "std-sync-outside-shim",
+        what: "sync primitives come from util/sync.rs (the loom seam), never std::sync directly (inline lint:allow(std_sync) to opt out)",
+    },
+    Rule {
+        name: "kernel-hot-loop",
+        what: "kernel-named fns in gemm.rs/simd.rs must not read clocks or allocate (Instant::now, vec!, collect, format!, ...)",
+    },
+    Rule {
+        name: "lock-unwrap",
+        what: "no .unwrap()/.expect() on lock results outside the poison-tolerant helpers in util/sync.rs",
+    },
+    Rule {
+        name: "registry-table7-drift",
+        what: "paper Table VII names, registry consts, by_name arms and all_names must agree",
+    },
+];
+
+// ---------------------------------------------------------------------
+// Stripping
+// ---------------------------------------------------------------------
+
+fn is_word_byte(b: u8) -> bool {
+    b == b'_' || b.is_ascii_alphanumeric()
+}
+
+/// Whether `line` contains `word` delimited by non-identifier characters
+/// (so a search for an `unsafe` token does not match `unsafe_code`).
+fn has_word(line: &str, word: &str) -> bool {
+    let bytes = line.as_bytes();
+    let mut start = 0;
+    while let Some(pos) = line[start..].find(word) {
+        let at = start + pos;
+        let end = at + word.len();
+        let before_ok = at == 0 || !is_word_byte(bytes[at - 1]);
+        let after_ok = end >= bytes.len() || !is_word_byte(bytes[end]);
+        if before_ok && after_ok {
+            return true;
+        }
+        start = at + 1;
+        while start < line.len() && !line.is_char_boundary(start) {
+            start += 1;
+        }
+    }
+    false
+}
+
+/// Per-line comment/string stripper: returns one stripped line per
+/// input line.  `//` comments and `/* */` blocks (tracked across lines)
+/// are dropped; string literals keep their quotes but lose their
+/// contents; char literals are consumed whole (so `'"'` cannot open a
+/// phantom string — a lone lifetime tick is simply dropped).
+fn strip_lines(text: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut in_block = false;
+    for line in text.lines() {
+        let chars: Vec<char> = line.chars().collect();
+        let mut s = String::with_capacity(line.len());
+        let mut i = 0;
+        while i < chars.len() {
+            if in_block {
+                if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                    in_block = false;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+                continue;
+            }
+            match chars[i] {
+                '/' if chars.get(i + 1) == Some(&'/') => break,
+                '/' if chars.get(i + 1) == Some(&'*') => {
+                    in_block = true;
+                    i += 2;
+                }
+                '"' => {
+                    s.push('"');
+                    i += 1;
+                    while i < chars.len() {
+                        match chars[i] {
+                            '\\' => i += 2,
+                            '"' => {
+                                s.push('"');
+                                i += 1;
+                                break;
+                            }
+                            _ => i += 1,
+                        }
+                    }
+                }
+                '\'' => {
+                    if chars.get(i + 1) == Some(&'\\') {
+                        // '\x' escape form: consume through the closing tick
+                        i += 2;
+                        while i < chars.len() && chars[i] != '\'' {
+                            i += 1;
+                        }
+                        i += 1;
+                    } else if chars.get(i + 2) == Some(&'\'') {
+                        i += 3; // plain 'x' form
+                    } else {
+                        i += 1; // lifetime tick
+                    }
+                }
+                c => {
+                    s.push(c);
+                    i += 1;
+                }
+            }
+        }
+        out.push(s);
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Rules
+// ---------------------------------------------------------------------
+
+/// Kernel fn-name prefixes whose bodies the hot-loop rule covers.
+const KERNEL_FN_PREFIXES: [&str; 5] = ["lut_gemm", "lut_conv", "gather_", "vector_tile", "tile16"];
+
+/// Tokens banned inside kernel fn bodies: clock reads and allocation.
+/// (`array::from_fn` stays legal — it builds fixed-size stack arrays.)
+const HOT_LOOP_BANNED: [&str; 13] = [
+    "Instant::now",
+    "SystemTime",
+    "std::time::",
+    "vec!",
+    "Vec::",
+    "Box::new",
+    "String::",
+    "format!",
+    ".to_vec(",
+    ".collect(",
+    "to_string(",
+    "HashMap",
+    "BTreeMap",
+];
+
+/// Patterns of panicking lock acquisition the `lock-unwrap` rule bans.
+const LOCK_UNWRAP_PATTERNS: [&str; 4] = [
+    "lock().unwrap",
+    "lock().expect(",
+    ".read().unwrap",
+    ".write().unwrap",
+];
+
+fn is_kernel_file(path: &str) -> bool {
+    path.ends_with("dnn/gemm.rs") || path.ends_with("dnn/simd.rs")
+}
+
+/// The identifier following a word-boundary `fn` token, if any.
+fn fn_name(stripped: &str) -> Option<&str> {
+    let mut start = 0;
+    while let Some(pos) = stripped[start..].find("fn") {
+        let at = start + pos;
+        let bytes = stripped.as_bytes();
+        let before_ok = at == 0 || !is_word_byte(bytes[at - 1]);
+        let after = at + 2;
+        if before_ok && bytes.get(after) == Some(&b' ') {
+            let rest = stripped[after..].trim_start();
+            let end = rest
+                .find(|c: char| !(c.is_ascii_alphanumeric() || c == '_'))
+                .unwrap_or(rest.len());
+            if end > 0 {
+                return Some(&rest[..end]);
+            }
+        }
+        start = at + 2;
+    }
+    None
+}
+
+/// Lint a set of files against every rule.
+pub fn lint_files(files: &[SourceFile]) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let stripped: Vec<Vec<String>> = files.iter().map(|f| strip_lines(&f.text)).collect();
+
+    for (f, slines) in files.iter().zip(&stripped) {
+        let raw: Vec<&str> = f.text.lines().collect();
+        rule_forbid_unsafe_kernels(f, slines, &mut out);
+        rule_safety_comment(f, slines, &raw, &mut out);
+        rule_std_sync(f, slines, &raw, &mut out);
+        rule_hot_loop(f, slines, &mut out);
+        rule_lock_unwrap(f, slines, &mut out);
+    }
+    rule_registry_drift(files, &mut out);
+    out
+}
+
+fn rule_forbid_unsafe_kernels(f: &SourceFile, slines: &[String], out: &mut Vec<Violation>) {
+    if is_kernel_file(&f.path) && !f.text.contains("#![forbid(unsafe_code)]") {
+        out.push(Violation {
+            rule: "forbid-unsafe-kernels",
+            path: f.path.clone(),
+            line: 1,
+            msg: "kernel module must declare #![forbid(unsafe_code)]".into(),
+        });
+    }
+    if f.path.contains("dnn/") {
+        for (i, s) in slines.iter().enumerate() {
+            if has_word(s, "unsafe") {
+                out.push(Violation {
+                    rule: "forbid-unsafe-kernels",
+                    path: f.path.clone(),
+                    line: i + 1,
+                    msg: "unsafe is banned everywhere under dnn/".into(),
+                });
+            }
+        }
+    }
+}
+
+fn rule_safety_comment(f: &SourceFile, slines: &[String], raw: &[&str], out: &mut Vec<Violation>) {
+    for (i, s) in slines.iter().enumerate() {
+        if !has_word(s, "unsafe") {
+            continue;
+        }
+        let covered = raw[i.saturating_sub(8)..=i]
+            .iter()
+            .any(|l| l.contains("SAFETY"));
+        if !covered {
+            out.push(Violation {
+                rule: "safety-comment",
+                path: f.path.clone(),
+                line: i + 1,
+                msg: "unsafe without a SAFETY comment on this or the 8 preceding lines".into(),
+            });
+        }
+    }
+}
+
+fn rule_std_sync(f: &SourceFile, slines: &[String], raw: &[&str], out: &mut Vec<Violation>) {
+    if f.path.ends_with("util/sync.rs") {
+        return;
+    }
+    for (i, s) in slines.iter().enumerate() {
+        if s.contains("std::sync") && !raw[i].contains("lint:allow(std_sync)") {
+            out.push(Violation {
+                rule: "std-sync-outside-shim",
+                path: f.path.clone(),
+                line: i + 1,
+                msg: "import sync primitives from crate::util::sync, not std::sync".into(),
+            });
+        }
+    }
+}
+
+fn rule_hot_loop(f: &SourceFile, slines: &[String], out: &mut Vec<Violation>) {
+    if !is_kernel_file(&f.path) {
+        return;
+    }
+    // Kernel-prefixed *test* names (`lut_gemm_exact_matches_...`)
+    // allocate by design; the rule covers production code only, so the
+    // scan stops at the test module (repo style keeps tests last).
+    let end = slines
+        .iter()
+        .position(|s| {
+            let t = s.trim_start();
+            t.starts_with("mod tests") || t.starts_with("mod loom_tests")
+        })
+        .unwrap_or(slines.len());
+    let slines = &slines[..end];
+    let mut i = 0;
+    while i < slines.len() {
+        let name = match fn_name(&slines[i]) {
+            Some(n) if KERNEL_FN_PREFIXES.iter().any(|p| n.starts_with(p)) => n.to_string(),
+            _ => {
+                i += 1;
+                continue;
+            }
+        };
+        // Scan forward to the body's opening brace, then brace-match to
+        // its close (strings are already stripped, so braces in literals
+        // cannot skew the count).
+        let mut j = i;
+        while j < slines.len() && !slines[j].contains('{') {
+            j += 1;
+        }
+        let mut depth = 0i32;
+        let body_start = j;
+        while j < slines.len() {
+            for c in slines[j].chars() {
+                match c {
+                    '{' => depth += 1,
+                    '}' => depth -= 1,
+                    _ => {}
+                }
+            }
+            for banned in HOT_LOOP_BANNED {
+                if slines[j].contains(banned) {
+                    out.push(Violation {
+                        rule: "kernel-hot-loop",
+                        path: f.path.clone(),
+                        line: j + 1,
+                        msg: format!("{banned} inside kernel fn {name}"),
+                    });
+                }
+            }
+            if depth <= 0 && j > body_start {
+                break;
+            }
+            j += 1;
+        }
+        i = j + 1;
+    }
+}
+
+fn rule_lock_unwrap(f: &SourceFile, slines: &[String], out: &mut Vec<Violation>) {
+    if f.path.ends_with("util/sync.rs") {
+        return;
+    }
+    for (i, s) in slines.iter().enumerate() {
+        for pat in LOCK_UNWRAP_PATTERNS {
+            if s.contains(pat) {
+                out.push(Violation {
+                    rule: "lock-unwrap",
+                    path: f.path.clone(),
+                    line: i + 1,
+                    msg: format!("{pat}: use the poison-tolerant helpers in util::sync"),
+                });
+            }
+        }
+    }
+}
+
+/// Quoted names in `text` between the line containing `anchor` and the
+/// next line containing `close`, one per line (the repo style for name
+/// lists).  Returns (names, anchor_line_1indexed).
+fn quoted_names_after(text: &str, anchor: &str, close: &str) -> (Vec<String>, usize) {
+    let mut names = Vec::new();
+    let mut anchor_line = 0;
+    let mut inside = false;
+    for (i, line) in text.lines().enumerate() {
+        if !inside {
+            if line.contains(anchor) {
+                inside = true;
+                anchor_line = i + 1;
+            }
+            continue;
+        }
+        if let Some(open) = line.find('"') {
+            if let Some(len) = line[open + 1..].find('"') {
+                names.push(line[open + 1..open + 1 + len].to_string());
+            }
+        }
+        if line.contains(close) {
+            break;
+        }
+    }
+    (names, anchor_line)
+}
+
+/// `by_name` match arms: lines whose trimmed form starts with a quote
+/// and contains `=>`.
+fn match_arm_names(text: &str) -> Vec<String> {
+    let mut names = Vec::new();
+    for line in text.lines() {
+        let t = line.trim_start();
+        if t.starts_with('"') && t.contains("=>") {
+            if let Some(len) = t[1..].find('"') {
+                names.push(t[1..1 + len].to_string());
+            }
+        }
+    }
+    names
+}
+
+fn rule_registry_drift(files: &[SourceFile], out: &mut Vec<Violation>) {
+    let registry = files.iter().find(|f| f.path.ends_with("mult/registry.rs"));
+    let experiments = files
+        .iter()
+        .find(|f| f.path.ends_with("coordinator/experiments.rs"));
+    let (Some(reg), Some(exp)) = (registry, experiments) else {
+        return; // fixture sets without both files skip this rule
+    };
+    let (designs_8x8, d8_line) = quoted_names_after(&reg.text, "const DESIGNS_8X8", "];");
+    let (dnn_designs, dnn_line) = quoted_names_after(&reg.text, "const DNN_DESIGNS", "];");
+    let (all_names, _) = quoted_names_after(&reg.text, "fn all_names", "]");
+    let arms = match_arm_names(&reg.text);
+    let (table7, t7_line) = quoted_names_after(&exp.text, "const TABLE7", "];");
+
+    for name in &table7 {
+        if !designs_8x8.contains(name) {
+            out.push(Violation {
+                rule: "registry-table7-drift",
+                path: exp.path.clone(),
+                line: t7_line,
+                msg: format!("Table VII design {name} is not in DESIGNS_8X8"),
+            });
+        }
+    }
+    for (name, line) in designs_8x8
+        .iter()
+        .map(|n| (n, d8_line))
+        .chain(dnn_designs.iter().map(|n| (n, dnn_line)))
+    {
+        if !arms.contains(name) {
+            out.push(Violation {
+                rule: "registry-table7-drift",
+                path: reg.path.clone(),
+                line,
+                msg: format!("registry const lists {name} but by_name has no arm for it"),
+            });
+        }
+        if !all_names.contains(name) {
+            out.push(Violation {
+                rule: "registry-table7-drift",
+                path: reg.path.clone(),
+                line,
+                msg: format!("registry const lists {name} but all_names omits it"),
+            });
+        }
+    }
+    for name in &dnn_designs {
+        if !designs_8x8.contains(name) {
+            out.push(Violation {
+                rule: "registry-table7-drift",
+                path: reg.path.clone(),
+                line: dnn_line,
+                msg: format!("DNN design {name} missing from DESIGNS_8X8"),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Tree walking
+// ---------------------------------------------------------------------
+
+/// Lint every `.rs` file under `<root>/rust/src`, paths root-relative
+/// with `/` separators, sorted for deterministic output.
+pub fn lint_root(root: &Path) -> std::io::Result<Vec<Violation>> {
+    let src = root.join("rust").join("src");
+    let mut paths = Vec::new();
+    collect_rs(&src, &mut paths)?;
+    paths.sort();
+    let mut files = Vec::with_capacity(paths.len());
+    for p in paths {
+        let text = std::fs::read_to_string(&p)?;
+        let rel = p
+            .strip_prefix(root)
+            .unwrap_or(&p)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        files.push(SourceFile { path: rel, text });
+    }
+    Ok(lint_files(&files))
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    /// Fixtures are arrays of single-line literals: a multi-line string
+    /// literal would leak its continuation lines into THIS file's own
+    /// stripped view when the repo lints itself (see module docs).
+    fn file(path: &str, lines: &[&str]) -> SourceFile {
+        SourceFile::new(path, &lines.join("\n"))
+    }
+
+    fn rules_hit(violations: &[Violation]) -> Vec<&'static str> {
+        violations.iter().map(|v| v.rule).collect()
+    }
+
+    #[test]
+    fn clean_fixture_set_passes() {
+        let files = vec![
+            file(
+                "rust/src/dnn/gemm.rs",
+                &[
+                    "#![forbid(unsafe_code)]",
+                    "pub fn lut_gemm(a: &[u8], out: &mut [f32]) {",
+                    "    for v in out.iter_mut() { *v = a[0] as f32; }",
+                    "}",
+                    "fn row_sums(m: usize) -> Vec<f32> { vec![0.0; m] }",
+                ],
+            ),
+            file(
+                "rust/src/util/threadpool.rs",
+                &[
+                    "use crate::util::sync::{plock, Mutex};",
+                    "// SAFETY: the borrow cannot outlive this frame.",
+                    "let f = unsafe { erase_lifetime(f) };",
+                    "fn take(&self) { plock(&self.0).take(); }",
+                ],
+            ),
+            file(
+                "rust/src/util/sync.rs",
+                &[
+                    "pub use std::sync::{Condvar, Mutex, MutexGuard};",
+                    "pub fn plock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {",
+                    "    m.lock().unwrap_or_else(|p| p.into_inner())",
+                    "}",
+                ],
+            ),
+        ];
+        assert_eq!(lint_files(&files), vec![]);
+    }
+
+    #[test]
+    fn missing_forbid_attribute_is_flagged() {
+        let files = vec![file(
+            "rust/src/dnn/gemm.rs",
+            &["pub fn lut_gemm() {", "}"],
+        )];
+        let v = lint_files(&files);
+        assert_eq!(rules_hit(&v), vec!["forbid-unsafe-kernels"]);
+        assert_eq!(v[0].line, 1);
+    }
+
+    #[test]
+    fn unsafe_token_under_dnn_is_flagged() {
+        let files = vec![file(
+            "rust/src/dnn/simd.rs",
+            &[
+                "#![forbid(unsafe_code)]",
+                "// SAFETY: not actually sound, the attribute above catches it too",
+                "fn sneak() { unsafe { core::hint::unreachable_unchecked() } }",
+            ],
+        )];
+        let v = lint_files(&files);
+        // The dnn-wide token ban fires even though a SAFETY comment would
+        // satisfy the weaker safety-comment rule.
+        assert_eq!(rules_hit(&v), vec!["forbid-unsafe-kernels"]);
+        assert_eq!(v[0].line, 3);
+    }
+
+    #[test]
+    fn unsafe_without_safety_comment_is_flagged() {
+        let files = vec![file(
+            "rust/src/util/threadpool.rs",
+            &["fn erase() {", "    unsafe { transmute(x) }", "}"],
+        )];
+        let v = lint_files(&files);
+        assert_eq!(rules_hit(&v), vec!["safety-comment"]);
+        assert_eq!(v[0].line, 2);
+    }
+
+    #[test]
+    fn safety_comment_within_window_satisfies() {
+        let files = vec![file(
+            "rust/src/util/threadpool.rs",
+            &[
+                "// SAFETY: contract documented at the call site.",
+                "fn erase() {",
+                "    unsafe { transmute(x) }",
+                "}",
+            ],
+        )];
+        assert_eq!(lint_files(&files), vec![]);
+    }
+
+    #[test]
+    fn forbid_attribute_is_not_an_unsafe_token() {
+        // `unsafe_code` must not match the word `unsafe`: underscore is
+        // an identifier character.
+        let files = vec![file(
+            "rust/src/metrics/lut.rs",
+            &["#![forbid(unsafe_code)]", "fn ok() {}"],
+        )];
+        assert_eq!(lint_files(&files), vec![]);
+    }
+
+    #[test]
+    fn std_sync_outside_shim_is_flagged() {
+        let files = vec![file(
+            "rust/src/engine/lut_cache.rs",
+            &["use std::sync::Mutex;", "fn f() {}"],
+        )];
+        let v = lint_files(&files);
+        assert_eq!(rules_hit(&v), vec!["std-sync-outside-shim"]);
+        assert_eq!(v[0].line, 1);
+    }
+
+    #[test]
+    fn std_sync_allow_marker_and_strings_are_exempt() {
+        let files = vec![file(
+            "rust/src/dnn/simd.rs",
+            &[
+                "#![forbid(unsafe_code)]",
+                "use std::sync::atomic::AtomicU64; // lint:allow(std_sync): const-init static",
+                "const MSG: &str = \"std::sync is quoted, not imported\";",
+                "// a std::sync mention in a comment is stripped before matching",
+            ],
+        )];
+        assert_eq!(lint_files(&files), vec![]);
+    }
+
+    #[test]
+    fn clock_read_in_kernel_fn_is_flagged() {
+        let files = vec![file(
+            "rust/src/dnn/gemm.rs",
+            &[
+                "#![forbid(unsafe_code)]",
+                "pub fn lut_gemm_packed(a: &[u8]) {",
+                "    let t0 = Instant::now();",
+                "    let copy = a.to_vec();",
+                "}",
+            ],
+        )];
+        let v = lint_files(&files);
+        assert_eq!(rules_hit(&v), vec!["kernel-hot-loop", "kernel-hot-loop"]);
+        assert_eq!((v[0].line, v[1].line), (3, 4), "one per banned token");
+        assert!(v[0].msg.contains("lut_gemm_packed"));
+    }
+
+    #[test]
+    fn allocation_outside_kernel_fns_is_fine() {
+        // row_sums and pack helpers allocate by design; only the
+        // kernel-named fns are scoped.
+        let files = vec![file(
+            "rust/src/dnn/gemm.rs",
+            &[
+                "#![forbid(unsafe_code)]",
+                "fn row_sums(m: usize) -> Vec<f32> { vec![0.0; m] }",
+                "pub fn pack(w: &[u8]) -> Vec<u8> { w.iter().copied().collect() }",
+                "pub fn gather_row_tiles(lut: &[f32], out: &mut [f32]) {",
+                "    let acc: [f32; 16] = std::array::from_fn(|_| 0.0);",
+                "    out[0] = acc[0] + lut[0];",
+                "}",
+            ],
+        )];
+        assert_eq!(lint_files(&files), vec![]);
+    }
+
+    #[test]
+    fn kernel_named_test_fns_are_exempt() {
+        // Test fns named after the kernels they exercise allocate by
+        // design; the rule stops at the test-module boundary.
+        let files = vec![file(
+            "rust/src/dnn/gemm.rs",
+            &[
+                "#![forbid(unsafe_code)]",
+                "pub fn lut_gemm(a: &[u8], out: &mut [f32]) {",
+                "    out[0] = a[0] as f32;",
+                "}",
+                "mod tests {",
+                "    fn lut_gemm_exact_case() { let v: Vec<u8> = (0..9).collect(); drop(v); }",
+                "}",
+            ],
+        )];
+        assert_eq!(lint_files(&files), vec![]);
+    }
+
+    #[test]
+    fn lock_unwrap_is_flagged() {
+        let files = vec![file(
+            "rust/src/coordinator/server.rs",
+            &["fn depth(&self) -> usize {", "    self.state.lock().unwrap().len()", "}"],
+        )];
+        let v = lint_files(&files);
+        assert_eq!(rules_hit(&v), vec!["lock-unwrap"]);
+        assert_eq!(v[0].line, 2);
+    }
+
+    #[test]
+    fn rwlock_unwrap_is_flagged() {
+        let files = vec![file(
+            "rust/src/engine/session.rs",
+            &["fn keys(&self) { self.sessions.read().unwrap(); }"],
+        )];
+        assert_eq!(rules_hit(&lint_files(&files)), vec!["lock-unwrap"]);
+    }
+
+    fn registry_fixture(with_etm_arm: bool) -> SourceFile {
+        let mut lines = vec![
+            "pub const DESIGNS_8X8: [&str; 2] = [",
+            "    \"exact8x8\",",
+            "    \"etm\",",
+            "];",
+            "pub const DNN_DESIGNS: [&str; 1] = [",
+            "    \"exact8x8\",",
+            "];",
+            "pub fn by_name(name: &str) -> Option<()> {",
+            "    Some(match name {",
+            "        \"exact8x8\" => (),",
+        ];
+        if with_etm_arm {
+            lines.push("        \"etm\" => (),");
+        }
+        lines.extend([
+            "        _ => return None,",
+            "    })",
+            "}",
+            "pub fn all_names() -> Vec<&'static str> {",
+            "    vec![",
+            "        \"exact8x8\",",
+            "        \"etm\",",
+            "    ]",
+            "}",
+        ]);
+        file("rust/src/mult/registry.rs", &lines)
+    }
+
+    fn experiments_fixture(table7_name: &str) -> SourceFile {
+        let decl = "    pub const TABLE7: [(&str, f64); 1] = [";
+        let row = format!("        (\"{table7_name}\", 744.59),");
+        let lines = vec!["pub mod paper {", decl, row.as_str(), "    ];", "}"];
+        file("rust/src/coordinator/experiments.rs", &lines)
+    }
+
+    #[test]
+    fn consistent_registry_passes_drift_rule() {
+        let files = vec![registry_fixture(true), experiments_fixture("exact8x8")];
+        assert_eq!(lint_files(&files), vec![]);
+    }
+
+    #[test]
+    fn table7_name_outside_registry_is_flagged() {
+        let files = vec![registry_fixture(true), experiments_fixture("mul9x9_1")];
+        let v = lint_files(&files);
+        assert_eq!(rules_hit(&v), vec!["registry-table7-drift"]);
+        assert!(v[0].msg.contains("mul9x9_1"), "{}", v[0].msg);
+    }
+
+    #[test]
+    fn const_without_by_name_arm_is_flagged() {
+        let files = vec![registry_fixture(false), experiments_fixture("exact8x8")];
+        let v = lint_files(&files);
+        assert_eq!(rules_hit(&v), vec!["registry-table7-drift"]);
+        assert!(v[0].msg.contains("etm"), "{}", v[0].msg);
+    }
+
+    #[test]
+    fn drift_rule_skips_partial_fixture_sets() {
+        let files = vec![registry_fixture(true)];
+        assert_eq!(lint_files(&files), vec![]);
+    }
+
+    #[test]
+    fn stripper_handles_chars_escapes_and_block_comments() {
+        let text = [
+            "let q = '\"'; let s = \"unsafe in a string\";",
+            "/* unsafe in a block",
+            "   still the same block */ let ok = 1;",
+            "let esc = \"escaped \\\" quote then unsafe\";",
+        ]
+        .join("\n");
+        let stripped = strip_lines(&text);
+        assert!(!stripped.iter().any(|l| has_word(l, "unsafe")));
+        assert!(stripped[2].contains("let ok = 1;"));
+    }
+
+    #[test]
+    fn the_repo_tree_is_lint_clean() {
+        // The acceptance gate: axmul lint runs clean on its own tree.
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let violations = lint_root(root).expect("walk rust/src");
+        assert!(
+            violations.is_empty(),
+            "lint violations in tree:\n{}",
+            violations
+                .iter()
+                .map(|v| v.to_string())
+                .collect::<Vec<_>>()
+                .join("\n")
+        );
+    }
+
+    #[test]
+    fn every_rule_has_a_listing() {
+        assert_eq!(RULES.len(), 6);
+        let v = Violation {
+            rule: "lock-unwrap",
+            path: "rust/src/x.rs".into(),
+            line: 3,
+            msg: "m".into(),
+        };
+        assert_eq!(v.to_string(), "rust/src/x.rs:3: [lock-unwrap] m");
+    }
+}

@@ -1,0 +1,27 @@
+//! Correctness tooling: the static-analysis and model-checking wall.
+//!
+//! Three dependency-free pieces (the container registry only carries
+//! `anyhow`/`xla`, so everything here is hand-rolled):
+//!
+//! * [`sched`] — a schedule-enumerating model checker: exhaustive DFS
+//!   over every interleaving of small cloneable thread models, the
+//!   in-repo fallback for the `loom` CI job (loom itself is not in the
+//!   vendored registry; the CI job fetches it, this works offline).
+//! * [`models`] — the concurrency protocols under check, expressed as
+//!   [`sched::Model`]s over the *real* production state machines where
+//!   they are pure (`LaneState`), and as sequentially-consistent
+//!   transliterations where they are not (the pool's job protocol, the
+//!   histogram's counter pairing).  Run via `axmul modelcheck` and in
+//!   tier-1 `cargo test`.
+//! * [`lint`] — the invariant linter behind `axmul lint`: source-level
+//!   rules (`forbid(unsafe_code)` in kernels, `SAFETY:` comments,
+//!   sync-shim discipline, allocation-free gather loops, poison-tolerant
+//!   locking, registry/Table VII drift) enforced by tier-1 CI.
+
+pub mod lint;
+pub mod models;
+pub mod sched;
+
+pub use lint::{lint_files, lint_root, Rule, SourceFile, Violation, RULES};
+pub use models::run_all;
+pub use sched::{explore, Explored, Model, ModelError};

@@ -1,0 +1,552 @@
+//! The concurrency protocols under model check, as [`Model`]s for the
+//! in-repo schedule enumerator.
+//!
+//! Three protocols, mirroring the three `loom_` test groups:
+//!
+//! * [`LaneModel`] — drives the **real** production state machine
+//!   ([`LaneState`] from `coordinator::server`) through every
+//!   interleaving of producers, parking workers and a close/abandon
+//!   step.  Because `LaneState` is pure, nothing is transliterated: a
+//!   bug in `admit`/`take`/`close` ordering fails here directly.
+//! * [`PoolModel`] — a sequentially-consistent transliteration of the
+//!   thread pool's `Job` claim/execute/countdown/wake protocol
+//!   (`util::threadpool`).  SC is the one gap versus production code
+//!   (which uses `AcqRel` on the countdown): this model proves the
+//!   *protocol logic* — exactly-once execution, no lost wakeup of the
+//!   submitter — while the loom CI job covers the weak-memory layer.
+//! * [`HistModel`] — the histogram's record-vs-read counter pairing
+//!   (`metrics::histogram`): `record_ns` bumps the bucket before the
+//!   count, so a reader loading count first can never observe more
+//!   counted samples than bucketed ones.
+//!
+//! [`run_all`] executes every configuration; it backs the
+//! `axmul modelcheck` subcommand and the tier-1 tests below.
+
+use crate::analysis::sched::{explore, Explored, Model, ModelError};
+use crate::coordinator::server::{Admit, LaneState, Take};
+
+// ---------------------------------------------------------------------
+// Lane queue
+// ---------------------------------------------------------------------
+
+/// Where one modeled lane worker is in its serve loop.
+#[derive(Clone, Debug, PartialEq, Eq)]
+enum WorkerAt {
+    /// Will call `take()` when next scheduled.
+    Running,
+    /// `take()` returned `Park`: waiting on the condvar, runnable again
+    /// only once the version moves (= somebody notified).
+    Parked { at: u64 },
+    /// `take()` returned `Stop`: worker exited.
+    Stopped,
+}
+
+/// Producers admit one request each, workers loop `take()`, one closer
+/// thread closes the lane (drain or abandon).  The condvar is modeled by
+/// version gating (see `sched` module docs): the version bumps exactly
+/// where production notifies — on a successful admit (`notify_one`) and
+/// on close (`notify_all`).
+#[derive(Clone)]
+pub struct LaneModel {
+    lane: LaneState<u32>,
+    /// Notify epoch for park/wake gating.
+    version: u64,
+    /// One pending admission per producer; `None` once attempted.
+    producers: Vec<Option<u32>>,
+    workers: Vec<WorkerAt>,
+    /// Values whose `admit` returned `Queued`, in admission order.
+    admitted: Vec<u32>,
+    /// Admissions refused (`Full` or `Closed`).
+    rejected: usize,
+    /// Values returned by `take()`, across all workers.
+    served: Vec<u32>,
+    drain: bool,
+    closed: bool,
+}
+
+impl LaneModel {
+    /// `cap`-bounded lane, one producer per value in `submissions`,
+    /// `workers` serve loops, and a final `close(drain)`.
+    pub fn new(cap: usize, submissions: &[u32], workers: usize, drain: bool) -> LaneModel {
+        LaneModel {
+            lane: LaneState::new(cap),
+            version: 0,
+            producers: submissions.iter().copied().map(Some).collect(),
+            workers: vec![WorkerAt::Running; workers],
+            admitted: Vec::new(),
+            rejected: 0,
+            served: Vec::new(),
+            drain,
+            closed: false,
+        }
+    }
+
+    fn n_producers(&self) -> usize {
+        self.producers.len()
+    }
+}
+
+impl Model for LaneModel {
+    fn threads(&self) -> usize {
+        // producers, then workers, then the closer
+        self.producers.len() + self.workers.len() + 1
+    }
+
+    fn enabled(&self, t: usize) -> bool {
+        let p = self.n_producers();
+        if t < p {
+            self.producers[t].is_some()
+        } else if t < p + self.workers.len() {
+            match self.workers[t - p] {
+                WorkerAt::Running => true,
+                WorkerAt::Parked { at } => at != self.version,
+                WorkerAt::Stopped => false,
+            }
+        } else {
+            !self.closed
+        }
+    }
+
+    fn done(&self, t: usize) -> bool {
+        let p = self.n_producers();
+        if t < p {
+            self.producers[t].is_none()
+        } else if t < p + self.workers.len() {
+            self.workers[t - p] == WorkerAt::Stopped
+        } else {
+            self.closed
+        }
+    }
+
+    fn step(&mut self, t: usize) {
+        let p = self.n_producers();
+        if t < p {
+            let v = self.producers[t].take().expect("stepped a done producer");
+            match self.lane.admit(v) {
+                Admit::Queued { .. } => {
+                    self.admitted.push(v);
+                    self.version += 1; // notify_one
+                }
+                Admit::Full { .. } | Admit::Closed => self.rejected += 1,
+            }
+        } else if t < p + self.workers.len() {
+            self.workers[t - p] = match self.lane.take() {
+                Take::Got(v) => {
+                    self.served.push(v);
+                    WorkerAt::Running
+                }
+                Take::Park => WorkerAt::Parked { at: self.version },
+                Take::Stop => WorkerAt::Stopped,
+            };
+        } else {
+            self.lane.close(self.drain);
+            self.version += 1; // notify_all
+            self.closed = true;
+        }
+    }
+
+    fn invariant(&self) -> Result<(), String> {
+        if self.lane.depth() > self.lane.cap() {
+            return Err(format!(
+                "depth {} exceeds cap {}",
+                self.lane.depth(),
+                self.lane.cap()
+            ));
+        }
+        for (i, v) in self.served.iter().enumerate() {
+            if self.served[..i].contains(v) {
+                return Err(format!("request {v} served twice"));
+            }
+            if !self.admitted.contains(v) {
+                return Err(format!("served {v} was never admitted"));
+            }
+        }
+        Ok(())
+    }
+
+    fn finale(&self) -> Result<(), String> {
+        // Conservation: every admitted request is either served or (in
+        // abandon mode) still in the dropped backlog — never both,
+        // never lost.
+        let mut accounted = self.served.clone();
+        accounted.extend(self.lane.backlog());
+        accounted.sort_unstable();
+        let mut admitted = self.admitted.clone();
+        admitted.sort_unstable();
+        if accounted != admitted {
+            return Err(format!(
+                "served+backlog {accounted:?} != admitted {admitted:?}"
+            ));
+        }
+        if self.drain && !self.lane.is_empty() {
+            return Err(format!(
+                "drain close left {} requests unserved",
+                self.lane.depth()
+            ));
+        }
+        if self.admitted.len() + self.rejected != self.n_producers() {
+            return Err("an admission vanished without an outcome".into());
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Thread-pool job
+// ---------------------------------------------------------------------
+
+/// Where one modeled pool participant is in the claim/execute loop of
+/// `util::threadpool::Job` (`help_drain` + `wait_done`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+enum PoolAt {
+    /// Will execute `i = next++` when next scheduled.
+    Claim,
+    /// Claimed index `i`; will execute the task body.
+    Run(usize),
+    /// Ran `i`; will decrement `pending` (and set `done` if last).
+    Complete(usize),
+    /// Submitter only: will check the `done` flag.
+    Wait,
+    /// Submitter parked on the done condvar.
+    Parked { at: u64 },
+    Done,
+}
+
+/// Sequentially-consistent transliteration of the pool's job protocol:
+/// every participant (submitter last) loops claim → run → complete;
+/// exhausted claimers exit — except the submitter, which enters the
+/// done-wait and may park.  The `complete` step that takes `pending` to
+/// zero sets the flag and bumps the version (= `notify_all` under the
+/// done mutex); the parked submitter is version-gated on it.
+#[derive(Clone)]
+pub struct PoolModel {
+    total: usize,
+    next: usize,
+    pending: usize,
+    done_flag: bool,
+    version: u64,
+    executed: Vec<u8>,
+    /// Helpers first, submitter last (index `threads.len() - 1`).
+    threads: Vec<PoolAt>,
+}
+
+impl PoolModel {
+    /// A job of `total` indices drained by `helpers` pool workers plus
+    /// the submitting thread.
+    pub fn new(total: usize, helpers: usize) -> PoolModel {
+        PoolModel {
+            total,
+            next: 0,
+            pending: total,
+            done_flag: false,
+            version: 0,
+            executed: vec![0; total],
+            threads: vec![PoolAt::Claim; helpers + 1],
+        }
+    }
+
+    fn is_submitter(&self, t: usize) -> bool {
+        t == self.threads.len() - 1
+    }
+}
+
+impl Model for PoolModel {
+    fn threads(&self) -> usize {
+        self.threads.len()
+    }
+
+    fn enabled(&self, t: usize) -> bool {
+        match self.threads[t] {
+            PoolAt::Done => false,
+            PoolAt::Parked { at } => at != self.version,
+            _ => true,
+        }
+    }
+
+    fn done(&self, t: usize) -> bool {
+        self.threads[t] == PoolAt::Done
+    }
+
+    fn step(&mut self, t: usize) {
+        self.threads[t] = match self.threads[t] {
+            PoolAt::Claim => {
+                let i = self.next;
+                self.next += 1;
+                if i >= self.total {
+                    if self.is_submitter(t) {
+                        PoolAt::Wait
+                    } else {
+                        PoolAt::Done
+                    }
+                } else {
+                    PoolAt::Run(i)
+                }
+            }
+            PoolAt::Run(i) => {
+                self.executed[i] += 1;
+                PoolAt::Complete(i)
+            }
+            PoolAt::Complete(_) => {
+                self.pending -= 1;
+                if self.pending == 0 {
+                    self.done_flag = true;
+                    self.version += 1; // notify_all under the done mutex
+                }
+                PoolAt::Claim
+            }
+            // Wait and Parked both re-run the done check — exactly the
+            // condvar re-check loop in `Job::wait_done`.
+            PoolAt::Wait | PoolAt::Parked { .. } => {
+                if self.done_flag {
+                    PoolAt::Done
+                } else {
+                    PoolAt::Parked { at: self.version }
+                }
+            }
+            PoolAt::Done => unreachable!("stepped a done thread"),
+        };
+    }
+
+    fn invariant(&self) -> Result<(), String> {
+        for (i, &n) in self.executed.iter().enumerate() {
+            if n > 1 {
+                return Err(format!("index {i} executed {n} times"));
+            }
+        }
+        let submitter = self.threads.len() - 1;
+        if self.threads[submitter] == PoolAt::Done
+            && (self.pending != 0 || self.executed.iter().any(|&n| n != 1))
+        {
+            return Err("submitter unblocked before the job finished".into());
+        }
+        Ok(())
+    }
+
+    fn finale(&self) -> Result<(), String> {
+        if self.executed.iter().any(|&n| n != 1) {
+            return Err(format!("execution counts {:?} != all-ones", self.executed));
+        }
+        if !self.done_flag {
+            return Err("job never signalled done".into());
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Histogram record-vs-read
+// ---------------------------------------------------------------------
+
+/// The histogram's two-counter pairing: recorders bump the bucket then
+/// the count (two separate steps, as in `record_ns`); a reader loads the
+/// count then the bucket sum (the order `snapshot`/`bucket_total`
+/// callers use).  Under that order `captured_sum >= captured_count` in
+/// every interleaving; [`HistModel::with_buggy_order`] flips the
+/// recorder and the enumerator must find the violating schedule.
+#[derive(Clone)]
+pub struct HistModel {
+    bucket_sum: u32,
+    count: u32,
+    /// Per-recorder pc: 0 = before first bump, 1 = between, 2 = done.
+    recorders: Vec<u8>,
+    /// Reader pc: 0 = before count load, 1 = between, 2 = done.
+    reader: u8,
+    captured_count: u32,
+    captured_sum: u32,
+    /// Recorder bumps count before bucket (the bug under test).
+    buggy: bool,
+}
+
+impl HistModel {
+    pub fn new(recorders: usize) -> HistModel {
+        HistModel {
+            bucket_sum: 0,
+            count: 0,
+            recorders: vec![0; recorders],
+            reader: 0,
+            captured_count: 0,
+            captured_sum: 0,
+            buggy: false,
+        }
+    }
+
+    /// Same system with the recorder's two bumps swapped — the ordering
+    /// bug the real `record_ns` is written to avoid.
+    pub fn with_buggy_order(recorders: usize) -> HistModel {
+        HistModel {
+            buggy: true,
+            ..HistModel::new(recorders)
+        }
+    }
+}
+
+impl Model for HistModel {
+    fn threads(&self) -> usize {
+        self.recorders.len() + 1 // reader last
+    }
+
+    fn enabled(&self, t: usize) -> bool {
+        !self.done(t)
+    }
+
+    fn done(&self, t: usize) -> bool {
+        if t < self.recorders.len() {
+            self.recorders[t] == 2
+        } else {
+            self.reader == 2
+        }
+    }
+
+    fn step(&mut self, t: usize) {
+        if t < self.recorders.len() {
+            let first = self.recorders[t] == 0;
+            // correct order: bucket first; buggy order: count first
+            if first != self.buggy {
+                self.bucket_sum += 1;
+            } else {
+                self.count += 1;
+            }
+            self.recorders[t] += 1;
+        } else if self.reader == 0 {
+            self.captured_count = self.count;
+            self.reader = 1;
+        } else {
+            self.captured_sum = self.bucket_sum;
+            self.reader = 2;
+        }
+    }
+
+    fn invariant(&self) -> Result<(), String> {
+        if self.reader == 2 && self.captured_sum < self.captured_count {
+            return Err(format!(
+                "reader saw count {} but only {} bucketed samples",
+                self.captured_count, self.captured_sum
+            ));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// The full wall
+// ---------------------------------------------------------------------
+
+/// Run every model configuration; backs `axmul modelcheck` and the
+/// tier-1 test below.  Names are stable (the CLI prints them).
+pub fn run_all() -> Vec<(&'static str, Result<Explored, ModelError>)> {
+    vec![
+        (
+            "lane: cap=1, 2 producers, 1 worker, drain close",
+            explore(&LaneModel::new(1, &[10, 20], 1, true), 64),
+        ),
+        (
+            "lane: cap=2, 1 producer, 2 workers, abandon close",
+            explore(&LaneModel::new(2, &[10], 2, false), 64),
+        ),
+        (
+            "lane: cap=1, 3 producers (overflow), 1 worker, drain close",
+            explore(&LaneModel::new(1, &[10, 20, 30], 1, true), 64),
+        ),
+        (
+            "pool: total=2 job, submitter + 2 helpers",
+            explore(&PoolModel::new(2, 2), 64),
+        ),
+        (
+            "histogram: 2 recorders vs count-then-buckets reader",
+            explore(&HistModel::new(2), 64),
+        ),
+    ]
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn the_wall_holds_every_interleaving() {
+        for (name, result) in run_all() {
+            let stats = result.unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(stats.schedules > 0, "{name}: explored nothing");
+        }
+    }
+
+    #[test]
+    fn pool_model_state_space_is_nontrivial() {
+        let stats = explore(&PoolModel::new(2, 2), 64).unwrap();
+        assert!(
+            stats.schedules > 100,
+            "3 threads over a 2-index job must branch heavily, got {}",
+            stats.schedules
+        );
+        assert!(stats.deepest >= 9, "deepest = {}", stats.deepest);
+    }
+
+    #[test]
+    fn lane_overflow_config_exercises_full() {
+        // cap 1 with 3 producers and a worker: at least one schedule
+        // rejects (all three producers before any take), at least one
+        // serves all three (alternating).  The finale's conservation
+        // check already proves per-schedule consistency; here we pin
+        // that the config genuinely reaches both regimes by checking
+        // two hand-picked schedules.
+        let mut all_first = LaneModel::new(1, &[10, 20, 30], 1, true);
+        for t in [0, 1, 2] {
+            all_first.step(t); // second and third bounce off cap=1
+        }
+        assert_eq!(all_first.admitted, vec![10]);
+        assert_eq!(all_first.rejected, 2);
+
+        let mut alternating = LaneModel::new(1, &[10, 20, 30], 1, true);
+        for t in [0, 3, 1, 3, 2, 3] {
+            alternating.step(t);
+        }
+        assert_eq!(alternating.served, vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn buggy_histogram_order_is_caught() {
+        let err = explore(&HistModel::with_buggy_order(1), 64).unwrap_err();
+        match err {
+            ModelError::Invariant { msg, .. } => {
+                assert!(msg.contains("bucketed"), "{msg}")
+            }
+            other => panic!("expected invariant violation, got {other}"),
+        }
+    }
+
+    #[test]
+    fn lost_signal_pool_variant_is_caught() {
+        // Sanity-check the pool model can fail: a submitter that parks
+        // without version gating would deadlock.  Simulate by stripping
+        // the version bump (a hand-broken clone of the step function is
+        // overkill; instead park the submitter at a future version so it
+        // never wakes).
+        #[derive(Clone)]
+        struct NoWake(PoolModel);
+        impl Model for NoWake {
+            fn threads(&self) -> usize {
+                self.0.threads()
+            }
+            fn enabled(&self, t: usize) -> bool {
+                // Break the gate: a parked submitter is never re-enabled.
+                !matches!(self.0.threads[t], PoolAt::Parked { .. }) && self.0.enabled(t)
+            }
+            fn done(&self, t: usize) -> bool {
+                self.0.done(t)
+            }
+            fn step(&mut self, t: usize) {
+                self.0.step(t)
+            }
+            fn invariant(&self) -> Result<(), String> {
+                self.0.invariant()
+            }
+            fn finale(&self) -> Result<(), String> {
+                self.0.finale()
+            }
+        }
+        match explore(&NoWake(PoolModel::new(2, 2)), 64).unwrap_err() {
+            ModelError::Deadlock { schedule } => assert!(!schedule.is_empty()),
+            other => panic!("expected deadlock from the lost wakeup, got {other}"),
+        }
+    }
+}

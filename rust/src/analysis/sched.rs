@@ -1,0 +1,336 @@
+//! Exhaustive schedule enumeration over small concurrent models — the
+//! in-repo fallback for loom.
+//!
+//! The vendored registry has no `loom`, so offline builds cannot run the
+//! real model checker (CI fetches it for the dedicated loom job).  What
+//! we *can* do hermetically is enumerate every interleaving of a small
+//! sequentially-consistent model: a handful of threads, each advancing
+//! through atomic steps over shared state.  [`explore`] walks the full
+//! schedule tree by DFS — at every point it forks one branch per
+//! runnable thread — checking a user invariant after each step, a
+//! deadlock condition whenever no thread can run, and a finale condition
+//! at the end of every complete schedule.
+//!
+//! This checks strictly less than loom (no weak memory orderings: steps
+//! are sequentially consistent by construction) but strictly more than
+//! a unit test (every interleaving, not one).  The pool-job and lane
+//! models in [`crate::analysis::models`] document this split explicitly:
+//! the enumerator proves the *protocol logic* under SC; the loom CI job
+//! proves the memory-ordering layer.
+//!
+//! ## Modeling parked threads
+//!
+//! Condvars are modeled by **version gating**: the shared state carries
+//! a version counter that mutating steps bump exactly where production
+//! calls `notify_*`.  A thread that would park records the version it
+//! parked at and reports itself not [`Model::enabled`] until the version
+//! moves.  This is sound for detection (a parked production thread can
+//! only resume after a notify, i.e. after the version moved — spurious
+//! wakeups only *add* schedules in which the re-check loop runs again
+//! and re-parks, reaching no new states) and it keeps the DFS finite:
+//! without gating, a park/re-check self-loop enumerates forever.
+
+use std::error::Error;
+use std::fmt;
+
+/// A small concurrent system under exhaustive scheduling.  Cloned at
+/// every DFS branch, so keep the state a few machine words.
+pub trait Model: Clone {
+    /// Number of threads, indexed `0..threads()`.
+    fn threads(&self) -> usize;
+
+    /// Whether thread `t` could make progress if scheduled now.  A
+    /// thread that is done must report `false`; a *parked* thread
+    /// reports `false` until the state it parked on changes (version
+    /// gating — see module docs).
+    fn enabled(&self, t: usize) -> bool;
+
+    /// Whether thread `t` has finished its program.
+    fn done(&self, t: usize) -> bool;
+
+    /// Advance thread `t` by one atomic step.  Only called when
+    /// `enabled(t)`.
+    fn step(&mut self, t: usize);
+
+    /// Safety invariant, checked after every step of every schedule.
+    fn invariant(&self) -> Result<(), String>;
+
+    /// Liveness/correctness condition checked when every thread is
+    /// done (once per complete schedule).
+    fn finale(&self) -> Result<(), String> {
+        Ok(())
+    }
+}
+
+/// Statistics from a successful exploration.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Explored {
+    /// Complete schedules enumerated (distinct total orderings; the DFS
+    /// does not deduplicate confluent states, so this is also a measure
+    /// of how hard the protocol was exercised).
+    pub schedules: u64,
+    /// Total steps executed across all schedules.
+    pub steps: u64,
+    /// Longest schedule, in steps.
+    pub deepest: usize,
+}
+
+/// A schedule that broke the model.  `schedule` is the thread-index
+/// trace that reproduces it — replay it through `step` to debug.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ModelError {
+    /// `invariant()` failed mid-schedule.
+    Invariant { schedule: Vec<usize>, msg: String },
+    /// `finale()` failed at the end of a complete schedule.
+    Finale { schedule: Vec<usize>, msg: String },
+    /// Threads remain but none is enabled: lost wakeup or mutual wait.
+    Deadlock { schedule: Vec<usize> },
+    /// A schedule exceeded `max_steps` — a livelock, or a model whose
+    /// version gating is missing (see module docs).
+    StepBound { schedule: Vec<usize>, bound: usize },
+}
+
+impl fmt::Display for ModelError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ModelError::Invariant { schedule, msg } => {
+                write!(f, "invariant violated after schedule {schedule:?}: {msg}")
+            }
+            ModelError::Finale { schedule, msg } => {
+                write!(f, "finale check failed for schedule {schedule:?}: {msg}")
+            }
+            ModelError::Deadlock { schedule } => {
+                write!(f, "deadlock (no enabled thread) after schedule {schedule:?}")
+            }
+            ModelError::StepBound { schedule, bound } => {
+                write!(f, "schedule exceeded {bound} steps (livelock?): {schedule:?}")
+            }
+        }
+    }
+}
+
+impl Error for ModelError {}
+
+/// Exhaustively explore every schedule of `initial`, bounding each
+/// schedule at `max_steps` steps.  Returns statistics, or the first
+/// failing schedule found.
+pub fn explore<M: Model>(initial: &M, max_steps: usize) -> Result<Explored, ModelError> {
+    let mut stats = Explored {
+        schedules: 0,
+        steps: 0,
+        deepest: 0,
+    };
+    let mut trace = Vec::new();
+    dfs(initial, max_steps, &mut trace, &mut stats)?;
+    Ok(stats)
+}
+
+fn dfs<M: Model>(
+    state: &M,
+    max_steps: usize,
+    trace: &mut Vec<usize>,
+    stats: &mut Explored,
+) -> Result<(), ModelError> {
+    let n = state.threads();
+    let runnable: Vec<usize> = (0..n).filter(|&t| state.enabled(t)).collect();
+    if (0..n).all(|t| state.done(t)) {
+        stats.schedules += 1;
+        stats.deepest = stats.deepest.max(trace.len());
+        return state.finale().map_err(|msg| ModelError::Finale {
+            schedule: trace.clone(),
+            msg,
+        });
+    }
+    if runnable.is_empty() {
+        return Err(ModelError::Deadlock {
+            schedule: trace.clone(),
+        });
+    }
+    if trace.len() >= max_steps {
+        return Err(ModelError::StepBound {
+            schedule: trace.clone(),
+            bound: max_steps,
+        });
+    }
+    for t in runnable {
+        let mut next = state.clone();
+        next.step(t);
+        stats.steps += 1;
+        trace.push(t);
+        next.invariant().map_err(|msg| ModelError::Invariant {
+            schedule: trace.clone(),
+            msg,
+        })?;
+        dfs(&next, max_steps, trace, stats)?;
+        trace.pop();
+    }
+    Ok(())
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    /// Two threads each do load-then-store on a shared counter.  With
+    /// the two halves as separate steps this is the classic lost-update
+    /// race; fused into one step it is atomic.
+    #[derive(Clone)]
+    struct Counter {
+        shared: u32,
+        /// Per-thread: 0 = before load, 1 = loaded (holds the stale
+        /// value), 2 = done.  `None` in `loaded` means not yet loaded.
+        pc: [u8; 2],
+        loaded: [u32; 2],
+        atomic: bool,
+    }
+
+    impl Counter {
+        fn new(atomic: bool) -> Counter {
+            Counter {
+                shared: 0,
+                pc: [0; 2],
+                loaded: [0; 2],
+                atomic,
+            }
+        }
+    }
+
+    impl Model for Counter {
+        fn threads(&self) -> usize {
+            2
+        }
+        fn enabled(&self, t: usize) -> bool {
+            !self.done(t)
+        }
+        fn done(&self, t: usize) -> bool {
+            self.pc[t] == 2
+        }
+        fn step(&mut self, t: usize) {
+            if self.atomic {
+                self.shared += 1;
+                self.pc[t] = 2;
+            } else if self.pc[t] == 0 {
+                self.loaded[t] = self.shared;
+                self.pc[t] = 1;
+            } else {
+                self.shared = self.loaded[t] + 1;
+                self.pc[t] = 2;
+            }
+        }
+        fn invariant(&self) -> Result<(), String> {
+            Ok(())
+        }
+        fn finale(&self) -> Result<(), String> {
+            if self.shared == 2 {
+                Ok(())
+            } else {
+                Err(format!("lost update: counter = {}", self.shared))
+            }
+        }
+    }
+
+    #[test]
+    fn enumerator_finds_the_lost_update_race() {
+        let err = explore(&Counter::new(false), 16).unwrap_err();
+        match err {
+            ModelError::Finale { schedule, msg } => {
+                assert!(msg.contains("lost update"), "{msg}");
+                // The shortest losing schedule interleaves the loads.
+                assert!(schedule.len() == 4, "{schedule:?}");
+            }
+            other => panic!("expected a finale failure, got {other}"),
+        }
+    }
+
+    #[test]
+    fn enumerator_passes_the_atomic_model() {
+        let stats = explore(&Counter::new(true), 16).unwrap();
+        // Two single-step threads: exactly the two orders.
+        assert_eq!(stats.schedules, 2);
+        assert_eq!(stats.deepest, 2);
+        assert_eq!(stats.steps, 4, "branch at root: 2 first steps + 2 second");
+    }
+
+    /// Two threads each wait for the other to set its flag first —
+    /// mutual wait, no runnable thread after zero steps.
+    #[derive(Clone)]
+    struct MutualWait {
+        flags: [bool; 2],
+        pc: [u8; 2],
+    }
+
+    impl Model for MutualWait {
+        fn threads(&self) -> usize {
+            2
+        }
+        fn enabled(&self, t: usize) -> bool {
+            // Runnable only once the OTHER thread's flag is up.
+            self.pc[t] == 0 && self.flags[1 - t]
+        }
+        fn done(&self, t: usize) -> bool {
+            self.pc[t] == 1
+        }
+        fn step(&mut self, t: usize) {
+            self.flags[t] = true;
+            self.pc[t] = 1;
+        }
+        fn invariant(&self) -> Result<(), String> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn enumerator_detects_deadlock() {
+        let m = MutualWait {
+            flags: [false; 2],
+            pc: [0; 2],
+        };
+        match explore(&m, 16).unwrap_err() {
+            ModelError::Deadlock { schedule } => assert!(schedule.is_empty()),
+            other => panic!("expected deadlock, got {other}"),
+        }
+    }
+
+    /// A thread that never terminates must hit the step bound, not spin
+    /// the enumerator forever.
+    #[derive(Clone)]
+    struct Spinner;
+
+    impl Model for Spinner {
+        fn threads(&self) -> usize {
+            1
+        }
+        fn enabled(&self, _t: usize) -> bool {
+            true
+        }
+        fn done(&self, _t: usize) -> bool {
+            false
+        }
+        fn step(&mut self, _t: usize) {}
+        fn invariant(&self) -> Result<(), String> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn enumerator_bounds_livelock() {
+        match explore(&Spinner, 8).unwrap_err() {
+            ModelError::StepBound { bound, schedule } => {
+                assert_eq!(bound, 8);
+                assert_eq!(schedule.len(), 8);
+            }
+            other => panic!("expected step bound, got {other}"),
+        }
+    }
+
+    #[test]
+    fn errors_render_their_schedule() {
+        let e = ModelError::Invariant {
+            schedule: vec![0, 1, 0],
+            msg: "depth over cap".into(),
+        };
+        let s = e.to_string();
+        assert!(s.contains("[0, 1, 0]"), "{s}");
+        assert!(s.contains("depth over cap"), "{s}");
+    }
+}

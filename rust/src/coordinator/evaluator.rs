@@ -11,9 +11,9 @@
 use crate::data::Dataset;
 use crate::dnn::{FloatNet, QNet};
 use crate::engine::{DesignPlan, LutCache};
+use crate::util::sync::Arc;
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
-use std::sync::Arc;
 
 #[derive(Clone, Debug)]
 pub struct EvalReport {

@@ -12,8 +12,8 @@ use crate::mult::by_name;
 use crate::runtime::Engine;
 use crate::synth::{synthesize, Calibration};
 use crate::util::{fmt_improvement, Table};
+use crate::util::sync::Arc;
 use anyhow::{ensure, Context, Result};
-use std::sync::Arc;
 
 /// Paper reference values for side-by-side reporting.
 pub mod paper {

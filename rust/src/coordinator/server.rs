@@ -68,11 +68,12 @@ use crate::dnn::argmax;
 use crate::engine::{ModelHub, Session, SessionKey, Workspace};
 use crate::metrics::{Gauge, HistSnapshot, LatencyHistogram};
 use crate::util::json::Json;
+use crate::util::sync::{
+    mpsc, plock, pwait, pwait_timeout, thread, Arc, AtomicU64, Condvar, Mutex, Ordering,
+};
 use std::collections::{BTreeMap, VecDeque};
 use std::fmt;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 pub struct InferRequest {
@@ -214,7 +215,7 @@ pub fn effective_wait(policy: &BatchPolicy, observed_wait_ns: u64) -> Duration {
 /// Lock-free counters + histograms for one lane (or the global
 /// aggregate).  Everything is relaxed atomics: cheap on the request
 /// path, racy-consistent on read, never used for numerics.
-#[derive(Default, Debug)]
+#[derive(Debug)]
 pub struct ServerStats {
     pub served: AtomicU64,
     pub batches: AtomicU64,
@@ -239,6 +240,27 @@ pub struct ServerStats {
     /// steers on.  Updated by workers with a relaxed load/store — an
     /// occasionally lost update only delays the heuristic one sample.
     pub ewma_queue_wait_ns: AtomicU64,
+}
+
+// Manual impl: loom's atomics don't provide `Default`, and this struct
+// must compile identically whether the sync shim resolves to std or to
+// loom's instrumented doubles.
+impl Default for ServerStats {
+    fn default() -> Self {
+        ServerStats {
+            served: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batched_requests: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            worker_panics: AtomicU64::new(0),
+            worker_respawns: AtomicU64::new(0),
+            queue_wait: LatencyHistogram::new(),
+            e2e: LatencyHistogram::new(),
+            queue_depth: Gauge::new(),
+            ewma_queue_wait_ns: AtomicU64::new(0),
+        }
+    }
 }
 
 impl ServerStats {
@@ -399,22 +421,18 @@ impl fmt::Display for SubmitError {
 
 impl std::error::Error for SubmitError {}
 
-/// Bounded MPMC lane queue: a `Mutex<VecDeque>` + `Condvar`, so idle
-/// workers *park* (no poll loop) and shutdown/drain are first-class
-/// states instead of sender-drop side effects.
+/// The pure admit/shed/close/abandon state machine of one lane queue —
+/// no locks, no clocks, no channels, so the in-repo schedule enumerator
+/// (`analysis::sched`) can clone and exhaustively interleave the *real*
+/// production transition functions rather than a transliteration.
+/// [`LaneQueue`] is this state machine under a `Mutex` + `Condvar`.
 ///
-/// Locking is poison-tolerant on purpose: every critical section is a
-/// small push/pop that preserves the deque's invariants, and the whole
-/// point of lane supervision is that a panicking worker must not take
-/// the lane's queue down with it.
-struct LaneQueue {
-    state: Mutex<LaneQueueState>,
-    cv: Condvar,
+/// Generic over the request type: production instantiates
+/// `LaneState<InferRequest>`, the model checkers `LaneState<u32>`.
+#[derive(Clone, Debug)]
+pub(crate) struct LaneState<R> {
+    queue: VecDeque<R>,
     cap: usize,
-}
-
-struct LaneQueueState {
-    queue: VecDeque<InferRequest>,
     /// No new submissions (set by shutdown and drain alike).
     closed: bool,
     /// Shutdown without drain: workers stop popping; whatever is still
@@ -422,114 +440,204 @@ struct LaneQueueState {
     abandon: bool,
 }
 
+/// Outcome of [`LaneState::admit`].
+#[derive(Debug, PartialEq, Eq)]
+pub(crate) enum Admit {
+    /// Admitted; `depth` is the queue depth after the push.
+    Queued { depth: usize },
+    /// At capacity; nothing queued.
+    Full { depth: usize },
+    /// Lane no longer accepts work.
+    Closed,
+}
+
+/// Outcome of [`LaneState::take`].
+#[derive(Debug, PartialEq, Eq)]
+pub(crate) enum Take<R> {
+    /// A request to serve.
+    Got(R),
+    /// Nothing available but the lane is live: park on the condvar.
+    Park,
+    /// The worker should exit: closed and either drained empty or
+    /// abandoned.
+    Stop,
+}
+
+impl<R> LaneState<R> {
+    pub(crate) fn new(cap: usize) -> Self {
+        LaneState {
+            queue: VecDeque::new(),
+            cap: cap.max(1),
+            closed: false,
+            abandon: false,
+        }
+    }
+
+    /// Try to admit one request.
+    pub(crate) fn admit(&mut self, req: R) -> Admit {
+        if self.closed {
+            return Admit::Closed;
+        }
+        if self.queue.len() >= self.cap {
+            return Admit::Full {
+                depth: self.queue.len(),
+            };
+        }
+        self.queue.push_back(req);
+        Admit::Queued {
+            depth: self.queue.len(),
+        }
+    }
+
+    /// Try to take the next request.  Order matters and is part of the
+    /// contract: an abandoned lane stops *before* popping (the backlog
+    /// is dropped), a closed-but-draining lane keeps serving until
+    /// empty, and only a live empty lane parks.
+    pub(crate) fn take(&mut self) -> Take<R> {
+        if self.closed && self.abandon {
+            return Take::Stop;
+        }
+        if let Some(req) = self.queue.pop_front() {
+            return Take::Got(req);
+        }
+        if self.closed {
+            return Take::Stop; // drained
+        }
+        Take::Park
+    }
+
+    /// Stop the lane: no new submissions; `drain: true` lets workers
+    /// finish everything already admitted, `false` abandons the backlog.
+    pub(crate) fn close(&mut self, drain: bool) {
+        self.closed = true;
+        if !drain {
+            self.abandon = true;
+        }
+    }
+
+    pub(crate) fn depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub(crate) fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    pub(crate) fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Snapshot of the queued backlog — model-checking introspection
+    /// (the `analysis::models` finale checks conservation: admitted =
+    /// served + backlog).
+    pub(crate) fn backlog(&self) -> Vec<R>
+    where
+        R: Clone,
+    {
+        self.queue.iter().cloned().collect()
+    }
+}
+
+/// Bounded MPMC lane queue: [`LaneState`] under a `Mutex` + `Condvar`,
+/// so idle workers *park* (no poll loop) and shutdown/drain are
+/// first-class states instead of sender-drop side effects.
+///
+/// Locking is poison-tolerant on purpose (every acquisition goes through
+/// [`plock`]/[`pwait`]): each critical section is a small state
+/// transition that preserves the deque's invariants, and the whole point
+/// of lane supervision is that a panicking worker must not take the
+/// lane's queue down with it.  The `loom_tests` module model-checks this
+/// lock/condvar layer; the enumerator models in `analysis::models` cover
+/// the state machine itself.
+struct LaneQueue<R> {
+    state: Mutex<LaneState<R>>,
+    cv: Condvar,
+}
+
 enum PushError {
     Full { depth: usize },
     Closed,
 }
 
-impl LaneQueue {
+impl<R> LaneQueue<R> {
     fn new(cap: usize) -> Self {
         LaneQueue {
-            state: Mutex::new(LaneQueueState {
-                queue: VecDeque::new(),
-                closed: false,
-                abandon: false,
-            }),
+            state: Mutex::new(LaneState::new(cap)),
             cv: Condvar::new(),
-            cap: cap.max(1),
         }
-    }
-
-    fn lock(&self) -> MutexGuard<'_, LaneQueueState> {
-        self.state.lock().unwrap_or_else(|p| p.into_inner())
     }
 
     /// Admit one request; `Ok(depth_after_push)` or why not.
-    fn push(&self, req: InferRequest) -> Result<usize, PushError> {
-        let mut st = self.lock();
-        if st.closed {
-            return Err(PushError::Closed);
+    fn push(&self, req: R) -> Result<usize, PushError> {
+        let st = &mut *plock(&self.state);
+        match st.admit(req) {
+            Admit::Queued { depth } => {
+                // Wake one parked worker for the one new request.  (The
+                // guard drops at end of scope; notifying while holding
+                // the lock is correct, just makes the woken thread
+                // immediately block — loom exercises both shapes.)
+                self.cv.notify_one();
+                Ok(depth)
+            }
+            Admit::Full { depth } => Err(PushError::Full { depth }),
+            Admit::Closed => Err(PushError::Closed),
         }
-        if st.queue.len() >= self.cap {
-            return Err(PushError::Full {
-                depth: st.queue.len(),
-            });
-        }
-        st.queue.push_back(req);
-        let depth = st.queue.len();
-        drop(st);
-        self.cv.notify_one();
-        Ok(depth)
     }
 
     /// Park until a request is available (or the lane stops).  `None`
     /// means this worker should exit: the queue is closed and either
     /// drained empty or abandoned.
-    fn pop_first(&self) -> Option<InferRequest> {
-        let mut st = self.lock();
+    fn pop_first(&self) -> Option<R> {
+        let mut st = plock(&self.state);
         loop {
-            if st.closed && st.abandon {
-                return None;
+            match st.take() {
+                Take::Got(req) => return Some(req),
+                Take::Stop => return None,
+                Take::Park => st = pwait(&self.cv, st),
             }
-            if let Some(req) = st.queue.pop_front() {
-                return Some(req);
-            }
-            if st.closed {
-                return None; // drained
-            }
-            st = self.cv.wait(st).unwrap_or_else(|p| p.into_inner());
         }
     }
 
     /// Pop another request for the current batch, waiting up to
     /// `deadline`.  `None` on timeout or lane stop.
-    fn pop_more(&self, deadline: Instant) -> Option<InferRequest> {
-        let mut st = self.lock();
+    fn pop_more(&self, deadline: Instant) -> Option<R> {
+        let mut st = plock(&self.state);
         loop {
-            if st.closed && st.abandon {
-                return None;
-            }
-            if let Some(req) = st.queue.pop_front() {
-                return Some(req);
-            }
-            if st.closed {
-                return None;
-            }
-            let now = Instant::now();
-            if now >= deadline {
-                return None;
-            }
-            let (g, timeout) = self
-                .cv
-                .wait_timeout(st, deadline - now)
-                .unwrap_or_else(|p| p.into_inner());
-            st = g;
-            if timeout.timed_out() && st.queue.is_empty() {
-                return None;
+            match st.take() {
+                Take::Got(req) => return Some(req),
+                Take::Stop => return None,
+                Take::Park => {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        return None;
+                    }
+                    let (g, timed_out) = pwait_timeout(&self.cv, st, deadline - now);
+                    st = g;
+                    if timed_out && st.is_empty() {
+                        return None;
+                    }
+                }
             }
         }
     }
 
     fn depth(&self) -> usize {
-        self.lock().queue.len()
+        plock(&self.state).depth()
     }
 
-    /// Stop the lane: no new submissions; `drain: true` lets workers
-    /// finish everything already admitted, `false` abandons the backlog
-    /// (dropped senders → clients see `Closed`).
+    fn cap(&self) -> usize {
+        plock(&self.state).cap()
+    }
+
+    /// Stop the lane; see [`LaneState::close`].
     fn close(&self, drain: bool) {
-        let mut st = self.lock();
-        st.closed = true;
-        if !drain {
-            st.abandon = true;
-        }
-        drop(st);
+        plock(&self.state).close(drain);
         self.cv.notify_all();
     }
 }
 
 struct SessionLane {
-    queue: Arc<LaneQueue>,
+    queue: Arc<LaneQueue<InferRequest>>,
     stats: Arc<ServerStats>,
     /// Floats per image of this lane's model (submit-time validation).
     image_len: usize,
@@ -540,7 +648,7 @@ pub struct InferServer {
     lanes: BTreeMap<SessionKey, SessionLane>,
     /// Aggregate stats across all sessions.
     pub stats: Arc<ServerStats>,
-    workers: Vec<std::thread::JoinHandle<()>>,
+    workers: Vec<thread::JoinHandle<()>>,
 }
 
 impl InferServer {
@@ -561,7 +669,7 @@ impl InferServer {
                 let sess = sess.clone();
                 let stats = stats.clone();
                 let global = global.clone();
-                handles.push(std::thread::spawn(move || {
+                handles.push(thread::spawn(move || {
                     supervised_worker(&queue, &sess, policy, &stats, &global);
                 }));
             }
@@ -636,7 +744,7 @@ impl InferServer {
                 Err(SubmitError::QueueFull {
                     key,
                     depth,
-                    capacity: lane.queue.cap,
+                    capacity: lane.queue.cap(),
                 })
             }
             Err(PushError::Closed) => Err(SubmitError::Closed(key)),
@@ -712,10 +820,12 @@ impl Drop for InferServer {
 
 /// Test-only fault injection: lets the robustness tests deterministically
 /// wedge or poison a lane's compute from request *data*, standing in for
-/// a corrupted LUT/QNet.  Compiled out of non-test builds entirely.
-#[cfg(test)]
+/// a corrupted LUT/QNet.  Compiled out of non-test builds entirely
+/// (and of loom builds: chaos drives OS-thread sleeps a loom model
+/// cannot schedule).
+#[cfg(all(test, not(loom)))]
 pub(crate) mod chaos {
-    use std::sync::atomic::{AtomicBool, Ordering};
+    use crate::util::sync::{AtomicBool, Ordering};
 
     /// An image whose first float is this marker panics inside the
     /// compute region (after batch collection, before the response).
@@ -753,7 +863,7 @@ enum WorkerExit {
 /// unwound code touched is reused — the incarnation is discarded and a
 /// new one spawned in its place, so the lane never loses capacity.
 fn supervised_worker(
-    queue: &LaneQueue,
+    queue: &LaneQueue<InferRequest>,
     sess: &Session,
     policy: BatchPolicy,
     stats: &ServerStats,
@@ -812,7 +922,7 @@ fn admit_or_shed(
 }
 
 fn worker_incarnation(
-    queue: &LaneQueue,
+    queue: &LaneQueue<InferRequest>,
     sess: &Session,
     policy: BatchPolicy,
     stats: &ServerStats,
@@ -871,7 +981,7 @@ fn worker_incarnation(
             stacked.extend_from_slice(&req.image);
         }
         let result = catch_unwind(AssertUnwindSafe(|| {
-            #[cfg(test)]
+            #[cfg(all(test, not(loom)))]
             chaos::maybe_trip_entries(&batch);
             sess.infer_batch_timed(&stacked, bsize, &mut ws)
         }));
@@ -917,7 +1027,66 @@ fn worker_incarnation(
     }
 }
 
-#[cfg(test)]
+#[cfg(all(test, loom))]
+mod loom_tests {
+    use super::*;
+
+    /// Model-check the lock/condvar layer around the admit path: a
+    /// producer races a consumer and a drain-mode close.  In every
+    /// interleaving, an admitted request is either served before the
+    /// drain completes or never admitted at all — drain loses nothing.
+    #[test]
+    fn loom_lane_admit_serve_close_drain() {
+        loom::model(|| {
+            let q = Arc::new(LaneQueue::<u32>::new(2));
+            let producer = {
+                let q = q.clone();
+                loom::thread::spawn(move || q.push(1).is_ok())
+            };
+            let consumer = {
+                let q = q.clone();
+                loom::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Some(v) = q.pop_first() {
+                        got.push(v);
+                    }
+                    got
+                })
+            };
+            q.close(true);
+            let admitted = producer.join().unwrap();
+            let got = consumer.join().unwrap();
+            if admitted {
+                assert_eq!(got, vec![1], "drain-mode close must serve the backlog");
+            } else {
+                assert!(got.is_empty());
+            }
+        });
+    }
+
+    /// Abandon-mode close: the consumer must terminate in every
+    /// interleaving (no lost-wakeup park-forever), serving the queued
+    /// request at most once.
+    #[test]
+    fn loom_lane_abandon_stops_consumer() {
+        loom::model(|| {
+            let q = Arc::new(LaneQueue::<u32>::new(2));
+            assert!(q.push(1).is_ok(), "push precedes close: must admit");
+            let consumer = {
+                let q = q.clone();
+                loom::thread::spawn(move || q.pop_first())
+            };
+            q.close(false);
+            let got = consumer.join().unwrap();
+            assert!(
+                got == Some(1) || got.is_none(),
+                "abandoned lane serves at most the request it raced"
+            );
+        });
+    }
+}
+
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
     use crate::data::Dataset;
@@ -970,6 +1139,48 @@ mod tests {
             );
             std::thread::sleep(Duration::from_millis(1));
         }
+    }
+
+    #[test]
+    fn lane_state_machine_transitions() {
+        // The pure state machine the enumerator models interleave: FIFO
+        // under cap, Full at cap, drain serves the backlog, abandon
+        // drops it.
+        let mut st = LaneState::<u32>::new(2);
+        assert_eq!(st.admit(7), Admit::Queued { depth: 1 });
+        assert_eq!(st.admit(8), Admit::Queued { depth: 2 });
+        assert_eq!(st.admit(9), Admit::Full { depth: 2 });
+        assert_eq!(st.take(), Take::Got(7));
+        let mut abandoned = st.clone();
+        st.close(true);
+        assert_eq!(st.admit(10), Admit::Closed);
+        assert_eq!(st.take(), Take::Got(8), "drain keeps serving");
+        assert_eq!(st.take(), Take::Stop);
+        abandoned.close(false);
+        assert_eq!(abandoned.take(), Take::Stop, "abandon drops the backlog");
+        assert_eq!(abandoned.depth(), 1);
+        assert_eq!(LaneState::<u32>::new(0).cap(), 1, "cap clamps to 1");
+    }
+
+    #[test]
+    fn poisoned_lane_queue_still_admits_and_serves() {
+        // Poison the lane mutex the way a crashing introspector would,
+        // then run the full admit/serve/close cycle through it: the
+        // documented poison-tolerance policy for lane supervision.
+        let q = LaneQueue::<u32>::new(2);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _g = plock(&q.state);
+            panic!("poison the lane mutex");
+        }));
+        assert!(r.is_err());
+        assert!(q.push(7).is_ok());
+        assert!(q.push(8).is_ok());
+        assert!(matches!(q.push(9), Err(PushError::Full { depth: 2 })));
+        assert_eq!(q.pop_first(), Some(7), "FIFO through a poisoned lock");
+        assert_eq!(q.depth(), 1);
+        q.close(true);
+        assert_eq!(q.pop_first(), Some(8), "drain still serves");
+        assert_eq!(q.pop_first(), None);
     }
 
     #[test]
@@ -1225,7 +1436,7 @@ mod tests {
 
     #[test]
     fn queue_full_rejections_match_counters() {
-        let _serial = CHAOS_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        let _serial = plock(&CHAOS_LOCK);
         let gate = StallGuard::raise();
         let (hub, _) = single_session_hub("exact8x8");
         let cap = 4usize;
@@ -1285,7 +1496,7 @@ mod tests {
 
     #[test]
     fn panicked_batch_answers_every_peer_and_lane_survives() {
-        let _serial = CHAOS_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        let _serial = plock(&CHAOS_LOCK);
         let (hub, _) = single_session_hub("exact8x8");
         let server = InferServer::start(
             &hub,
@@ -1327,7 +1538,7 @@ mod tests {
 
     #[test]
     fn expired_deadline_is_shed_before_compute() {
-        let _serial = CHAOS_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        let _serial = plock(&CHAOS_LOCK);
         let gate = StallGuard::raise();
         let (hub, _) = single_session_hub("exact8x8");
         let server = InferServer::start(
@@ -1376,7 +1587,7 @@ mod tests {
 
     #[test]
     fn shutdown_without_drain_closes_queued_requests() {
-        let _serial = CHAOS_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        let _serial = plock(&CHAOS_LOCK);
         let _gate = StallGuard::raise();
         let (hub, _) = single_session_hub("exact8x8");
         let server = InferServer::start(
@@ -1416,7 +1627,7 @@ mod tests {
 
     #[test]
     fn shutdown_drain_answers_backlog() {
-        let _serial = CHAOS_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        let _serial = plock(&CHAOS_LOCK);
         let _gate = StallGuard::raise();
         let (hub, _) = single_session_hub("exact8x8");
         let server = InferServer::start(

@@ -1079,16 +1079,4 @@ mod tests {
         );
         assert!(after.skipped_lanes >= before.skipped_lanes + (m * TILE_N) as u64);
     }
-
-    #[test]
-    fn module_source_forbids_unsafe() {
-        // The aliasing fix must not regress: the module-level forbid is
-        // compile-enforced, and this guard keeps the attribute itself from
-        // being quietly dropped in a refactor.
-        let src = std::fs::read_to_string(file!()).expect("gemm.rs readable from crate root");
-        assert!(
-            src.contains("#![forbid(unsafe_code)]"),
-            "gemm.rs must forbid unsafe_code"
-        );
-    }
 }

@@ -1182,7 +1182,7 @@ mod tests {
         // A one-entry slice and an explicit per-layer list of the same
         // table must both reproduce forward_batch_with bit-for-bit —
         // the plan refactor's ground invariant.
-        use std::sync::Arc;
+        use crate::util::sync::Arc;
         let lut = Lut::build(&ExactMul::new(8, 8));
         let fnet = toy_fnet("lenet", (1, 28, 28), 1);
         let mut rng = Pcg32::new(11);
@@ -1203,7 +1203,7 @@ mod tests {
         // Substituting an approximate table at exactly one layer must
         // change the logits, and WHICH layer it lands on must matter.
         use crate::mult::by_name;
-        use std::sync::Arc;
+        use crate::util::sync::Arc;
         let fnet = toy_fnet("lenet", (1, 28, 28), 1);
         let mut rng = Pcg32::new(9);
         let xs: Vec<f32> = (0..784).map(|_| rng.next_f32()).collect();

@@ -41,8 +41,11 @@
 #![forbid(unsafe_code)]
 
 use crate::metrics::LutTStore;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::OnceLock;
+use crate::util::sync::OnceLock;
+// The gather-stat counters below are const-initialized statics, which
+// loom's atomic doubles cannot be; this module never runs under a loom
+// model, so the std types are correct here.
+use std::sync::atomic::{AtomicU64, Ordering}; // lint:allow(std_sync)
 
 use super::gemm::TILE_N;
 

@@ -10,10 +10,9 @@
 
 use crate::metrics::{Lut, NEG_SUFFIX};
 use crate::mult::by_name;
+use crate::util::sync::{plock, Arc, AtomicU64, Mutex, OnceLock, Ordering};
 use anyhow::{anyhow, ensure, Context, Result};
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, OnceLock};
 
 #[derive(Default)]
 pub struct LutCache {
@@ -42,7 +41,7 @@ impl LutCache {
     /// resolved recursively, so it lands in the cache too).  Errors on
     /// unknown names and non-8×8 designs.
     pub fn get(&self, design: &str) -> Result<Arc<Lut>> {
-        if let Some(lut) = self.luts.lock().unwrap().get(design) {
+        if let Some(lut) = plock(&self.luts).get(design) {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return Ok(lut.clone());
         }
@@ -64,7 +63,7 @@ impl LutCache {
             Arc::new(Lut::build(m.as_ref()))
         };
         self.misses.fetch_add(1, Ordering::Relaxed);
-        let mut guard = self.luts.lock().unwrap();
+        let mut guard = plock(&self.luts);
         // A racing builder may have inserted first; keep the incumbent so
         // every consumer shares a single allocation.
         let entry = guard.entry(design.to_string()).or_insert(built);
@@ -74,25 +73,25 @@ impl LutCache {
     /// Insert a pre-built LUT under an explicit key (synthetic tables in
     /// tests, externally loaded silicon).  Replaces any previous entry.
     pub fn insert(&self, name: &str, lut: Arc<Lut>) {
-        self.luts.lock().unwrap().insert(name.to_string(), lut);
+        plock(&self.luts).insert(name.to_string(), lut);
     }
 
     pub fn contains(&self, design: &str) -> bool {
-        self.luts.lock().unwrap().contains_key(design)
+        plock(&self.luts).contains_key(design)
     }
 
     /// Sorted names of every cached design — embedded in plan-resolution
     /// errors so a failure report shows both the unknown name and what
     /// *is* loadable, and listed by the serve example's cache report.
     pub fn designs(&self) -> Vec<String> {
-        let mut names: Vec<String> = self.luts.lock().unwrap().keys().cloned().collect();
+        let mut names: Vec<String> = plock(&self.luts).keys().cloned().collect();
         names.sort();
         names
     }
 
     /// Number of distinct LUTs currently held.
     pub fn len(&self) -> usize {
-        self.luts.lock().unwrap().len()
+        plock(&self.luts).len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -201,6 +200,25 @@ mod tests {
         cache.get("pkm").unwrap();
         cache.get("exact8x8").unwrap();
         assert_eq!(cache.designs(), vec!["exact8x8", "pkm"]);
+    }
+
+    #[test]
+    fn poisoned_cache_still_serves() {
+        // A panic while holding the table lock (a crashing observer, a
+        // panicking consumer mid-introspection) must not wedge the
+        // cache: gets keep hitting, and new designs still build through
+        // the poisoned lock — the documented poison-tolerance policy.
+        let cache = LutCache::new();
+        let a = cache.get("exact8x8").unwrap();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _g = plock(&cache.luts);
+            panic!("poison the cache lock");
+        }));
+        assert!(r.is_err());
+        let b = cache.get("exact8x8").unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "poisoned cache must still hit");
+        cache.get("mul8x8_2").unwrap();
+        assert_eq!(cache.len(), 2, "poisoned cache must still build");
     }
 
     #[test]

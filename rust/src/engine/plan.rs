@@ -26,8 +26,8 @@
 use crate::engine::LutCache;
 use crate::metrics::lut::NEG_SUFFIX;
 use crate::metrics::Lut;
+use crate::util::sync::Arc;
 use anyhow::{bail, ensure, Context, Result};
-use std::sync::Arc;
 
 /// An ordered per-layer assignment of multiplier designs.
 #[derive(Clone, Debug, PartialEq, Eq)]

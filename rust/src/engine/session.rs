@@ -16,10 +16,10 @@ use crate::dnn::{argmax, QNet};
 use crate::engine::plan::{display_design, DesignPlan};
 use crate::engine::{LutCache, Workspace};
 use crate::metrics::Lut;
+use crate::util::sync::{pread, pwrite, Arc, RwLock};
 use anyhow::Result;
 use std::collections::BTreeMap;
 use std::fmt;
-use std::sync::{Arc, RwLock};
 use std::time::{Duration, Instant};
 
 /// Identity of a servable (model, design-plan) pair.  `design` is a
@@ -192,32 +192,27 @@ impl ModelHub {
         qnet: Arc<QNet>,
     ) -> Result<Arc<Session>> {
         let sess = Arc::new(Session::bind(model, plan, qnet, &self.cache)?);
-        self.sessions
-            .write()
-            .unwrap()
-            .insert(sess.key.clone(), sess.clone());
+        pwrite(&self.sessions).insert(sess.key.clone(), sess.clone());
         Ok(sess)
     }
 
     pub fn session(&self, model: &str, design: &str) -> Option<Arc<Session>> {
-        self.sessions
-            .read()
-            .unwrap()
+        pread(&self.sessions)
             .get(&SessionKey::new(model, design))
             .cloned()
     }
 
     /// All registered sessions, in key order (deterministic).
     pub fn sessions(&self) -> Vec<Arc<Session>> {
-        self.sessions.read().unwrap().values().cloned().collect()
+        pread(&self.sessions).values().cloned().collect()
     }
 
     pub fn keys(&self) -> Vec<SessionKey> {
-        self.sessions.read().unwrap().keys().cloned().collect()
+        pread(&self.sessions).keys().cloned().collect()
     }
 
     pub fn len(&self) -> usize {
-        self.sessions.read().unwrap().len()
+        pread(&self.sessions).len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -265,6 +260,25 @@ mod tests {
             SessionKey::new("lenet", "exact8x8"),
             "keys are ordered"
         );
+    }
+
+    #[test]
+    fn poisoned_hub_still_registers_and_lists() {
+        // Registry writes are complete before any panic can land inside
+        // the guard, so a poisoned sessions lock carries intact data —
+        // pread/pwrite recover it and the hub keeps serving.
+        let hub = ModelHub::new(Arc::new(LutCache::new()));
+        let qnet = tiny_qnet();
+        hub.register("m", "exact8x8", qnet.clone()).unwrap();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _g = pwrite(&hub.sessions);
+            panic!("poison the hub lock");
+        }));
+        assert!(r.is_err());
+        assert!(hub.session("m", "exact8x8").is_some());
+        hub.register("m", "mul8x8_2", qnet).unwrap();
+        assert_eq!(hub.len(), 2);
+        assert_eq!(hub.keys().len(), hub.sessions().len());
     }
 
     #[test]

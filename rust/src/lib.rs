@@ -16,6 +16,7 @@
 //! * **L1 (python/compile/kernels)** — the Pallas LUT-GEMM kernel that
 //!   executes "approximate silicon" as a 256×256 product LUT.
 
+pub mod analysis;
 pub mod data;
 pub mod dnn;
 pub mod engine;

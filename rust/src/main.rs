@@ -11,6 +11,8 @@
 //!   export-luts      dump product LUTs as .npy (optionally one plan's set)
 //!   designs          list registered multiplier designs
 //!   mul              evaluate one product: `axmul mul mul8x8_2 100 200`
+//!   lint             run the in-repo invariant linter over rust/src
+//!   modelcheck       exhaustively enumerate the concurrency-model schedules
 
 use anyhow::Context;
 use axmul::coordinator::{self, resolve_table8};
@@ -144,7 +146,7 @@ fn run(args: &Args) -> anyhow::Result<()> {
             // are printed.  For the trained-model demo with accuracy
             // numbers, see `cargo run --release --example serve`.
             use axmul::coordinator::server::{BatchPolicy, InferServer, SubmitError};
-            use std::sync::Arc;
+            use axmul::util::sync::Arc;
             use std::time::{Duration, Instant};
             let designs: Vec<String> = args
                 .opt_or("designs", "mul8x8_2,exact8x8")
@@ -221,6 +223,48 @@ fn run(args: &Args) -> anyhow::Result<()> {
                 server.shutdown();
             }
         }
+        Some("lint") => {
+            // Invariant linter (see rust/src/analysis/lint.rs): run by
+            // tier-1 CI, exits nonzero on any violation.
+            use axmul::analysis::{lint_root, RULES};
+            if args.flag("list") {
+                for r in &RULES {
+                    println!("{:<24} {}", r.name, r.what);
+                }
+                return Ok(());
+            }
+            let root = std::path::PathBuf::from(args.opt_or("root", "."));
+            let violations = lint_root(&root)
+                .with_context(|| format!("walking {}/rust/src", root.display()))?;
+            for v in &violations {
+                println!("{v}");
+            }
+            anyhow::ensure!(
+                violations.is_empty(),
+                "{} lint violation(s) across {} rule(s)",
+                violations.len(),
+                RULES.len()
+            );
+            println!("lint: clean ({} rules)", RULES.len());
+        }
+        Some("modelcheck") => {
+            // Schedule-enumerating model checker: every interleaving of
+            // the lane-queue, pool-job and histogram protocols.
+            let mut failed = 0;
+            for (name, outcome) in axmul::analysis::run_all() {
+                match outcome {
+                    Ok(ex) => println!(
+                        "  ok   {name:<28} {} schedules, {} steps, deepest {}",
+                        ex.schedules, ex.steps, ex.deepest
+                    ),
+                    Err(e) => {
+                        println!("  FAIL {name:<28} {e}");
+                        failed += 1;
+                    }
+                }
+            }
+            anyhow::ensure!(failed == 0, "{failed} model(s) failed");
+        }
         Some("designs") => {
             println!("registered multiplier designs:");
             for name in all_names() {
@@ -253,12 +297,14 @@ fn run(args: &Args) -> anyhow::Result<()> {
         _ => {
             println!(
                 "axmul — approximate multiplier co-design (ISCAS'22 reproduction)\n\
-                 usage: axmul <table5|table6|table7|table8|weights-hist|train|serve|export-luts|designs|mul> [options]\n\
+                 usage: axmul <table5|table6|table7|table8|weights-hist|train|serve|export-luts|designs|mul|lint|modelcheck> [options]\n\
                  common options: --artifacts DIR --quick --verbose\n\
                  table8: --nets a,b --designs x,y --steps N --eval N --config FILE\n\
                  serve: --designs x,y --requests N --workers N --max-batch N --max-wait-ms N\n\
                         --queue-cap N --slo-ms N --deadline-ms N --drain (artifact-free load run)\n\
-                 export-luts: --out DIR --plan FILE (per-layer plan manifest)"
+                 export-luts: --out DIR --plan FILE (per-layer plan manifest)\n\
+                 lint: --root DIR --list (invariant linter, nonzero exit on violations)\n\
+                 modelcheck: enumerate all schedules of the concurrency models"
             );
         }
     }

@@ -17,9 +17,9 @@
 
 use crate::util::fmt_ns;
 use crate::util::json::Json;
+use crate::util::sync::{AtomicU64, Ordering};
 use std::collections::BTreeMap;
 use std::fmt;
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
 /// Number of log2 buckets: 2^40 ns ≈ 18.3 minutes at the top.
@@ -79,6 +79,15 @@ impl LatencyHistogram {
 
     pub fn count(&self) -> u64 {
         self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all bucket counters.  `record_ns` bumps the sample's
+    /// bucket *before* `count`, so a reader that loads `count()` first
+    /// and `bucket_total()` second can never observe fewer bucketed
+    /// samples than counted ones — the monotonic-pairing invariant the
+    /// loom test and the `HistModel` enumerator both check.
+    pub fn bucket_total(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
     }
 
     pub fn max_ns(&self) -> u64 {
@@ -181,10 +190,21 @@ impl fmt::Display for HistSnapshot {
 }
 
 /// Last-value gauge with a high-water mark (e.g. lane queue depth).
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct Gauge {
     cur: AtomicU64,
     hi: AtomicU64,
+}
+
+// Manual impl: loom's atomics don't provide `Default`, and the shim must
+// compile identically under both cfgs.
+impl Default for Gauge {
+    fn default() -> Self {
+        Gauge {
+            cur: AtomicU64::new(0),
+            hi: AtomicU64::new(0),
+        }
+    }
 }
 
 impl Gauge {
@@ -206,7 +226,7 @@ impl Gauge {
     }
 }
 
-#[cfg(test)]
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
 
@@ -278,5 +298,52 @@ mod tests {
         g.observe(2);
         assert_eq!(g.get(), 2);
         assert_eq!(g.high_water(), 7);
+    }
+
+    #[test]
+    fn bucket_total_matches_count() {
+        let h = LatencyHistogram::new();
+        for ns in [1u64, 5, 1_000, 1_000_000] {
+            h.record_ns(ns);
+        }
+        assert_eq!(h.bucket_total(), h.count());
+        assert_eq!(h.bucket_total(), 4);
+    }
+}
+
+#[cfg(all(test, loom))]
+mod loom_tests {
+    use super::*;
+    use crate::util::sync::Arc;
+
+    /// Model-check record-vs-read: two recorders race a reader over the
+    /// wait-free counters.  Because `record_ns` bumps the bucket before
+    /// `count`, a reader loading `count` first can never see
+    /// `bucket_total < count` in ANY interleaving — the racy-consistency
+    /// contract `snapshot()` relies on (checked here via `bucket_total`
+    /// rather than the full 40-bucket snapshot to keep the loom state
+    /// space tractable).
+    #[test]
+    fn loom_record_never_undercounts_buckets() {
+        loom::model(|| {
+            let h = Arc::new(LatencyHistogram::new());
+            let handles: Vec<_> = [10u64, 2_000u64]
+                .into_iter()
+                .map(|ns| {
+                    let h = h.clone();
+                    loom::thread::spawn(move || h.record_ns(ns))
+                })
+                .collect();
+            let c = h.count();
+            assert!(
+                h.bucket_total() >= c,
+                "reader observed count ahead of buckets"
+            );
+            for t in handles {
+                t.join().unwrap();
+            }
+            assert_eq!(h.count(), 2);
+            assert_eq!(h.bucket_total(), 2);
+        });
     }
 }

@@ -17,7 +17,7 @@
 
 use crate::mult::Multiplier;
 use crate::util::parallel_map;
-use std::sync::OnceLock;
+use crate::util::sync::OnceLock;
 
 /// Name suffix of a design's error-mirrored partner table (see
 /// [`Lut::mirrored`]).  `LutCache::get` resolves `"{design}~neg"` by

@@ -13,16 +13,16 @@ pub mod manifest;
 pub use literal::{f32_literal, i32_literal, scalar_f32, to_f32_vec, to_i32_vec, to_scalar_f32};
 pub use manifest::{Manifest, NetworkEntry};
 
+use crate::util::sync::{plock, Arc, Mutex};
 use anyhow::{Context, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
 use xla::{Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
 pub struct Engine {
     client: PjRtClient,
     artifacts_dir: PathBuf,
-    cache: Mutex<HashMap<String, std::sync::Arc<PjRtLoadedExecutable>>>,
+    cache: Mutex<HashMap<String, Arc<PjRtLoadedExecutable>>>,
 }
 
 impl Engine {
@@ -46,8 +46,8 @@ impl Engine {
 
     /// Load + compile an artifact by name (e.g. `lenet_mnist_train`),
     /// caching the executable.
-    pub fn load(&self, name: &str) -> Result<std::sync::Arc<PjRtLoadedExecutable>> {
-        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+    pub fn load(&self, name: &str) -> Result<Arc<PjRtLoadedExecutable>> {
+        if let Some(exe) = plock(&self.cache).get(name) {
             return Ok(exe.clone());
         }
         let path = self.artifacts_dir.join(format!("{name}.hlo.txt"));
@@ -59,11 +59,8 @@ impl Engine {
             .client
             .compile(&comp)
             .with_context(|| format!("compile {name}"))?;
-        let exe = std::sync::Arc::new(exe);
-        self.cache
-            .lock()
-            .unwrap()
-            .insert(name.to_string(), exe.clone());
+        let exe = Arc::new(exe);
+        plock(&self.cache).insert(name.to_string(), exe.clone());
         Ok(exe)
     }
 

@@ -9,6 +9,7 @@ pub mod bench;
 pub mod cli;
 pub mod json;
 pub mod rng;
+pub mod sync;
 pub mod table;
 pub mod threadpool;
 pub mod toml;

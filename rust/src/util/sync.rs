@@ -1,0 +1,176 @@
+//! The crate's single doorway to synchronization primitives — and the
+//! seam where the loom model checker swaps them out.
+//!
+//! Every concurrent module (`util::threadpool`, `coordinator::server`,
+//! `metrics::histogram`, `engine::lut_cache`, …) imports `Mutex`,
+//! `Condvar`, atomics and `thread` from **here**, never from
+//! `std::sync` directly (the in-repo linter, `axmul lint`, enforces
+//! this).  In a normal build the re-exports are exactly the std types —
+//! zero cost, zero behavior change.  Under `RUSTFLAGS="--cfg loom"`
+//! (the CI model-check job, which fetches the `loom` crate — it is not
+//! in the offline container registry) the lock/condvar/atomic types
+//! become loom's instrumented doubles, and the `loom_` tests
+//! exhaustively interleave the LaneQueue, thread-pool-job and histogram
+//! protocols.
+//!
+//! Deliberate exceptions, kept on std under loom too:
+//!
+//! * [`Arc`] — loom's `Arc` cannot unsize-coerce and cannot hold
+//!   foreign types shared with the `xla` runtime
+//!   (`Arc<PjRtLoadedExecutable>` crosses this boundary).  Loom still
+//!   fully checks the mutex/condvar/atomic protocols *around* the
+//!   pointers.
+//! * [`OnceLock`] and [`mpsc`] — used only for init-once config
+//!   caching and response channels, neither of which is under model
+//!   check; loom's doubles don't cover their full API surface.
+//! * [`thread`] — production spawn paths (pool workers, lane workers)
+//!   never run inside a loom model; loom tests spawn their model
+//!   threads via `loom::thread` directly inside their `cfg(loom)`
+//!   modules.
+//!
+//! ## Poison-tolerant helpers
+//!
+//! Lock poisoning is a *messenger*, not an invariant violation: every
+//! critical section in this crate either holds a small state machine
+//! whose mutations are complete before any panic can occur, or is
+//! explicitly designed to survive a panicking peer (lane supervision
+//! respawns workers; the pool re-raises task panics on the submitter).
+//! So lock results are never `.unwrap()`ed — call sites use [`plock`] /
+//! [`pread`] / [`pwrite`] / [`pwait`] / [`pwait_timeout`], which
+//! recover the guard from a poisoned lock and carry on.  The linter
+//! bans `lock().unwrap()` outside this module to keep that policy
+//! machine-checked, and the poison-path unit tests in each shimmed
+//! module pin the recovery behavior.
+
+#[cfg(not(loom))]
+pub use std::sync::atomic;
+#[cfg(not(loom))]
+pub use std::sync::{Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+#[cfg(loom)]
+pub use loom::sync::atomic;
+#[cfg(loom)]
+pub use loom::sync::{Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+// Always-std by design — see the module docs for why each one stays.
+pub use std::sync::{mpsc, Arc, OnceLock};
+pub use std::thread;
+
+pub use self::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+
+use std::time::Duration;
+
+/// Poison-tolerant `Mutex::lock`: a panicking previous holder does not
+/// take the lock down with it (see module docs for why this is sound
+/// here).
+pub fn plock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Poison-tolerant `Condvar::wait`.
+pub fn pwait<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(|p| p.into_inner())
+}
+
+/// Poison-tolerant `Condvar::wait_timeout`; returns the reacquired
+/// guard and whether the wait timed out.
+#[cfg(not(loom))]
+pub fn pwait_timeout<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    dur: Duration,
+) -> (MutexGuard<'a, T>, bool) {
+    let (guard, timeout) = cv
+        .wait_timeout(guard, dur)
+        .unwrap_or_else(|p| p.into_inner());
+    (guard, timeout.timed_out())
+}
+
+/// Under loom there is no clock: a timed wait degrades to a plain wait
+/// that never reports a timeout (loom's spurious wakeups still exercise
+/// the re-check loop around it).  Loom tests therefore drive the
+/// untimed paths; the timed path's deadline arithmetic is covered by
+/// the non-loom unit tests.
+#[cfg(loom)]
+pub fn pwait_timeout<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    _dur: Duration,
+) -> (MutexGuard<'a, T>, bool) {
+    (cv.wait(guard).unwrap_or_else(|p| p.into_inner()), false)
+}
+
+/// Poison-tolerant `RwLock::read`.
+pub fn pread<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Poison-tolerant `RwLock::write`.
+pub fn pwrite<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(|p| p.into_inner())
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    /// Panic while holding the guard, poisoning the lock.
+    fn poison<T>(m: &Mutex<T>) {
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            let _g = plock(m);
+            panic!("poison the mutex");
+        }));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn plock_recovers_a_poisoned_mutex() {
+        let m = Mutex::new(41);
+        poison(&m);
+        assert!(m.is_poisoned());
+        // The data is intact and still writable through plock.
+        *plock(&m) += 1;
+        assert_eq!(*plock(&m), 42);
+    }
+
+    #[test]
+    fn pwait_timeout_times_out_and_recovers_poison() {
+        let m = Mutex::new(());
+        let cv = Condvar::new();
+        poison(&m);
+        let g = plock(&m);
+        let (_g, timed_out) = pwait_timeout(&cv, g, Duration::from_millis(1));
+        assert!(timed_out, "nobody notifies: the wait must time out");
+    }
+
+    #[test]
+    fn pwait_wakes_on_notify() {
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        let waker = {
+            let pair = pair.clone();
+            thread::spawn(move || {
+                *plock(&pair.0) = true;
+                pair.1.notify_all();
+            })
+        };
+        let (m, cv) = (&pair.0, &pair.1);
+        let mut ready = plock(m);
+        while !*ready {
+            ready = pwait(cv, ready);
+        }
+        waker.join().unwrap();
+    }
+
+    #[test]
+    fn pread_pwrite_recover_a_poisoned_rwlock() {
+        let l = RwLock::new(vec![1, 2, 3]);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            let _g = pwrite(&l);
+            panic!("poison the rwlock");
+        }));
+        assert!(r.is_err());
+        pwrite(&l).push(4);
+        assert_eq!(pread(&l).len(), 4);
+    }
+}

@@ -22,10 +22,25 @@
 //!
 //! Tiny shapes (e.g. lenet fc1, `M = 1`) never touch the queue: the
 //! serial cutoffs below run them inline on the caller's thread.
+//!
+//! ## Concurrency-correctness surface
+//!
+//! All primitives come through [`crate::util::sync`], so the CI loom job
+//! can model-check the claim/execute/countdown/wake protocol of [`Job`]
+//! (the `loom_` tests below drive [`Job::help_drain`] /
+//! [`Job::wait_done`] directly); the same protocol is transliterated
+//! into `analysis::models::PoolModel` for the in-repo
+//! schedule-enumerating fallback.  The pool's `unsafe` surface is down
+//! to a single site — the lifetime erasure in [`erase_lifetime`] — after
+//! the raw-pointer block splitting was replaced by `split_at_mut`
+//! chunking handed off through [`TakeSlots`] (each chunk's disjoint
+//! `&mut` sub-slice is *moved* into the claiming task, enforced at
+//! runtime by the take-exactly-once slot).
 
+use crate::util::sync::{
+    plock, pwait, thread, Arc, AtomicUsize, Condvar, Mutex, OnceLock, Ordering,
+};
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// Parse an `AXMUL_THREADS`-style override: a positive integer wins
 /// (clamped to ≥ 1), anything else falls back to the available
@@ -37,7 +52,7 @@ fn parse_threads(var: Option<&str>) -> usize {
             return n.max(1);
         }
     }
-    std::thread::available_parallelism()
+    thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(4)
         .min(16)
@@ -73,7 +88,7 @@ pub fn pool_threads_spawned() -> usize {
 /// last completion flips it.
 struct Job {
     /// Lifetime-erased task body.  SAFETY: `Pool::run` guarantees the
-    /// referent outlives every call — see the transmute there.
+    /// referent outlives every call — see [`erase_lifetime`].
     f: &'static (dyn Fn(usize) + Sync),
     total: usize,
     next: AtomicUsize,
@@ -88,6 +103,18 @@ struct Job {
 }
 
 impl Job {
+    fn new(f: &'static (dyn Fn(usize) + Sync), total: usize) -> Job {
+        Job {
+            f,
+            total,
+            next: AtomicUsize::new(0),
+            pending: AtomicUsize::new(total),
+            done: Mutex::new(false),
+            done_cv: Condvar::new(),
+            panic: Mutex::new(None),
+        }
+    }
+
     /// Run one claimed index, trapping panics, and record completion;
     /// the last completion wakes the submitter.  The mutex section is
     /// the lost-wakeup guard: the submitter re-checks `done` under the
@@ -98,18 +125,60 @@ impl Job {
         // touching any of it.
         let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| (self.f)(i)));
         if let Err(p) = r {
-            let mut slot = self.panic.lock().unwrap();
-            slot.get_or_insert(p);
+            plock(&self.panic).get_or_insert(p);
         }
         // AcqRel: the thread that observes pending hit zero acquires
         // every other worker's (Release) writes, so the submitter sees
         // all task side effects once it sees `done`.
         if self.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
-            let mut done = self.done.lock().unwrap();
+            let mut done = plock(&self.done);
             *done = true;
             self.done_cv.notify_all();
         }
     }
+
+    /// Claim-and-execute until every index of this job is claimed.  Both
+    /// the submitter and pool workers drain through this one loop, so
+    /// the claim protocol cannot fork between them.
+    fn help_drain(&self) {
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.total {
+                return;
+            }
+            self.execute_one(i);
+        }
+    }
+
+    /// Park until the last completion flips `done` (re-checked under the
+    /// lock, so a wake between check and sleep cannot be lost).
+    fn wait_done(&self) {
+        let mut done = plock(&self.done);
+        while !*done {
+            done = pwait(&self.done_cv, done);
+        }
+    }
+
+    /// First panic payload trapped by any task, if one panicked.
+    fn take_panic(&self) -> Option<Box<dyn std::any::Any + Send>> {
+        plock(&self.panic).take()
+    }
+}
+
+/// Erase the lifetime of a fork-join task body so it can sit in a
+/// queued, `Arc`-shared [`Job`].
+///
+/// SAFETY contract (upheld by the single caller, [`Pool::run`]): the
+/// returned reference must not be called after `f`'s referent is
+/// dropped.  `run` guarantees this by not returning until the job's
+/// `pending` count hits zero — every call on every thread has finished
+/// inside `run`'s frame.  Workers that later pop the drained job from
+/// the queue only read its atomics (`next >= total`), never `f`.
+unsafe fn erase_lifetime<'a>(f: &'a (dyn Fn(usize) + Sync)) -> &'static (dyn Fn(usize) + Sync) {
+    // SAFETY: pure lifetime widening of a fat reference, no type or
+    // layout change; the no-call-after-return obligation is the
+    // caller's contract above.
+    unsafe { std::mem::transmute::<&'a (dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(f) }
 }
 
 struct Shared {
@@ -149,7 +218,7 @@ impl Pool {
         for i in 0..workers {
             let sh = shared.clone();
             sh.spawned.fetch_add(1, Ordering::Relaxed);
-            std::thread::Builder::new()
+            thread::Builder::new()
                 .name(format!("axmul-pool-{i}"))
                 .spawn(move || worker_loop(sh))
                 .expect("spawn pool worker");
@@ -172,39 +241,18 @@ impl Pool {
             }
             return;
         }
-        // SAFETY: the erased reference is only ever dereferenced for a
-        // claimed index `i < total`.  All `total` claims happen before
-        // `pending` can reach 0, and `run` does not return until it
-        // does, so no call outlives this frame.  Workers that merely
-        // observe the drained job afterwards touch its atomics, not `f`.
-        let f: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(f) };
-        let job = Arc::new(Job {
-            f,
-            total,
-            next: AtomicUsize::new(0),
-            pending: AtomicUsize::new(total),
-            done: Mutex::new(false),
-            done_cv: Condvar::new(),
-            panic: Mutex::new(None),
-        });
-        self.shared.queue.lock().unwrap().push_back(job.clone());
+        // SAFETY: `run` does not return before `wait_done` observes the
+        // job fully executed, so the erased borrow never outlives `f` —
+        // exactly the contract `erase_lifetime` states.
+        let f = unsafe { erase_lifetime(f) };
+        let job = Arc::new(Job::new(f, total));
+        plock(&self.shared.queue).push_back(job.clone());
         self.shared.work_cv.notify_all();
-        loop {
-            let i = job.next.fetch_add(1, Ordering::Relaxed);
-            if i >= job.total {
-                break;
-            }
-            job.execute_one(i);
-        }
-        {
-            let mut done = job.done.lock().unwrap();
-            while !*done {
-                done = job.done_cv.wait(done).unwrap();
-            }
-        }
+        job.help_drain();
+        job.wait_done();
         // Re-raise the first task panic on the submitting thread — the
         // behaviour scoped spawn-and-join used to give us for free.
-        if let Some(p) = job.panic.lock().unwrap().take() {
+        if let Some(p) = job.take_panic() {
             std::panic::resume_unwind(p);
         }
     }
@@ -217,7 +265,7 @@ impl Pool {
 fn worker_loop(shared: Arc<Shared>) {
     loop {
         let job = {
-            let mut q = shared.queue.lock().unwrap();
+            let mut q = plock(&shared.queue);
             loop {
                 match q.front().cloned() {
                     Some(j) => {
@@ -231,18 +279,64 @@ fn worker_loop(shared: Arc<Shared>) {
                             break j;
                         }
                     }
-                    None => q = shared.work_cv.wait(q).unwrap(),
+                    None => q = pwait(&shared.work_cv, q),
                 }
             }
         };
-        loop {
-            let i = job.next.fetch_add(1, Ordering::Relaxed);
-            if i >= job.total {
-                break;
-            }
-            job.execute_one(i);
-        }
+        job.help_drain();
     }
+}
+
+// ---------------------------------------------------------------------
+// Safe chunk hand-off
+// ---------------------------------------------------------------------
+
+/// One-shot hand-off slots: payload `i` (a disjoint `&mut` block, an
+/// output cell, …) parks in slot `i` until the pool task claiming that
+/// index takes it.  This replaces the old `SendPtr` raw-pointer block
+/// construction: disjointness now comes from `split_at_mut` at build
+/// time (checked by the borrow system), and "each chunk claimed exactly
+/// once" is asserted at runtime by the take-once slot.
+struct TakeSlots<T>(Vec<Mutex<Option<T>>>);
+
+impl<T> TakeSlots<T> {
+    fn new(items: Vec<T>) -> TakeSlots<T> {
+        TakeSlots(items.into_iter().map(|it| Mutex::new(Some(it))).collect())
+    }
+
+    /// Claim slot `i`, panicking if it was already claimed — the pool
+    /// hands each index to exactly one task, and this enforces it.
+    fn take(&self, i: usize) -> T {
+        plock(&self.0[i])
+            .take()
+            .expect("pool dispatched the same chunk index twice")
+    }
+}
+
+/// Split `data` (row-major `[m, n]`) into `chunks` leading blocks of
+/// `rows_per` whole rows each (the last possibly short), paired with the
+/// block's first row index.  Built by repeated `split_at_mut`, so the
+/// blocks are disjoint by construction and a zero-width (`n == 0`)
+/// matrix yields empty blocks instead of UB or a panic.
+fn row_blocks<'a, T>(
+    mut data: &'a mut [T],
+    m: usize,
+    n: usize,
+    rows_per: usize,
+    chunks: usize,
+) -> Vec<(usize, &'a mut [T])> {
+    debug_assert_eq!(data.len(), m * n);
+    debug_assert_eq!(chunks, m.div_ceil(rows_per.max(1)));
+    let mut blocks = Vec::with_capacity(chunks);
+    for ci in 0..chunks {
+        let row0 = ci * rows_per;
+        let rows = rows_per.min(m - row0);
+        let (head, tail) = data.split_at_mut(rows * n);
+        data = tail;
+        blocks.push((row0, head));
+    }
+    debug_assert!(data.is_empty(), "blocks must cover the whole buffer");
+    blocks
 }
 
 // ---------------------------------------------------------------------
@@ -250,7 +344,7 @@ fn worker_loop(shared: Arc<Shared>) {
 // ---------------------------------------------------------------------
 
 /// Apply `f` to every index in `0..n`, in parallel, collecting results in
-/// index order.  `f` must be `Sync`; results are written to disjoint slots.
+/// index order.  `f` must be `Sync`; results land in disjoint slots.
 pub fn parallel_map<T, F>(n: usize, f: F) -> Vec<T>
 where
     T: Send,
@@ -260,17 +354,14 @@ where
     if workers <= 1 || n < 2 {
         return (0..n).map(&f).collect();
     }
-    let mut out: Vec<Option<T>> = Vec::with_capacity(n);
-    out.resize_with(n, || None);
-    let out_ptr = SendPtr(out.as_mut_ptr());
+    let out: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
     Pool::global().run_fn(n, |i| {
         let v = f(i);
-        // SAFETY: each index is claimed by exactly one pool task, so
-        // writes land in disjoint slots, and `run` joins every task
-        // before `out` is read below.
-        unsafe { *out_ptr.0.add(i) = Some(v) };
+        *plock(&out[i]) = Some(v);
     });
-    out.into_iter().map(|v| v.expect("slot filled")).collect()
+    out.into_iter()
+        .map(|slot| plock(&slot).take().expect("pool ran every index"))
+        .collect()
 }
 
 /// Run `f(first_row, block)` over a row-major `[m, n]` matrix split into
@@ -310,15 +401,9 @@ where
     }
     let rows_per = m.div_ceil(workers);
     let chunks = m.div_ceil(rows_per);
-    let base = SendPtr(data.as_mut_ptr());
+    let slots = TakeSlots::new(row_blocks(data, m, n, rows_per, chunks));
     Pool::global().run_fn(chunks, |ci| {
-        let row0 = ci * rows_per;
-        let rows = rows_per.min(m - row0);
-        // SAFETY: chunk `ci` covers rows [row0, row0 + rows), disjoint
-        // across chunk indices and in bounds (row0 < m because
-        // chunks = ceil(m / rows_per)); `run` joins every chunk before
-        // `data` is usable again.
-        let block = unsafe { std::slice::from_raw_parts_mut(base.0.add(row0 * n), rows * n) };
+        let (row0, block) = slots.take(ci);
         f(row0, block);
     });
 }
@@ -344,10 +429,10 @@ pub fn parallel_row_chunks_pair_n<T, U, F>(
     U: Send,
     F: Fn(usize, &mut [T], &mut [U]) + Sync,
 {
-    // Hard asserts, not debug: the raw-pointer block construction below
-    // is only sound for exactly-sized buffers, and this is a safe pub
-    // API — a mis-sized release-build caller must panic, not write out
-    // of bounds.  (One-time cost per call, not per row.)
+    // Hard asserts, not debug: this is a safe pub API whose contract is
+    // exactly-sized buffers; a mis-sized release-build caller must hear
+    // about it here, not from a skewed block split.  (One-time cost per
+    // call, not per row.)
     assert_eq!(a.len(), m * na);
     assert_eq!(b.len(), m * nb);
     if m == 0 {
@@ -360,17 +445,16 @@ pub fn parallel_row_chunks_pair_n<T, U, F>(
     }
     let rows_per = m.div_ceil(workers);
     let chunks = m.div_ceil(rows_per);
-    let pa = SendPtr(a.as_mut_ptr());
-    let pb = SendPtr(b.as_mut_ptr());
+    let blocks_a = row_blocks(a, m, na, rows_per, chunks);
+    let blocks_b = row_blocks(b, m, nb, rows_per, chunks);
+    let paired: Vec<(usize, &mut [T], &mut [U])> = blocks_a
+        .into_iter()
+        .zip(blocks_b)
+        .map(|((row0, ba), (_, bb))| (row0, ba, bb))
+        .collect();
+    let slots = TakeSlots::new(paired);
     Pool::global().run_fn(chunks, |ci| {
-        let row0 = ci * rows_per;
-        let rows = rows_per.min(m - row0);
-        // SAFETY: chunk `ci` covers rows [row0, row0 + rows) of BOTH
-        // buffers — disjoint across chunk indices and in bounds exactly
-        // as in `parallel_row_chunks_n`; `run` joins every chunk before
-        // either buffer is usable again.
-        let ba = unsafe { std::slice::from_raw_parts_mut(pa.0.add(row0 * na), rows * na) };
-        let bb = unsafe { std::slice::from_raw_parts_mut(pb.0.add(row0 * nb), rows * nb) };
+        let (row0, ba, bb) = slots.take(ci);
         f(row0, ba, bb);
     });
 }
@@ -392,23 +476,13 @@ where
         f(0, data);
         return;
     }
-    let base = SendPtr(data.as_mut_ptr());
+    let slots = TakeSlots::new(data.chunks_mut(chunk).collect::<Vec<_>>());
     Pool::global().run_fn(chunks, |ci| {
-        let start = ci * chunk;
-        let len = chunk.min(n - start);
-        // SAFETY: disjoint [start, start + len) ranges, joined before
-        // `data` is usable again.
-        let piece = unsafe { std::slice::from_raw_parts_mut(base.0.add(start), len) };
-        f(ci, piece);
+        f(ci, slots.take(ci));
     });
 }
 
-struct SendPtr<T>(*mut T);
-// SAFETY: used only for disjoint writes inside a joined job (see above).
-unsafe impl<T> Sync for SendPtr<T> {}
-unsafe impl<T> Send for SendPtr<T> {}
-
-#[cfg(test)]
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
 
@@ -451,6 +525,21 @@ mod tests {
         parallel_row_chunks(&mut one, 1, 3, |row0, block| {
             assert_eq!((row0, block.len()), (0, 3));
         });
+    }
+
+    #[test]
+    fn row_blocks_partition_exactly() {
+        // The safe split that replaced the raw-pointer arithmetic: same
+        // geometry (leading blocks of rows_per rows, short tail), full
+        // coverage, and zero-width rows degrade to empty blocks.
+        let mut data: Vec<u32> = (0..35).collect(); // 7 rows × 5 cols
+        let blocks = row_blocks(&mut data, 7, 5, 3, 3);
+        let shape: Vec<(usize, usize)> = blocks.iter().map(|(r, b)| (*r, b.len())).collect();
+        assert_eq!(shape, vec![(0, 15), (3, 15), (6, 5)]);
+        assert_eq!(blocks[1].1[0], 15, "block 1 starts at element row0*n");
+        let mut empty: Vec<u32> = Vec::new();
+        let zblocks = row_blocks(&mut empty, 4, 0, 2, 2);
+        assert!(zblocks.iter().all(|(_, b)| b.is_empty()));
     }
 
     #[test]
@@ -592,6 +681,42 @@ mod tests {
     }
 
     #[test]
+    fn job_done_mutex_recovers_from_poison() {
+        // Poison the done mutex the way a crashing observer would (panic
+        // while holding it), then drive the claim/execute/wake protocol
+        // to completion: plock/pwait shrug the poison off and the
+        // submitter still unblocks.
+        let f: &'static (dyn Fn(usize) + Sync) = Box::leak(Box::new(|_i: usize| {}));
+        let job = Job::new(f, 2);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _g = plock(&job.done);
+            panic!("poison the done mutex");
+        }));
+        assert!(r.is_err());
+        job.help_drain();
+        job.wait_done(); // must not hang or re-panic on the poisoned lock
+        assert!(job.take_panic().is_none());
+    }
+
+    #[test]
+    fn job_panic_slot_recovers_from_poison() {
+        // Even with the panic-payload mutex poisoned, a panicking task
+        // still lands its payload and the submitter still receives it.
+        let f: &'static (dyn Fn(usize) + Sync) =
+            Box::leak(Box::new(|_i: usize| panic!("task boom")));
+        let job = Job::new(f, 1);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _g = plock(&job.panic);
+            panic!("poison the panic mutex");
+        }));
+        assert!(r.is_err());
+        job.help_drain();
+        job.wait_done();
+        let payload = job.take_panic().expect("task panic must be captured");
+        assert_eq!(payload.downcast_ref::<&str>(), Some(&"task boom"));
+    }
+
+    #[test]
     fn nested_submission_completes() {
         // A task that itself forks a join-job must complete (the
         // submitter-helps discipline): outer map over rows, inner map
@@ -637,5 +762,44 @@ mod tests {
                 );
             }
         }
+    }
+}
+
+#[cfg(all(test, loom))]
+mod loom_tests {
+    use super::*;
+    use loom::sync::atomic::{AtomicUsize as LoomUsize, Ordering as LoomOrd};
+
+    /// Model-check the submitter-helps-own-job protocol: a submitter and
+    /// one helper race over the claim counter; across every interleaving
+    /// loom can schedule, each index executes exactly once and the
+    /// submitter's post-join read observes all task effects (so the
+    /// pending AcqRel + done-mutex handshake publishes correctly).
+    #[test]
+    fn loom_job_claim_execute_join() {
+        loom::model(|| {
+            let hits = Arc::new(LoomUsize::new(0));
+            let h = hits.clone();
+            let f: &'static (dyn Fn(usize) + Sync) = Box::leak(Box::new(move |_i: usize| {
+                h.fetch_add(1, LoomOrd::Relaxed);
+            }));
+            let job = Arc::new(Job::new(f, 2));
+            let helper = {
+                let job = job.clone();
+                loom::thread::spawn(move || job.help_drain())
+            };
+            job.help_drain();
+            job.wait_done();
+            // The relaxed counter is only guaranteed to read 2 here if
+            // the countdown/done handshake established happens-before
+            // with both executions — which is the property under check.
+            assert_eq!(
+                hits.load(LoomOrd::Relaxed),
+                2,
+                "submitter unblocked before every index executed"
+            );
+            assert!(job.take_panic().is_none());
+            helper.join().unwrap();
+        });
     }
 }
