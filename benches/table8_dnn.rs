@@ -352,7 +352,20 @@ fn main() {
                 });
             }
         });
-        let snap = server.stats.snapshot();
+        // One live hot-swap before the snapshot so the self-healing
+        // gauges (swap epoch, degraded layers, store health) land in
+        // BENCH_table8.json with non-trivial values — `server.snapshot()`
+        // syncs them from the sessions and hub cache, where the raw
+        // `stats.snapshot()` would report whatever was last folded in.
+        server
+            .infer("lenet", "mul8x8_2", data.image(0).to_vec())
+            .expect("pre-swap request");
+        hub.swap_plan("lenet", "mul8x8_2", axmul::engine::DesignPlan::single("exact8x8"))
+            .expect("hot-swap mul8x8_2 lane to exact");
+        server
+            .infer("lenet", "mul8x8_2", data.image(0).to_vec())
+            .expect("post-swap request");
+        let snap = server.snapshot();
         println!("[serve under load] {snap}");
         b.note_json("serve_under_load", snap.to_json());
         server.shutdown();

@@ -177,7 +177,7 @@ fn main() -> anyhow::Result<()> {
         println!("             {snap}");
     }
     println!("requests        {served}");
-    println!("global          {}", server.stats.snapshot());
+    println!("global          {}", server.snapshot());
     println!(
         "throughput      {:.0} req/s",
         served as f64 / wall.as_secs_f64()

@@ -17,6 +17,7 @@
 //! | `kernel-hot-loop` | kernel-named fns in `gemm.rs`/`simd.rs` (`lut_gemm*`, `lut_conv*`, `gather_*`, `vector_tile*`, `tile16*`) neither read clocks nor allocate |
 //! | `lock-unwrap` | no `.unwrap()`/`.expect()` on lock results outside the poison-tolerant helpers in `util/sync.rs` |
 //! | `registry-table7-drift` | Table VII names ⊆ `DESIGNS_8X8`; registry consts ⊆ `by_name` arms ∩ `all_names`; `DNN_DESIGNS` ⊆ `DESIGNS_8X8` |
+//! | `faults-compiled-out-of-release` | `util/faults.rs` pairs the armed fault module (under `cfg(any(test, debug_assertions))`) with an inert release stub; the fault-arming env variable appears in no other file |
 //!
 //! ## Honesty about the heuristics
 //!
@@ -76,7 +77,7 @@ pub struct Rule {
 // leak its continuation lines into this file's own stripped view when
 // the repo lints itself (see the module docs on the stripper).
 #[rustfmt::skip]
-pub const RULES: [Rule; 6] = [
+pub const RULES: [Rule; 7] = [
     Rule {
         name: "forbid-unsafe-kernels",
         what: "dnn/gemm.rs and dnn/simd.rs must carry #![forbid(unsafe_code)]; no unsafe token anywhere under dnn/",
@@ -100,6 +101,10 @@ pub const RULES: [Rule; 6] = [
     Rule {
         name: "registry-table7-drift",
         what: "paper Table VII names, registry consts, by_name arms and all_names must agree",
+    },
+    Rule {
+        name: "faults-compiled-out-of-release",
+        what: "util/faults.rs pairs the armed fault module under cfg(any(test, debug_assertions)) with an inert release stub; the fault-arming env variable is read nowhere else",
     },
 ];
 
@@ -271,6 +276,7 @@ pub fn lint_files(files: &[SourceFile]) -> Vec<Violation> {
         rule_std_sync(f, slines, &raw, &mut out);
         rule_hot_loop(f, slines, &mut out);
         rule_lock_unwrap(f, slines, &mut out);
+        rule_faults_release(f, slines, &raw, &mut out);
     }
     rule_registry_drift(files, &mut out);
     out
@@ -408,6 +414,62 @@ fn rule_lock_unwrap(f: &SourceFile, slines: &[String], out: &mut Vec<Violation>)
                     msg: format!("{pat}: use the poison-tolerant helpers in util::sync"),
                 });
             }
+        }
+    }
+}
+
+/// The compiled-out-of-release contract of `util/faults.rs`: the file
+/// must pair an armed `mod armed` gated on
+/// `cfg(any(test, debug_assertions))` with an inert stub gated on the
+/// negation, so no fault hook can ship in a release binary; and the
+/// fault-arming environment variable must appear in no other source
+/// file — arming flows through that one seam, never ad-hoc reads.
+fn rule_faults_release(f: &SourceFile, slines: &[String], raw: &[&str], out: &mut Vec<Violation>) {
+    // Assembled at runtime so this file never contains the contiguous
+    // variable name (the scan below would flag its own source).
+    let env_var = ["AXMUL_", "FAULTS"].concat();
+    if f.path.ends_with("util/faults.rs") {
+        let (mut armed_ok, mut stub_ok) = (false, false);
+        for (i, s) in slines.iter().enumerate() {
+            if !s.contains("mod armed") {
+                continue;
+            }
+            // The cfg attribute sits on one of the two lines right above
+            // the module header (repo style keeps them adjacent).
+            let cfg = slines[i.saturating_sub(2)..i]
+                .iter()
+                .rev()
+                .find(|l| l.contains("cfg("));
+            match cfg {
+                Some(l) if l.contains("not(any(test, debug_assertions))") => stub_ok = true,
+                Some(l) if l.contains("any(test, debug_assertions)") => armed_ok = true,
+                _ => {}
+            }
+        }
+        if !(armed_ok && stub_ok) {
+            out.push(Violation {
+                rule: "faults-compiled-out-of-release",
+                path: f.path.clone(),
+                line: 1,
+                msg: format!(
+                    "mod armed must exist under cfg(any(test, debug_assertions)) with an \
+                     inert stub under the negation; found armed={armed_ok}, stub={stub_ok}"
+                ),
+            });
+        }
+        return;
+    }
+    // Raw lines on purpose: even a quoted occurrence (a help string, a
+    // test fixture) would re-create a second arming seam to keep in sync.
+    for (i, l) in raw.iter().enumerate() {
+        if l.contains(&env_var) {
+            out.push(Violation {
+                rule: "faults-compiled-out-of-release",
+                path: f.path.clone(),
+                line: i + 1,
+                msg: "the fault-arming environment variable may only appear in util/faults.rs"
+                    .into(),
+            });
         }
     }
 }
@@ -830,6 +892,58 @@ mod tests {
         assert_eq!(lint_files(&files), vec![]);
     }
 
+    fn faults_fixture(armed_cfg: &str, stub_cfg: &str) -> SourceFile {
+        file(
+            "rust/src/util/faults.rs",
+            &[
+                armed_cfg,
+                "mod armed {",
+                "    pub fn compiled_in() -> bool { true }",
+                "}",
+                stub_cfg,
+                "mod armed {",
+                "    pub fn compiled_in() -> bool { false }",
+                "}",
+                "pub use armed::compiled_in;",
+            ],
+        )
+    }
+
+    #[test]
+    fn paired_fault_modules_pass() {
+        let files = vec![faults_fixture(
+            "#[cfg(any(test, debug_assertions))]",
+            "#[cfg(not(any(test, debug_assertions)))]",
+        )];
+        assert_eq!(lint_files(&files), vec![]);
+    }
+
+    #[test]
+    fn unpaired_fault_module_is_flagged() {
+        // cfg(test) alone would strip the layer from debug binaries (the
+        // chaos harness runs there), and the missing negated stub means
+        // nothing pins the release build to the inert surface.
+        let files = vec![faults_fixture("#[cfg(test)]", "#[allow(dead_code)]")];
+        let v = lint_files(&files);
+        assert_eq!(rules_hit(&v), vec!["faults-compiled-out-of-release"]);
+        assert!(v[0].msg.contains("armed=false, stub=false"), "{}", v[0].msg);
+    }
+
+    #[test]
+    fn env_var_outside_faults_is_flagged() {
+        // The seeded violation: any other file naming the fault-arming
+        // variable (assembled here so this test cannot flag itself).
+        let var = ["AXMUL_", "FAULTS"].concat();
+        let read = format!("    let spec = std::env::var(\"{var}\");");
+        let files = vec![file(
+            "rust/src/coordinator/server.rs",
+            &["fn arm() {", read.as_str(), "}"],
+        )];
+        let v = lint_files(&files);
+        assert_eq!(rules_hit(&v), vec!["faults-compiled-out-of-release"]);
+        assert_eq!(v[0].line, 2);
+    }
+
     #[test]
     fn stripper_handles_chars_escapes_and_block_comments() {
         let text = [
@@ -862,7 +976,7 @@ mod tests {
 
     #[test]
     fn every_rule_has_a_listing() {
-        assert_eq!(RULES.len(), 6);
+        assert_eq!(RULES.len(), 7);
         let v = Violation {
             rule: "lock-unwrap",
             path: "rust/src/x.rs".into(),

@@ -1,13 +1,20 @@
 //! The concurrency protocols under model check, as [`Model`]s for the
 //! in-repo schedule enumerator.
 //!
-//! Three protocols, mirroring the three `loom_` test groups:
+//! Four protocols:
 //!
 //! * [`LaneModel`] — drives the **real** production state machine
 //!   ([`LaneState`] from `coordinator::server`) through every
 //!   interleaving of producers, parking workers and a close/abandon
 //!   step.  Because `LaneState` is pure, nothing is transliterated: a
 //!   bug in `admit`/`take`/`close` ordering fails here directly.
+//! * [`SwapModel`] — the hot-swap binding publication of
+//!   `engine::session`: batch workers capture a session's published
+//!   binding once and serve from the capture while a swapper replaces
+//!   it.  The atomic publisher (one pointer store for the whole
+//!   `PlanBinding`) keeps the binding's coupled halves consistent in
+//!   every interleaving; the seeded split-publish variant is the bug the
+//!   single-`Arc` design makes impossible, and the enumerator finds it.
 //! * [`PoolModel`] — a sequentially-consistent transliteration of the
 //!   thread pool's `Job` claim/execute/countdown/wake protocol
 //!   (`util::threadpool`).  SC is the one gap versus production code
@@ -186,6 +193,169 @@ impl Model for LaneModel {
         }
         if self.admitted.len() + self.rejected != self.n_producers() {
             return Err("an admission vanished without an outcome".into());
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Hot-swap binding publication
+// ---------------------------------------------------------------------
+
+/// Where one modeled batch worker is in its capture/serve loop.
+#[derive(Clone, Debug, PartialEq, Eq)]
+enum ReaderAt {
+    /// Will capture the published binding when next scheduled (the
+    /// worker's once-per-batch `Arc` clone).
+    Capture,
+    /// Captured `(luts_epoch, comp_epoch)`; will serve the batch from
+    /// the capture when next scheduled.
+    Serve(u64, u64),
+    Done,
+}
+
+/// The hot-swap publication protocol of `engine::session`: a session's
+/// binding is ONE `Arc<PlanBinding>` behind an RwLock — a batch worker
+/// clones the pointer once per batch and serves the whole batch from
+/// its clone, while a swapper builds the replacement off-lock and
+/// publishes it with a single pointer store.
+///
+/// The model splits the binding into its two coupled halves (the LUT
+/// set and the compensation vectors) as epoch counters.  The atomic
+/// publisher bumps both in one step, so no reader can ever capture a
+/// mixed pair; [`SwapModel::with_split_publish`] publishes the halves
+/// in two steps — the torn-binding bug that publishing fields
+/// separately would reintroduce — and the enumerator must find the
+/// schedule where a reader serves a blend.
+#[derive(Clone)]
+pub struct SwapModel {
+    /// Published halves of the binding: the epoch of the swap that last
+    /// wrote each.  Production couples them inside one `PlanBinding`.
+    luts_epoch: u64,
+    comp_epoch: u64,
+    readers: Vec<ReaderAt>,
+    /// Batches left to serve, per reader.
+    remaining: Vec<usize>,
+    /// Pairs each reader served with, in serve order.
+    observed: Vec<Vec<(u64, u64)>>,
+    /// Swaps the swapper has yet to publish.
+    swaps_left: usize,
+    total_swaps: u64,
+    /// Publish the halves in two separate steps (the seeded bug).
+    split: bool,
+    /// Split publisher mid-swap: the comp half still to be stored.
+    pending_comp: Option<u64>,
+}
+
+impl SwapModel {
+    /// `readers` batch workers serving `batches_each` batches, racing
+    /// one swapper that publishes `swaps` atomic rebinds.
+    pub fn new(readers: usize, batches_each: usize, swaps: usize) -> SwapModel {
+        SwapModel {
+            luts_epoch: 0,
+            comp_epoch: 0,
+            readers: vec![ReaderAt::Capture; readers],
+            remaining: vec![batches_each.max(1); readers],
+            observed: vec![Vec::new(); readers],
+            swaps_left: swaps,
+            total_swaps: swaps as u64,
+            split: false,
+            pending_comp: None,
+        }
+    }
+
+    /// Same system, but the swapper stores the two halves in separate
+    /// steps — the enumerator must catch a reader tearing between them.
+    pub fn with_split_publish(readers: usize, batches_each: usize, swaps: usize) -> SwapModel {
+        SwapModel {
+            split: true,
+            ..SwapModel::new(readers, batches_each, swaps)
+        }
+    }
+
+    fn n_readers(&self) -> usize {
+        self.readers.len()
+    }
+}
+
+impl Model for SwapModel {
+    fn threads(&self) -> usize {
+        self.readers.len() + 1 // swapper last
+    }
+
+    fn enabled(&self, t: usize) -> bool {
+        !self.done(t)
+    }
+
+    fn done(&self, t: usize) -> bool {
+        if t < self.n_readers() {
+            self.readers[t] == ReaderAt::Done
+        } else {
+            self.swaps_left == 0 && self.pending_comp.is_none()
+        }
+    }
+
+    fn step(&mut self, t: usize) {
+        if t < self.n_readers() {
+            self.readers[t] = match self.readers[t] {
+                ReaderAt::Capture => ReaderAt::Serve(self.luts_epoch, self.comp_epoch),
+                ReaderAt::Serve(l, c) => {
+                    self.observed[t].push((l, c));
+                    self.remaining[t] -= 1;
+                    if self.remaining[t] == 0 {
+                        ReaderAt::Done
+                    } else {
+                        ReaderAt::Capture
+                    }
+                }
+                ReaderAt::Done => unreachable!("stepped a done reader"),
+            };
+        } else if let Some(c) = self.pending_comp {
+            // Second half of a split publish.
+            self.comp_epoch = c;
+            self.pending_comp = None;
+        } else {
+            let next = self.luts_epoch + 1;
+            self.luts_epoch = next;
+            if self.split {
+                self.pending_comp = Some(next);
+            } else {
+                self.comp_epoch = next; // one step: the single Arc store
+            }
+            self.swaps_left -= 1;
+        }
+    }
+
+    fn invariant(&self) -> Result<(), String> {
+        for (r, pairs) in self.observed.iter().enumerate() {
+            for window in pairs.windows(2) {
+                if window[1].0 < window[0].0 {
+                    return Err(format!(
+                        "reader {r} saw the binding epoch move backwards: {pairs:?}"
+                    ));
+                }
+            }
+            if let Some(&(l, c)) = pairs.iter().find(|&&(l, c)| l != c) {
+                return Err(format!(
+                    "reader {r} served a torn binding: LUT epoch {l}, compensation epoch {c}"
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    fn finale(&self) -> Result<(), String> {
+        if self.luts_epoch != self.total_swaps || self.comp_epoch != self.total_swaps {
+            return Err(format!(
+                "published epochs ({}, {}) != {} completed swaps",
+                self.luts_epoch, self.comp_epoch, self.total_swaps
+            ));
+        }
+        if let Some(r) = (0..self.n_readers()).find(|&r| self.remaining[r] != 0) {
+            return Err(format!(
+                "reader {r} finished with {} batches unserved",
+                self.remaining[r]
+            ));
         }
         Ok(())
     }
@@ -448,6 +618,10 @@ pub fn run_all() -> Vec<(&'static str, Result<Explored, ModelError>)> {
             explore(&LaneModel::new(1, &[10, 20, 30], 1, true), 64),
         ),
         (
+            "swap: 2 readers x 2 batches vs 2 atomic rebinds",
+            explore(&SwapModel::new(2, 2, 2), 64),
+        ),
+        (
             "pool: total=2 job, submitter + 2 helpers",
             explore(&PoolModel::new(2, 2), 64),
         ),
@@ -501,6 +675,34 @@ mod tests {
             alternating.step(t);
         }
         assert_eq!(alternating.served, vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn captured_binding_survives_a_concurrent_swap() {
+        // The model's analogue of "an in-flight batch finishes on the
+        // old plan": a swap landing between capture and serve does not
+        // retroactively change what the batch serves with.
+        let mut m = SwapModel::new(1, 1, 1);
+        m.step(0); // reader captures epoch 0
+        m.step(1); // swapper publishes epoch 1
+        m.step(0); // reader serves from its capture
+        assert_eq!(m.observed[0], vec![(0, 0)]);
+        assert!(m.invariant().is_ok());
+        assert!(m.finale().is_ok());
+    }
+
+    #[test]
+    fn split_binding_publish_is_caught() {
+        // Publishing the binding's halves in two stores — instead of the
+        // production single-Arc swap — must yield a schedule where some
+        // reader serves a blend, and the enumerator must find it.
+        let err = explore(&SwapModel::with_split_publish(1, 2, 1), 64).unwrap_err();
+        match err {
+            ModelError::Invariant { msg, .. } => {
+                assert!(msg.contains("torn binding"), "{msg}")
+            }
+            other => panic!("expected a torn-binding violation, got {other}"),
+        }
     }
 
     #[test]

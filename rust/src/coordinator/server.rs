@@ -55,18 +55,31 @@
 //!   (queued-but-unserved requests see `Closed`);
 //!   [`InferServer::shutdown_drain`] first answers everything already
 //!   admitted, then joins.
+//! * **Live hot-swap + degradation visibility.**  A lane serves whatever
+//!   [`crate::engine::PlanBinding`] its session currently publishes;
+//!   [`ModelHub::swap_plan`] rebinds between batches without closing the
+//!   lane, and [`InferServer::snapshot`] folds the session-level
+//!   self-healing state (swap epoch, layers degraded to the exact
+//!   fallback) plus the hub cache's store counters (quarantined /
+//!   legacy-unverified artifacts) into the stats picture.
 //! * **Observability.**  [`ServerStats`] carries queue-wait and
 //!   end-to-end [`LatencyHistogram`]s plus a queue-depth [`Gauge`] per
 //!   lane (and globally); [`ServerStats::snapshot`] renders the whole
 //!   picture as one [`StatsSnapshot`] (Display + JSON) so callers stop
 //!   hand-formatting counters.
+//! * **Fault injection.**  The compute path probes
+//!   [`crate::util::faults::batch_checkpoint`] inside its
+//!   `catch_unwind`, and [`InferServer::start`] arms any
+//!   environment-supplied fault plan — in test/debug builds only; the
+//!   release stub compiles the whole layer out.
 //!
 //! Idle lanes burn no CPU: workers park on the lane queue's condvar and
 //! are only woken by a submission or by shutdown (no poll interval).
 
 use crate::dnn::argmax;
-use crate::engine::{ModelHub, Session, SessionKey, Workspace};
+use crate::engine::{LutCache, ModelHub, Session, SessionKey, Workspace};
 use crate::metrics::{Gauge, HistSnapshot, LatencyHistogram};
+use crate::util::faults;
 use crate::util::json::Json;
 use crate::util::sync::{
     mpsc, plock, pwait, pwait_timeout, thread, Arc, AtomicU64, Condvar, Mutex, Ordering,
@@ -230,6 +243,20 @@ pub struct ServerStats {
     /// Worker incarnations respawned by the supervision loop after a
     /// panic — the lane's capacity never silently shrank.
     pub worker_respawns: AtomicU64,
+    /// Hot swaps this lane's session has absorbed (its binding epoch),
+    /// synced from the session on [`InferServer::snapshot`] /
+    /// [`InferServer::session_stats`].  Global aggregate: sum over lanes.
+    pub swaps: AtomicU64,
+    /// Layers currently degraded to the exact fallback design in this
+    /// lane's live binding (see [`crate::engine::Degrade`]); synced like
+    /// `swaps`.
+    pub degraded_layers: AtomicU64,
+    /// Store artifacts quarantined by the hub cache's verified loads.
+    /// Only meaningful on the global aggregate (the cache is shared).
+    pub store_quarantined: AtomicU64,
+    /// Legacy unfooted artifacts the hub cache accepted unverified.
+    /// Only meaningful on the global aggregate.
+    pub legacy_unverified: AtomicU64,
     /// Time from submit to a worker dequeuing the request.
     pub queue_wait: LatencyHistogram,
     /// Time from submit to the response being sent.
@@ -255,6 +282,10 @@ impl Default for ServerStats {
             shed: AtomicU64::new(0),
             worker_panics: AtomicU64::new(0),
             worker_respawns: AtomicU64::new(0),
+            swaps: AtomicU64::new(0),
+            degraded_layers: AtomicU64::new(0),
+            store_quarantined: AtomicU64::new(0),
+            legacy_unverified: AtomicU64::new(0),
             queue_wait: LatencyHistogram::new(),
             e2e: LatencyHistogram::new(),
             queue_depth: Gauge::new(),
@@ -287,6 +318,10 @@ impl ServerStats {
             shed: self.shed.load(Ordering::Relaxed),
             worker_panics: self.worker_panics.load(Ordering::Relaxed),
             worker_respawns: self.worker_respawns.load(Ordering::Relaxed),
+            swaps: self.swaps.load(Ordering::Relaxed),
+            degraded_layers: self.degraded_layers.load(Ordering::Relaxed),
+            store_quarantined: self.store_quarantined.load(Ordering::Relaxed),
+            legacy_unverified: self.legacy_unverified.load(Ordering::Relaxed),
             queue_depth: self.queue_depth.get(),
             queue_depth_max: self.queue_depth.high_water(),
             queue_wait: self.queue_wait.snapshot(),
@@ -308,6 +343,10 @@ pub struct StatsSnapshot {
     pub shed: u64,
     pub worker_panics: u64,
     pub worker_respawns: u64,
+    pub swaps: u64,
+    pub degraded_layers: u64,
+    pub store_quarantined: u64,
+    pub legacy_unverified: u64,
     pub queue_depth: u64,
     pub queue_depth_max: u64,
     pub queue_wait: HistSnapshot,
@@ -327,6 +366,19 @@ impl StatsSnapshot {
             "worker_respawns".into(),
             Json::Num(self.worker_respawns as f64),
         );
+        o.insert("swaps".into(), Json::Num(self.swaps as f64));
+        o.insert(
+            "degraded_layers".into(),
+            Json::Num(self.degraded_layers as f64),
+        );
+        o.insert(
+            "store_quarantined".into(),
+            Json::Num(self.store_quarantined as f64),
+        );
+        o.insert(
+            "legacy_unverified".into(),
+            Json::Num(self.legacy_unverified as f64),
+        );
         o.insert(
             "queue_depth_max".into(),
             Json::Num(self.queue_depth_max as f64),
@@ -342,7 +394,8 @@ impl fmt::Display for StatsSnapshot {
         write!(
             f,
             "served {} in {} batches (mean {:.2}/batch) | rejected {} shed {} \
-             panics {} respawns {} | depth {} (max {}) | queue [{}] | e2e [{}]",
+             panics {} respawns {} | swaps {} degraded {} | store quarantined {} \
+             legacy {} | depth {} (max {}) | queue [{}] | e2e [{}]",
             self.served,
             self.batches,
             self.mean_batch,
@@ -350,6 +403,10 @@ impl fmt::Display for StatsSnapshot {
             self.shed,
             self.worker_panics,
             self.worker_respawns,
+            self.swaps,
+            self.degraded_layers,
+            self.store_quarantined,
+            self.legacy_unverified,
             self.queue_depth,
             self.queue_depth_max,
             self.queue_wait,
@@ -639,8 +696,21 @@ impl<R> LaneQueue<R> {
 struct SessionLane {
     queue: Arc<LaneQueue<InferRequest>>,
     stats: Arc<ServerStats>,
+    /// The session this lane serves — kept so stats reads can sync the
+    /// session-level self-healing state (binding epoch, degraded layers)
+    /// into the lane counters without a new worker-side write path.
+    sess: Arc<Session>,
     /// Floats per image of this lane's model (submit-time validation).
     image_len: usize,
+}
+
+/// Fold a lane's session-level robustness state into its stats: the
+/// binding epoch counts absorbed hot-swaps, the live binding's degraded
+/// set counts layers running on the exact fallback right now.
+fn sync_lane(lane: &SessionLane) {
+    lane.stats.swaps.store(lane.sess.epoch(), Ordering::Relaxed);
+    let degraded = lane.sess.degraded_layers().len() as u64;
+    lane.stats.degraded_layers.store(degraded, Ordering::Relaxed);
 }
 
 /// A running service instance.  `shutdown()` (or drop) stops the workers.
@@ -648,6 +718,10 @@ pub struct InferServer {
     lanes: BTreeMap<SessionKey, SessionLane>,
     /// Aggregate stats across all sessions.
     pub stats: Arc<ServerStats>,
+    /// The hub's shared LUT cache — the source of the store-health
+    /// counters (`store_quarantined` / `legacy_unverified`) that
+    /// [`InferServer::snapshot`] folds into the global stats.
+    cache: Arc<LutCache>,
     workers: Vec<thread::JoinHandle<()>>,
 }
 
@@ -656,6 +730,9 @@ impl InferServer {
     /// independent dynamic-batching lane and `workers` supervised worker
     /// threads per session.
     pub fn start(hub: &ModelHub, policy: BatchPolicy, workers: usize) -> Self {
+        // Arm any environment-supplied fault plan (test/debug builds
+        // only; the release stub is a no-op).
+        faults::arm_from_env();
         let sessions = hub.sessions();
         assert!(!sessions.is_empty(), "hub has no sessions to serve");
         let global = Arc::new(ServerStats::default());
@@ -679,6 +756,7 @@ impl InferServer {
                 SessionLane {
                     queue,
                     stats,
+                    sess,
                     image_len,
                 },
             );
@@ -686,6 +764,7 @@ impl InferServer {
         InferServer {
             lanes,
             stats: global,
+            cache: hub.cache().clone(),
             workers: handles,
         }
     }
@@ -763,11 +842,38 @@ impl InferServer {
         self.submit(model, design, image)?.recv()
     }
 
-    /// Per-session stats, if the session is being served.
+    /// Per-session stats, if the session is being served.  Syncs the
+    /// lane's swap/degradation gauges from its session first, so the
+    /// returned handle reads coherently.
     pub fn session_stats(&self, model: &str, design: &str) -> Option<Arc<ServerStats>> {
-        self.lanes
-            .get(&SessionKey::new(model, design))
-            .map(|l| l.stats.clone())
+        self.lanes.get(&SessionKey::new(model, design)).map(|l| {
+            sync_lane(l);
+            l.stats.clone()
+        })
+    }
+
+    /// One coherent picture of the whole server: syncs every lane's
+    /// session-level self-healing state (swap epoch, degraded layers)
+    /// into its stats, folds the sums plus the hub cache's store-health
+    /// counters into the global aggregate, and snapshots it.  Prefer
+    /// this over `server.stats.snapshot()`, which leaves those gauges
+    /// at their last synced values.
+    pub fn snapshot(&self) -> StatsSnapshot {
+        let (mut swaps, mut degraded) = (0u64, 0u64);
+        for lane in self.lanes.values() {
+            sync_lane(lane);
+            swaps += lane.stats.swaps.load(Ordering::Relaxed);
+            degraded += lane.stats.degraded_layers.load(Ordering::Relaxed);
+        }
+        self.stats.swaps.store(swaps, Ordering::Relaxed);
+        self.stats.degraded_layers.store(degraded, Ordering::Relaxed);
+        self.stats
+            .store_quarantined
+            .store(self.cache.store_quarantined(), Ordering::Relaxed);
+        self.stats
+            .legacy_unverified
+            .store(self.cache.legacy_unverified(), Ordering::Relaxed);
+        self.stats.snapshot()
     }
 
     /// Current queue depth of a lane — the load-shedding signal an
@@ -814,38 +920,6 @@ impl Drop for InferServer {
         // explicit shutdown) cannot leave threads parked forever.
         for lane in self.lanes.values() {
             lane.queue.close(false);
-        }
-    }
-}
-
-/// Test-only fault injection: lets the robustness tests deterministically
-/// wedge or poison a lane's compute from request *data*, standing in for
-/// a corrupted LUT/QNet.  Compiled out of non-test builds entirely
-/// (and of loom builds: chaos drives OS-thread sleeps a loom model
-/// cannot schedule).
-#[cfg(all(test, not(loom)))]
-pub(crate) mod chaos {
-    use crate::util::sync::{AtomicBool, Ordering};
-
-    /// An image whose first float is this marker panics inside the
-    /// compute region (after batch collection, before the response).
-    pub const PANIC_PIXEL: f32 = 1.0e30;
-    /// An image whose first float is this marker spins inside compute
-    /// while [`STALL_GATE`] is high — tests use it to back a queue up.
-    pub const STALL_PIXEL: f32 = -1.0e30;
-    pub static STALL_GATE: AtomicBool = AtomicBool::new(false);
-
-    pub fn maybe_trip_entries(batch: &[(super::InferRequest, std::time::Duration)]) {
-        for (r, _) in batch {
-            match r.image.first() {
-                Some(&p) if p == PANIC_PIXEL => panic!("chaos: injected compute panic"),
-                Some(&p) if p == STALL_PIXEL => {
-                    while STALL_GATE.load(Ordering::Acquire) {
-                        std::thread::sleep(std::time::Duration::from_millis(1));
-                    }
-                }
-                _ => {}
-            }
         }
     }
 }
@@ -981,8 +1055,11 @@ fn worker_incarnation(
             stacked.extend_from_slice(&req.image);
         }
         let result = catch_unwind(AssertUnwindSafe(|| {
-            #[cfg(all(test, not(loom)))]
-            chaos::maybe_trip_entries(&batch);
+            // Fault-injection probe (inert stub in release builds): trips
+            // data-driven pixel markers and armed Nth-batch plans inside
+            // the catch_unwind, so an injected panic answers every member
+            // with a typed failure exactly like an organic one.
+            faults::batch_checkpoint(batch.iter().map(|(r, _)| r.image.as_slice()));
             sess.infer_batch_timed(&stacked, bsize, &mut ws)
         }));
         match result {
@@ -1093,24 +1170,22 @@ mod tests {
     use crate::dnn::QNet;
     use crate::engine::LutCache;
 
-    /// Chaos tests share the global STALL_GATE; serialize them so one
-    /// test's release can't free another test's stalled worker.
-    static CHAOS_LOCK: Mutex<()> = Mutex::new(());
-
-    /// Raises the stall gate; lowers it on drop even if the test panics.
+    /// Raises the fault layer's stall gate; lowers it on drop even if
+    /// the test panics.  Tests using it serialize on `faults::serial()`
+    /// — the gate is process-global.
     struct StallGuard;
     impl StallGuard {
         fn raise() -> StallGuard {
-            chaos::STALL_GATE.store(true, Ordering::Release);
+            faults::set_stall(true);
             StallGuard
         }
         fn release(&self) {
-            chaos::STALL_GATE.store(false, Ordering::Release);
+            faults::set_stall(false);
         }
     }
     impl Drop for StallGuard {
         fn drop(&mut self) {
-            chaos::STALL_GATE.store(false, Ordering::Release);
+            faults::set_stall(false);
         }
     }
 
@@ -1284,8 +1359,9 @@ mod tests {
 
         let data = Dataset::synth_mnist(8, 7);
         let mut ws = Workspace::new();
+        let luts = sess.luts();
         let direct: Vec<Vec<f32>> = (0..8)
-            .map(|i| qnet.forward_batch_luts(data.image(i), 1, &sess.luts, None, &mut ws))
+            .map(|i| qnet.forward_batch_luts(data.image(i), 1, &luts, None, &mut ws))
             .collect();
 
         let server = InferServer::start(&hub, BatchPolicy::default(), 2);
@@ -1436,7 +1512,7 @@ mod tests {
 
     #[test]
     fn queue_full_rejections_match_counters() {
-        let _serial = plock(&CHAOS_LOCK);
+        let _serial = faults::serial();
         let gate = StallGuard::raise();
         let (hub, _) = single_session_hub("exact8x8");
         let cap = 4usize;
@@ -1453,7 +1529,7 @@ mod tests {
         // Wedge the single worker inside compute so the queue can only
         // fill, never drain.
         let stalled = server
-            .submit("lenet", "exact8x8", vec![chaos::STALL_PIXEL; 784])
+            .submit("lenet", "exact8x8", vec![faults::STALL_PIXEL; 784])
             .unwrap();
         wait_for_empty_queue(&server, "lenet", "exact8x8");
         // Fill the lane to capacity K…
@@ -1496,7 +1572,7 @@ mod tests {
 
     #[test]
     fn panicked_batch_answers_every_peer_and_lane_survives() {
-        let _serial = plock(&CHAOS_LOCK);
+        let _serial = faults::serial();
         let (hub, _) = single_session_hub("exact8x8");
         let server = InferServer::start(
             &hub,
@@ -1510,7 +1586,7 @@ mod tests {
         // One poisoned request plus two healthy peers, submitted within
         // the batching window of a single worker: one batch, one panic.
         let poisoned = server
-            .submit("lenet", "exact8x8", vec![chaos::PANIC_PIXEL; 784])
+            .submit("lenet", "exact8x8", vec![faults::PANIC_PIXEL; 784])
             .unwrap();
         let peers: Vec<_> = (0..2)
             .map(|_| server.submit("lenet", "exact8x8", vec![0.25; 784]).unwrap())
@@ -1520,7 +1596,7 @@ mod tests {
             match h.recv() {
                 Err(SubmitError::Compute { key, reason }) => {
                     assert_eq!(key, SessionKey::new("lenet", "exact8x8"));
-                    assert!(reason.contains("chaos"), "member {i} reason: {reason}");
+                    assert!(reason.contains("fault"), "member {i} reason: {reason}");
                 }
                 other => panic!("batch member {i}: expected Compute error, got {other:?}"),
             }
@@ -1538,7 +1614,7 @@ mod tests {
 
     #[test]
     fn expired_deadline_is_shed_before_compute() {
-        let _serial = plock(&CHAOS_LOCK);
+        let _serial = faults::serial();
         let gate = StallGuard::raise();
         let (hub, _) = single_session_hub("exact8x8");
         let server = InferServer::start(
@@ -1551,7 +1627,7 @@ mod tests {
             1,
         );
         let stalled = server
-            .submit("lenet", "exact8x8", vec![chaos::STALL_PIXEL; 784])
+            .submit("lenet", "exact8x8", vec![faults::STALL_PIXEL; 784])
             .unwrap();
         wait_for_empty_queue(&server, "lenet", "exact8x8");
         // This deadline is already unmeetable; the worker is wedged, so
@@ -1587,7 +1663,7 @@ mod tests {
 
     #[test]
     fn shutdown_without_drain_closes_queued_requests() {
-        let _serial = plock(&CHAOS_LOCK);
+        let _serial = faults::serial();
         let _gate = StallGuard::raise();
         let (hub, _) = single_session_hub("exact8x8");
         let server = InferServer::start(
@@ -1600,7 +1676,7 @@ mod tests {
             1,
         );
         let stalled = server
-            .submit("lenet", "exact8x8", vec![chaos::STALL_PIXEL; 784])
+            .submit("lenet", "exact8x8", vec![faults::STALL_PIXEL; 784])
             .unwrap();
         wait_for_empty_queue(&server, "lenet", "exact8x8");
         let victim = server.submit("lenet", "exact8x8", vec![0.5; 784]).unwrap();
@@ -1609,7 +1685,7 @@ mod tests {
         // complete.
         let releaser = std::thread::spawn(|| {
             std::thread::sleep(Duration::from_millis(100));
-            chaos::STALL_GATE.store(false, Ordering::Release);
+            faults::set_stall(false);
         });
         server.shutdown();
         releaser.join().unwrap();
@@ -1627,7 +1703,7 @@ mod tests {
 
     #[test]
     fn shutdown_drain_answers_backlog() {
-        let _serial = plock(&CHAOS_LOCK);
+        let _serial = faults::serial();
         let _gate = StallGuard::raise();
         let (hub, _) = single_session_hub("exact8x8");
         let server = InferServer::start(
@@ -1640,7 +1716,7 @@ mod tests {
             1,
         );
         let stalled = server
-            .submit("lenet", "exact8x8", vec![chaos::STALL_PIXEL; 784])
+            .submit("lenet", "exact8x8", vec![faults::STALL_PIXEL; 784])
             .unwrap();
         wait_for_empty_queue(&server, "lenet", "exact8x8");
         let backlog: Vec<_> = (0..3)
@@ -1649,7 +1725,7 @@ mod tests {
         let stats = server.session_stats("lenet", "exact8x8").unwrap();
         let releaser = std::thread::spawn(|| {
             std::thread::sleep(Duration::from_millis(100));
-            chaos::STALL_GATE.store(false, Ordering::Release);
+            faults::set_stall(false);
         });
         server.shutdown_drain();
         releaser.join().unwrap();
@@ -1740,6 +1816,226 @@ mod tests {
         let parsed = Json::parse(&json).unwrap();
         assert_eq!(parsed.get("served").and_then(Json::as_f64), Some(8.0));
         assert!(parsed.get("e2e").and_then(|e| e.get("p99_ns")).is_some());
+        server.shutdown();
+    }
+
+    #[test]
+    fn snapshot_carries_the_self_healing_fields() {
+        let stats = ServerStats::default();
+        stats.swaps.store(2, Ordering::Relaxed);
+        stats.degraded_layers.store(4, Ordering::Relaxed);
+        stats.store_quarantined.store(1, Ordering::Relaxed);
+        stats.legacy_unverified.store(5, Ordering::Relaxed);
+        let snap = stats.snapshot();
+        assert_eq!(
+            (
+                snap.swaps,
+                snap.degraded_layers,
+                snap.store_quarantined,
+                snap.legacy_unverified
+            ),
+            (2, 4, 1, 5)
+        );
+        let line = snap.to_string();
+        assert!(line.contains("swaps 2 degraded 4"), "{line}");
+        assert!(line.contains("store quarantined 1 legacy 5"), "{line}");
+        let parsed = Json::parse(&snap.to_json().to_string()).unwrap();
+        for (key, want) in [
+            ("swaps", 2.0),
+            ("degraded_layers", 4.0),
+            ("store_quarantined", 1.0),
+            ("legacy_unverified", 5.0),
+        ] {
+            assert_eq!(parsed.get(key).and_then(Json::as_f64), Some(want), "{key}");
+        }
+    }
+
+    #[test]
+    fn armed_fault_plan_panics_nth_batch_with_typed_answers() {
+        // The ambient `panic_batch` fault (what `axmul chaos` arms via
+        // the environment) must behave exactly like an organic compute
+        // panic: a typed Compute answer, a respawned worker, a live lane.
+        let _serial = faults::serial();
+        let (hub, _) = single_session_hub("exact8x8");
+        let server = InferServer::start(
+            &hub,
+            BatchPolicy {
+                max_batch: 1,
+                max_wait: Duration::ZERO,
+                ..BatchPolicy::default()
+            },
+            1,
+        );
+        faults::arm(faults::FaultPlan {
+            panic_batch: Some(2),
+            ..Default::default()
+        });
+        assert!(
+            server.infer("lenet", "exact8x8", vec![0.5; 784]).is_ok(),
+            "batch 1 passes"
+        );
+        match server.infer("lenet", "exact8x8", vec![0.5; 784]) {
+            Err(SubmitError::Compute { reason, .. }) => {
+                assert!(reason.contains("batch 2"), "{reason}");
+            }
+            other => panic!("expected the armed fault to trip batch 2, got {other:?}"),
+        }
+        faults::disarm();
+        let resp = server.infer("lenet", "exact8x8", vec![0.5; 784]).unwrap();
+        assert_eq!(resp.logits.len(), 10);
+        let lane = server.session_stats("lenet", "exact8x8").unwrap();
+        assert_eq!(lane.worker_panics.load(Ordering::Relaxed), 1);
+        assert_eq!(lane.worker_respawns.load(Ordering::Relaxed), 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn hot_swap_under_live_traffic_is_seamless() {
+        // Acceptance: submits in flight across a swap_plan all complete
+        // with zero Closed/Compute errors; traffic before the swap is
+        // bit-identical to the old plan, traffic submitted after it to
+        // the new plan, and a request straddling the swap matches one of
+        // the two bindings whole — never a per-layer blend.
+        use crate::engine::DesignPlan;
+        let cache = Arc::new(LutCache::new());
+        let hub = ModelHub::new(cache.clone());
+        let qnet = tiny_qnet();
+        hub.register("lenet", "exact8x8", qnet.clone()).unwrap();
+        let data = Dataset::synth_mnist(4, 13);
+        let old_lut = cache.get("exact8x8").unwrap();
+        let new_lut = cache.get("mul8x8_2").unwrap();
+        let ref_old: Vec<Vec<f32>> = (0..4)
+            .map(|i| qnet.forward_one(data.image(i), &old_lut))
+            .collect();
+        let ref_new: Vec<Vec<f32>> = (0..4)
+            .map(|i| qnet.forward_one(data.image(i), &new_lut))
+            .collect();
+
+        let server = InferServer::start(&hub, BatchPolicy::default(), 2);
+        for i in 0..8 {
+            let resp = server
+                .infer("lenet", "exact8x8", data.image(i % 4).to_vec())
+                .unwrap();
+            assert_eq!(resp.logits, ref_old[i % 4], "pre-swap request {i}");
+        }
+        // A wave of submits is in flight when the swap lands; whichever
+        // binding each batch captured serves it to completion.
+        let wave: Vec<_> = (0..16)
+            .map(|i| {
+                server
+                    .submit("lenet", "exact8x8", data.image(i % 4).to_vec())
+                    .unwrap()
+            })
+            .collect();
+        hub.swap_plan("lenet", "exact8x8", DesignPlan::single("mul8x8_2"))
+            .unwrap();
+        let tail: Vec<_> = (0..16)
+            .map(|i| {
+                server
+                    .submit("lenet", "exact8x8", data.image(i % 4).to_vec())
+                    .unwrap()
+            })
+            .collect();
+        for (i, h) in wave.into_iter().enumerate() {
+            let resp = h
+                .recv()
+                .unwrap_or_else(|e| panic!("straddling request {i} died: {e}"));
+            assert!(
+                resp.logits == ref_old[i % 4] || resp.logits == ref_new[i % 4],
+                "straddling request {i} matches neither binding's numerics"
+            );
+        }
+        for (i, h) in tail.into_iter().enumerate() {
+            let resp = h
+                .recv()
+                .unwrap_or_else(|e| panic!("post-swap request {i} died: {e}"));
+            assert_eq!(resp.logits, ref_new[i % 4], "post-swap request {i}");
+        }
+        // The lane never closed and nothing panicked; the swap shows up
+        // in the synced counters under the *unchanged* routing key.
+        let lane = server.session_stats("lenet", "exact8x8").unwrap();
+        assert_eq!(lane.swaps.load(Ordering::Relaxed), 1);
+        assert_eq!(lane.worker_panics.load(Ordering::Relaxed), 0);
+        assert_eq!(lane.rejected.load(Ordering::Relaxed), 0);
+        assert_eq!(lane.served.load(Ordering::Relaxed), 40);
+        let snap = server.snapshot();
+        assert_eq!((snap.swaps, snap.degraded_layers), (1, 0));
+        server.shutdown();
+    }
+
+    #[test]
+    fn corrupt_artifact_quarantines_degrades_and_serves() {
+        // Acceptance: a byte-flipped spill artifact is quarantined at
+        // cold start; with the registry resolve also refused (the armed
+        // fault stands in for a design whose only source was the store),
+        // an ExactFallback bind degrades every layer to the exact design
+        // and the lane still serves — the counters tell the whole story.
+        use crate::engine::plan::FALLBACK_DESIGN;
+        use crate::engine::{Degrade, DesignPlan};
+        let _serial = faults::serial();
+        let dir = std::env::temp_dir()
+            .join("axmul_server_store")
+            .join("corrupt_degrade_serve");
+        let _ = std::fs::remove_dir_all(&dir);
+        let donor = LutCache::new();
+        donor.get("mul8x8_2").unwrap();
+        donor.spill(&dir).unwrap();
+        faults::corrupt_file(&dir.join("mul8x8_2.npy"), 11).unwrap();
+
+        let cache = Arc::new(LutCache::new());
+        let report = cache.load_verified(&dir).unwrap();
+        assert_eq!(report.quarantined(), 1, "{report}");
+        assert_eq!(cache.store_quarantined(), 1);
+
+        let hub = ModelHub::new(cache.clone());
+        let qnet = tiny_qnet();
+        let n = qnet.num_layers();
+        faults::arm(faults::FaultPlan {
+            fail_resolve: Some("mul8x8_2".into()),
+            ..Default::default()
+        });
+        // Degrade::Fail refuses the whole bind, typed and contextual…
+        let err = hub
+            .register_plan_with(
+                "lenet",
+                DesignPlan::single("mul8x8_2"),
+                qnet.clone(),
+                Degrade::Fail,
+            )
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("fault injection"), "{err:#}");
+        // …ExactFallback binds anyway, degrading every layer.
+        let sess = hub
+            .register_plan_with(
+                "lenet",
+                DesignPlan::single("mul8x8_2"),
+                qnet.clone(),
+                Degrade::ExactFallback,
+            )
+            .unwrap();
+        faults::disarm();
+        assert_eq!(sess.degraded_layers().len(), n, "every layer fell back");
+        assert!(sess.luts().iter().all(|l| l.is_exact()));
+
+        let exact = cache.get(FALLBACK_DESIGN).unwrap();
+        let data = Dataset::synth_mnist(4, 17);
+        let server = InferServer::start(&hub, BatchPolicy::default(), 1);
+        for i in 0..4 {
+            let resp = server
+                .infer("lenet", "mul8x8_2", data.image(i).to_vec())
+                .unwrap();
+            assert_eq!(
+                resp.logits,
+                qnet.forward_one(data.image(i), &exact),
+                "degraded lane request {i} must serve exact numerics"
+            );
+        }
+        let snap = server.snapshot();
+        assert_eq!(snap.degraded_layers, n as u64);
+        assert_eq!(snap.store_quarantined, 1);
+        assert_eq!(snap.legacy_unverified, 0);
+        assert_eq!(snap.served, 4);
+        assert_eq!(snap.swaps, 0);
         server.shutdown();
     }
 }

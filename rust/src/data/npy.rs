@@ -154,12 +154,21 @@ pub fn write_npy_view(path: &Path, shape: &[usize], data: NpyView<'_>) -> Result
 
 /// Read a `.npy` file (v1/v2, C-order, little-endian numeric dtypes).
 pub fn read_npy(path: &Path) -> Result<NpyArray> {
-    let mut f = std::fs::File::open(path)
+    let bytes = std::fs::read(path)
         .with_context(|| format!("open {}", path.display()))?;
+    read_npy_bytes(&bytes).with_context(|| format!("parse {}", path.display()))
+}
+
+/// Parse a `.npy` payload from an in-memory byte region.  Trailing
+/// bytes past the declared element count are ignored — that tolerance
+/// is what lets `engine::store` append a verification footer after the
+/// npy body while legacy readers keep working.
+pub fn read_npy_bytes(bytes: &[u8]) -> Result<NpyArray> {
+    let mut f = std::io::Cursor::new(bytes);
     let mut magic = [0u8; 8];
     f.read_exact(&mut magic)?;
     if &magic[..6] != b"\x93NUMPY" {
-        bail!("{}: not a npy file", path.display());
+        bail!("not a npy payload");
     }
     let major = magic[6];
     let hlen = if major >= 2 {
@@ -201,7 +210,12 @@ pub fn read_npy(path: &Path) -> Result<NpyArray> {
             }
             NpyData::I32(v)
         }
-        "|u1" => NpyData::U8(body[..count].to_vec()),
+        "|u1" => {
+            if body.len() < count {
+                bail!("u8 payload truncated: {} of {count} bytes", body.len());
+            }
+            NpyData::U8(body[..count].to_vec())
+        }
         "<i8" => {
             let mut v = Vec::with_capacity(count);
             for c in body.chunks_exact(8).take(count) {

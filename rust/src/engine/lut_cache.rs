@@ -7,18 +7,33 @@
 //! name = one table in memory" a process invariant: every consumer holds
 //! the same `Arc<Lut>`, and the hit/miss counters make the invariant
 //! testable.
+//!
+//! The cache is also the fleet's persistence seam: [`LutCache::spill`]
+//! writes every cached table to a directory of checksummed artifacts
+//! plus a `manifest.toml` (see [`crate::engine::store`]), and
+//! [`LutCache::load_verified`] cold-starts from such a directory with a
+//! per-design integrity verdict — corrupt artifacts are quarantined
+//! (renamed aside, `store_quarantined` bumped) instead of poisoning the
+//! process, and pre-footer `.npy` files still load (counted as
+//! `legacy_unverified`).
 
+use crate::engine::store::{
+    self, LoadOutcome, LoadReport, LoadVerdict, SpillReport, StoreError, Verdict, MANIFEST_FILE,
+};
 use crate::metrics::{Lut, NEG_SUFFIX};
 use crate::mult::by_name;
 use crate::util::sync::{plock, Arc, AtomicU64, Mutex, OnceLock, Ordering};
-use anyhow::{anyhow, ensure, Context, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 use std::collections::HashMap;
+use std::path::Path;
 
 #[derive(Default)]
 pub struct LutCache {
     luts: Mutex<HashMap<String, Arc<Lut>>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    store_quarantined: AtomicU64,
+    legacy_unverified: AtomicU64,
 }
 
 impl LutCache {
@@ -41,6 +56,12 @@ impl LutCache {
     /// resolved recursively, so it lands in the cache too).  Errors on
     /// unknown names and non-8×8 designs.
     pub fn get(&self, design: &str) -> Result<Arc<Lut>> {
+        // Fault seam: an armed FaultPlan can refuse exactly this design
+        // (compiled out of release builds).  Sits before the hit check
+        // and the counters so tests see a clean typed failure.
+        if crate::util::faults::fail_resolve(design) {
+            bail!("fault injection: resolve of design {design} refused");
+        }
         if let Some(lut) = plock(&self.luts).get(design) {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return Ok(lut.clone());
@@ -107,6 +128,167 @@ impl LutCache {
     /// races).
     pub fn misses(&self) -> u64 {
         self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Artifacts quarantined (or found missing) by [`load_verified`].
+    ///
+    /// [`load_verified`]: LutCache::load_verified
+    pub fn store_quarantined(&self) -> u64 {
+        self.store_quarantined.load(Ordering::Relaxed)
+    }
+
+    /// Pre-footer `.npy` artifacts loaded without integrity evidence.
+    pub fn legacy_unverified(&self) -> u64 {
+        self.legacy_unverified.load(Ordering::Relaxed)
+    }
+
+    /// Insert only if the design is not already cached (verified loads
+    /// must never displace a table that sessions already share).
+    fn insert_if_absent(&self, name: &str, lut: Arc<Lut>) {
+        plock(&self.luts).entry(name.to_string()).or_insert(lut);
+    }
+
+    /// Write every cached table to `dir` as checksummed artifacts plus a
+    /// `manifest.toml`, in sorted design order.  Errors on names the
+    /// manifest grammar cannot carry (see `store::check_storable_name`).
+    pub fn spill(&self, dir: &Path) -> Result<SpillReport> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("create store dir {}", dir.display()))?;
+        // Snapshot under the lock, write outside it: spilling 256 KB
+        // tables must not serialize concurrent gets.
+        let mut snapshot: Vec<(String, Arc<Lut>)> = plock(&self.luts)
+            .iter()
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect();
+        snapshot.sort_by(|a, b| a.0.cmp(&b.0));
+        let mut manifest = store::StoreManifest::new(store::registry_fingerprint());
+        let mut written = Vec::with_capacity(snapshot.len());
+        for (name, lut) in &snapshot {
+            let file = format!("{name}.npy");
+            let checksum = store::write_lut_verified(&dir.join(&file), lut)
+                .map_err(|e| anyhow!("spill {name}: {e}"))?;
+            manifest
+                .entries
+                .insert(name.clone(), store::ManifestEntry { file, checksum });
+            written.push((name.clone(), checksum));
+        }
+        std::fs::write(dir.join(MANIFEST_FILE), manifest.to_toml())
+            .with_context(|| format!("write {}", dir.join(MANIFEST_FILE).display()))?;
+        Ok(SpillReport {
+            dir: dir.to_path_buf(),
+            written,
+        })
+    }
+
+    /// Cold-start from a store directory with per-design verification.
+    ///
+    /// Designs listed in `manifest.toml` MUST carry a valid footer whose
+    /// checksum matches both the table bytes and the manifest row — a
+    /// corrupted trailer cannot demote a verified artifact to "legacy".
+    /// Damaged artifacts are renamed aside (`*.quarantined`) and counted
+    /// in [`store_quarantined`]; loading continues.  Unlisted `.npy`
+    /// files load footer-optional: footed ones verify, bare ones load as
+    /// legacy and count in [`legacy_unverified`].  Already-cached
+    /// designs are never displaced.
+    ///
+    /// [`store_quarantined`]: LutCache::store_quarantined
+    /// [`legacy_unverified`]: LutCache::legacy_unverified
+    pub fn load_verified(&self, dir: &Path) -> Result<LoadReport> {
+        ensure!(dir.is_dir(), "store dir {} does not exist", dir.display());
+        let mut report = LoadReport {
+            dir: dir.to_path_buf(),
+            ..LoadReport::default()
+        };
+        let mut listed_files: Vec<String> = Vec::new();
+
+        let manifest_path = dir.join(MANIFEST_FILE);
+        if manifest_path.exists() {
+            let src = std::fs::read_to_string(&manifest_path)
+                .with_context(|| format!("read {}", manifest_path.display()))?;
+            let manifest = store::StoreManifest::parse_toml(&src)?;
+            report.registry_drift = manifest.registry != store::registry_fingerprint();
+            for (design, entry) in &manifest.entries {
+                let path = dir.join(&entry.file);
+                listed_files.push(entry.file.clone());
+                let verdict = if !path.exists() {
+                    self.store_quarantined.fetch_add(1, Ordering::Relaxed);
+                    LoadVerdict::Missing
+                } else {
+                    match store::read_verified(&path, Some(design), true) {
+                        Ok((lut, Verdict::Verified { checksum, registry_drift }))
+                            if checksum == entry.checksum =>
+                        {
+                            self.insert_if_absent(design, Arc::new(lut));
+                            LoadVerdict::Verified {
+                                checksum,
+                                registry_drift,
+                            }
+                        }
+                        Ok((_, Verdict::Verified { checksum, .. })) => self.quarantine(
+                            &path,
+                            StoreError::ManifestMismatch {
+                                want: entry.checksum,
+                                got: checksum,
+                            },
+                        ),
+                        // Unreachable with require_footer=true, but a
+                        // typed quarantine is the safe answer anyway.
+                        Ok((_, Verdict::Legacy)) => self.quarantine(&path, StoreError::NoFooter),
+                        Err(e) => self.quarantine(&path, e),
+                    }
+                };
+                report.outcomes.push(LoadOutcome {
+                    design: design.clone(),
+                    verdict,
+                });
+            }
+        }
+
+        // Unlisted artifacts: legacy fleets (no manifest at all) or
+        // files dropped in beside one.  Sorted for determinism.
+        let mut extras: Vec<std::path::PathBuf> = std::fs::read_dir(dir)
+            .map_err(|e| anyhow!("read store dir {}: {e}", dir.display()))?
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| {
+                p.extension().is_some_and(|x| x == "npy")
+                    && p.file_name().is_some_and(|f| {
+                        !listed_files.iter().any(|l| l.as_str() == f.to_string_lossy())
+                    })
+            })
+            .collect();
+        extras.sort();
+        for path in extras {
+            let design = path
+                .file_stem()
+                .map(|s| s.to_string_lossy().to_string())
+                .unwrap_or_default();
+            let verdict = match store::read_verified(&path, Some(&design), false) {
+                Ok((lut, Verdict::Verified { checksum, registry_drift })) => {
+                    self.insert_if_absent(&design, Arc::new(lut));
+                    LoadVerdict::Verified {
+                        checksum,
+                        registry_drift,
+                    }
+                }
+                Ok((lut, Verdict::Legacy)) => {
+                    self.insert_if_absent(&design, Arc::new(lut));
+                    self.legacy_unverified.fetch_add(1, Ordering::Relaxed);
+                    LoadVerdict::Legacy
+                }
+                Err(e) => self.quarantine(&path, e),
+            };
+            report.outcomes.push(LoadOutcome { design, verdict });
+        }
+        Ok(report)
+    }
+
+    /// Rename a damaged artifact aside and bump the counter.
+    fn quarantine(&self, path: &Path, error: StoreError) -> LoadVerdict {
+        self.store_quarantined.fetch_add(1, Ordering::Relaxed);
+        LoadVerdict::Quarantined {
+            error,
+            moved_to: store::quarantine(path).ok(),
+        }
     }
 }
 
@@ -229,5 +411,220 @@ mod tests {
         assert!(cache.contains("zero"));
         let got = cache.get("zero").unwrap();
         assert!(Arc::ptr_eq(&zero, &got));
+    }
+
+    fn store_dir(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("axmul_cache_store").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn spill_then_load_verified_round_trips() {
+        let cache = LutCache::new();
+        // ~neg pulls its base in too: three designs on disk.
+        cache.get("mul8x8_2~neg").unwrap();
+        cache.get("exact8x8").unwrap();
+        let dir = store_dir("roundtrip");
+        let spilled = cache.spill(&dir).unwrap();
+        assert_eq!(
+            spilled.written.iter().map(|(n, _)| n.as_str()).collect::<Vec<_>>(),
+            vec!["exact8x8", "mul8x8_2", "mul8x8_2~neg"],
+        );
+        assert!(dir.join(MANIFEST_FILE).exists());
+
+        let fresh = LutCache::new();
+        let report = fresh.load_verified(&dir).unwrap();
+        assert_eq!(report.verified(), 3);
+        assert_eq!(report.legacy(), 0);
+        assert_eq!(report.quarantined(), 0);
+        assert!(!report.registry_drift);
+        assert_eq!(fresh.store_quarantined(), 0);
+        assert_eq!(fresh.legacy_unverified(), 0);
+        // Cold start means no tabulation: every get is now a pure hit.
+        let neg = fresh.get("mul8x8_2~neg").unwrap();
+        assert_eq!(fresh.misses(), 0);
+        assert_eq!(neg.table, cache.get("mul8x8_2~neg").unwrap().table);
+    }
+
+    #[test]
+    fn corrupt_artifact_is_quarantined_not_fatal() {
+        let cache = LutCache::new();
+        cache.get("mul8x8_2").unwrap();
+        cache.get("exact8x8").unwrap();
+        let dir = store_dir("corrupt");
+        cache.spill(&dir).unwrap();
+        crate::util::faults::corrupt_file(&dir.join("mul8x8_2.npy"), 11).unwrap();
+
+        let fresh = LutCache::new();
+        let report = fresh.load_verified(&dir).unwrap();
+        assert_eq!(report.verified(), 1);
+        assert_eq!(report.quarantined(), 1);
+        assert_eq!(fresh.store_quarantined(), 1);
+        let rot = report
+            .outcomes
+            .iter()
+            .find(|o| o.design == "mul8x8_2")
+            .unwrap();
+        match &rot.verdict {
+            LoadVerdict::Quarantined { error, moved_to } => {
+                assert!(matches!(error, StoreError::ChecksumMismatch { .. }), "{error}");
+                // Evidence preserved aside; the loadable name is gone.
+                assert_eq!(moved_to.as_deref(), Some(&*dir.join("mul8x8_2.npy.quarantined")));
+                assert!(!dir.join("mul8x8_2.npy").exists());
+            }
+            other => panic!("expected quarantine, got {other:?}"),
+        }
+        // The design itself is not lost: a get rebuilds from the
+        // registry (one miss), sharing nothing with the rotten bytes.
+        let rebuilt = fresh.get("mul8x8_2").unwrap();
+        assert_eq!(fresh.misses(), 1);
+        assert_eq!(rebuilt.table, cache.get("mul8x8_2").unwrap().table);
+    }
+
+    #[test]
+    fn legacy_unfooted_artifacts_still_load_and_are_counted() {
+        // A pre-footer fleet: bare `lut.write_npy` files, no manifest.
+        let dir = store_dir("legacy");
+        std::fs::create_dir_all(&dir).unwrap();
+        let cache = LutCache::new();
+        let exact = cache.get("exact8x8").unwrap();
+        exact.write_npy(&dir.join("exact8x8.npy")).unwrap();
+
+        let fresh = LutCache::new();
+        let report = fresh.load_verified(&dir).unwrap();
+        assert_eq!(report.legacy(), 1);
+        assert_eq!(report.quarantined(), 0);
+        assert_eq!(fresh.legacy_unverified(), 1);
+        assert_eq!(fresh.store_quarantined(), 0);
+        assert_eq!(fresh.get("exact8x8").unwrap().table, exact.table);
+        assert_eq!(fresh.misses(), 0, "legacy load still avoids tabulation");
+    }
+
+    #[test]
+    fn manifest_listed_designs_must_verify() {
+        // A valid footer under the wrong manifest row is quarantined
+        // (ManifestMismatch), and a listed-but-deleted file is Missing:
+        // the manifest is the stronger authority.
+        let cache = LutCache::new();
+        cache.get("exact8x8").unwrap();
+        cache.get("mul8x8_2").unwrap();
+        let dir = store_dir("manifest_authority");
+        cache.spill(&dir).unwrap();
+
+        // Re-foot exact8x8 with a doctored table: self-consistent file,
+        // inconsistent with the manifest.
+        let mut table = cache.get("exact8x8").unwrap().table.clone();
+        table[513] += 1;
+        crate::engine::store::write_lut_verified(
+            &dir.join("exact8x8.npy"),
+            &Lut::from_table("exact8x8", table),
+        )
+        .unwrap();
+        std::fs::remove_file(dir.join("mul8x8_2.npy")).unwrap();
+
+        let fresh = LutCache::new();
+        let report = fresh.load_verified(&dir).unwrap();
+        assert_eq!(report.quarantined(), 2);
+        assert_eq!(fresh.store_quarantined(), 2);
+        let exact = report.outcomes.iter().find(|o| o.design == "exact8x8").unwrap();
+        assert!(matches!(
+            &exact.verdict,
+            LoadVerdict::Quarantined { error: StoreError::ManifestMismatch { .. }, .. }
+        ));
+        let gone = report.outcomes.iter().find(|o| o.design == "mul8x8_2").unwrap();
+        assert_eq!(gone.verdict, LoadVerdict::Missing);
+        assert!(fresh.is_empty(), "nothing unverified may enter the cache");
+    }
+
+    #[test]
+    fn spill_rejects_unstorable_names() {
+        let cache = LutCache::new();
+        cache.insert("has space", Arc::new(Lut::from_table("has space", vec![0; 65536])));
+        let err = cache.spill(&store_dir("badname")).unwrap_err().to_string();
+        assert!(err.contains("not storable"), "{err}");
+    }
+
+    #[test]
+    fn fault_hook_refuses_exactly_the_named_design() {
+        use crate::util::faults;
+        let _serial = faults::serial();
+        let cache = LutCache::new();
+        faults::arm(faults::FaultPlan {
+            fail_resolve: Some("pkm".into()),
+            ..Default::default()
+        });
+        let err = cache.get("pkm").unwrap_err().to_string();
+        assert!(err.contains("fault injection"), "{err}");
+        assert_eq!(cache.misses(), 0, "a refused resolve is not a miss");
+        cache.get("exact8x8").unwrap();
+        faults::disarm();
+        cache.get("pkm").unwrap();
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn concurrent_load_verified_and_gets_race_cleanly() {
+        // Satellite 3: miss/quarantine accounting under a live race
+        // between a cold start and concurrent gets, made deterministic
+        // where it matters by the fault hooks — the base design both
+        // (a) rots on disk (quarantined by the loader) and (b) is
+        // refused by an armed resolve fault, so the only way the ~neg
+        // partner can materialize is the store's verified artifact.
+        use crate::util::faults;
+        let _serial = faults::serial();
+        let seeded = LutCache::new();
+        seeded.get("mul8x8_2~neg").unwrap();
+        let dir = store_dir("race");
+        seeded.spill(&dir).unwrap();
+        crate::util::faults::corrupt_file(&dir.join("mul8x8_2.npy"), 29).unwrap();
+
+        let cache = Arc::new(LutCache::new());
+        faults::arm(faults::FaultPlan {
+            fail_resolve: Some("mul8x8_2".into()),
+            ..Default::default()
+        });
+        let neg_ref = seeded.get("mul8x8_2~neg").unwrap();
+        std::thread::scope(|s| {
+            let loader = {
+                let cache = cache.clone();
+                let dir = dir.clone();
+                s.spawn(move || cache.load_verified(&dir).unwrap())
+            };
+            let getters: Vec<_> = (0..4)
+                .map(|_| {
+                    let cache = cache.clone();
+                    let want = neg_ref.table.clone();
+                    s.spawn(move || {
+                        for _ in 0..16 {
+                            // Typed outcome either way: Ok only with the
+                            // verified table, Err only the injected one.
+                            match cache.get("mul8x8_2~neg") {
+                                Ok(lut) => assert_eq!(lut.table, want),
+                                Err(e) => {
+                                    let e = format!("{e:#}");
+                                    assert!(e.contains("fault injection"), "{e}");
+                                }
+                            }
+                            assert!(cache.get("mul8x8_2").is_err(), "base stays refused");
+                            std::thread::yield_now();
+                        }
+                    })
+                })
+                .collect();
+            let report = loader.join().unwrap();
+            assert_eq!(report.quarantined(), 1, "{report}");
+            for g in getters {
+                g.join().unwrap();
+            }
+        });
+        faults::disarm();
+        assert_eq!(cache.store_quarantined(), 1);
+        // After the race settles: the partner is served from the store's
+        // verified artifact (never tabulated — tabulating it would have
+        // needed the refused base), and the base is absent.
+        assert!(cache.contains("mul8x8_2~neg"));
+        assert!(!cache.contains("mul8x8_2"));
+        assert_eq!(cache.get("mul8x8_2~neg").unwrap().table, neg_ref.table);
     }
 }

@@ -19,13 +19,24 @@
 //!   threaded through `QNet::forward_with`, so steady-state serving
 //!   performs no per-batch heap allocation on the hot path (and, since
 //!   the implicit-im2col conv kernel, never stages a patch matrix).
+//! * [`store`] — the checksummed on-disk artifact format behind
+//!   `LutCache::spill`/`load_verified` and `export-luts`: verified
+//!   footers, directory manifests, typed [`StoreError`]s, quarantine.
+//!
+//! Failure ladder (the self-healing contract): verification failures
+//! quarantine one artifact, a quarantined design can degrade one layer
+//! to the exact fallback ([`Degrade::ExactFallback`]), and a live
+//! session can be re-bound to a repaired plan without closing its lane
+//! ([`ModelHub::swap_plan`]) — state damage narrows, it never spreads.
 
 pub mod lut_cache;
 pub mod plan;
 pub mod session;
+pub mod store;
 pub mod workspace;
 
 pub use lut_cache::LutCache;
-pub use plan::DesignPlan;
-pub use session::{ModelHub, Session, SessionKey};
+pub use plan::{Degrade, DesignPlan};
+pub use session::{ModelHub, PlanBinding, Session, SessionKey};
+pub use store::StoreError;
 pub use workspace::Workspace;

@@ -29,12 +29,56 @@ use crate::metrics::Lut;
 use crate::util::sync::Arc;
 use anyhow::{bail, ensure, Context, Result};
 
+/// Longest design name a plan will carry — matches the on-disk store's
+/// footer/manifest limit so any resolvable plan is also spillable.
+pub const MAX_DESIGN_NAME: usize = 96;
+
+/// Most designs a single plan manifest may list.  Far above any real
+/// net's layer count; exists so a corrupted or hostile manifest cannot
+/// make `parse_toml` allocate without bound.
+pub const MAX_PLAN_DESIGNS: usize = 1024;
+
+/// The design every degraded layer falls back to: bit-exact 8×8.
+pub const FALLBACK_DESIGN: &str = "exact8x8";
+
+/// What a session bind does when a layer's design cannot be resolved
+/// (unknown name, quarantined artifact, injected fault).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Degrade {
+    /// Fail the whole bind — the historical behavior, and the right one
+    /// when accuracy is pinned to a specific approximate design.
+    #[default]
+    Fail,
+    /// Bind anyway, substituting [`FALLBACK_DESIGN`] for each failing
+    /// layer and reporting the degraded layer indices: the operator
+    /// sees an accuracy-risk signal instead of an outage.
+    ExactFallback,
+}
+
 /// An ordered per-layer assignment of multiplier designs.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct DesignPlan {
     designs: Vec<String>,
     paired: bool,
     compensated: bool,
+}
+
+/// Reject names that cannot survive a session key, a log line, or the
+/// on-disk store: empty/blank, overlong, embedded whitespace or control
+/// bytes, and the delimiters the `plan{…}` id grammar reserves.
+fn validate_design_name(li: usize, name: &str) -> Result<()> {
+    ensure!(!name.trim().is_empty(), "plan layer {li} has an empty design name");
+    ensure!(
+        name.len() <= MAX_DESIGN_NAME,
+        "plan layer {li} design name is {} bytes; the cap is {MAX_DESIGN_NAME}",
+        name.len()
+    );
+    ensure!(
+        name.chars()
+            .all(|c| !c.is_whitespace() && !c.is_control() && !matches!(c, '"' | ',' | '{' | '}')),
+        "plan layer {li} design name {name:?} contains whitespace, control bytes, or id delimiters"
+    );
+    Ok(())
 }
 
 impl DesignPlan {
@@ -52,8 +96,13 @@ impl DesignPlan {
     /// or one entry per quantizable layer of the net it will bind to.
     pub fn new(designs: Vec<String>) -> Result<DesignPlan> {
         ensure!(!designs.is_empty(), "a design plan needs at least one design");
+        ensure!(
+            designs.len() <= MAX_PLAN_DESIGNS,
+            "plan lists {} designs; the cap is {MAX_PLAN_DESIGNS}",
+            designs.len()
+        );
         for (li, d) in designs.iter().enumerate() {
-            ensure!(!d.trim().is_empty(), "plan layer {li} has an empty design name");
+            validate_design_name(li, d)?;
         }
         Ok(DesignPlan {
             designs,
@@ -68,7 +117,7 @@ impl DesignPlan {
     /// depth *i+1* instead of accumulating.
     pub fn paired_alternating(design: &str, n_layers: usize) -> Result<DesignPlan> {
         ensure!(n_layers > 0, "paired plan needs at least one layer");
-        ensure!(!design.trim().is_empty(), "empty design name");
+        validate_design_name(0, design)?;
         let designs = (0..n_layers)
             .map(|li| {
                 if li % 2 == 0 {
@@ -187,6 +236,21 @@ impl DesignPlan {
     /// a fleet operator reading the log must see which layer of which
     /// plan named the unknown design.
     pub fn resolve(&self, n_layers: usize, cache: &LutCache) -> Result<Vec<Arc<Lut>>> {
+        let (luts, _degraded) = self.resolve_with(n_layers, cache, Degrade::Fail)?;
+        Ok(luts)
+    }
+
+    /// [`resolve`](DesignPlan::resolve) with an explicit degradation
+    /// policy.  Under [`Degrade::ExactFallback`], a layer whose design
+    /// fails to resolve binds [`FALLBACK_DESIGN`] instead and its index
+    /// is returned in the second slot (sorted, one entry per degraded
+    /// layer) — empty means every layer bound its planned design.
+    pub fn resolve_with(
+        &self,
+        n_layers: usize,
+        cache: &LutCache,
+        policy: Degrade,
+    ) -> Result<(Vec<Arc<Lut>>, Vec<usize>)> {
         ensure!(n_layers > 0, "cannot resolve a plan for a zero-layer net");
         if self.designs.len() != 1 && self.designs.len() != n_layers {
             bail!(
@@ -195,18 +259,37 @@ impl DesignPlan {
                 self.designs.len()
             );
         }
-        (0..n_layers)
-            .map(|li| {
-                let name = self.design_for(li);
-                cache.get(name).with_context(|| {
-                    format!(
-                        "plan {}: layer {li} design {name:?} (cached designs: [{}])",
-                        self.id(),
-                        cache.designs().join(", ")
-                    )
-                })
-            })
-            .collect()
+        let mut luts = Vec::with_capacity(n_layers);
+        let mut degraded = Vec::new();
+        for li in 0..n_layers {
+            let name = self.design_for(li);
+            match cache.get(name) {
+                Ok(lut) => luts.push(lut),
+                Err(e) => match policy {
+                    Degrade::Fail => {
+                        return Err(e).with_context(|| {
+                            format!(
+                                "plan {}: layer {li} design {name:?} (cached designs: [{}])",
+                                self.id(),
+                                cache.designs().join(", ")
+                            )
+                        })
+                    }
+                    Degrade::ExactFallback => {
+                        let exact = cache.get(FALLBACK_DESIGN).with_context(|| {
+                            format!(
+                                "plan {}: layer {li} design {name:?} failed ({e:#}) and the \
+                                 {FALLBACK_DESIGN} fallback is unavailable too",
+                                self.id()
+                            )
+                        })?;
+                        luts.push(exact);
+                        degraded.push(li);
+                    }
+                },
+            }
+        }
+        Ok((luts, degraded))
     }
 }
 
@@ -288,6 +371,59 @@ mod tests {
         assert!(DesignPlan::parse_toml("[plan]\ndesigns = [1, 2]\n").is_err());
         assert!(DesignPlan::parse_toml("[plan]\ndesigns = []\n").is_err());
         assert!(DesignPlan::parse_toml("designs = not toml").is_err());
+    }
+
+    #[test]
+    fn parse_rejects_duplicate_keys_and_overlong_names() {
+        // A hand-edited manifest that lists `designs` twice used to
+        // silently keep the last one; now it's a typed error.
+        let dup = "[plan]\ndesigns = [\"a\"]\ndesigns = [\"b\"]\n";
+        let err = DesignPlan::parse_toml(dup).unwrap_err().to_string();
+        assert!(err.contains("duplicate key"), "{err}");
+
+        let long = "x".repeat(MAX_DESIGN_NAME + 1);
+        let err = DesignPlan::parse_toml(&format!("[plan]\ndesigns = [\"{long}\"]\n"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("cap is 96"), "{err}");
+    }
+
+    #[test]
+    fn name_validation_bans_id_breaking_characters() {
+        for bad in ["a b", "a\tb", "a\"b", "a,b", "a{b", "a}b"] {
+            assert!(
+                DesignPlan::new(vec![bad.to_string()]).is_err(),
+                "{bad:?} must be rejected"
+            );
+        }
+        DesignPlan::new(vec!["mul8x8_2~neg".into(), "a-b.c".into()]).unwrap();
+        assert!(DesignPlan::new(vec!["ok".into(); MAX_PLAN_DESIGNS + 1]).is_err());
+    }
+
+    #[test]
+    fn degrade_fallback_substitutes_exact_and_reports_layers() {
+        let cache = LutCache::new();
+        let p = DesignPlan::new(vec![
+            "mul8x8_2".into(),
+            "no_such_design".into(),
+            "also_missing".into(),
+        ])
+        .unwrap();
+        // Fail policy: the historical typed error.
+        assert!(p.resolve(3, &cache).is_err());
+        // Fallback policy: binds, names the degraded layers.
+        let (luts, degraded) = p
+            .resolve_with(3, &cache, Degrade::ExactFallback)
+            .unwrap();
+        assert_eq!(degraded, vec![1, 2]);
+        assert_eq!(luts[0].name, "mul8x8_2");
+        assert!(luts[1].is_exact());
+        assert!(Arc::ptr_eq(&luts[1], &luts[2]), "one shared fallback table");
+        // A fully-resolvable plan degrades nothing.
+        let (_, none) = DesignPlan::single("pkm")
+            .resolve_with(2, &cache, Degrade::ExactFallback)
+            .unwrap();
+        assert!(none.is_empty());
     }
 
     #[test]

@@ -11,13 +11,28 @@
 //! several plans is how one server instance serves e.g. `mul8x8_2` and
 //! `exact8x8` traffic side by side for accuracy-vs-power A/B routing —
 //! now at layer granularity.
+//!
+//! ## Hot swap
+//!
+//! A session's resolved state — plan, LUT pointers, compensation
+//! vectors, degraded-layer list — lives in ONE immutable
+//! [`PlanBinding`] behind an `Arc` swapped under a short RwLock
+//! critical section.  Workers clone that `Arc` once per batch
+//! ([`Session::binding`]), so [`ModelHub::swap_plan`] rebinds a live
+//! session *between* batches without closing its lane: an in-flight
+//! batch finishes on the binding it captured, the next collect sees the
+//! new one, and compensation can never be observed against the wrong
+//! tables (the pair travels in one pointer — the torn-pair hazard the
+//! `analysis::models` swap config enumerates).  The session KEY is
+//! fixed at registration; after a swap it is a routing label, with the
+//! live truth in `binding().plan` and the `epoch` counter.
 
 use crate::dnn::{argmax, QNet};
-use crate::engine::plan::{display_design, DesignPlan};
+use crate::engine::plan::{display_design, Degrade, DesignPlan};
 use crate::engine::{LutCache, Workspace};
 use crate::metrics::Lut;
 use crate::util::sync::{pread, pwrite, Arc, RwLock};
-use anyhow::Result;
+use anyhow::{Context, Result};
 use std::collections::BTreeMap;
 use std::fmt;
 use std::time::{Duration, Instant};
@@ -49,10 +64,12 @@ impl fmt::Display for SessionKey {
     }
 }
 
-/// A quantized model bound to a per-layer design plan.
-pub struct Session {
-    pub key: SessionKey,
-    pub qnet: Arc<QNet>,
+/// Everything a worker needs from a resolved plan, as one immutable
+/// unit: what [`ModelHub::swap_plan`] publishes and what a batch
+/// captures.  LUTs and compensation swap together or not at all —
+/// splitting them across two cells is the torn-binding bug the
+/// `analysis::models` swap config demonstrates.
+pub struct PlanBinding {
     pub plan: DesignPlan,
     /// One resolved LUT per quantizable layer, in forward order.  A
     /// singleton plan holds `num_layers` clones of one `Arc`, so the
@@ -62,6 +79,24 @@ pub struct Session {
     /// bind time from the static weight codes; present iff the plan is
     /// compensated.  Subtracted inside the fused dequant pass.
     comp: Option<Vec<Vec<i32>>>,
+    /// Layer indices bound to the exact fallback instead of their
+    /// planned design (empty under [`Degrade::Fail`]).
+    pub degraded: Vec<usize>,
+    /// 0 for the bind-time binding, +1 per successful swap.
+    pub epoch: u64,
+}
+
+impl PlanBinding {
+    pub fn comp(&self) -> Option<&[Vec<i32>]> {
+        self.comp.as_deref()
+    }
+}
+
+/// A quantized model bound to a per-layer design plan.
+pub struct Session {
+    pub key: SessionKey,
+    pub qnet: Arc<QNet>,
+    binding: RwLock<Arc<PlanBinding>>,
 }
 
 impl Session {
@@ -84,7 +119,40 @@ impl Session {
         qnet: Arc<QNet>,
         cache: &LutCache,
     ) -> Result<Session> {
-        let luts = plan.resolve(qnet.num_layers(), cache)?;
+        Session::bind_with(model, plan, qnet, cache, Degrade::Fail)
+    }
+
+    /// [`Session::bind`] with an explicit degradation policy: under
+    /// [`Degrade::ExactFallback`], layers whose design cannot resolve
+    /// (unknown, quarantined, fault-refused) bind the exact design
+    /// instead and are listed in [`Session::degraded_layers`].
+    pub fn bind_with(
+        model: &str,
+        plan: DesignPlan,
+        qnet: Arc<QNet>,
+        cache: &LutCache,
+        policy: Degrade,
+    ) -> Result<Session> {
+        let key = SessionKey::new(model, &plan.id());
+        let binding = Session::make_binding(&qnet, plan, cache, policy, 0)?;
+        Ok(Session {
+            key,
+            qnet,
+            binding: RwLock::new(Arc::new(binding)),
+        })
+    }
+
+    /// Resolve + warm a complete binding.  Used by bind and swap; runs
+    /// entirely outside the binding lock so table building never blocks
+    /// a collecting worker.
+    fn make_binding(
+        qnet: &QNet,
+        plan: DesignPlan,
+        cache: &LutCache,
+        policy: Degrade,
+        epoch: u64,
+    ) -> Result<PlanBinding> {
+        let (luts, degraded) = plan.resolve_with(qnet.num_layers(), cache, policy)?;
         for lut in &luts {
             lut.transposed();
         }
@@ -95,14 +163,65 @@ impl Session {
                 .map(|(li, lut)| qnet.compensation_for(li, lut))
                 .collect()
         });
-        let key = SessionKey::new(model, &plan.id());
-        Ok(Session {
-            key,
-            qnet,
+        Ok(PlanBinding {
             plan,
             luts,
             comp,
+            degraded,
+            epoch,
         })
+    }
+
+    /// The current binding, captured in one atomic pointer load under a
+    /// short read lock.  A batch holds its capture for its whole
+    /// forward pass, so a concurrent swap can never mix tables from one
+    /// plan with compensation from another.
+    pub fn binding(&self) -> Arc<PlanBinding> {
+        pread(&self.binding).clone()
+    }
+
+    /// The currently-bound plan (a clone of the live binding's — the
+    /// registration-time plan if no swap has happened).
+    pub fn plan(&self) -> DesignPlan {
+        self.binding().plan.clone()
+    }
+
+    /// The current per-layer LUT pointers (cheap: Arc clones).
+    pub fn luts(&self) -> Vec<Arc<Lut>> {
+        self.binding().luts.clone()
+    }
+
+    /// How many times this session has been re-bound.
+    pub fn epoch(&self) -> u64 {
+        self.binding().epoch
+    }
+
+    /// Layer indices currently degraded to the exact fallback.
+    pub fn degraded_layers(&self) -> Vec<usize> {
+        self.binding().degraded.clone()
+    }
+
+    /// Atomically re-bind this session to `plan` without closing its
+    /// lane.  The new binding is fully resolved and warmed BEFORE the
+    /// write lock is taken; the publish itself is a pointer store.
+    /// In-flight batches finish on their captured binding; the next
+    /// [`Session::binding`] call sees the new one.  On error the old
+    /// binding stays live untouched.
+    pub fn swap(
+        &self,
+        plan: DesignPlan,
+        cache: &LutCache,
+        policy: Degrade,
+    ) -> Result<Arc<PlanBinding>> {
+        let built = Session::make_binding(&self.qnet, plan, cache, policy, 0)
+            .with_context(|| format!("swap of session {} rejected", self.key))?;
+        let mut slot = pwrite(&self.binding);
+        let next = Arc::new(PlanBinding {
+            epoch: slot.epoch + 1,
+            ..built
+        });
+        *slot = next.clone();
+        Ok(next)
     }
 
     /// Forward one image through this session's silicon, reusing the
@@ -121,8 +240,11 @@ impl Session {
     /// concatenated logits; bit-identical to `batch`
     /// [`Session::infer_with`] calls.
     pub fn infer_batch_with(&self, images: &[f32], batch: usize, ws: &mut Workspace) -> Vec<f32> {
+        // ONE binding capture per batch: the whole forward pass runs on
+        // this snapshot even if a swap publishes mid-flight.
+        let b = self.binding();
         self.qnet
-            .forward_batch_luts(images, batch, &self.luts, self.comp.as_deref(), ws)
+            .forward_batch_luts(images, batch, &b.luts, b.comp(), ws)
     }
 
     /// [`Session::infer_batch_with`] plus a wall-clock measurement of
@@ -191,9 +313,49 @@ impl ModelHub {
         plan: DesignPlan,
         qnet: Arc<QNet>,
     ) -> Result<Arc<Session>> {
-        let sess = Arc::new(Session::bind(model, plan, qnet, &self.cache)?);
+        self.register_plan_with(model, plan, qnet, Degrade::Fail)
+    }
+
+    /// [`ModelHub::register_plan`] with an explicit degradation policy
+    /// (see [`Session::bind_with`]).
+    pub fn register_plan_with(
+        &self,
+        model: &str,
+        plan: DesignPlan,
+        qnet: Arc<QNet>,
+        policy: Degrade,
+    ) -> Result<Arc<Session>> {
+        let sess = Arc::new(Session::bind_with(model, plan, qnet, &self.cache, policy)?);
         pwrite(&self.sessions).insert(sess.key.clone(), sess.clone());
         Ok(sess)
+    }
+
+    /// Hot-swap a live session's plan (see [`Session::swap`]).  `design`
+    /// is the session's registered key id, which does NOT change — it
+    /// stays the lane's routing label while `binding().plan` carries the
+    /// live truth.  Fails without side effects if the key is unknown or
+    /// the new plan cannot bind.
+    pub fn swap_plan(
+        &self,
+        model: &str,
+        design: &str,
+        plan: DesignPlan,
+    ) -> Result<Arc<PlanBinding>> {
+        self.swap_plan_with(model, design, plan, Degrade::Fail)
+    }
+
+    /// [`ModelHub::swap_plan`] with an explicit degradation policy.
+    pub fn swap_plan_with(
+        &self,
+        model: &str,
+        design: &str,
+        plan: DesignPlan,
+        policy: Degrade,
+    ) -> Result<Arc<PlanBinding>> {
+        let sess = self
+            .session(model, design)
+            .with_context(|| format!("swap_plan: no session {model}@{design}"))?;
+        sess.swap(plan, &self.cache, policy)
     }
 
     pub fn session(&self, model: &str, design: &str) -> Option<Arc<Session>> {
@@ -243,16 +405,14 @@ mod tests {
         let a = hub.register("lenet", "exact8x8", qnet.clone()).unwrap();
         let b = hub.register("lenet_v2", "exact8x8", qnet.clone()).unwrap();
         let c = hub.register("lenet", "mul8x8_2", qnet).unwrap();
-        assert_eq!(a.luts.len(), a.qnet.num_layers(), "one LUT per layer");
+        let (al, bl, cl) = (a.luts(), b.luts(), c.luts());
+        assert_eq!(al.len(), a.qnet.num_layers(), "one LUT per layer");
+        assert!(Arc::ptr_eq(&al[0], &bl[0]), "same design = same table");
         assert!(
-            Arc::ptr_eq(&a.luts[0], &b.luts[0]),
-            "same design = same table"
-        );
-        assert!(
-            Arc::ptr_eq(&a.luts[0], a.luts.last().unwrap()),
+            Arc::ptr_eq(&al[0], al.last().unwrap()),
             "singleton plan broadcasts one Arc"
         );
-        assert!(!Arc::ptr_eq(&a.luts[0], &c.luts[0]));
+        assert!(!Arc::ptr_eq(&al[0], &cl[0]));
         assert_eq!(cache.misses(), 2, "two distinct designs, two builds");
         assert_eq!(hub.len(), 3);
         assert_eq!(
@@ -298,7 +458,7 @@ mod tests {
         let sess = hub.register("m", "mul8x8_2", qnet.clone()).unwrap();
         let image: Vec<f32> = (0..784).map(|i| (i % 7) as f32 / 7.0).collect();
         let (logits, pred) = sess.infer_one(&image);
-        let direct = qnet.forward_one(&image, &sess.luts[0]);
+        let direct = qnet.forward_one(&image, &sess.luts()[0]);
         assert_eq!(logits, direct);
         assert_eq!(pred, argmax(&direct));
         let mut ws = Workspace::new();
@@ -340,9 +500,10 @@ mod tests {
         let plan = DesignPlan::new(designs).unwrap();
         let sess = hub.register_plan("lenet", plan.clone(), qnet.clone()).unwrap();
         assert_eq!(sess.key, SessionKey::new("lenet", &plan.id()));
-        assert_eq!(sess.luts.len(), n);
-        assert_eq!(sess.luts[1].name, "pkm");
-        assert_eq!(sess.luts[0].name, "exact8x8");
+        let luts = sess.luts();
+        assert_eq!(luts.len(), n);
+        assert_eq!(luts[1].name, "pkm");
+        assert_eq!(luts[0].name, "exact8x8");
         assert_eq!(cache.misses(), 2, "two distinct designs across the plan");
         // The session is reachable under its plan id.
         assert!(hub.session("lenet", &plan.id()).is_some());
@@ -350,7 +511,7 @@ mod tests {
         // generic path directly with the same tables.
         let image: Vec<f32> = (0..784).map(|i| (i % 13) as f32 / 13.0).collect();
         let mut ws = Workspace::new();
-        let want = qnet.forward_batch_luts(&image, 1, &sess.luts, None, &mut ws);
+        let want = qnet.forward_batch_luts(&image, 1, &luts, None, &mut ws);
         assert_eq!(sess.infer_one(&image).0, want);
     }
 
@@ -387,6 +548,145 @@ mod tests {
             comped.infer_one(&image).0,
             "siei is biased — compensation must move the logits"
         );
+    }
+
+    #[test]
+    fn hot_swap_rebinds_between_batches() {
+        let cache = Arc::new(LutCache::new());
+        let hub = ModelHub::new(cache.clone());
+        let qnet = tiny_qnet();
+        let sess = hub.register("lenet", "exact8x8", qnet.clone()).unwrap();
+        let image: Vec<f32> = (0..784).map(|i| (i % 7) as f32 / 7.0).collect();
+        let exact_ref = sess.infer_one(&image).0;
+        assert_eq!(sess.epoch(), 0);
+
+        // An "in-flight batch": capture the binding before the swap,
+        // like a worker that collected a batch moments earlier.
+        let captured = sess.binding();
+
+        let next = hub
+            .swap_plan("lenet", "exact8x8", DesignPlan::single("mul8x8_2"))
+            .unwrap();
+        assert_eq!(next.epoch, 1);
+        assert_eq!(sess.epoch(), 1);
+        assert_eq!(sess.plan(), DesignPlan::single("mul8x8_2"));
+        assert_eq!(sess.key.design, "exact8x8", "the key is a fixed routing label");
+
+        // Post-swap inference is bit-identical to a fresh mul8x8_2 bind.
+        let mul_ref = qnet.forward_one(&image, &cache.get("mul8x8_2").unwrap());
+        assert_eq!(sess.infer_one(&image).0, mul_ref);
+        assert_ne!(exact_ref, mul_ref, "the swap must actually change numerics");
+
+        // The captured binding still computes the OLD numerics: an
+        // in-flight batch finishes on the plan it started with.
+        let mut ws = Workspace::new();
+        let old = qnet.forward_batch_luts(&image, 1, &captured.luts, captured.comp(), &mut ws);
+        assert_eq!(old, exact_ref);
+
+        // Swapping again (compensated plan this time) bumps the epoch
+        // and swaps LUTs + compensation as one unit.
+        hub.swap_plan(
+            "lenet",
+            "exact8x8",
+            DesignPlan::single("siei").with_compensation(true),
+        )
+        .unwrap();
+        assert_eq!(sess.epoch(), 2);
+        assert!(sess.binding().comp().is_some());
+    }
+
+    #[test]
+    fn failed_swap_leaves_the_old_binding_live() {
+        let hub = ModelHub::new(Arc::new(LutCache::new()));
+        let qnet = tiny_qnet();
+        let sess = hub.register("m", "mul8x8_2", qnet).unwrap();
+        let image: Vec<f32> = (0..784).map(|i| (i % 3) as f32).collect();
+        let before = sess.infer_one(&image).0;
+        let err = hub
+            .swap_plan("m", "mul8x8_2", DesignPlan::single("no_such_design"))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("swap of session"), "{err:#}");
+        assert_eq!(sess.epoch(), 0, "failed swap must not bump the epoch");
+        assert_eq!(sess.infer_one(&image).0, before);
+        // Unknown key is typed too.
+        assert!(hub
+            .swap_plan("m", "never_registered", DesignPlan::single("pkm"))
+            .is_err());
+    }
+
+    #[test]
+    fn degraded_bind_falls_back_per_layer_and_reports() {
+        let cache = Arc::new(LutCache::new());
+        let hub = ModelHub::new(cache.clone());
+        let qnet = tiny_qnet();
+        let n = qnet.num_layers();
+        let designs: Vec<String> = (0..n)
+            .map(|i| if i == 0 { "mul8x8_2" } else { "ghost_design" }.to_string())
+            .collect();
+        let plan = DesignPlan::new(designs).unwrap();
+        // Fail policy refuses outright...
+        assert!(hub.register_plan("m", plan.clone(), qnet.clone()).is_err());
+        // ...ExactFallback binds with the damage localized and listed.
+        let sess = hub
+            .register_plan_with("m", plan, qnet.clone(), Degrade::ExactFallback)
+            .unwrap();
+        assert_eq!(sess.degraded_layers(), (1..n).collect::<Vec<_>>());
+        let luts = sess.luts();
+        assert_eq!(luts[0].name, "mul8x8_2");
+        assert!(luts[1..].iter().all(|l| l.is_exact()));
+        // Serving continues: identical to an explicit mixed plan.
+        let explicit: Vec<String> = (0..n)
+            .map(|i| if i == 0 { "mul8x8_2" } else { "exact8x8" }.to_string())
+            .collect();
+        let want = hub
+            .register_plan("ref", DesignPlan::new(explicit).unwrap(), qnet)
+            .unwrap();
+        let image: Vec<f32> = (0..784).map(|i| (i % 17) as f32 / 17.0).collect();
+        assert_eq!(sess.infer_one(&image), want.infer_one(&image));
+    }
+
+    #[test]
+    fn concurrent_swaps_and_inference_never_tear() {
+        // Thread-level rehearsal of the model-checked swap protocol:
+        // every observed logits vector must equal one of the two plans'
+        // references — never a mixture — while swaps bounce the binding.
+        let cache = Arc::new(LutCache::new());
+        let hub = Arc::new(ModelHub::new(cache.clone()));
+        let qnet = tiny_qnet();
+        let sess = hub.register("m", "exact8x8", qnet.clone()).unwrap();
+        let image: Vec<f32> = (0..784).map(|i| (i % 7) as f32 / 7.0).collect();
+        let ref_exact = qnet.forward_one(&image, &cache.get("exact8x8").unwrap());
+        let ref_mul = qnet.forward_one(&image, &cache.get("mul8x8_2").unwrap());
+        std::thread::scope(|s| {
+            let swapper = {
+                let hub = hub.clone();
+                s.spawn(move || {
+                    for i in 0..6 {
+                        let d = if i % 2 == 0 { "mul8x8_2" } else { "exact8x8" };
+                        hub.swap_plan("m", "exact8x8", DesignPlan::single(d)).unwrap();
+                        std::thread::yield_now();
+                    }
+                })
+            };
+            let readers: Vec<_> = (0..3)
+                .map(|_| {
+                    let sess = sess.clone();
+                    let (image, a, b) = (image.clone(), ref_exact.clone(), ref_mul.clone());
+                    s.spawn(move || {
+                        let mut ws = Workspace::new();
+                        for _ in 0..8 {
+                            let got = sess.infer_batch_with(&image, 1, &mut ws);
+                            assert!(got == a || got == b, "torn binding observed");
+                        }
+                    })
+                })
+                .collect();
+            swapper.join().unwrap();
+            for r in readers {
+                r.join().unwrap();
+            }
+        });
+        assert_eq!(sess.epoch(), 6);
     }
 
     #[test]

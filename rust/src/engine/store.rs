@@ -1,0 +1,691 @@
+//! Checksummed on-disk LUT store: the verified footer format behind
+//! `export-luts`, `LutCache::spill`, and `LutCache::load_verified`.
+//!
+//! An exported artifact is a plain `.npy` table with a small footer
+//! appended *after* the npy body:
+//!
+//! ```text
+//! [ .npy header + 256x256 i32 body ][ footer fields ][ u32 footer_len ][ 8B magic ]
+//! ```
+//!
+//! Footer fields, little-endian, in order: `u32` format version, `u64`
+//! payload length (the npy byte count the checksum covers), `u64`
+//! FNV-1a/64 over the 262144 LE table bytes, `u64` registry fingerprint
+//! ([`registry_fingerprint`]: the design roster at export time), `u16`
+//! name length + the design name UTF-8.  The trailer (`footer_len` +
+//! [`FOOTER_MAGIC`]) is parsed from the file end, so readers need no
+//! seek table — and because the npy reader ignores trailing bytes, a
+//! footed file still loads anywhere a pre-footer `.npy` did.
+//!
+//! Verification failures are *typed* ([`StoreError`]) and recoverable:
+//! `load_verified` renames a damaged artifact aside
+//! ([`quarantine_path`]) and keeps going, so one rotten file degrades
+//! one design instead of poisoning a session bind.  A directory's
+//! `manifest.toml` ([`StoreManifest`]) lists design → file → checksum;
+//! any design the manifest names MUST verify (a corrupted footer cannot
+//! masquerade as a legacy unfooted file), while unlisted `.npy` files
+//! load as `legacy_unverified` so pre-footer fleet artifacts keep
+//! working.
+
+use crate::data::npy::read_npy_bytes;
+use crate::metrics::lut::Lut;
+use std::collections::BTreeMap;
+use std::fmt;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// Trailing magic of a footed artifact (the `1` is the format version
+/// generation; bump together with [`FOOTER_VERSION`] on layout change).
+pub const FOOTER_MAGIC: &[u8; 8] = b"AXLUTFT1";
+/// Footer field-layout version.
+pub const FOOTER_VERSION: u32 = 1;
+/// Directory manifest written by `spill` / `export-luts`.
+pub const MANIFEST_FILE: &str = "manifest.toml";
+/// Longest design name a footer or manifest will carry.
+pub const MAX_STORE_NAME: usize = 96;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a/64 over a byte slice.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// FNV-1a/64 over a LUT table's little-endian byte image, without
+/// materializing the 256 KB buffer.
+pub fn fnv1a64_table(table: &[i32]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for v in table {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+    }
+    h
+}
+
+/// Fingerprint of the design registry (all registered names, in roster
+/// order).  Stored in every footer and manifest so a reload can tell an
+/// artifact was exported by a *different* design roster — reported as
+/// drift, not treated as corruption: the table bytes still verify.
+pub fn registry_fingerprint() -> u64 {
+    let mut h = FNV_OFFSET;
+    for name in crate::mult::all_names() {
+        for b in name.bytes().chain(std::iter::once(b'\n')) {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+    }
+    h
+}
+
+/// Typed verification failure for one artifact.  Every variant maps to
+/// a quarantine decision in `LutCache::load_verified`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum StoreError {
+    /// Filesystem error reading/writing the artifact.
+    Io(String),
+    /// The payload region does not parse as a `.npy` i32 table.
+    NotNpy(String),
+    /// Footer magic present but the framed lengths are impossible.
+    Truncated { want: usize, got: usize },
+    /// Magic absent entirely while the manifest demands a footer.
+    NoFooter,
+    /// Table bytes do not hash to the footer's checksum.
+    ChecksumMismatch { want: u64, got: u64 },
+    /// Footer (or manifest) names a different design than expected.
+    NameMismatch { want: String, got: String },
+    /// Parsed table has the wrong element count for a 256x256 LUT.
+    BadTable { len: usize },
+    /// Footer verifies but disagrees with the directory manifest.
+    ManifestMismatch { want: u64, got: u64 },
+    /// A name unfit for storage (too long, or characters the manifest
+    /// section grammar cannot carry).
+    BadName(String),
+}
+
+impl fmt::Display for StoreError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StoreError::Io(e) => write!(f, "io: {e}"),
+            StoreError::NotNpy(e) => write!(f, "payload is not an npy table: {e}"),
+            StoreError::Truncated { want, got } => {
+                write!(f, "truncated: footer frames {want} bytes, file has {got}")
+            }
+            StoreError::NoFooter => write!(f, "no verification footer (manifest requires one)"),
+            StoreError::ChecksumMismatch { want, got } => write!(
+                f,
+                "checksum mismatch: footer 0x{want:016x}, table hashes to 0x{got:016x}"
+            ),
+            StoreError::NameMismatch { want, got } => {
+                write!(f, "name mismatch: expected `{want}`, artifact says `{got}`")
+            }
+            StoreError::BadTable { len } => {
+                write!(f, "table has {len} elements, a 256x256 LUT needs 65536")
+            }
+            StoreError::ManifestMismatch { want, got } => write!(
+                f,
+                "manifest mismatch: manifest says 0x{want:016x}, footer says 0x{got:016x}"
+            ),
+            StoreError::BadName(n) => write!(f, "name `{n}` is not storable"),
+        }
+    }
+}
+impl std::error::Error for StoreError {}
+
+fn io_err(e: std::io::Error) -> StoreError {
+    StoreError::Io(e.to_string())
+}
+
+/// How an artifact passed verification.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Verdict {
+    /// Footer present, checksum and name verified.
+    Verified {
+        checksum: u64,
+        /// The exporting registry differs from this build's roster —
+        /// informational (the table itself is intact).
+        registry_drift: bool,
+    },
+    /// Pre-footer `.npy`: loadable but carries no integrity evidence.
+    Legacy,
+}
+
+/// Names must survive a manifest round-trip: `[lut.<name>]` section
+/// grammar (alphanumeric, `_`, `-`, `~`) and the footer's length field.
+pub fn check_storable_name(name: &str) -> Result<(), StoreError> {
+    let ok_len = !name.is_empty() && name.len() <= MAX_STORE_NAME;
+    let ok_chars = name
+        .chars()
+        .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-' || c == '~');
+    if ok_len && ok_chars {
+        Ok(())
+    } else {
+        Err(StoreError::BadName(name.to_string()))
+    }
+}
+
+/// Write `lut` to `path` as a footed artifact; returns the table
+/// checksum (what the manifest records).
+pub fn write_lut_verified(path: &Path, lut: &Lut) -> Result<u64, StoreError> {
+    check_storable_name(&lut.name)?;
+    lut.write_npy(path)
+        .map_err(|e| StoreError::Io(e.to_string()))?;
+    let payload_len = std::fs::metadata(path).map_err(io_err)?.len();
+    let checksum = fnv1a64_table(&lut.table);
+
+    let name = lut.name.as_bytes();
+    let mut footer = Vec::with_capacity(42 + name.len());
+    footer.extend_from_slice(&FOOTER_VERSION.to_le_bytes());
+    footer.extend_from_slice(&payload_len.to_le_bytes());
+    footer.extend_from_slice(&checksum.to_le_bytes());
+    footer.extend_from_slice(&registry_fingerprint().to_le_bytes());
+    footer.extend_from_slice(&(name.len() as u16).to_le_bytes());
+    footer.extend_from_slice(name);
+    let total = footer.len() + 4 + FOOTER_MAGIC.len();
+    footer.extend_from_slice(&(total as u32).to_le_bytes());
+    footer.extend_from_slice(FOOTER_MAGIC);
+
+    let mut f = std::fs::OpenOptions::new()
+        .append(true)
+        .open(path)
+        .map_err(io_err)?;
+    f.write_all(&footer).map_err(io_err)?;
+    f.flush().map_err(io_err)?;
+    Ok(checksum)
+}
+
+struct Footer {
+    payload_len: usize,
+    checksum: u64,
+    registry: u64,
+    name: String,
+}
+
+/// Parse the trailer from a full file image.  `Ok(None)` means "no
+/// magic — legacy unfooted file"; `Err` means the magic is there but
+/// the frame is damaged (truncation, impossible lengths).
+fn parse_footer(bytes: &[u8]) -> Result<Option<Footer>, StoreError> {
+    let n = bytes.len();
+    if n < 12 || &bytes[n - 8..] != FOOTER_MAGIC {
+        return Ok(None);
+    }
+    let total = u32::from_le_bytes(bytes[n - 12..n - 8].try_into().unwrap()) as usize;
+    // Minimum frame: 4+8+8+8+2 fields + 4 len + 8 magic = 42 bytes.
+    if total < 42 || total > n {
+        return Err(StoreError::Truncated { want: total, got: n });
+    }
+    let f = &bytes[n - total..];
+    let version = u32::from_le_bytes(f[0..4].try_into().unwrap());
+    if version != FOOTER_VERSION {
+        return Err(StoreError::NotNpy(format!("unknown footer version {version}")));
+    }
+    let payload_len = u64::from_le_bytes(f[4..12].try_into().unwrap()) as usize;
+    let checksum = u64::from_le_bytes(f[12..20].try_into().unwrap());
+    let registry = u64::from_le_bytes(f[20..28].try_into().unwrap());
+    let name_len = u16::from_le_bytes(f[28..30].try_into().unwrap()) as usize;
+    if name_len > MAX_STORE_NAME || 30 + name_len + 12 != total {
+        return Err(StoreError::Truncated { want: total, got: n });
+    }
+    if payload_len != n - total {
+        return Err(StoreError::Truncated {
+            want: payload_len + total,
+            got: n,
+        });
+    }
+    let name = String::from_utf8_lossy(&f[30..30 + name_len]).to_string();
+    Ok(Some(Footer {
+        payload_len,
+        checksum,
+        registry,
+        name,
+    }))
+}
+
+/// Read one artifact and verify it.
+///
+/// * `expect_name`: footer/table must be for this design (when `Some`).
+/// * `require_footer`: a bare unfooted `.npy` is an error instead of a
+///   [`Verdict::Legacy`] load — set for every manifest-listed design so
+///   a corrupted trailer cannot demote a verified artifact to legacy.
+pub fn read_verified(
+    path: &Path,
+    expect_name: Option<&str>,
+    require_footer: bool,
+) -> Result<(Lut, Verdict), StoreError> {
+    let bytes = std::fs::read(path).map_err(io_err)?;
+    match parse_footer(&bytes)? {
+        Some(footer) => {
+            if let Some(want) = expect_name {
+                if footer.name != want {
+                    return Err(StoreError::NameMismatch {
+                        want: want.to_string(),
+                        got: footer.name,
+                    });
+                }
+            }
+            let arr = read_npy_bytes(&bytes[..footer.payload_len])
+                .map_err(|e| StoreError::NotNpy(e.to_string()))?;
+            let table = arr
+                .as_i32()
+                .ok_or_else(|| StoreError::NotNpy("dtype is not i32".to_string()))?;
+            if table.len() != 65536 {
+                return Err(StoreError::BadTable { len: table.len() });
+            }
+            let got = fnv1a64_table(table);
+            if got != footer.checksum {
+                return Err(StoreError::ChecksumMismatch {
+                    want: footer.checksum,
+                    got,
+                });
+            }
+            let lut = Lut::from_table(&footer.name, table.to_vec());
+            Ok((
+                lut,
+                Verdict::Verified {
+                    checksum: got,
+                    registry_drift: footer.registry != registry_fingerprint(),
+                },
+            ))
+        }
+        None => {
+            if require_footer {
+                return Err(StoreError::NoFooter);
+            }
+            let arr = read_npy_bytes(&bytes).map_err(|e| StoreError::NotNpy(e.to_string()))?;
+            let table = arr
+                .as_i32()
+                .ok_or_else(|| StoreError::NotNpy("dtype is not i32".to_string()))?;
+            if table.len() != 65536 {
+                return Err(StoreError::BadTable { len: table.len() });
+            }
+            let name = expect_name
+                .map(str::to_string)
+                .or_else(|| {
+                    path.file_stem()
+                        .map(|s| s.to_string_lossy().to_string())
+                })
+                .unwrap_or_else(|| "unnamed".to_string());
+            Ok((Lut::from_table(&name, table.to_vec()), Verdict::Legacy))
+        }
+    }
+}
+
+/// Where [`quarantine`] moves a damaged artifact: same directory, with
+/// `.quarantined` appended, so the evidence survives for a post-mortem
+/// without ever being picked up as a loadable `.npy` again.
+pub fn quarantine_path(path: &Path) -> PathBuf {
+    let mut name = path
+        .file_name()
+        .map(|s| s.to_string_lossy().to_string())
+        .unwrap_or_else(|| "artifact".to_string());
+    name.push_str(".quarantined");
+    path.with_file_name(name)
+}
+
+/// Rename a damaged artifact aside; returns the new location.
+pub fn quarantine(path: &Path) -> Result<PathBuf, StoreError> {
+    let dest = quarantine_path(path);
+    std::fs::rename(path, &dest).map_err(io_err)?;
+    Ok(dest)
+}
+
+/// What happened to one design during `LutCache::load_verified`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum LoadVerdict {
+    /// Footer and (when listed) manifest checksum verified.
+    Verified {
+        checksum: u64,
+        registry_drift: bool,
+    },
+    /// Pre-footer `.npy` loaded without integrity evidence.
+    Legacy,
+    /// Verification failed; the artifact was renamed aside (when the
+    /// rename itself succeeded, `moved_to` is the new location).
+    Quarantined {
+        error: StoreError,
+        moved_to: Option<PathBuf>,
+    },
+    /// The manifest lists the design but its file is gone.
+    Missing,
+}
+
+/// Per-design outcome row of a verified directory load.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LoadOutcome {
+    pub design: String,
+    pub verdict: LoadVerdict,
+}
+
+/// Everything a cold start learned from one store directory.
+#[derive(Clone, Debug, Default)]
+pub struct LoadReport {
+    pub dir: PathBuf,
+    pub outcomes: Vec<LoadOutcome>,
+    /// The manifest's registry fingerprint differed from this build's.
+    pub registry_drift: bool,
+}
+
+impl LoadReport {
+    pub fn verified(&self) -> usize {
+        self.outcomes
+            .iter()
+            .filter(|o| matches!(o.verdict, LoadVerdict::Verified { .. }))
+            .count()
+    }
+    pub fn legacy(&self) -> usize {
+        self.outcomes
+            .iter()
+            .filter(|o| o.verdict == LoadVerdict::Legacy)
+            .count()
+    }
+    pub fn quarantined(&self) -> usize {
+        self.outcomes
+            .iter()
+            .filter(|o| {
+                matches!(
+                    o.verdict,
+                    LoadVerdict::Quarantined { .. } | LoadVerdict::Missing
+                )
+            })
+            .count()
+    }
+}
+
+impl fmt::Display for LoadReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}: {} verified, {} legacy, {} quarantined",
+            self.dir.display(),
+            self.verified(),
+            self.legacy(),
+            self.quarantined()
+        )?;
+        if self.registry_drift {
+            write!(f, " (registry drift: exported by a different roster)")?;
+        }
+        for o in &self.outcomes {
+            match &o.verdict {
+                LoadVerdict::Quarantined { error, .. } => {
+                    write!(f, "\n  quarantined {}: {error}", o.design)?
+                }
+                LoadVerdict::Missing => write!(f, "\n  missing {}", o.design)?,
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+}
+
+/// What `LutCache::spill` wrote.
+#[derive(Clone, Debug, Default)]
+pub struct SpillReport {
+    pub dir: PathBuf,
+    /// design name → table checksum, in manifest (sorted) order.
+    pub written: Vec<(String, u64)>,
+}
+
+/// One manifest row: where a design lives and what its table hashes to.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ManifestEntry {
+    pub file: String,
+    pub checksum: u64,
+}
+
+/// The directory manifest (`manifest.toml`): design → file → checksum,
+/// plus the exporting registry fingerprint.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct StoreManifest {
+    pub registry: u64,
+    pub entries: BTreeMap<String, ManifestEntry>,
+}
+
+impl StoreManifest {
+    pub fn new(registry: u64) -> Self {
+        StoreManifest {
+            registry,
+            entries: BTreeMap::new(),
+        }
+    }
+
+    /// Serialize; checksums are hex strings because the TOML subset's
+    /// integer is i64 and FNV values use the full u64 range.
+    pub fn to_toml(&self) -> String {
+        let mut out = String::from("# axmul LUT store manifest (design -> file -> checksum)\n");
+        out.push_str("[store]\n");
+        out.push_str(&format!("version = {FOOTER_VERSION}\n"));
+        out.push_str(&format!("registry = \"0x{:016x}\"\n", self.registry));
+        for (name, e) in &self.entries {
+            out.push_str(&format!("\n[lut.{name}]\n"));
+            out.push_str(&format!("file = \"{}\"\n", e.file));
+            out.push_str(&format!("checksum = \"0x{:016x}\"\n", e.checksum));
+        }
+        out
+    }
+
+    pub fn parse_toml(src: &str) -> anyhow::Result<StoreManifest> {
+        let doc = crate::util::toml::TomlDoc::parse(src)
+            .map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let registry = parse_hex_u64(doc.str_or("store.registry", "0x0"))
+            .ok_or_else(|| anyhow::anyhow!("manifest: bad store.registry"))?;
+        let mut entries: BTreeMap<String, ManifestEntry> = BTreeMap::new();
+        for (key, val) in doc.section("lut") {
+            // Keys arrive as `<design>.<field>`; design names carry no
+            // dots (check_storable_name), so split at the last one.
+            let (design, field) = key
+                .rsplit_once('.')
+                .ok_or_else(|| anyhow::anyhow!("manifest: stray key lut.{key}"))?;
+            check_storable_name(design)
+                .map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+            let entry = entries.entry(design.to_string()).or_insert(ManifestEntry {
+                file: String::new(),
+                checksum: 0,
+            });
+            match field {
+                "file" => {
+                    entry.file = val
+                        .as_str()
+                        .ok_or_else(|| anyhow::anyhow!("manifest: lut.{key} is not a string"))?
+                        .to_string();
+                }
+                "checksum" => {
+                    entry.checksum = val
+                        .as_str()
+                        .and_then(parse_hex_u64)
+                        .ok_or_else(|| anyhow::anyhow!("manifest: bad checksum lut.{key}"))?;
+                }
+                other => anyhow::bail!("manifest: unknown field lut.{design}.{other}"),
+            }
+        }
+        for (design, e) in &entries {
+            anyhow::ensure!(!e.file.is_empty(), "manifest: lut.{design} has no file");
+        }
+        Ok(StoreManifest { registry, entries })
+    }
+}
+
+fn parse_hex_u64(s: &str) -> Option<u64> {
+    let body = s.strip_prefix("0x").or_else(|| s.strip_prefix("0X"))?;
+    u64::from_str_radix(body, 16).ok()
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+    use crate::mult::by_name;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("axmul_store_tests").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn exact_lut() -> Lut {
+        Lut::build(by_name("exact8x8").unwrap().as_ref())
+    }
+
+    #[test]
+    fn fnv_vectors() {
+        // Reference values for FNV-1a/64 from the spec's test suite.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x8594_4171_f739_67e8);
+        // The table hasher matches byte-image hashing.
+        let t = vec![1i32, -7, 300_000];
+        let mut bytes = Vec::new();
+        for v in &t {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        assert_eq!(fnv1a64_table(&t), fnv1a64(&bytes));
+    }
+
+    #[test]
+    fn footed_artifact_round_trips_and_still_reads_as_plain_npy() {
+        let dir = tmpdir("roundtrip");
+        let lut = exact_lut();
+        let p = dir.join("exact8x8.npy");
+        let sum = write_lut_verified(&p, &lut).unwrap();
+        let (loaded, verdict) = read_verified(&p, Some("exact8x8"), true).unwrap();
+        assert_eq!(loaded.table, lut.table);
+        assert_eq!(
+            verdict,
+            Verdict::Verified {
+                checksum: sum,
+                registry_drift: false,
+            }
+        );
+        // Legacy-reader compatibility: the plain npy reader ignores the
+        // trailing footer bytes entirely.
+        let arr = crate::data::npy::read_npy(&p).unwrap();
+        assert_eq!(arr.shape, vec![256, 256]);
+        assert_eq!(arr.as_i32().unwrap(), &lut.table[..]);
+    }
+
+    #[test]
+    fn unfooted_npy_loads_as_legacy_unless_footer_required() {
+        let dir = tmpdir("legacy");
+        let lut = exact_lut();
+        let p = dir.join("exact8x8.npy");
+        lut.write_npy(&p).unwrap();
+        let (loaded, verdict) = read_verified(&p, Some("exact8x8"), false).unwrap();
+        assert_eq!(loaded.table, lut.table);
+        assert_eq!(verdict, Verdict::Legacy);
+        assert_eq!(
+            read_verified(&p, Some("exact8x8"), true).unwrap_err(),
+            StoreError::NoFooter
+        );
+    }
+
+    #[test]
+    fn corruption_truncation_and_misnaming_are_typed() {
+        let dir = tmpdir("damage");
+        let lut = exact_lut();
+        let p = dir.join("exact8x8.npy");
+        write_lut_verified(&p, &lut).unwrap();
+        let clean = std::fs::read(&p).unwrap();
+
+        // Payload byte flip -> checksum mismatch.
+        let off = crate::util::faults::corrupt_file(&p, 3).unwrap();
+        assert!(matches!(
+            read_verified(&p, Some("exact8x8"), true).unwrap_err(),
+            StoreError::ChecksumMismatch { .. }
+        ), "flip at {off}");
+
+        // Truncation chops the trailer magic off -> NoFooter under a
+        // manifest, Legacy-or-worse without one; either way, typed.
+        std::fs::write(&p, &clean[..clean.len() - 20]).unwrap();
+        assert_eq!(
+            read_verified(&p, Some("exact8x8"), true).unwrap_err(),
+            StoreError::NoFooter
+        );
+
+        // Truncation that keeps magic but breaks the frame.
+        let mut torn = clean.clone();
+        torn.drain(1000..2000);
+        std::fs::write(&p, &torn).unwrap();
+        assert!(matches!(
+            read_verified(&p, Some("exact8x8"), true).unwrap_err(),
+            StoreError::Truncated { .. }
+        ));
+
+        // Wrong expected name.
+        std::fs::write(&p, &clean).unwrap();
+        assert_eq!(
+            read_verified(&p, Some("mul8x8_2"), true).unwrap_err(),
+            StoreError::NameMismatch {
+                want: "mul8x8_2".into(),
+                got: "exact8x8".into(),
+            }
+        );
+    }
+
+    #[test]
+    fn quarantine_moves_the_artifact_aside() {
+        let dir = tmpdir("quarantine");
+        let p = dir.join("bad.npy");
+        std::fs::write(&p, b"rot").unwrap();
+        let dest = quarantine(&p).unwrap();
+        assert!(!p.exists());
+        assert!(dest.exists());
+        assert_eq!(dest, dir.join("bad.npy.quarantined"));
+    }
+
+    #[test]
+    fn manifest_round_trips_including_paired_partners() {
+        let mut m = StoreManifest::new(registry_fingerprint());
+        m.entries.insert(
+            "mul8x8_2".into(),
+            ManifestEntry {
+                file: "mul8x8_2.npy".into(),
+                checksum: 0xdead_beef_0123_4567,
+            },
+        );
+        m.entries.insert(
+            "mul8x8_2~neg".into(),
+            ManifestEntry {
+                file: "mul8x8_2~neg.npy".into(),
+                checksum: u64::MAX,
+            },
+        );
+        let parsed = StoreManifest::parse_toml(&m.to_toml()).unwrap();
+        assert_eq!(parsed, m);
+    }
+
+    #[test]
+    fn manifest_rejects_bad_rows() {
+        assert!(StoreManifest::parse_toml("[store]\nregistry = \"xyz\"\n").is_err());
+        let long = "x".repeat(MAX_STORE_NAME + 1);
+        assert!(
+            StoreManifest::parse_toml(&format!("[lut.{long}]\nfile = \"a.npy\"\n")).is_err(),
+            "overlong design name"
+        );
+        assert!(
+            StoreManifest::parse_toml("[lut.a]\nchecksum = \"0x1\"\n").is_err(),
+            "entry without a file"
+        );
+        assert!(
+            StoreManifest::parse_toml("[lut.a]\nfile = \"a.npy\"\nwhen = \"now\"\n").is_err(),
+            "unknown field"
+        );
+    }
+
+    #[test]
+    fn storable_names_are_the_manifest_grammar() {
+        check_storable_name("mul8x8_2").unwrap();
+        check_storable_name("mul8x8_2~neg").unwrap();
+        check_storable_name("a-b").unwrap();
+        assert!(check_storable_name("").is_err());
+        assert!(check_storable_name("a.b").is_err());
+        assert!(check_storable_name("a b").is_err());
+        assert!(check_storable_name("a\"b").is_err());
+        assert!(check_storable_name(&"x".repeat(MAX_STORE_NAME + 1)).is_err());
+    }
+}

@@ -8,7 +8,8 @@
 //!   weights-hist     §II-B weight-code distribution (needs artifacts)
 //!   train            train one network, print the loss curve
 //!   serve            artifact-free serving load run (overload knobs + snapshots)
-//!   export-luts      dump product LUTs as .npy (optionally one plan's set)
+//!   export-luts      dump verified product LUTs + manifest (optionally one plan's set)
+//!   chaos            fault-injection acceptance harness (debug builds only)
 //!   designs          list registered multiplier designs
 //!   mul              evaluate one product: `axmul mul mul8x8_2 100 200`
 //!   lint             run the in-repo invariant linter over rust/src
@@ -91,52 +92,272 @@ fn run(args: &Args) -> anyhow::Result<()> {
             println!("[train {tag}] float accuracy: {:.2}%", acc * 100.0);
         }
         Some("export-luts") => {
-            // Tabulate product LUTs as .npy — the artifact any external
-            // runtime (incl. the python tests) consumes as "silicon".
-            // Tables come from the process-wide cache, so an exporter
-            // embedded in a serving process reuses whatever the server
-            // already built.  With `--plan FILE`, export exactly the
-            // designs a per-layer plan manifest names (the cache derives
-            // `~neg` error-mirrored partners on the fly) and re-emit the
-            // manifest alongside the tables, so a fleet cold-starts the
-            // plan from the directory without re-deriving anything.
+            // Tabulate product LUTs as verified, footed .npy artifacts
+            // plus a checksummed `manifest.toml` — the artifact set any
+            // external runtime (incl. the python tests) consumes as
+            // "silicon", and what `LutCache::load_verified` cold-starts
+            // from with per-design integrity verdicts.  Tables come from
+            // the process-wide cache, so an exporter embedded in a
+            // serving process reuses whatever the server already built;
+            // the export set is staged in a private cache so `spill`
+            // writes exactly the requested designs.  With `--plan FILE`,
+            // export exactly the designs a per-layer plan manifest names
+            // (the cache derives `~neg` error-mirrored partners on the
+            // fly) and re-emit the plan alongside the tables, so a fleet
+            // cold-starts the plan from the directory without
+            // re-deriving anything.
             let out = std::path::PathBuf::from(args.opt_or("out", "artifacts/luts"));
-            std::fs::create_dir_all(&out)?;
-            let cache = axmul::engine::LutCache::global();
-            if let Some(plan_file) = args.opt("plan") {
-                let src = std::fs::read_to_string(plan_file)
-                    .with_context(|| format!("plan manifest {plan_file}"))?;
-                let plan = axmul::engine::DesignPlan::parse_toml(&src)?;
-                let mut seen = std::collections::BTreeSet::new();
-                for name in plan.designs() {
-                    if !seen.insert(name.clone()) {
-                        continue;
-                    }
-                    let lut = cache
-                        .get(name)
-                        .with_context(|| format!("plan design {name}"))?;
-                    lut.write_npy(&out.join(format!("{name}.npy")))?;
+            let global = axmul::engine::LutCache::global();
+            let staged = axmul::engine::LutCache::new();
+            let plan = match args.opt("plan") {
+                Some(plan_file) => {
+                    let src = std::fs::read_to_string(plan_file)
+                        .with_context(|| format!("plan manifest {plan_file}"))?;
+                    Some(axmul::engine::DesignPlan::parse_toml(&src)?)
                 }
+                None => None,
+            };
+            match &plan {
+                Some(plan) => {
+                    for name in plan.designs() {
+                        if staged.contains(name) {
+                            continue;
+                        }
+                        let lut = global
+                            .get(name)
+                            .with_context(|| format!("plan design {name}"))?;
+                        staged.insert(name, lut);
+                    }
+                }
+                None => {
+                    for name in all_names() {
+                        let m = by_name(name).unwrap();
+                        if (m.a_bits(), m.b_bits()) != (8, 8) {
+                            continue;
+                        }
+                        staged.insert(name, global.get(name)?);
+                    }
+                }
+            }
+            let report = staged.spill(&out)?;
+            if let Some(plan) = &plan {
                 std::fs::write(out.join("plan.toml"), plan.to_toml())?;
                 println!(
-                    "wrote {} LUT(s) + plan.toml ({}) to {}",
-                    seen.len(),
+                    "wrote {} verified LUT(s) + manifest.toml + plan.toml ({}) to {}",
+                    report.written.len(),
                     plan.id(),
                     out.display()
                 );
             } else {
-                let mut n = 0;
-                for name in all_names() {
-                    let m = by_name(name).unwrap();
-                    if (m.a_bits(), m.b_bits()) != (8, 8) {
-                        continue;
-                    }
-                    let lut = cache.get(name)?;
-                    lut.write_npy(&out.join(format!("{name}.npy")))?;
-                    n += 1;
-                }
-                println!("wrote {n} LUTs to {}", out.display());
+                println!(
+                    "wrote {} verified LUT(s) + manifest.toml to {}",
+                    report.written.len(),
+                    out.display()
+                );
             }
+        }
+        Some("chaos") => {
+            // Self-healing acceptance harness: drive the overload-safe
+            // server through the three failure modes the robustness
+            // layer defends against — worker panics, live plan swaps,
+            // and corrupted store artifacts — and fail loudly unless
+            // every request resolves to a typed answer and the stats
+            // ledger reflects what happened.  The fault hooks are inert
+            // stubs in release builds, so this subcommand refuses to
+            // pretend: it requires a debug build.
+            use axmul::coordinator::server::{BatchPolicy, InferServer, SubmitError};
+            use axmul::engine::{Degrade, DesignPlan, LutCache, ModelHub};
+            use axmul::util::faults;
+            use axmul::util::sync::{Arc, Ordering};
+            use std::time::Duration;
+            anyhow::ensure!(
+                faults::compiled_in(),
+                "fault injection is compiled out of release builds; run `cargo run -- chaos` \
+                 without --release"
+            );
+            let seed = args.opt_usize("seed", 7) as u64;
+            let requests = args.opt_usize("requests", 32).max(4);
+            let data = axmul::data::Dataset::synth_mnist(64, seed);
+            let fnet = axmul::dnn::FloatNet::random("lenet", (1, 28, 28), seed + 1);
+            let qnet = Arc::new(axmul::dnn::QNet::quantize(&fnet, &data.images, 16, 8.0));
+            let serial_policy = BatchPolicy {
+                max_batch: 1,
+                max_wait: Duration::ZERO,
+                queue_cap: 1024,
+                slo: None,
+            };
+
+            // Phase 1 — an injected worker panic must cost exactly the
+            // batch that hit it (typed `Compute`), the lane must respawn
+            // its worker, and every other request must still be served.
+            let hub = ModelHub::new(Arc::new(LutCache::new()));
+            hub.register("lenet", "exact8x8", qnet.clone())?;
+            let server = InferServer::start(&hub, serial_policy, 1);
+            faults::arm(faults::FaultPlan {
+                seed,
+                panic_batch: Some(2),
+                ..Default::default()
+            });
+            let (mut ok, mut panicked) = (0u64, 0u64);
+            for i in 0..requests {
+                let img = data.image(i % data.n).to_vec();
+                match server.infer("lenet", "exact8x8", img) {
+                    Ok(_) => ok += 1,
+                    Err(SubmitError::Compute { reason, .. }) => {
+                        anyhow::ensure!(
+                            reason.contains("fault"),
+                            "phase 1: compute error was not the injected fault: {reason}"
+                        );
+                        panicked += 1;
+                    }
+                    Err(e) => anyhow::bail!("phase 1: untyped or unexpected answer: {e}"),
+                }
+            }
+            faults::disarm();
+            let lane = server.session_stats("lenet", "exact8x8").unwrap();
+            anyhow::ensure!(
+                ok == requests as u64 - 1 && panicked == 1,
+                "phase 1: wanted {} ok + 1 injected panic, got {ok} + {panicked}",
+                requests - 1
+            );
+            anyhow::ensure!(
+                lane.worker_panics.load(Ordering::Relaxed) == 1
+                    && lane.worker_respawns.load(Ordering::Relaxed) == 1,
+                "phase 1: lane did not record the panic/respawn pair"
+            );
+            server.shutdown();
+            println!(
+                "chaos phase 1  panic-isolation: {ok} served, {panicked} typed Compute \
+                 answer(s), worker respawned"
+            );
+
+            // Phase 2 — a live hot-swap must be atomic and seamless:
+            // requests in flight across the swap complete with answers
+            // bit-identical to one plan or the other (never a torn mix),
+            // and everything submitted after the swap lands on the new
+            // plan.
+            let hub = ModelHub::new(Arc::new(LutCache::new()));
+            hub.register("lenet", "exact8x8", qnet.clone())?;
+            let old_lut = hub.cache().get("exact8x8")?;
+            let new_lut = hub.cache().get("mul8x8_2")?;
+            let refs_old: Vec<Vec<f32>> =
+                (0..4).map(|i| qnet.forward_one(data.image(i), &old_lut)).collect();
+            let refs_new: Vec<Vec<f32>> =
+                (0..4).map(|i| qnet.forward_one(data.image(i), &new_lut)).collect();
+            let policy = BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_micros(200),
+                queue_cap: 4096,
+                slo: None,
+            };
+            let server = InferServer::start(&hub, policy, 2);
+            for i in 0..8 {
+                let r = server.infer("lenet", "exact8x8", data.image(i % 4).to_vec())?;
+                anyhow::ensure!(r.logits == refs_old[i % 4], "phase 2: pre-swap drift at {i}");
+            }
+            let wave: Vec<_> = (0..requests)
+                .map(|i| server.submit("lenet", "exact8x8", data.image(i % 4).to_vec()))
+                .collect::<Result<_, _>>()?;
+            hub.swap_plan("lenet", "exact8x8", DesignPlan::single("mul8x8_2"))?;
+            let tail: Vec<_> = (0..requests)
+                .map(|i| server.submit("lenet", "exact8x8", data.image(i % 4).to_vec()))
+                .collect::<Result<_, _>>()?;
+            for (i, h) in wave.into_iter().enumerate() {
+                let r = h.recv().map_err(|e| anyhow::anyhow!("phase 2: wave died: {e}"))?;
+                anyhow::ensure!(
+                    r.logits == refs_old[i % 4] || r.logits == refs_new[i % 4],
+                    "phase 2: in-flight request {i} matched neither plan bit-for-bit"
+                );
+            }
+            for (i, h) in tail.into_iter().enumerate() {
+                let r = h.recv().map_err(|e| anyhow::anyhow!("phase 2: tail died: {e}"))?;
+                anyhow::ensure!(
+                    r.logits == refs_new[i % 4],
+                    "phase 2: post-swap request {i} is not on the new plan"
+                );
+            }
+            let snap = server.snapshot();
+            anyhow::ensure!(
+                snap.swaps == 1 && snap.worker_panics == 0 && snap.rejected == 0,
+                "phase 2: snapshot disagrees: {snap}"
+            );
+            server.shutdown();
+            println!(
+                "chaos phase 2  hot-swap: {requests} in-flight + {requests} post-swap requests \
+                 seamless, swap epoch 1"
+            );
+
+            // Phase 3 — a corrupted store artifact must be quarantined
+            // on cold start, the bind must degrade per-layer to the
+            // exact design (never silently use damaged state), and the
+            // degraded session must keep serving with the ledger showing
+            // all of it.
+            let dir = std::env::temp_dir().join("axmul_chaos_store");
+            let _ = std::fs::remove_dir_all(&dir);
+            let donor = LutCache::new();
+            donor.get("mul8x8_2")?;
+            donor.spill(&dir)?;
+            faults::corrupt_file(&dir.join("mul8x8_2.npy"), seed)?;
+            let cache = Arc::new(LutCache::new());
+            let report = cache.load_verified(&dir)?;
+            anyhow::ensure!(
+                report.quarantined() == 1 && cache.store_quarantined() == 1,
+                "phase 3: corrupt artifact was not quarantined: {report}"
+            );
+            // Refuse the registry rebuild too — the store was this
+            // design's only source, as on a fleet node without netlists.
+            faults::arm(faults::FaultPlan {
+                seed,
+                fail_resolve: Some("mul8x8_2".to_string()),
+                ..Default::default()
+            });
+            let hub = ModelHub::new(cache.clone());
+            let strict = hub.register_plan_with(
+                "lenet",
+                DesignPlan::single("mul8x8_2"),
+                qnet.clone(),
+                Degrade::Fail,
+            );
+            anyhow::ensure!(
+                strict.is_err(),
+                "phase 3: Degrade::Fail bound a plan whose design is unresolvable"
+            );
+            let sess = hub.register_plan_with(
+                "lenet",
+                DesignPlan::single("mul8x8_2"),
+                qnet.clone(),
+                Degrade::ExactFallback,
+            )?;
+            faults::disarm();
+            let n_layers = sess.degraded_layers().len();
+            anyhow::ensure!(
+                n_layers == qnet.num_layers() && sess.luts().iter().all(|l| l.is_exact()),
+                "phase 3: fallback bind did not degrade every layer to exact"
+            );
+            let exact = cache.get(axmul::engine::plan::FALLBACK_DESIGN)?;
+            let server = InferServer::start(&hub, serial_policy, 1);
+            for i in 0..4 {
+                let r = server.infer("lenet", "mul8x8_2", data.image(i).to_vec())?;
+                anyhow::ensure!(
+                    r.logits == qnet.forward_one(data.image(i), &exact),
+                    "phase 3: degraded session does not serve the exact fallback"
+                );
+            }
+            let snap = server.snapshot();
+            anyhow::ensure!(
+                snap.degraded_layers == n_layers as u64
+                    && snap.store_quarantined == 1
+                    && snap.legacy_unverified == 0
+                    && snap.served == 4,
+                "phase 3: snapshot disagrees: {snap}"
+            );
+            server.shutdown();
+            let _ = std::fs::remove_dir_all(&dir);
+            println!(
+                "chaos phase 3  degrade-to-exact: 1 artifact quarantined, {n_layers} layer(s) \
+                 on exact fallback, 4/4 served"
+            );
+            println!("chaos: all 3 phases green (seed {seed})");
         }
         Some("serve") => {
             // Artifact-free serving smoke/load run: a random (untrained)
@@ -211,7 +432,7 @@ fn run(args: &Args) -> anyhow::Result<()> {
                 let snap = server.session_stats("lenet", d).unwrap().snapshot();
                 println!("[{d:<10}] {snap}");
             }
-            let snap = server.stats.snapshot();
+            let snap = server.snapshot();
             println!("[global    ] {snap}");
             println!(
                 "throughput      {:.0} req/s over {wall:?}",
@@ -297,12 +518,13 @@ fn run(args: &Args) -> anyhow::Result<()> {
         _ => {
             println!(
                 "axmul — approximate multiplier co-design (ISCAS'22 reproduction)\n\
-                 usage: axmul <table5|table6|table7|table8|weights-hist|train|serve|export-luts|designs|mul|lint|modelcheck> [options]\n\
+                 usage: axmul <table5|table6|table7|table8|weights-hist|train|serve|export-luts|chaos|designs|mul|lint|modelcheck> [options]\n\
                  common options: --artifacts DIR --quick --verbose\n\
                  table8: --nets a,b --designs x,y --steps N --eval N --config FILE\n\
                  serve: --designs x,y --requests N --workers N --max-batch N --max-wait-ms N\n\
                         --queue-cap N --slo-ms N --deadline-ms N --drain (artifact-free load run)\n\
-                 export-luts: --out DIR --plan FILE (per-layer plan manifest)\n\
+                 export-luts: --out DIR --plan FILE (verified artifacts + manifest.toml)\n\
+                 chaos: --seed N --requests N (fault-injection acceptance run, debug builds)\n\
                  lint: --root DIR --list (invariant linter, nonzero exit on violations)\n\
                  modelcheck: enumerate all schedules of the concurrency models"
             );

@@ -1,0 +1,356 @@
+//! Deterministic fault injection: the seam the self-healing tests and
+//! the `axmul chaos` harness drive.
+//!
+//! PR 8 buried its chaos markers in a `cfg(test)` module inside
+//! `coordinator/server.rs`; this module promotes them to a first-class,
+//! seeded surface shared by every layer that has to prove it survives
+//! damage:
+//!
+//! * **Data-driven markers** — an image whose first float is
+//!   [`PANIC_PIXEL`] panics inside the compute region; [`STALL_PIXEL`]
+//!   spins while the stall gate is raised ([`set_stall`]).  These stand
+//!   in for a poisoned LUT/QNet without touching real state.
+//! * **Ambient faults** — an armed [`FaultPlan`] can panic the Nth batch
+//!   a worker collects ([`batch_checkpoint`]), refuse a named design's
+//!   cache resolve ([`fail_resolve`], hooked into `LutCache::get`), or
+//!   raise the stall gate at arm time.
+//! * **Artifact damage** — [`corrupt_file`] flips one seeded byte in the
+//!   payload midsection of an on-disk artifact, the deterministic stand-in
+//!   for bit rot that `engine::store` verification must catch.
+//!
+//! Arming is explicit ([`arm`]/[`disarm`]) or via the environment
+//! ([`arm_from_env`], read by `InferServer::start`); the variable is read
+//! in this file only — a lint rule bans it elsewhere.
+//!
+//! ## Compiled-out-of-release contract
+//!
+//! The live implementation exists only under
+//! `cfg(any(test, debug_assertions))`; release binaries link the inert
+//! stub below (every probe is a constant-foldable no-op), so no fault
+//! path — not even a disarmed one — ships.  The
+//! `faults-compiled-out-of-release` lint rule holds the module pair in
+//! place, and `axmul chaos` refuses to run when [`compiled_in`] is
+//! false.
+
+use std::path::Path;
+
+/// An image whose first float is this marker panics inside the compute
+/// region (after batch collection, before the response).
+pub const PANIC_PIXEL: f32 = 1.0e30;
+/// An image whose first float is this marker spins inside compute while
+/// the stall gate is raised — tests use it to back a queue up.
+pub const STALL_PIXEL: f32 = -1.0e30;
+
+/// One seeded description of what to break.  `Default` is "break
+/// nothing" — arming an empty plan is a no-op plan, not a panic.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Seed recorded with the plan (reports and artifact corruption
+    /// derive offsets from it; the plan's own triggers are counters).
+    pub seed: u64,
+    /// Panic the Nth batch checkpoint after arming (1-based, global
+    /// across lanes — the harness asserts *recovery*, not placement).
+    pub panic_batch: Option<u64>,
+    /// `LutCache::get` of exactly this design name fails while armed.
+    pub fail_resolve: Option<String>,
+    /// Raise the stall gate at arm time (lowered again by [`disarm`]).
+    pub stall: bool,
+}
+
+#[cfg(any(test, debug_assertions))]
+mod armed {
+    use super::FaultPlan;
+    use std::path::Path;
+    // Fault state must stay plain `std` even under `--cfg loom`: loom's
+    // doubles cannot live in const statics, and this registry is test
+    // scaffolding around the protocols, never a protocol under check.
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering}; // lint:allow(std_sync): const-init statics, loom-independent
+    use std::sync::{Mutex, MutexGuard}; // lint:allow(std_sync): const-init statics, loom-independent
+
+    static PLAN: Mutex<Option<FaultPlan>> = Mutex::new(None);
+    static BATCHES: AtomicU64 = AtomicU64::new(0);
+    static STALL_GATE: AtomicBool = AtomicBool::new(false);
+    static SERIAL: Mutex<()> = Mutex::new(());
+
+    /// Poison-tolerant lock for the local statics (the shim's `plock`
+    /// takes the shim's Mutex type, which these deliberately are not).
+    fn flock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+        match m.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    /// True in builds that carry the live fault layer.
+    pub fn compiled_in() -> bool {
+        true
+    }
+
+    /// Whether a plan is currently armed.
+    pub fn armed() -> bool {
+        flock(&PLAN).is_some()
+    }
+
+    /// Install `plan` (replacing any previous one) and reset the batch
+    /// counter; raises the stall gate when the plan asks for it.
+    pub fn arm(plan: FaultPlan) {
+        BATCHES.store(0, Ordering::Relaxed);
+        STALL_GATE.store(plan.stall, Ordering::Release);
+        *flock(&PLAN) = Some(plan);
+    }
+
+    /// Remove the armed plan, lower the stall gate, zero the counters.
+    pub fn disarm() {
+        *flock(&PLAN) = None;
+        STALL_GATE.store(false, Ordering::Release);
+        BATCHES.store(0, Ordering::Relaxed);
+    }
+
+    /// Serialization lock for tests that arm plans or raise the stall
+    /// gate: the statics are process-global, so such tests must not
+    /// overlap.  Held guards survive a panicking test (poison-tolerant).
+    pub fn serial() -> MutexGuard<'static, ()> {
+        flock(&SERIAL)
+    }
+
+    /// Raise or lower the stall gate directly (the `StallGuard` RAII in
+    /// server tests wraps this).
+    pub fn set_stall(on: bool) {
+        STALL_GATE.store(on, Ordering::Release);
+    }
+
+    /// Whether an armed plan refuses to resolve `design` right now.
+    pub fn fail_resolve(design: &str) -> bool {
+        flock(&PLAN)
+            .as_ref()
+            .and_then(|p| p.fail_resolve.as_deref())
+            .is_some_and(|d| d == design)
+    }
+
+    /// The per-batch probe on the worker's compute path: trips the
+    /// data-driven pixel markers, then counts the batch against an armed
+    /// `panic_batch` trigger.  Runs inside the worker's `catch_unwind`,
+    /// so a trip answers every batch member with a typed failure.
+    pub fn batch_checkpoint<'a, I>(images: I)
+    where
+        I: IntoIterator<Item = &'a [f32]>,
+    {
+        for image in images {
+            match image.first() {
+                Some(&p) if p == super::PANIC_PIXEL => panic!("fault: injected compute panic"),
+                Some(&p) if p == super::STALL_PIXEL => {
+                    while STALL_GATE.load(Ordering::Acquire) {
+                        std::thread::sleep(std::time::Duration::from_millis(1));
+                    }
+                }
+                _ => {}
+            }
+        }
+        let trigger = flock(&PLAN).as_ref().and_then(|p| p.panic_batch);
+        if let Some(n) = trigger {
+            let k = BATCHES.fetch_add(1, Ordering::Relaxed) + 1;
+            if k == n {
+                panic!("fault: injected panic on batch {k}");
+            }
+        }
+    }
+
+    /// Parse a `key=value,key=value` fault spec:
+    /// `panic_batch=N`, `fail_resolve=NAME`, `stall=1`, `seed=N`.
+    pub fn parse_plan(spec: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::default();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (k, v) = part
+                .split_once('=')
+                .ok_or_else(|| format!("fault spec `{part}` is not key=value"))?;
+            let v = v.trim();
+            match k.trim() {
+                "seed" => plan.seed = v.parse().map_err(|_| format!("bad seed `{v}`"))?,
+                "panic_batch" => {
+                    plan.panic_batch =
+                        Some(v.parse().map_err(|_| format!("bad panic_batch `{v}`"))?)
+                }
+                "fail_resolve" => plan.fail_resolve = Some(v.to_string()),
+                "stall" => plan.stall = matches!(v, "1" | "true"),
+                other => return Err(format!("unknown fault key `{other}`")),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Arm from the environment (the only place the variable is read —
+    /// a lint rule keeps it that way).  Invalid specs are reported and
+    /// ignored rather than panicking a server start.
+    pub fn arm_from_env() {
+        let var = ["AXMUL_", "FAULTS"].concat();
+        if let Ok(spec) = std::env::var(&var) {
+            match parse_plan(&spec) {
+                Ok(plan) => arm(plan),
+                Err(e) => eprintln!("ignoring bad {var} spec: {e}"),
+            }
+        }
+    }
+
+    /// Flip one byte of `path`, deterministically per seed, inside the
+    /// payload midsection (±12.5% around the middle) — for any LUT
+    /// artifact that keeps header and footer clear of the payload body,
+    /// so store verification MUST catch the damage.  Returns the offset.
+    pub fn corrupt_file(path: &Path, seed: u64) -> anyhow::Result<usize> {
+        let mut bytes = std::fs::read(path)?;
+        anyhow::ensure!(bytes.len() >= 16, "{}: too small to corrupt", path.display());
+        let span = (bytes.len() / 4).max(1);
+        let jitter = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) as usize % span;
+        let off = bytes.len() / 2 - span / 2 + jitter;
+        bytes[off] ^= 0xA5;
+        std::fs::write(path, &bytes)?;
+        Ok(off)
+    }
+}
+
+#[cfg(not(any(test, debug_assertions)))]
+mod armed {
+    //! Inert release stub: same surface, no state, no effects.
+    use super::FaultPlan;
+    use std::path::Path;
+    use std::sync::{Mutex, MutexGuard}; // lint:allow(std_sync): const-init static in the inert stub
+
+    static SERIAL: Mutex<()> = Mutex::new(());
+
+    pub fn compiled_in() -> bool {
+        false
+    }
+    pub fn armed() -> bool {
+        false
+    }
+    pub fn arm(_plan: FaultPlan) {}
+    pub fn disarm() {}
+    pub fn serial() -> MutexGuard<'static, ()> {
+        match SERIAL.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+    pub fn set_stall(_on: bool) {}
+    pub fn fail_resolve(_design: &str) -> bool {
+        false
+    }
+    pub fn batch_checkpoint<'a, I>(_images: I)
+    where
+        I: IntoIterator<Item = &'a [f32]>,
+    {
+    }
+    pub fn parse_plan(_spec: &str) -> Result<FaultPlan, String> {
+        Err("faults are compiled out of release builds".into())
+    }
+    pub fn arm_from_env() {}
+    pub fn corrupt_file(_path: &Path, _seed: u64) -> anyhow::Result<usize> {
+        anyhow::bail!("faults are compiled out of release builds")
+    }
+}
+
+pub use armed::{
+    arm, arm_from_env, armed, batch_checkpoint, compiled_in, corrupt_file, disarm, fail_resolve,
+    parse_plan, serial, set_stall,
+};
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    #[test]
+    fn parse_plan_round_trips_every_key() {
+        let p = parse_plan("seed=9, panic_batch=3, fail_resolve=mul8x8_2, stall=1").unwrap();
+        assert_eq!(
+            p,
+            FaultPlan {
+                seed: 9,
+                panic_batch: Some(3),
+                fail_resolve: Some("mul8x8_2".into()),
+                stall: true,
+            }
+        );
+        assert_eq!(parse_plan("").unwrap(), FaultPlan::default());
+        assert!(parse_plan("panic_batch").is_err(), "missing `=`");
+        assert!(parse_plan("panic_batch=soon").is_err());
+        assert!(parse_plan("explode=1").is_err(), "unknown key");
+    }
+
+    #[test]
+    fn arm_disarm_gates_the_resolve_fault() {
+        let _serial = serial();
+        assert!(compiled_in());
+        assert!(!armed());
+        assert!(!fail_resolve("pkm"));
+        arm(FaultPlan {
+            fail_resolve: Some("pkm".into()),
+            ..FaultPlan::default()
+        });
+        assert!(armed());
+        assert!(fail_resolve("pkm"));
+        assert!(!fail_resolve("pkm~neg"), "exact name match only");
+        disarm();
+        assert!(!armed());
+        assert!(!fail_resolve("pkm"));
+    }
+
+    #[test]
+    fn nth_batch_panic_fires_exactly_once() {
+        let _serial = serial();
+        arm(FaultPlan {
+            panic_batch: Some(2),
+            ..FaultPlan::default()
+        });
+        let benign: &[f32] = &[0.0];
+        let tick = || batch_checkpoint(std::iter::once(benign));
+        assert!(catch_unwind(AssertUnwindSafe(tick)).is_ok(), "batch 1 passes");
+        let err = catch_unwind(AssertUnwindSafe(tick)).unwrap_err();
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("batch 2"), "{msg}");
+        assert!(catch_unwind(AssertUnwindSafe(tick)).is_ok(), "batch 3 passes");
+        disarm();
+    }
+
+    #[test]
+    fn panic_pixel_trips_even_when_disarmed() {
+        let _serial = serial();
+        disarm();
+        let marked: &[f32] = &[PANIC_PIXEL, 0.0];
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            batch_checkpoint(std::iter::once(marked))
+        }));
+        assert!(r.is_err(), "the data-driven marker needs no armed plan");
+    }
+
+    #[test]
+    fn corrupt_file_is_seeded_and_flips_one_midsection_byte() {
+        let _serial = serial();
+        let dir = std::env::temp_dir().join("axmul_faults_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("artifact.bin");
+        let original: Vec<u8> = (0..4096u32).map(|i| (i % 251) as u8).collect();
+        let mut offsets = Vec::new();
+        for round in 0..2 {
+            std::fs::write(&p, &original).unwrap();
+            let off = corrupt_file(&p, 42).unwrap();
+            offsets.push(off);
+            let damaged = std::fs::read(&p).unwrap();
+            let diffs: Vec<usize> = (0..original.len())
+                .filter(|&i| original[i] != damaged[i])
+                .collect();
+            assert_eq!(diffs, vec![off], "round {round}: exactly one byte flips");
+            // midsection contract: ±12.5% around the middle
+            assert!(off >= original.len() / 2 - original.len() / 8);
+            assert!(off < original.len() / 2 + original.len() / 8);
+        }
+        assert_eq!(offsets[0], offsets[1], "same seed, same offset");
+        assert_ne!(
+            corrupt_file(&p, 43).unwrap(),
+            offsets[0],
+            "different seed moves the flip"
+        );
+    }
+}

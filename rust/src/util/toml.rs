@@ -86,10 +86,16 @@ impl TomlDoc {
             if let Some(rest) = line.strip_prefix('[') {
                 let name = rest.strip_suffix(']').ok_or_else(|| err("expected ']'"))?;
                 let name = name.trim();
+                // `~` is legal so LUT store manifests can address paired
+                // partner designs (`[lut.mul8x8_2~neg]`).
                 if name.is_empty()
-                    || !name
-                        .chars()
-                        .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-' || c == '.')
+                    || !name.chars().all(|c| {
+                        c.is_ascii_alphanumeric()
+                            || c == '_'
+                            || c == '-'
+                            || c == '.'
+                            || c == '~'
+                    })
                 {
                     return Err(err("bad section name"));
                 }
@@ -105,7 +111,11 @@ impl TomlDoc {
                 } else {
                     format!("{section}.{key}")
                 };
-                doc.entries.insert(full, val);
+                if doc.entries.insert(full.clone(), val).is_some() {
+                    // Silent last-writer-wins made a duplicated key in a
+                    // hand-edited manifest unfindable; reject it loudly.
+                    return Err(err(&format!("duplicate key `{full}`")));
+                }
             } else {
                 return Err(err("expected `key = value` or `[section]`"));
             }
@@ -286,5 +296,28 @@ nets = ["lenet", "lenet_plus"]
     fn underscored_int() {
         let doc = TomlDoc::parse("n = 1_000_000\n").unwrap();
         assert_eq!(doc.i64_or("n", 0), 1_000_000);
+    }
+
+    #[test]
+    fn duplicate_keys_are_typed_errors() {
+        let err = TomlDoc::parse("a = 1\na = 2\n").unwrap_err();
+        assert_eq!(err.line, 2);
+        assert!(err.msg.contains("duplicate key `a`"), "{}", err.msg);
+        // Same leaf key in different sections is fine.
+        let doc = TomlDoc::parse("[x]\na = 1\n[y]\na = 2\n").unwrap();
+        assert_eq!(doc.i64_or("x.a", 0), 1);
+        assert_eq!(doc.i64_or("y.a", 0), 2);
+        // ...but re-opening a section and redefining the key is not.
+        assert!(TomlDoc::parse("[x]\na = 1\n[x]\na = 2\n").is_err());
+    }
+
+    #[test]
+    fn tilde_sections_address_paired_partners() {
+        let doc =
+            TomlDoc::parse("[lut.mul8x8_2~neg]\nfile = \"mul8x8_2~neg.npy\"\n").unwrap();
+        assert_eq!(
+            doc.str_or("lut.mul8x8_2~neg.file", ""),
+            "mul8x8_2~neg.npy"
+        );
     }
 }

@@ -1080,3 +1080,73 @@ fn prop_truth_table_eval_matches_netlist_after_all_passes() {
         }
     }
 }
+
+#[test]
+fn prop_manifest_parsers_never_panic_under_truncation_and_byte_flips() {
+    // Robustness contract of the two on-disk manifest grammars — the
+    // LUT store's `manifest.toml` and the per-layer plan manifest:
+    // arbitrary truncation and bit rot must surface as typed `Err`s,
+    // never a panic, and any mutant that still parses must survive a
+    // serialize → reparse round trip unchanged (no partially-applied
+    // state escapes the parser).
+    use axmul::engine::store::{ManifestEntry, StoreManifest};
+    use axmul::engine::DesignPlan;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    let mut store = StoreManifest::new(0xDEAD_BEEF_F00D_CAFE);
+    store.entries.insert(
+        "mul8x8_2".to_string(),
+        ManifestEntry {
+            file: "mul8x8_2.npy".to_string(),
+            checksum: 0x0123_4567_89AB_CDEF,
+        },
+    );
+    store.entries.insert(
+        "mul8x8_2~neg".to_string(),
+        ManifestEntry {
+            file: "mul8x8_2~neg.npy".to_string(),
+            checksum: u64::MAX,
+        },
+    );
+    let store_src = store.to_toml();
+    let plan_src = DesignPlan::new(vec!["mul8x8_2".to_string(), "exact8x8".to_string()])
+        .unwrap()
+        .to_toml();
+
+    let check_store = |src: &str| {
+        let parsed = catch_unwind(AssertUnwindSafe(|| StoreManifest::parse_toml(src)))
+            .unwrap_or_else(|_| panic!("store manifest parse panicked on {src:?}"));
+        if let Ok(m) = parsed {
+            let rt = StoreManifest::parse_toml(&m.to_toml()).expect("store manifest round trip");
+            assert_eq!(rt, m, "store manifest round trip drifted for {src:?}");
+        }
+    };
+    let check_plan = |src: &str| {
+        let parsed = catch_unwind(AssertUnwindSafe(|| DesignPlan::parse_toml(src)))
+            .unwrap_or_else(|_| panic!("plan manifest parse panicked on {src:?}"));
+        if let Ok(p) = parsed {
+            let rt = DesignPlan::parse_toml(&p.to_toml()).expect("plan manifest round trip");
+            assert_eq!(rt.to_toml(), p.to_toml(), "plan round trip drifted for {src:?}");
+        }
+    };
+    let sweep = |src: &str, check: &dyn Fn(&str)| {
+        // Every prefix truncation (both grammars are pure ASCII, so
+        // slicing at byte offsets never splits a code point)…
+        for cut in 0..=src.len() {
+            check(&src[..cut]);
+        }
+        // …plus seeded single-bit rot anywhere in the document.  Flips
+        // can produce non-UTF8 bytes; the lossy decode mirrors what a
+        // tolerant reader would hand the parser.
+        let bytes = src.as_bytes();
+        let mut rng = Pcg32::new(0xB17F11);
+        for _ in 0..512 {
+            let mut m = bytes.to_vec();
+            let at = rng.next_u32() as usize % m.len();
+            m[at] ^= 1u8 << (rng.next_u32() % 8);
+            check(&String::from_utf8_lossy(&m));
+        }
+    };
+    sweep(&store_src, &check_store);
+    sweep(&plan_src, &check_plan);
+}
